@@ -1,0 +1,94 @@
+//! End-to-end driver (the session's required full-system validation):
+//! train a ResNet-mini on SynthCIFAR-10 for a few hundred steps with the
+//! loss curve logged, prune it 2× with SPA-L1, fine-tune, and run OBSPA
+//! on the same base model for comparison — all three layers composing:
+//! L3 pipelines + IR engine, and OBSPA's PJRT-executed Pallas kernels
+//! (when `make artifacts` has run).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §End-to-end was produced by exactly
+//! this binary.
+
+use spa::coordinator::{train_prune, train_prune_finetune, NoFinetuneAlgo, PipelineCfg};
+use spa::criteria::Criterion;
+use spa::data::ImageDataset;
+use spa::obspa::CalibSource;
+use spa::runtime::Runtime;
+use spa::train::TrainCfg;
+use spa::util::Table;
+use spa::zoo::{self, ImageCfg};
+
+fn main() -> anyhow::Result<()> {
+    match Runtime::global() {
+        Some(rt) => println!("PJRT runtime: {} (Pallas artifacts loaded)", rt.platform()),
+        None => println!("PJRT artifacts not found — OBSPA uses the native fallback"),
+    }
+
+    let icfg = ImageCfg {
+        hw: 16,
+        classes: 10,
+        ..Default::default()
+    };
+    let ds = ImageDataset::synth_cifar(10, 2048, icfg.hw, icfg.channels, 1234);
+    let model = zoo::resnet18(icfg, 7);
+    println!(
+        "\n=== phase 1: train + SPA-L1 prune 2x + finetune ({} params) ===",
+        model.num_params()
+    );
+    let cfg = PipelineCfg {
+        criterion: Criterion::L1,
+        target_rf: 2.0,
+        train: TrainCfg {
+            steps: 300,
+            lr: 0.05,
+            log_every: 20,
+            ..Default::default()
+        },
+        finetune: TrainCfg {
+            steps: 150,
+            lr: 0.02,
+            log_every: 20,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (pruned, rep) = train_prune_finetune(model.clone(), &ds, &cfg)?;
+    println!("loss curve (train + finetune):");
+    for e in &rep.loss_history {
+        println!("  step {:>4}  loss {:.4}  lr {:.4}", e.step, e.loss, e.lr);
+    }
+    pruned.validate()?;
+
+    println!("\n=== phase 2: OBSPA train-prune (no finetuning), same base ===");
+    let mut obspa_cfg = cfg.clone();
+    obspa_cfg.train.log_every = 0;
+    let (_, obspa_rep) = train_prune(
+        model,
+        &ds,
+        None,
+        NoFinetuneAlgo::Obspa(CalibSource::InDistribution),
+        1.5,
+        &obspa_cfg,
+    )?;
+
+    let mut t = Table::new(
+        "end-to-end results (SynthCIFAR-10, resnet18-mini)",
+        &["pipeline", "ori acc.", "pruned acc.", "final acc.", "RF", "RP", "secs"],
+    );
+    for (name, r) in [("SPA-L1 + finetune", &rep), ("OBSPA (ID), no finetune", &obspa_rep)] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}%", r.ori_acc * 100.0),
+            format!("{:.2}%", r.pruned_acc * 100.0),
+            format!("{:.2}%", r.final_acc * 100.0),
+            format!("{:.2}x", r.rf),
+            format!("{:.2}x", r.rp),
+            format!("{:.1}", r.seconds),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

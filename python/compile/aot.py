@@ -1,0 +1,115 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (canonical-shape ladder, DESIGN.md):
+  model_fwd.hlo.txt            — reference CNN forward (parity check)
+  obs_update_c{C}.hlo.txt      — OBSPA column update, W [128, C]
+  hessian_c{C}.hlo.txt         — Hessian accumulation, X [C, 128]
+  manifest.json                — shapes per artifact, read by Rust
+
+Run via `make artifacts`; a stamp check makes it a no-op when inputs
+are unchanged. Python never runs after this step.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.obs_update import ROW_BLOCK
+from .kernels.hessian import M_BLOCK
+from . import model
+
+# Canonical column-count ladder: layers pad their GEMM/im2col width to
+# the next rung. Covers every layer in the scaled-down zoo.
+COL_LADDER = [32, 64, 128, 256, 512]
+
+# Reference model shapes (must match rust/tests/pjrt_parity.rs).
+MODEL_SHAPES = dict(batch=4, cin=3, hw=8, cout=8, classes=10)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model_fwd():
+    s = MODEL_SHAPES
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((s["batch"], s["cin"], s["hw"], s["hw"]), f32),
+        jax.ShapeDtypeStruct((s["cout"], s["cin"], 3, 3), f32),
+        jax.ShapeDtypeStruct((s["cout"],), f32),
+        jax.ShapeDtypeStruct((s["classes"], s["cout"]), f32),
+        jax.ShapeDtypeStruct((s["classes"],), f32),
+    )
+    return to_hlo_text(jax.jit(model.model_fwd).lower(*args))
+
+
+def lower_obs_update(c: int):
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((ROW_BLOCK, c), f32),
+        jax.ShapeDtypeStruct((c, c), f32),
+        jax.ShapeDtypeStruct((c,), f32),
+    )
+    return to_hlo_text(jax.jit(model.obs_update_graph).lower(*args))
+
+
+def lower_hessian(c: int):
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((c, c), f32),
+        jax.ShapeDtypeStruct((c, M_BLOCK), f32),
+    )
+    return to_hlo_text(jax.jit(model.hessian_graph).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "spa-artifacts-v1",
+        "row_block": ROW_BLOCK,
+        "m_block": M_BLOCK,
+        "col_ladder": COL_LADDER,
+        "model_shapes": MODEL_SHAPES,
+        "artifacts": [],
+    }
+
+    def emit(name: str, text: str):
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(name)
+        print(f"  wrote {name} ({len(text)} chars)", file=sys.stderr)
+
+    print("lowering model_fwd ...", file=sys.stderr)
+    emit("model_fwd.hlo.txt", lower_model_fwd())
+    for c in COL_LADDER:
+        print(f"lowering obs_update c={c} ...", file=sys.stderr)
+        emit(f"obs_update_c{c}.hlo.txt", lower_obs_update(c))
+        print(f"lowering hessian c={c} ...", file=sys.stderr)
+        emit(f"hessian_c{c}.hlo.txt", lower_hessian(c))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

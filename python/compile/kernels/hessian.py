@@ -1,0 +1,43 @@
+"""Layer-1 Pallas kernel: blocked Hessian accumulation H += X Xᵀ.
+
+OBSPA derives each layer's Hessian from calibration activations
+(H = X Xᵀ + λI, paper Eq. 12 discussion). Calibration batches stream
+through in M-blocks; this kernel accumulates one block's Gram matrix
+into the running Hessian.
+
+TPU mapping: a (C, C) output tile with (C, MB) X panels — a plain matmul
+the MXU is built for; C ≤ 512 keeps X panel + H tile well under VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Calibration columns consumed per call.
+M_BLOCK = 128
+
+
+def _hessian_kernel(h_ref, x_ref, out_ref):
+    x = x_ref[...]
+    out_ref[...] = h_ref[...] + jnp.dot(
+        x, x.T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hessian_accum(h, x):
+    """Return H + X @ X.T for X of shape [C, M_BLOCK]."""
+    c = h.shape[0]
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((c, c), lambda i: (0, 0)),
+            pl.BlockSpec((c, x.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, c), jnp.float32),
+        interpret=True,
+    )(h, x)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks `obs_update.py` /
+`hessian.py` against, and they mirror the Rust-native fallback in
+`rust/src/obspa/solver.rs` (a cargo test cross-checks the Rust fallback
+against values generated from these formulas).
+
+The structured column update is OBSPA's core reconstruction (paper App.
+A.6, Eqs. 13-14): for every pruned column i, in ascending order,
+
+    err        = W[:, i] / Hinv[i, i]
+    W[:, i:]  -= err * Hinv[i, i:]
+    W[:, i]    = 0
+"""
+
+import jax.numpy as jnp
+
+
+def obs_update_ref(w, hinv, mask):
+    """Structured SparseGPT-style update.
+
+    Args:
+      w:    [R, C] weight block (rows independent).
+      hinv: [C, C] inverse Hessian of the layer inputs.
+      mask: [C] float, 1.0 where the column is pruned.
+
+    Returns:
+      [R, C] updated weights with pruned columns zeroed and surviving
+      columns compensated.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    c = w.shape[1]
+    for i in range(c):
+        pruned = mask[i]
+        err = pruned * w[:, i] / hinv[i, i]
+        # only columns j >= i are updated (column-ascending sweep)
+        tail = jnp.arange(c) >= i
+        w = w - jnp.outer(err, hinv[i, :] * tail)
+        # explicitly zero the pruned column (numerical exactness)
+        w = w.at[:, i].set(jnp.where(pruned > 0, 0.0, w[:, i]))
+    return w
+
+
+def hessian_accum_ref(h, x):
+    """H + X @ X.T for a calibration block X of shape [C, M]."""
+    return h + x @ x.T
+
+
+def model_fwd_ref(x, w, b, wf, bf):
+    """Reference CNN forward used for the engine-vs-PJRT parity check.
+
+    conv3x3(pad 1, NCHW) + bias -> relu -> global mean pool -> dense.
+    """
+    import jax
+
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ) + b[None, :, None, None]
+    y = jnp.maximum(y, 0.0)
+    pooled = y.mean(axis=(2, 3))
+    return pooled @ wf.T + bf

@@ -1,0 +1,38 @@
+"""Layer-2 JAX model: the reference CNN whose AOT artifact the Rust
+runtime executes for the engine-vs-PJRT numeric parity check, plus the
+OBSPA compute graphs composed from the Layer-1 Pallas kernels.
+
+Parameters are *arguments* (not constants), so one artifact serves any
+weight values the Rust side feeds.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hessian import hessian_accum
+from .kernels.obs_update import obs_update
+
+
+def model_fwd(x, w, b, wf, bf):
+    """conv3x3(pad1) + bias → relu → global mean pool → dense.
+
+    Matches `spa::zoo`-style semantics (NCHW, OIHW) so the Rust engine
+    can execute the same graph natively and compare numerics.
+    """
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ) + b[None, :, None, None]
+    y = jnp.maximum(y, 0.0)
+    pooled = y.mean(axis=(2, 3))
+    return (pooled @ wf.T + bf,)
+
+
+def obs_update_graph(w, hinv, mask):
+    """The OBSPA reconstruction step (wraps the Pallas kernel)."""
+    return (obs_update(w, hinv, mask),)
+
+
+def hessian_graph(h, x):
+    """One calibration-block Hessian accumulation (wraps the kernel)."""
+    return (hessian_accum(h, x),)

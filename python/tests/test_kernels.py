@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis is not installed in the offline sandbox, so the sweep is a
+deterministic seeded grid over shapes/masks/conditioning — the same
+falsification surface, replayable from the printed seed.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels.hessian import hessian_accum, M_BLOCK
+from compile.kernels.obs_update import obs_update, ROW_BLOCK
+from compile.kernels.ref import hessian_accum_ref, obs_update_ref
+
+
+def spd_hinv(rng, c, cond=10.0):
+    """A well-conditioned SPD matrix to stand in for an inverse Hessian."""
+    q, _ = np.linalg.qr(rng.normal(size=(c, c)))
+    eigs = np.linspace(1.0, cond, c)
+    return (q * eigs) @ q.T
+
+
+def rand_mask(rng, c, frac):
+    mask = np.zeros(c, np.float32)
+    k = max(1, int(c * frac))
+    mask[rng.choice(c, size=k, replace=False)] = 1.0
+    return mask
+
+
+@pytest.mark.parametrize("c", [8, 16, 32, 64])
+@pytest.mark.parametrize("frac", [0.1, 0.3, 0.6])
+def test_obs_update_matches_ref(c, frac):
+    rng = np.random.default_rng(c * 1000 + int(frac * 10))
+    w = rng.normal(size=(ROW_BLOCK, c)).astype(np.float32)
+    hinv = spd_hinv(rng, c).astype(np.float32)
+    mask = rand_mask(rng, c, frac)
+    got = np.asarray(obs_update(w, hinv, mask))
+    want = np.asarray(obs_update_ref(w, hinv, mask))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_obs_update_zeroes_pruned_columns():
+    rng = np.random.default_rng(7)
+    c = 32
+    w = rng.normal(size=(ROW_BLOCK, c)).astype(np.float32)
+    hinv = spd_hinv(rng, c).astype(np.float32)
+    mask = rand_mask(rng, c, 0.4)
+    got = np.asarray(obs_update(w, hinv, mask))
+    assert np.all(got[:, mask > 0] == 0.0)
+
+
+def test_obs_update_noop_on_empty_mask():
+    rng = np.random.default_rng(8)
+    c = 16
+    w = rng.normal(size=(ROW_BLOCK, c)).astype(np.float32)
+    hinv = spd_hinv(rng, c).astype(np.float32)
+    got = np.asarray(obs_update(w, hinv, np.zeros(c, np.float32)))
+    np.testing.assert_allclose(got, w, rtol=1e-6, atol=1e-6)
+
+
+def test_obs_update_reduces_reconstruction_error():
+    """The whole point of OBSPA vs naive zeroing: ‖WX − ŴX‖ must shrink.
+
+    As in SparseGPT, the sweep matrix is the *upper Cholesky factor* of
+    H⁻¹ (H⁻¹ = UᵀU), which carries the conditional inverse Hessians of
+    the shrinking column suffix. Calibration features are correlated
+    (low-rank + noise) — the regime where compensation actually helps.
+    """
+    rng = np.random.default_rng(9)
+    c, m = 32, 256
+    z = rng.normal(size=(8, m))
+    a = rng.normal(size=(c, 8))
+    x = (a @ z + 0.1 * rng.normal(size=(c, m))).astype(np.float32)
+    w = rng.normal(size=(ROW_BLOCK, c)).astype(np.float32)
+    h = x @ x.T + 0.01 * np.eye(c, dtype=np.float32)
+    hinv = np.linalg.inv(h)
+    u = np.linalg.cholesky(hinv).T.astype(np.float32)  # H⁻¹ = UᵀU
+    mask = rand_mask(rng, c, 0.3)
+    w_obs = np.asarray(obs_update(w, u, mask))
+    w_zero = w * (1.0 - mask)[None, :]
+    err_obs = np.linalg.norm(w @ x - w_obs @ x)
+    err_zero = np.linalg.norm(w @ x - w_zero @ x)
+    assert err_obs < err_zero * 0.85, (err_obs, err_zero)
+
+
+def test_obs_update_rows_independent():
+    """Row blocks can be processed independently (padding correctness)."""
+    rng = np.random.default_rng(10)
+    c = 16
+    w = rng.normal(size=(ROW_BLOCK, c)).astype(np.float32)
+    hinv = spd_hinv(rng, c).astype(np.float32)
+    mask = rand_mask(rng, c, 0.5)
+    full = np.asarray(obs_update(w, hinv, mask))
+    # zero-pad extra rows: result on original rows unchanged
+    w_pad = np.concatenate([w, np.zeros_like(w)], axis=0)
+    padded = np.asarray(obs_update(w_pad, hinv, mask))
+    np.testing.assert_allclose(padded[:ROW_BLOCK], full, rtol=1e-5, atol=1e-5)
+    assert np.all(padded[ROW_BLOCK:][:, mask == 0] == 0.0)
+
+
+def test_obs_update_column_padding_exact():
+    """Identity-padding Hinv + zero-padding W on unused columns is exact —
+    the property the Rust runtime's canonical-shape ladder relies on."""
+    rng = np.random.default_rng(11)
+    c, cpad = 24, 32
+    w = rng.normal(size=(ROW_BLOCK, c)).astype(np.float32)
+    hinv = spd_hinv(rng, c).astype(np.float32)
+    mask = rand_mask(rng, c, 0.3)
+    want = np.asarray(obs_update_ref(w, hinv, mask))
+    wp = np.zeros((ROW_BLOCK, cpad), np.float32)
+    wp[:, :c] = w
+    hp = np.eye(cpad, dtype=np.float32)
+    hp[:c, :c] = hinv
+    mp = np.zeros(cpad, np.float32)
+    mp[:c] = mask
+    got = np.asarray(obs_update(wp, hp, mp))
+    np.testing.assert_allclose(got[:, :c], want, rtol=2e-4, atol=2e-4)
+    assert np.all(got[:, c:] == 0.0)
+
+
+@pytest.mark.parametrize("c", [16, 64, 128])
+def test_hessian_accum_matches_ref(c):
+    rng = np.random.default_rng(c)
+    h = rng.normal(size=(c, c)).astype(np.float32)
+    h = (h + h.T) / 2
+    x = rng.normal(size=(c, M_BLOCK)).astype(np.float32)
+    got = np.asarray(hessian_accum(h, x))
+    want = np.asarray(hessian_accum_ref(jnp.asarray(h), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_hessian_accum_symmetry():
+    rng = np.random.default_rng(3)
+    c = 32
+    x = rng.normal(size=(c, M_BLOCK)).astype(np.float32)
+    got = np.asarray(hessian_accum(np.zeros((c, c), np.float32), x))
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-5)
+    # PSD: all eigenvalues >= 0 (tolerance for fp)
+    eigs = np.linalg.eigvalsh(got)
+    assert eigs.min() > -1e-3

@@ -1,0 +1,46 @@
+"""L2 model graph: shape checks and oracle parity before AOT lowering."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import model_fwd_ref
+from compile.aot import MODEL_SHAPES, lower_model_fwd, lower_obs_update, lower_hessian
+
+
+def _params(rng):
+    s = MODEL_SHAPES
+    x = rng.normal(size=(s["batch"], s["cin"], s["hw"], s["hw"])).astype(np.float32)
+    w = (rng.normal(size=(s["cout"], s["cin"], 3, 3)) * 0.2).astype(np.float32)
+    b = rng.normal(size=(s["cout"],)).astype(np.float32) * 0.1
+    wf = (rng.normal(size=(s["classes"], s["cout"])) * 0.2).astype(np.float32)
+    bf = np.zeros((s["classes"],), np.float32)
+    return x, w, b, wf, bf
+
+
+def test_model_fwd_shapes_and_ref():
+    rng = np.random.default_rng(1)
+    x, w, b, wf, bf = _params(rng)
+    (out,) = model.model_fwd(x, w, b, wf, bf)
+    assert out.shape == (MODEL_SHAPES["batch"], MODEL_SHAPES["classes"])
+    want = np.asarray(model_fwd_ref(x, w, b, wf, bf))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+
+
+def test_model_fwd_lowers_to_hlo_text():
+    text = lower_model_fwd()
+    assert "HloModule" in text
+    assert "convolution" in text
+
+
+def test_obs_update_lowers_without_custom_calls():
+    # interpret=True must lower to plain HLO the CPU PJRT client can run —
+    # no Mosaic custom-call may appear.
+    text = lower_obs_update(32)
+    assert "HloModule" in text
+    assert "mosaic" not in text.lower()
+
+
+def test_hessian_lowers_without_custom_calls():
+    text = lower_hessian(32)
+    assert "HloModule" in text
+    assert "mosaic" not in text.lower()

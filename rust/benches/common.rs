@@ -1,0 +1,125 @@
+//! Shared helpers for the paper-table benches. Each bench target includes
+//! this via `#[path = "common.rs"] mod common;`.
+//!
+//! Benches run on scaled-down models and synthetic datasets (DESIGN.md
+//! §Substitutions); the printed tables put the paper's reported numbers
+//! next to ours so the *shape* of each result can be compared directly.
+
+#![allow(dead_code)]
+
+use spa::coordinator::{
+    train_prune, train_prune_finetune, NoFinetuneAlgo, PipelineCfg, PipelineReport,
+};
+use spa::criteria::Criterion;
+use spa::data::ImageDataset;
+use spa::obspa::CalibSource;
+use spa::prune::Scope;
+use spa::train::TrainCfg;
+use spa::zoo::ImageCfg;
+
+/// Standard bench-scale image config (SynthCIFAR).
+pub fn cifar_cfg(classes: usize) -> ImageCfg {
+    ImageCfg {
+        channels: 3,
+        hw: 8,
+        classes,
+        batch: 8,
+    }
+}
+
+/// SynthCIFAR-10 / -100 stand-ins (100 classes scaled to 20 to keep the
+/// classifier head in proportion to the mini models).
+pub fn synth_cifar10(seed: u64) -> ImageDataset {
+    ImageDataset::synth_cifar(10, 1024, 8, 3, seed)
+}
+
+pub fn synth_cifar100(seed: u64) -> ImageDataset {
+    ImageDataset::synth_cifar(20, 1024, 8, 3, seed)
+}
+
+/// "SynthImageNet": more classes, larger train set (mini regime).
+pub fn synth_imagenet(seed: u64) -> ImageDataset {
+    ImageDataset::synth_cifar(20, 1536, 8, 3, seed)
+}
+
+/// Bench-scale pipeline config.
+pub fn bench_pipeline(criterion: Criterion, scope: Scope, target_rf: f64) -> PipelineCfg {
+    PipelineCfg {
+        criterion,
+        scope,
+        target_rf,
+        train: TrainCfg {
+            steps: 120,
+            lr: 0.05,
+            log_every: 0,
+            ..Default::default()
+        },
+        finetune: TrainCfg {
+            steps: 60,
+            lr: 0.02,
+            log_every: 0,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// One train-prune-finetune run returning the report.
+pub fn tpf(
+    model: spa::ir::Graph,
+    ds: &ImageDataset,
+    criterion: Criterion,
+    scope: Scope,
+    target_rf: f64,
+    iterations: usize,
+) -> PipelineReport {
+    let mut cfg = bench_pipeline(criterion, scope, target_rf);
+    cfg.iterations = iterations;
+    train_prune_finetune(model, ds, &cfg).expect("tpf pipeline").1
+}
+
+/// One no-finetune run (OBSPA or DFPC) on an ALREADY TRAINED model clone.
+pub fn no_finetune(
+    trained: spa::ir::Graph,
+    ds: &ImageDataset,
+    ood: Option<&ImageDataset>,
+    algo: NoFinetuneAlgo,
+    target_rf: f64,
+) -> PipelineReport {
+    // reuse the pipeline but skip (re)training by setting steps = 0
+    let mut cfg = bench_pipeline(Criterion::L1, Scope::FullCc, target_rf);
+    cfg.train.steps = 0;
+    train_prune(trained, ds, ood, algo, target_rf, &cfg)
+        .expect("no-finetune pipeline")
+        .1
+}
+
+/// Train a base model once (for sharing across no-finetune methods).
+pub fn train_base(mut g: spa::ir::Graph, ds: &ImageDataset, steps: usize) -> spa::ir::Graph {
+    spa::train::train(
+        &mut g,
+        ds,
+        &TrainCfg {
+            steps,
+            lr: 0.05,
+            log_every: 0,
+            ..Default::default()
+        },
+    )
+    .expect("base training");
+    g
+}
+
+pub fn pct(x: f32) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Convenient names for the OBSPA calibration variants.
+pub const OBSPA_ID: NoFinetuneAlgo = NoFinetuneAlgo::Obspa(CalibSource::InDistribution);
+pub const OBSPA_OOD: NoFinetuneAlgo = NoFinetuneAlgo::Obspa(CalibSource::OutOfDistribution);
+pub const OBSPA_DF: NoFinetuneAlgo = NoFinetuneAlgo::Obspa(CalibSource::DataFree);
+pub const DFPC: NoFinetuneAlgo = NoFinetuneAlgo::Dfpc;

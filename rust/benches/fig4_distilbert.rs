@@ -1,0 +1,73 @@
+//! Paper Fig. 4 — DistilBERT on SST-2 trade-off: OBSPA vs L1 one-shot
+//! pruning without fine-tuning across compression ratios.
+
+#[path = "common.rs"]
+mod common;
+
+use spa::analysis;
+use spa::data::TextDataset;
+use spa::obspa::{self, ObspaCfg};
+use spa::prune::{self, build_groups, score_groups, Agg, Norm};
+use spa::train::{self, TrainCfg};
+use spa::util::Table;
+use spa::zoo::{self, TextCfg};
+use std::collections::HashMap;
+
+fn main() {
+    let tcfg = TextCfg::default();
+    let ds = TextDataset::synth_sst(2, 1024, tcfg.seq, tcfg.vocab, 31);
+    let ood = TextDataset::synth_sst(4, 256, tcfg.seq, tcfg.vocab, 77); // ax stand-in
+    let mut base = zoo::distilbert(tcfg, 5);
+    train::train(
+        &mut base,
+        &ds,
+        &TrainCfg { steps: 250, lr: 0.05, log_every: 0, ..Default::default() },
+    )
+    .unwrap();
+    let base_acc = train::evaluate_text(&base, &ds, 256).unwrap();
+    let mut t = Table::new(
+        "Fig. 4 — distilbert-mini / SynthSST-2, prune without fine-tuning",
+        &["method", "target RF", "RF", "RP", "acc.", "base acc."],
+    );
+    for &rf in &[1.2f64, 1.4, 1.7, 2.0] {
+        // L1 one-shot
+        let mut g = base.clone();
+        let groups = build_groups(&g).unwrap();
+        let mut l1 = HashMap::new();
+        for pid in g.param_ids() {
+            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+        }
+        let scores = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        let sel = prune::select_by_flops_target(&g, &groups, &scores, rf, 2).unwrap();
+        prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        let r = analysis::reduction(&base, &g);
+        t.row(&[
+            "L1 one-shot".into(),
+            format!("{rf:.1}"),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            common::pct(train::evaluate_text(&g, &ds, 256).unwrap()),
+            common::pct(base_acc),
+        ]);
+        // OBSPA with OOD text calibration
+        let mut g = base.clone();
+        let (calib, _) = ood.train_batch_seeded(9, 64);
+        obspa::obspa_prune(
+            &mut g,
+            &calib,
+            &ObspaCfg { target_rf: rf, min_keep: 2, bn_recalibrate: false, ..Default::default() },
+        )
+        .unwrap();
+        let r = analysis::reduction(&base, &g);
+        t.row(&[
+            "OBSPA (OOD)".into(),
+            format!("{rf:.1}"),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            common::pct(train::evaluate_text(&g, &ds, 256).unwrap()),
+            common::pct(base_acc),
+        ]);
+    }
+    t.print();
+    println!("shape to check (paper Fig. 4): OBSPA curve dominates L1 one-shot");
+}

@@ -1,0 +1,45 @@
+//! Microbench: mask propagation + grouping throughput (the O(|E|)
+//! analysis of paper §3.2), and structural pruning application.
+
+#[path = "common.rs"]
+mod common;
+
+use spa::prune::{self, build_groups, score_groups, Agg, Norm};
+use spa::util::{bench, Table};
+use spa::zoo;
+use std::collections::HashMap;
+
+fn main() {
+    let mut t = Table::new(
+        "micro — grouping & pruning throughput",
+        &["model", "ops", "group (ms)", "score (ms)", "prune-apply (ms)"],
+    );
+    for name in ["resnet18", "resnet50", "resnet101", "densenet", "vit"] {
+        let g = zoo::by_name(name, common::cifar_cfg(10), 3).unwrap();
+        let gstats = bench(&format!("{name}/group"), 1, 5, || {
+            let _ = build_groups(&g).unwrap();
+        });
+        let groups = build_groups(&g).unwrap();
+        let mut l1 = HashMap::new();
+        for pid in g.param_ids() {
+            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+        }
+        let sstats = bench(&format!("{name}/score"), 1, 5, || {
+            let _ = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        });
+        let ranked = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        let sel = prune::select_lowest(&groups, &ranked, 0.4, 1);
+        let pstats = bench(&format!("{name}/apply"), 1, 5, || {
+            let mut gc = g.clone();
+            prune::apply_pruning(&mut gc, &groups, &sel).unwrap();
+        });
+        t.row(&[
+            name.to_string(),
+            format!("{}", g.ops.len()),
+            format!("{:.2}", gstats.mean_ms()),
+            format!("{:.2}", sstats.mean_ms()),
+            format!("{:.2}", pstats.mean_ms()),
+        ]);
+    }
+    t.print();
+}

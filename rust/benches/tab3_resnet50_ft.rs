@@ -1,0 +1,142 @@
+//! Paper Tab. 3 — ResNet-50 on ImageNet *with* fine-tuning: SPA-L1 at two
+//! compression points and OBSPA(+finetune) against DFPC and an
+//! ungrouped-structured proxy for DepGraph/OTO-v2.
+
+#[path = "common.rs"]
+mod common;
+
+use spa::coordinator::PipelineCfg;
+use spa::criteria::Criterion;
+use spa::obspa::{self, ObspaCfg};
+use spa::prune::Scope;
+use spa::train::{self, TrainCfg};
+use spa::util::Table;
+use spa::zoo;
+
+fn finetune(g: &mut spa::ir::Graph, ds: &spa::data::ImageDataset) {
+    train::train(
+        g,
+        ds,
+        &TrainCfg {
+            steps: 80,
+            lr: 0.02,
+            log_every: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+}
+
+fn main() {
+    let ds = common::synth_imagenet(61);
+    let base = common::train_base(zoo::resnet50(common::cifar_cfg(20), 9), &ds, 200);
+    let base_acc = train::evaluate(&base, &ds, 384).unwrap();
+    let mut t = Table::new(
+        "Tab. 3 — resnet50-mini / SynthImageNet with fine-tuning",
+        &["method", "top1 acc.", "top5 acc.", "RF", "RP", "paper top1 / RF"],
+    );
+    let top5 = |g: &spa::ir::Graph| {
+        let (x, y) = ds.test_batch(0, 256);
+        let logits = spa::engine::predict(g, x).unwrap();
+        spa::tensor::ops::topk_accuracy(&logits, &y, 5)
+    };
+    t.row(&[
+        "Base Model".into(),
+        common::pct(base_acc),
+        common::pct(top5(&base)),
+        "1x".into(),
+        "1x".into(),
+        "76.15% / 1x".into(),
+    ]);
+    // DFPC + finetune
+    {
+        let mut g = base.clone();
+        spa::baselines::dfpc_prune(&mut g, 2.0, 1).unwrap();
+        finetune(&mut g, &ds);
+        let acc = train::evaluate(&g, &ds, 384).unwrap();
+        let r = spa::analysis::reduction(&base, &g);
+        t.row(&[
+            "DFPC".into(),
+            common::pct(acc),
+            common::pct(top5(&g)),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            "75.83% / 1.98x".into(),
+        ]);
+    }
+    // ungrouped structured L1 (DepGraph/OTO-v2 proxy)
+    {
+        let cfg = common::bench_pipeline(Criterion::L1, Scope::SourceOnly, 2.1);
+        let mut g = base.clone();
+        let groups = spa::prune::build_groups(&g).unwrap();
+        let scores =
+            spa::coordinator::criterion_scores(&g, &ds, cfg.criterion, 1).unwrap();
+        let ranked = spa::prune::score_groups_scoped(
+            &g, &groups, &scores, cfg.agg, cfg.norm, cfg.scope,
+        );
+        let sel = spa::prune::select_by_flops_target(&g, &groups, &ranked, 2.1, 1).unwrap();
+        spa::prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        finetune(&mut g, &ds);
+        let acc = train::evaluate(&g, &ds, 384).unwrap();
+        let r = spa::analysis::reduction(&base, &g);
+        t.row(&[
+            "ungrouped-L1 (DepGraph proxy)".into(),
+            common::pct(acc),
+            common::pct(top5(&g)),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            "75.83% / 2.07x (DepGraph)".into(),
+        ]);
+    }
+    // SPA-L1 at two compression points
+    for (rf, paper) in [(2.8f64, "74.83% / 2.84x"), (2.2, "76.39% / 2.18x")] {
+        let cfg = common::bench_pipeline(Criterion::L1, Scope::FullCc, rf);
+        let mut g = base.clone();
+        let groups = spa::prune::build_groups(&g).unwrap();
+        let scores =
+            spa::coordinator::criterion_scores(&g, &ds, cfg.criterion, 1).unwrap();
+        let ranked =
+            spa::prune::score_groups(&g, &groups, &scores, cfg.agg, cfg.norm);
+        let sel = spa::prune::select_by_flops_target(&g, &groups, &ranked, rf, 1).unwrap();
+        spa::prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        finetune(&mut g, &ds);
+        let acc = train::evaluate(&g, &ds, 384).unwrap();
+        let r = spa::analysis::reduction(&base, &g);
+        t.row(&[
+            format!("SPA-L1 (RF {rf:.1})"),
+            common::pct(acc),
+            common::pct(top5(&g)),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            paper.to_string(),
+        ]);
+    }
+    // OBSPA + finetune
+    {
+        let mut g = base.clone();
+        let (calib, _) = ds.train_batch_seeded(11, 128);
+        obspa::obspa_prune(
+            &mut g,
+            &calib,
+            &ObspaCfg {
+                target_rf: 2.2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        finetune(&mut g, &ds);
+        let acc = train::evaluate(&g, &ds, 384).unwrap();
+        let r = spa::analysis::reduction(&base, &g);
+        t.row(&[
+            "OBSPA + finetune".into(),
+            common::pct(acc),
+            common::pct(top5(&g)),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            "76.59% / 2.22x".into(),
+        ]);
+    }
+    let _ = PipelineCfg::default();
+    t.print();
+    println!("shape to check: SPA-L1/OBSPA ≥ DFPC & ungrouped proxy at matched RF");
+}

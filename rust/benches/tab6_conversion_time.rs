@@ -1,0 +1,43 @@
+//! Paper Tab. 6 — framework → standardized-graph conversion time
+//! (PyTorch/TF/MXNet/JAX → ONNX in the paper; dialects → SPA-IR here),
+//! averaged over 10 conversions, ResNet-18 and ResNet-50.
+
+#[path = "common.rs"]
+mod common;
+
+use spa::frontends::{export_to_string, import_from_string, Dialect};
+use spa::util::{bench, Table};
+use spa::zoo;
+
+fn main() {
+    let mut t = Table::new(
+        "Tab. 6 — dialect → SPA-IR conversion time (10 reps)",
+        &["model", "dialect", "export+import (ms)", "paper (s, → ONNX)"],
+    );
+    let paper = [
+        ("resnet18", ["0.51", "2.47", "2.28", "5.47"]),
+        ("resnet50", ["2.01", "7.35", "7.36", "12.52"]),
+    ];
+    for (mi, model) in ["resnet18", "resnet50"].iter().enumerate() {
+        let g = zoo::by_name(model, common::cifar_cfg(10), 3).unwrap();
+        for (di, d) in Dialect::ALL.into_iter().enumerate() {
+            let stats = bench(
+                &format!("{model}/{}", d.name()),
+                1,
+                10,
+                || {
+                    let s = export_to_string(&g, d);
+                    let _ = import_from_string(&s).unwrap();
+                },
+            );
+            t.row(&[
+                model.to_string(),
+                d.name().to_string(),
+                format!("{:.1}", stats.mean_ms()),
+                format!("{}s", paper[mi].1[di]),
+            ]);
+        }
+    }
+    t.print();
+    println!("shape to check: conversion is seconds-scale or below for every framework");
+}

@@ -1,0 +1,120 @@
+//! Model cost analysis: FLOPs and parameter counting over SPA-IR, and the
+//! paper's efficiency metrics RF = FLOPs_before / FLOPs_after and
+//! RP = params_before / params_after (App. B.2, Eqs. 15-16).
+
+use crate::ir::{Graph, OpKind};
+
+/// Multiply-accumulate-style FLOP count of one forward pass at the
+/// graph's nominal batch size 1 (batch dim normalized out).
+pub fn flops(g: &Graph) -> usize {
+    let mut total = 0usize;
+    for op in &g.ops {
+        let out_shape = &g.data(op.outputs[0]).shape;
+        let batch = out_shape.first().copied().unwrap_or(1).max(1);
+        let out_elems: usize = out_shape.iter().product::<usize>() / batch;
+        total += match &op.kind {
+            OpKind::Conv2d { groups, .. } => {
+                let w = &g.data(op.inputs[1]).shape; // [Co, Ci/g, kh, kw]
+                let _ = groups;
+                // per output element: Ci/g * kh * kw MACs (×2 flops)
+                2 * out_elems * w[1] * w[2] * w[3]
+            }
+            OpKind::Gemm => {
+                let w = &g.data(op.inputs[1]).shape; // [Co, K]
+                2 * out_elems * w[1]
+            }
+            OpKind::MatMul => {
+                let a = &g.data(op.inputs[0]).shape;
+                2 * out_elems * a[a.len() - 1]
+            }
+            OpKind::BatchNorm { .. } | OpKind::LayerNorm { .. } => 4 * out_elems,
+            OpKind::Relu | OpKind::Identity | OpKind::Scale { .. } => out_elems,
+            OpKind::Gelu | OpKind::Silu | OpKind::Sigmoid | OpKind::Tanh => 4 * out_elems,
+            OpKind::Add | OpKind::Mul => out_elems,
+            OpKind::MaxPool2d { k, .. } | OpKind::AvgPool2d { k, .. } => out_elems * k * k,
+            OpKind::GlobalAvgPool => {
+                let x = &g.data(op.inputs[0]).shape;
+                x.iter().product::<usize>() / batch
+            }
+            OpKind::Softmax => 5 * out_elems,
+            OpKind::Flatten
+            | OpKind::Concat { .. }
+            | OpKind::Transpose { .. }
+            | OpKind::SplitHeads { .. }
+            | OpKind::MergeHeads
+            | OpKind::Embedding
+            | OpKind::NchwToTokens
+            | OpKind::ReduceMean { .. } => 0,
+        };
+    }
+    total
+}
+
+/// Total parameter count.
+pub fn params(g: &Graph) -> usize {
+    g.num_params()
+}
+
+/// RF/RP pair for a (dense, pruned) model pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Reduction {
+    pub rf: f64,
+    pub rp: f64,
+}
+
+pub fn reduction(before: &Graph, after: &Graph) -> Reduction {
+    Reduction {
+        rf: flops(before) as f64 / flops(after).max(1) as f64,
+        rp: params(before) as f64 / params(after).max(1) as f64,
+    }
+}
+
+impl std::fmt::Display for Reduction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RF {:.2}x RP {:.2}x", self.rf, self.rp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn conv_flops_formula() {
+        let mut b = GraphBuilder::new("f", 1);
+        let x = b.input("x", vec![1, 3, 8, 8]);
+        let c = b.conv2d("c", x, 4, 3, 1, 1, 1, false);
+        b.output(c);
+        let g = b.finish().unwrap();
+        // out 4x8x8, each elem = 3*3*3 macs * 2
+        assert_eq!(flops(&g), 2 * 4 * 64 * 27);
+    }
+
+    #[test]
+    fn gemm_flops() {
+        let mut b = GraphBuilder::new("f", 1);
+        let x = b.input("x", vec![1, 16]);
+        let y = b.gemm("fc", x, 8, false);
+        b.output(y);
+        let g = b.finish().unwrap();
+        assert_eq!(flops(&g), 2 * 8 * 16);
+    }
+
+    #[test]
+    fn reduction_ratio() {
+        let mut b = GraphBuilder::new("a", 1);
+        let x = b.input("x", vec![1, 16]);
+        let y = b.gemm("fc", x, 8, false);
+        b.output(y);
+        let big = b.finish().unwrap();
+        let mut b = GraphBuilder::new("b", 1);
+        let x = b.input("x", vec![1, 16]);
+        let y = b.gemm("fc", x, 4, false);
+        b.output(y);
+        let small = b.finish().unwrap();
+        let r = reduction(&big, &small);
+        assert!((r.rf - 2.0).abs() < 1e-9);
+        assert!((r.rp - 2.0).abs() < 1e-9);
+    }
+}

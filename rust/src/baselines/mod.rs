@@ -1,0 +1,158 @@
+//! Comparator baselines the paper evaluates against.
+//!
+//! * [`dfpc_prune`] — a DFPC-style (Narshana et al. 2023) data-free,
+//!   one-shot coupled-channel pruner: saliency is weight magnitude scaled
+//!   by the absorbing BatchNorm's |γ|/√(σ²+ε) (the data-flow signal DFPC
+//!   derives from its coupling analysis), with **no** weight
+//!   reconstruction and no BN recalibration. This is the Tab. 4/9/10/13
+//!   comparator.
+//! * [`ungrouped_select`] — classic per-layer structured scoring
+//!   (`Scope::SourceOnly`): the "L1 / SNAP / structured-CroP/GraSP"
+//!   column of Figs. 3 and 9, sharing SPA's coupling machinery but not
+//!   its grouped score aggregation.
+
+use crate::ir::{DataId, Graph, OpKind};
+use crate::prune::{
+    self, build_groups, score_groups_scoped, Agg, GroupScore, Groups, Norm, Scope,
+};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// DFPC-style data-free saliency: |W| with out-channel slices scaled by
+/// the immediately-following BN's channel gain.
+pub fn dfpc_scores(g: &Graph) -> HashMap<DataId, Tensor> {
+    let mut scores: HashMap<DataId, Tensor> = HashMap::new();
+    for pid in g.param_ids() {
+        scores.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+    }
+    for op in &g.ops {
+        if !matches!(op.kind, OpKind::Conv2d { .. } | OpKind::Gemm) {
+            continue;
+        }
+        // find a BN directly consuming this op's output
+        let out = op.outputs[0];
+        let bn = g
+            .data(out)
+            .consumers
+            .iter()
+            .map(|&c| g.op(c))
+            .find(|o| matches!(o.kind, OpKind::BatchNorm { .. }));
+        let Some(bn) = bn else { continue };
+        let eps = match bn.kind {
+            OpKind::BatchNorm { eps } => eps,
+            _ => unreachable!(),
+        };
+        let gamma = g.data(bn.inputs[1]).param().unwrap();
+        let var = g.data(bn.inputs[4]).param().unwrap();
+        let wid = op.inputs[1];
+        let s = scores.get_mut(&wid).unwrap();
+        let co = s.shape[0];
+        let inner: usize = s.shape[1..].iter().product();
+        for c in 0..co {
+            let gain = gamma.data[c].abs() / (var.data[c] + eps).sqrt();
+            for v in &mut s.data[c * inner..(c + 1) * inner] {
+                *v *= gain;
+            }
+        }
+    }
+    scores
+}
+
+/// Report from a DFPC-style run.
+#[derive(Debug, Clone)]
+pub struct DfpcReport {
+    pub ccs_removed: usize,
+    pub seconds: f64,
+}
+
+/// One-shot data-free coupled-channel pruning to a FLOPs target.
+pub fn dfpc_prune(g: &mut Graph, target_rf: f64, min_keep: usize) -> anyhow::Result<DfpcReport> {
+    let t0 = std::time::Instant::now();
+    let groups = build_groups(g)?;
+    let scores = dfpc_scores(g);
+    let ranked = score_groups_scoped(g, &groups, &scores, Agg::Sum, Norm::Mean, Scope::FullCc);
+    let sel = prune::select_by_flops_target(g, &groups, &ranked, target_rf, min_keep)?;
+    let outcome = prune::apply_pruning(g, &groups, &sel)?;
+    Ok(DfpcReport {
+        ccs_removed: outcome.ccs_removed,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Ungrouped ("structured") selection: identical pipeline but scores come
+/// only from the source layer's own filters.
+pub fn ungrouped_select(
+    g: &Graph,
+    groups: &Groups,
+    param_scores: &HashMap<DataId, Tensor>,
+    agg: Agg,
+    norm: Norm,
+) -> Vec<GroupScore> {
+    score_groups_scoped(g, groups, param_scores, agg, norm, Scope::SourceOnly)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::zoo::{self, ImageCfg};
+
+    #[test]
+    fn dfpc_prunes_to_target() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::resnet18(cfg, 5);
+        let before = g.clone();
+        let rep = dfpc_prune(&mut g, 1.5, 1).unwrap();
+        assert!(rep.ccs_removed > 0);
+        let r = analysis::reduction(&before, &g);
+        assert!(r.rf >= 1.5, "rf {}", r.rf);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dfpc_scores_respond_to_bn_gamma() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::resnet18(cfg, 6);
+        // zero one BN gamma channel: its conv filter's score collapses
+        let gamma_id = g.data_by_name("stem.bn.gamma").unwrap().id;
+        g.datas[gamma_id].param_mut().unwrap().data[3] = 0.0;
+        let scores = dfpc_scores(&g);
+        let w = g.data_by_name("stem.conv.w").unwrap();
+        let s = &scores[&w.id];
+        let inner: usize = w.shape[1..].iter().product();
+        let ch3: f32 = s.data[3 * inner..4 * inner].iter().sum();
+        assert_eq!(ch3, 0.0, "zero-gamma channel must have zero saliency");
+        let ch0: f32 = s.data[..inner].iter().sum();
+        assert!(ch0 > 0.0);
+    }
+
+    #[test]
+    fn ungrouped_differs_from_grouped() {
+        use crate::prune::score_groups;
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let g = zoo::resnet18(cfg, 7);
+        let groups = build_groups(&g).unwrap();
+        let mut l1 = HashMap::new();
+        for pid in g.param_ids() {
+            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+        }
+        let grouped = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        let ungrouped = ungrouped_select(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        assert_eq!(grouped.len(), ungrouped.len());
+        // rankings should differ somewhere (grouped sees coupled weights)
+        let differs = grouped
+            .iter()
+            .zip(&ungrouped)
+            .any(|(a, b)| (a.score - b.score).abs() > 1e-9);
+        assert!(differs);
+    }
+}

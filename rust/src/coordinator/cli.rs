@@ -1,0 +1,291 @@
+//! `spa` command-line interface (hand-rolled — no clap offline).
+//!
+//! ```text
+//! spa info    --model resnet18                       # shapes/params/FLOPs
+//! spa train   --model resnet18 --steps 200           # train on SynthCIFAR
+//! spa prune   --model resnet18 --time tpf --criterion l1 --target-rf 2.0
+//! spa obspa   --model resnet50 --source datafree --target-rf 1.5
+//! spa convert --model resnet18 --dialect tf --out model.tf.json
+//! spa import  --file model.tf.json --out model.spa.json
+//! ```
+
+use super::{train_prune, train_prune_finetune, prune_train, NoFinetuneAlgo, PipelineCfg};
+use crate::analysis;
+use crate::criteria::Criterion;
+use crate::data::ImageDataset;
+use crate::frontends::{self, Dialect};
+use crate::ir::serde as ir_serde;
+use crate::obspa::CalibSource;
+use crate::prune::Scope;
+use crate::train::TrainCfg;
+use crate::util::Table;
+use crate::zoo::{self, ImageCfg};
+use std::collections::HashMap;
+
+/// Parsed `--key value` flags.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Flags> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = &args[i];
+            anyhow::ensure!(k.starts_with("--"), "expected --flag, got `{k}`");
+            let v = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("flag {k} missing value"))?;
+            map.insert(k[2..].to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Flags(map))
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.0
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.0
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "spa — Structurally Prune Anything (Rust+JAX+Pallas reproduction)
+
+USAGE: spa <command> [--flag value ...]
+
+COMMANDS:
+  info     --model <name>                      print params/FLOPs/groups
+  train    --model <name> [--steps N --lr F]   train on SynthCIFAR
+  prune    --model <name> [--time tpf|pt] [--criterion l1|snip|grasp|crop]
+           [--target-rf F] [--iterations N]    full pipeline + report row
+  obspa    --model <name> [--source id|ood|datafree] [--target-rf F]
+  convert  --model <name> --dialect <torch|tf|jax|mxnet> --out <file>
+  import   --file <dialect json> [--out <spa-ir json>]
+  models                                       list zoo models
+";
+
+/// CLI entrypoint (used by `rust/src/main.rs`).
+pub fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    let icfg = ImageCfg {
+        hw: flags.usize("hw", 16),
+        classes: flags.usize("classes", 10),
+        ..Default::default()
+    };
+    let seed = flags.usize("seed", 1) as u64;
+    match cmd.as_str() {
+        "models" => {
+            for m in zoo::IMAGE_MODELS {
+                println!("{m}");
+            }
+            println!("mlp resnet18 resnet101 vgg19 (also available)");
+        }
+        "info" => {
+            let g = zoo::by_name(&flags.get("model", "resnet18"), icfg, seed)?;
+            let groups = crate::prune::build_groups(&g)?;
+            println!("model   : {}", g.name);
+            println!("ops     : {}", g.ops.len());
+            println!("params  : {}", g.num_params());
+            println!("flops   : {}", analysis::flops(&g));
+            println!(
+                "groups  : {} ({} prunable CCs)",
+                groups.groups.len(),
+                groups.num_prunable_ccs()
+            );
+        }
+        "train" => {
+            let mut g = zoo::by_name(&flags.get("model", "resnet18"), icfg, seed)?;
+            let ds = ImageDataset::synth_cifar(icfg.classes, 1024, icfg.hw, icfg.channels, seed);
+            let cfg = TrainCfg {
+                steps: flags.usize("steps", 200),
+                lr: flags.f64("lr", 0.05) as f32,
+                ..Default::default()
+            };
+            let rep = crate::train::train(&mut g, &ds, &cfg)?;
+            for e in &rep.history {
+                println!("step {:>5}  loss {:.4}  lr {:.4}", e.step, e.loss, e.lr);
+            }
+            let acc = crate::train::evaluate(&g, &ds, 256)?;
+            println!("test accuracy: {:.2}%", acc * 100.0);
+        }
+        "prune" => {
+            let model = flags.get("model", "resnet18");
+            let g = zoo::by_name(&model, icfg, seed)?;
+            let ds = ImageDataset::synth_cifar(icfg.classes, 1024, icfg.hw, icfg.channels, seed);
+            let cfg = PipelineCfg {
+                criterion: Criterion::parse(&flags.get("criterion", "l1"))?,
+                scope: if flags.get("scope", "grouped") == "grouped" {
+                    Scope::FullCc
+                } else {
+                    Scope::SourceOnly
+                },
+                target_rf: flags.f64("target-rf", 2.0),
+                iterations: flags.usize("iterations", 1),
+                train: TrainCfg {
+                    steps: flags.usize("train-steps", 150),
+                    ..Default::default()
+                },
+                finetune: TrainCfg {
+                    steps: flags.usize("finetune-steps", 80),
+                    lr: 0.02,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let rep = match flags.get("time", "tpf").as_str() {
+                "tpf" | "train-prune-finetune" => train_prune_finetune(g, &ds, &cfg)?.1,
+                "pt" | "prune-train" => prune_train(g, &ds, &cfg)?.1,
+                other => anyhow::bail!("unknown --time `{other}` (tpf|pt)"),
+            };
+            let mut t = Table::new(
+                "pipeline result",
+                &["model", "ori acc.", "pruned acc.", "final acc.", "RF", "RP", "secs"],
+            );
+            t.row(&[
+                model,
+                format!("{:.2}%", rep.ori_acc * 100.0),
+                format!("{:.2}%", rep.pruned_acc * 100.0),
+                format!("{:.2}%", rep.final_acc * 100.0),
+                format!("{:.2}x", rep.rf),
+                format!("{:.2}x", rep.rp),
+                format!("{:.1}", rep.seconds),
+            ]);
+            t.print();
+        }
+        "obspa" => {
+            let model = flags.get("model", "resnet50");
+            let g = zoo::by_name(&model, icfg, seed)?;
+            let ds = ImageDataset::synth_cifar(icfg.classes, 1024, icfg.hw, icfg.channels, seed);
+            let ood = ImageDataset::synth_cifar(
+                icfg.classes * 2,
+                256,
+                icfg.hw,
+                icfg.channels,
+                seed ^ 0xF00D,
+            );
+            let source = match flags.get("source", "id").as_str() {
+                "id" => CalibSource::InDistribution,
+                "ood" => CalibSource::OutOfDistribution,
+                "datafree" => CalibSource::DataFree,
+                other => anyhow::bail!("unknown --source `{other}`"),
+            };
+            let cfg = PipelineCfg {
+                train: TrainCfg {
+                    steps: flags.usize("train-steps", 150),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (_, rep) = train_prune(
+                g,
+                &ds,
+                Some(&ood),
+                NoFinetuneAlgo::Obspa(source),
+                flags.f64("target-rf", 1.5),
+                &cfg,
+            )?;
+            println!(
+                "OBSPA({}) {}: acc {:.2}% -> {:.2}% (drop {:.2}%), RF {:.2}x RP {:.2}x",
+                source.name(),
+                model,
+                rep.ori_acc * 100.0,
+                rep.final_acc * 100.0,
+                (rep.ori_acc - rep.final_acc) * 100.0,
+                rep.rf,
+                rep.rp
+            );
+        }
+        "convert" => {
+            let model = flags.get("model", "resnet18");
+            let dialect = Dialect::parse(&flags.get("dialect", "tf"))?;
+            let g = zoo::by_name(&model, icfg, seed)?;
+            let out = flags.get("out", &format!("{model}.{}.json", dialect.name()));
+            std::fs::write(&out, frontends::export_to_string(&g, dialect))?;
+            println!("wrote {out}");
+        }
+        "import" => {
+            let file = flags.get("file", "");
+            anyhow::ensure!(!file.is_empty(), "import needs --file");
+            let g = frontends::import_from_string(&std::fs::read_to_string(&file)?)?;
+            println!(
+                "imported `{}`: {} ops, {} params, {} flops",
+                g.name,
+                g.ops.len(),
+                g.num_params(),
+                analysis::flops(&g)
+            );
+            let out = flags.get("out", "");
+            if !out.is_empty() {
+                ir_serde::save_graph(&g, &out, true)?;
+                println!("wrote {out}");
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            anyhow::bail!("unknown command `{other}`\n{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parse() {
+        let f = Flags::parse(&[
+            "--model".into(),
+            "vgg16".into(),
+            "--target-rf".into(),
+            "2.5".into(),
+        ])
+        .unwrap();
+        assert_eq!(f.get("model", "x"), "vgg16");
+        assert_eq!(f.f64("target-rf", 1.0), 2.5);
+        assert_eq!(f.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn flags_reject_bad_syntax() {
+        assert!(Flags::parse(&["model".into()]).is_err());
+        assert!(Flags::parse(&["--model".into()]).is_err());
+    }
+
+    #[test]
+    fn info_command_runs() {
+        run(vec![
+            "info".into(),
+            "--model".into(),
+            "mlp".into(),
+            "--hw".into(),
+            "8".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn usage_on_no_args() {
+        run(vec![]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+}

@@ -1,0 +1,404 @@
+//! Prune-any-time coordinator (paper §3.3): the three pipelines the paper
+//! defines, each a composition of the same primitives —
+//!
+//! * **prune-train**: score at initialization (SNIP/CroP/GraSP family),
+//!   structurally prune, then train the sparse model to convergence;
+//! * **train-prune-finetune**: train dense, prune (L1/Taylor family,
+//!   one-shot or iterative), fine-tune;
+//! * **train-prune**: train dense, prune with OBSPA (ID/OOD/DataFree) or
+//!   the DFPC baseline, **no** fine-tuning.
+//!
+//! Every pipeline returns a [`PipelineReport`] with the paper's metrics
+//! (ori/pruned acc, RF, RP, wallclock) so benches print tables directly.
+
+pub mod cli;
+
+use crate::analysis;
+use crate::baselines;
+use crate::criteria::{self, Batch, Criterion};
+use crate::data::ImageDataset;
+use crate::ir::{DataId, Graph};
+use crate::obspa::{self, CalibSource, ObspaCfg};
+use crate::prune::{self, build_groups, score_groups_scoped, Agg, Norm, Scope};
+use crate::tensor::Tensor;
+use crate::train::{self, TrainCfg};
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// When pruning happens relative to training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PruneTime {
+    PruneTrain,
+    TrainPruneFinetune,
+    TrainPrune,
+}
+
+/// Full pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineCfg {
+    pub criterion: Criterion,
+    pub scope: Scope,
+    pub agg: Agg,
+    pub norm: Norm,
+    pub target_rf: f64,
+    pub min_keep: usize,
+    /// Iterative pruning: number of prune→tune rounds (1 = one-shot).
+    pub iterations: usize,
+    pub train: TrainCfg,
+    pub finetune: TrainCfg,
+    pub seed: u64,
+}
+
+impl Default for PipelineCfg {
+    fn default() -> Self {
+        PipelineCfg {
+            criterion: Criterion::L1,
+            scope: Scope::FullCc,
+            agg: Agg::Sum,
+            norm: Norm::Mean,
+            target_rf: 2.0,
+            min_keep: 1,
+            iterations: 1,
+            train: TrainCfg {
+                steps: 150,
+                ..Default::default()
+            },
+            finetune: TrainCfg {
+                steps: 80,
+                lr: 0.02,
+                ..Default::default()
+            },
+            seed: 0xAB5,
+        }
+    }
+}
+
+/// The paper's per-experiment row.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub model: String,
+    pub ori_acc: f32,
+    pub pruned_acc: f32,
+    pub final_acc: f32,
+    pub rf: f64,
+    pub rp: f64,
+    pub seconds: f64,
+    pub loss_history: Vec<train::LogEntry>,
+}
+
+/// Per-parameter scores for a criterion, drawing a batch if needed.
+pub fn criterion_scores(
+    g: &Graph,
+    ds: &ImageDataset,
+    criterion: Criterion,
+    seed: u64,
+) -> anyhow::Result<HashMap<DataId, Tensor>> {
+    if criterion.needs_data() {
+        let (x, labels) = ds.train_batch_seeded(seed, 32);
+        criteria::param_scores(g, criterion, Some(&Batch { x: &x, labels: &labels }))
+    } else {
+        criteria::param_scores(g, criterion, None)
+    }
+}
+
+/// One structural pruning round to an RF target (relative to `base`).
+fn prune_round(
+    g: &mut Graph,
+    ds: &ImageDataset,
+    cfg: &PipelineCfg,
+    round_rf: f64,
+) -> anyhow::Result<()> {
+    let groups = build_groups(g)?;
+    let scores = criterion_scores(g, ds, cfg.criterion, cfg.seed)?;
+    let ranked = score_groups_scoped(g, &groups, &scores, cfg.agg, cfg.norm, cfg.scope);
+    let sel = prune::select_by_flops_target(g, &groups, &ranked, round_rf, cfg.min_keep)?;
+    prune::apply_pruning(g, &groups, &sel)?;
+    Ok(())
+}
+
+/// train-prune-finetune (optionally iterative, paper's "it" variants).
+pub fn train_prune_finetune(
+    mut g: Graph,
+    ds: &ImageDataset,
+    cfg: &PipelineCfg,
+) -> anyhow::Result<(Graph, PipelineReport)> {
+    let t0 = std::time::Instant::now();
+    let mut history = Vec::new();
+    let dense = {
+        let rep = train::train(&mut g, ds, &cfg.train)?;
+        history.extend(rep.history);
+        g.clone()
+    };
+    let ori_acc = train::evaluate(&g, ds, 256)?;
+    let per_round_rf = cfg.target_rf.powf(1.0 / cfg.iterations as f64);
+    let mut cumulative = 1.0f64;
+    for round in 0..cfg.iterations {
+        cumulative *= per_round_rf;
+        // target is cumulative w.r.t. the dense model
+        let cur = analysis::flops(&dense) as f64 / analysis::flops(&g) as f64;
+        let need = (cumulative / cur).max(1.0);
+        prune_round(&mut g, ds, cfg, need)?;
+        if cfg.iterations > 1 && round + 1 < cfg.iterations {
+            // short inter-round tuning (paper: 5 epochs between steps)
+            let mut inter = cfg.finetune.clone();
+            inter.steps = (cfg.finetune.steps / cfg.iterations).max(10);
+            let rep = train::train(&mut g, ds, &inter)?;
+            history.extend(rep.history);
+        }
+    }
+    let pruned_acc = train::evaluate(&g, ds, 256)?;
+    let rep = train::train(&mut g, ds, &cfg.finetune)?;
+    history.extend(rep.history);
+    let final_acc = train::evaluate(&g, ds, 256)?;
+    let r = analysis::reduction(&dense, &g);
+    Ok((
+        g.clone(),
+        PipelineReport {
+            model: g.name.clone(),
+            ori_acc,
+            pruned_acc,
+            final_acc,
+            rf: r.rf,
+            rp: r.rp,
+            seconds: t0.elapsed().as_secs_f64(),
+            loss_history: history,
+        },
+    ))
+}
+
+/// prune-train: prune at initialization, then train to convergence.
+pub fn prune_train(
+    mut g: Graph,
+    ds: &ImageDataset,
+    cfg: &PipelineCfg,
+) -> anyhow::Result<(Graph, PipelineReport)> {
+    let t0 = std::time::Instant::now();
+    let dense = g.clone();
+    prune_round(&mut g, ds, cfg, cfg.target_rf)?;
+    let pruned_acc = train::evaluate(&g, ds, 256)?; // chance level
+    let rep = train::train(&mut g, ds, &cfg.train)?;
+    let final_acc = train::evaluate(&g, ds, 256)?;
+    let r = analysis::reduction(&dense, &g);
+    Ok((
+        g.clone(),
+        PipelineReport {
+            model: g.name.clone(),
+            ori_acc: f32::NAN, // no dense training in this setting
+            pruned_acc,
+            final_acc,
+            rf: r.rf,
+            rp: r.rp,
+            seconds: t0.elapsed().as_secs_f64(),
+            loss_history: rep.history,
+        },
+    ))
+}
+
+/// Which train-prune (no fine-tune) algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoFinetuneAlgo {
+    Obspa(CalibSource),
+    Dfpc,
+}
+
+/// train-prune: prune a trained model with no recovery training.
+pub fn train_prune(
+    mut g: Graph,
+    ds: &ImageDataset,
+    ood: Option<&ImageDataset>,
+    algo: NoFinetuneAlgo,
+    target_rf: f64,
+    cfg: &PipelineCfg,
+) -> anyhow::Result<(Graph, PipelineReport)> {
+    let t0 = std::time::Instant::now();
+    train::train(&mut g, ds, &cfg.train)?;
+    let dense = g.clone();
+    let ori_acc = train::evaluate(&g, ds, 256)?;
+    match algo {
+        NoFinetuneAlgo::Obspa(source) => {
+            let calib = match source {
+                CalibSource::InDistribution => ds.train_batch_seeded(cfg.seed, 128).0,
+                CalibSource::OutOfDistribution => ood
+                    .ok_or_else(|| anyhow::anyhow!("OOD source requires an OOD dataset"))?
+                    .train_batch_seeded(cfg.seed, 128)
+                    .0,
+                CalibSource::DataFree => {
+                    let mut rng = Rng::new(cfg.seed);
+                    obspa::datafree_calib(&g, 128, &mut rng)
+                }
+            };
+            obspa::obspa_prune(
+                &mut g,
+                &calib,
+                &ObspaCfg {
+                    target_rf,
+                    min_keep: cfg.min_keep,
+                    bn_recalibrate: source != CalibSource::DataFree,
+                    agg: cfg.agg,
+                    norm: cfg.norm,
+                    ..Default::default()
+                },
+            )?;
+        }
+        NoFinetuneAlgo::Dfpc => {
+            baselines::dfpc_prune(&mut g, target_rf, cfg.min_keep)?;
+        }
+    }
+    let final_acc = train::evaluate(&g, ds, 256)?;
+    let r = analysis::reduction(&dense, &g);
+    Ok((
+        g.clone(),
+        PipelineReport {
+            model: g.name.clone(),
+            ori_acc,
+            pruned_acc: final_acc,
+            final_acc,
+            rf: r.rf,
+            rp: r.rp,
+            seconds: t0.elapsed().as_secs_f64(),
+            loss_history: Vec::new(),
+        },
+    ))
+}
+
+/// Early pruning (paper §2, Rachwan et al. 2022 / You et al. 2020):
+/// train briefly, prune once, then train to convergence — between
+/// prune-train and train-prune-finetune on the pruning-time axis.
+pub fn early_prune(
+    mut g: Graph,
+    ds: &ImageDataset,
+    cfg: &PipelineCfg,
+    warmup_steps: usize,
+) -> anyhow::Result<(Graph, PipelineReport)> {
+    let t0 = std::time::Instant::now();
+    let dense = g.clone();
+    let mut warm = cfg.train.clone();
+    warm.steps = warmup_steps;
+    train::train(&mut g, ds, &warm)?;
+    prune_round(&mut g, ds, cfg, cfg.target_rf)?;
+    let pruned_acc = train::evaluate(&g, ds, 256)?;
+    let rep = train::train(&mut g, ds, &cfg.train)?;
+    let final_acc = train::evaluate(&g, ds, 256)?;
+    let r = analysis::reduction(&dense, &g);
+    Ok((
+        g.clone(),
+        PipelineReport {
+            model: g.name.clone(),
+            ori_acc: f32::NAN,
+            pruned_acc,
+            final_acc,
+            rf: r.rf,
+            rp: r.rp,
+            seconds: t0.elapsed().as_secs_f64(),
+            loss_history: rep.history,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::{self, ImageCfg};
+
+    fn tiny_cfg() -> PipelineCfg {
+        PipelineCfg {
+            target_rf: 1.4,
+            train: TrainCfg {
+                steps: 60,
+                lr: 0.05,
+                ..Default::default()
+            },
+            finetune: TrainCfg {
+                steps: 30,
+                lr: 0.02,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tpf_pipeline_end_to_end() {
+        let icfg = ImageCfg {
+            hw: 8,
+            classes: 4,
+            ..Default::default()
+        };
+        let ds = ImageDataset::synth_cifar(4, 384, 8, 3, 21);
+        let g = zoo::resnet18(icfg, 1);
+        let (pruned, rep) = train_prune_finetune(g, &ds, &tiny_cfg()).unwrap();
+        pruned.validate().unwrap();
+        assert!(rep.rf >= 1.4, "rf {}", rep.rf);
+        assert!(rep.ori_acc > 0.4, "ori {}", rep.ori_acc);
+        assert!(rep.final_acc > rep.ori_acc - 0.3);
+    }
+
+    #[test]
+    fn prune_train_pipeline() {
+        let icfg = ImageCfg {
+            hw: 8,
+            classes: 4,
+            ..Default::default()
+        };
+        let ds = ImageDataset::synth_cifar(4, 384, 8, 3, 22);
+        let g = zoo::vgg16(icfg, 2);
+        let mut cfg = tiny_cfg();
+        cfg.criterion = Criterion::Snip;
+        let (pruned, rep) = prune_train(g, &ds, &cfg).unwrap();
+        pruned.validate().unwrap();
+        assert!(rep.rf >= 1.4);
+        assert!(rep.final_acc > 0.4, "final {}", rep.final_acc);
+    }
+
+    #[test]
+    fn early_prune_pipeline() {
+        let icfg = ImageCfg {
+            hw: 8,
+            classes: 4,
+            ..Default::default()
+        };
+        let ds = ImageDataset::synth_cifar(4, 384, 8, 3, 24);
+        let mut cfg = tiny_cfg();
+        cfg.criterion = Criterion::Crop; // the early-pruning criterion
+        let (pruned, rep) = early_prune(zoo::resnet18(icfg, 4), &ds, &cfg, 20).unwrap();
+        pruned.validate().unwrap();
+        assert!(rep.rf >= 1.4);
+        assert!(rep.final_acc > 0.4, "final {}", rep.final_acc);
+    }
+
+    #[test]
+    fn train_prune_obspa_vs_dfpc_ordering() {
+        let icfg = ImageCfg {
+            hw: 8,
+            classes: 4,
+            ..Default::default()
+        };
+        let ds = ImageDataset::synth_cifar(4, 384, 8, 3, 23);
+        let cfg = tiny_cfg();
+        let (_, obspa_rep) = train_prune(
+            zoo::resnet18(icfg, 3),
+            &ds,
+            None,
+            NoFinetuneAlgo::Obspa(CalibSource::InDistribution),
+            1.3,
+            &cfg,
+        )
+        .unwrap();
+        let (_, dfpc_rep) = train_prune(
+            zoo::resnet18(icfg, 3),
+            &ds,
+            None,
+            NoFinetuneAlgo::Dfpc,
+            1.3,
+            &cfg,
+        )
+        .unwrap();
+        // the Tab. 4 shape: OBSPA's drop is smaller (allow small slack)
+        let obspa_drop = obspa_rep.ori_acc - obspa_rep.final_acc;
+        let dfpc_drop = dfpc_rep.ori_acc - dfpc_rep.final_acc;
+        assert!(
+            obspa_drop <= dfpc_drop + 0.05,
+            "obspa drop {obspa_drop} vs dfpc {dfpc_drop}"
+        );
+    }
+}

@@ -1,0 +1,332 @@
+//! Synthetic datasets — the sandbox substitution for CIFAR-10/100,
+//! ImageNette/ImageNet-1k, and SST-2 (DESIGN.md §Substitutions).
+//!
+//! Images are class-conditional smooth random fields (a few random
+//! sinusoids per class) plus per-sample noise and amplitude jitter: real
+//! learnable signal with intra-class variation, so accuracy-vs-pruning
+//! trade-offs behave qualitatively like natural-image benchmarks. Text
+//! is class-conditional token distributions (sentiment-bearing vocab
+//! halves) — enough for a DistilBERT-mini to learn a nontrivial
+//! classifier. Different seeds/class-counts give mutually-OOD datasets,
+//! mirroring the paper's CIFAR-10 ↔ CIFAR-100 OOD protocol.
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// A labelled image dataset with train/test split.
+pub struct ImageDataset {
+    pub classes: usize,
+    pub channels: usize,
+    pub hw: usize,
+    train_x: Vec<f32>,
+    train_y: Vec<usize>,
+    test_x: Vec<f32>,
+    test_y: Vec<usize>,
+}
+
+impl ImageDataset {
+    /// Class-conditional synthetic dataset. `n` = train samples; a
+    /// further `n/4` test samples are drawn from the same generator.
+    pub fn synth_cifar(classes: usize, n: usize, hw: usize, channels: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xDA7A_5E7);
+        // per-class template: sum of K random sinusoids per channel
+        let kfreq = 3;
+        let mut templates = vec![0.0f32; classes * channels * hw * hw];
+        for cls in 0..classes {
+            for ch in 0..channels {
+                for _ in 0..kfreq {
+                    let fx = rng.range(0.5, 3.0);
+                    let fy = rng.range(0.5, 3.0);
+                    let px = rng.range(0.0, std::f32::consts::TAU);
+                    let py = rng.range(0.0, std::f32::consts::TAU);
+                    let amp = rng.range(0.4, 1.0);
+                    for y in 0..hw {
+                        for x in 0..hw {
+                            let v = amp
+                                * ((fx * x as f32 / hw as f32 * std::f32::consts::TAU + px).sin()
+                                    + (fy * y as f32 / hw as f32 * std::f32::consts::TAU + py)
+                                        .cos());
+                            templates[((cls * channels + ch) * hw + y) * hw + x] += v * 0.5;
+                        }
+                    }
+                }
+            }
+        }
+        let img = channels * hw * hw;
+        let gen = |rng: &mut Rng, count: usize| -> (Vec<f32>, Vec<usize>) {
+            let mut xs = Vec::with_capacity(count * img);
+            let mut ys = Vec::with_capacity(count);
+            for _ in 0..count {
+                let cls = rng.below(classes);
+                // strong per-sample variation keeps the task non-trivial:
+                // amplitude jitter, a random spatial shift of the template,
+                // and heavy pixel noise
+                let alpha = rng.range(0.5, 1.4);
+                let (dx, dy) = (rng.below(3), rng.below(3));
+                let base = cls * img;
+                for ch in 0..channels {
+                    for y in 0..hw {
+                        for x in 0..hw {
+                            let sy = (y + dy) % hw;
+                            let sx = (x + dx) % hw;
+                            let v = templates[base + (ch * hw + sy) * hw + sx];
+                            xs.push(v * alpha + rng.normal() * 0.8);
+                        }
+                    }
+                }
+                ys.push(cls);
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = gen(&mut rng, n);
+        let (test_x, test_y) = gen(&mut rng, (n / 4).max(32));
+        ImageDataset {
+            classes,
+            channels,
+            hw,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+        }
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+
+    fn img(&self) -> usize {
+        self.channels * self.hw * self.hw
+    }
+
+    /// Random training batch.
+    pub fn train_batch(&self, rng: &mut Rng, bs: usize) -> (Tensor, Vec<usize>) {
+        let img = self.img();
+        let mut xs = Vec::with_capacity(bs * img);
+        let mut ys = Vec::with_capacity(bs);
+        for _ in 0..bs {
+            let i = rng.below(self.train_len());
+            xs.extend_from_slice(&self.train_x[i * img..(i + 1) * img]);
+            ys.push(self.train_y[i]);
+        }
+        (
+            Tensor::new(vec![bs, self.channels, self.hw, self.hw], xs),
+            ys,
+        )
+    }
+
+    /// Deterministic batch (for calibration sets).
+    pub fn train_batch_seeded(&self, seed: u64, bs: usize) -> (Tensor, Vec<usize>) {
+        let mut rng = Rng::new(seed ^ 0xBA7C4);
+        self.train_batch(&mut rng, bs)
+    }
+
+    /// Sequential test batch starting at `offset`.
+    pub fn test_batch(&self, offset: usize, bs: usize) -> (Tensor, Vec<usize>) {
+        let img = self.img();
+        let bs = bs.min(self.test_len().saturating_sub(offset)).max(1);
+        let mut xs = Vec::with_capacity(bs * img);
+        let mut ys = Vec::with_capacity(bs);
+        for i in offset..offset + bs {
+            xs.extend_from_slice(&self.test_x[i * img..(i + 1) * img]);
+            ys.push(self.test_y[i]);
+        }
+        (
+            Tensor::new(vec![bs, self.channels, self.hw, self.hw], xs),
+            ys,
+        )
+    }
+}
+
+/// A labelled token-sequence dataset (synthetic SST-2).
+pub struct TextDataset {
+    pub classes: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    train_x: Vec<f32>,
+    train_y: Vec<usize>,
+    test_x: Vec<f32>,
+    test_y: Vec<usize>,
+}
+
+impl TextDataset {
+    /// Sentiment-style task: class k draws `signal_frac` of its tokens
+    /// from the k-th vocab stripe, the rest uniformly.
+    pub fn synth_sst(classes: usize, n: usize, seq: usize, vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7E47);
+        let stripe = vocab / classes;
+        let gen = |rng: &mut Rng, count: usize| -> (Vec<f32>, Vec<usize>) {
+            let mut xs = Vec::with_capacity(count * seq);
+            let mut ys = Vec::with_capacity(count);
+            for _ in 0..count {
+                let cls = rng.below(classes);
+                for _ in 0..seq {
+                    let tok = if rng.uniform() < 0.6 {
+                        cls * stripe + rng.below(stripe)
+                    } else {
+                        rng.below(vocab)
+                    };
+                    xs.push(tok as f32);
+                }
+                ys.push(cls);
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = gen(&mut rng, n);
+        let (test_x, test_y) = gen(&mut rng, (n / 4).max(32));
+        TextDataset {
+            classes,
+            vocab,
+            seq,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+        }
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+
+    pub fn train_batch(&self, rng: &mut Rng, bs: usize) -> (Tensor, Vec<usize>) {
+        let mut xs = Vec::with_capacity(bs * self.seq);
+        let mut ys = Vec::with_capacity(bs);
+        for _ in 0..bs {
+            let i = rng.below(self.train_len());
+            xs.extend_from_slice(&self.train_x[i * self.seq..(i + 1) * self.seq]);
+            ys.push(self.train_y[i]);
+        }
+        (Tensor::new(vec![bs, self.seq], xs), ys)
+    }
+
+    pub fn train_batch_seeded(&self, seed: u64, bs: usize) -> (Tensor, Vec<usize>) {
+        let mut rng = Rng::new(seed ^ 0x5E9);
+        self.train_batch(&mut rng, bs)
+    }
+
+    pub fn test_batch(&self, offset: usize, bs: usize) -> (Tensor, Vec<usize>) {
+        let bs = bs.min(self.test_len().saturating_sub(offset)).max(1);
+        let mut xs = Vec::with_capacity(bs * self.seq);
+        let mut ys = Vec::with_capacity(bs);
+        for i in offset..offset + bs {
+            xs.extend_from_slice(&self.test_x[i * self.seq..(i + 1) * self.seq]);
+            ys.push(self.test_y[i]);
+        }
+        (Tensor::new(vec![bs, self.seq], xs), ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_batches_shaped() {
+        let ds = ImageDataset::synth_cifar(10, 256, 8, 3, 1);
+        let mut rng = Rng::new(2);
+        let (x, y) = ds.train_batch(&mut rng, 16);
+        assert_eq!(x.shape, vec![16, 3, 8, 8]);
+        assert_eq!(y.len(), 16);
+        assert!(y.iter().all(|&c| c < 10));
+        let (tx, ty) = ds.test_batch(0, 32);
+        assert_eq!(tx.shape[0], 32);
+        assert_eq!(ty.len(), 32);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-template classification on clean data should beat chance
+        // by a wide margin — the dataset carries real signal
+        let ds = ImageDataset::synth_cifar(4, 400, 8, 3, 3);
+        let img = 3 * 8 * 8;
+        // estimate class means from train data
+        let mut means = vec![vec![0.0f32; img]; 4];
+        let mut counts = vec![0usize; 4];
+        for i in 0..ds.train_len() {
+            let c = ds.train_y[i];
+            counts[c] += 1;
+            for j in 0..img {
+                means[c][j] += ds.train_x[i * img + j];
+            }
+        }
+        for c in 0..4 {
+            for v in &mut means[c] {
+                *v /= counts[c].max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.test_len() {
+            let x = &ds.test_x[i * img..(i + 1) * img];
+            let mut best = (0usize, f32::INFINITY);
+            for c in 0..4 {
+                let d: f32 = x
+                    .iter()
+                    .zip(&means[c])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < best.1 {
+                    best = (c, d);
+                }
+            }
+            if best.0 == ds.test_y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / ds.test_len() as f32;
+        assert!(acc > 0.7, "template accuracy only {acc}");
+    }
+
+    #[test]
+    fn different_seeds_are_different_distributions() {
+        let a = ImageDataset::synth_cifar(10, 64, 8, 3, 1);
+        let b = ImageDataset::synth_cifar(10, 64, 8, 3, 2);
+        let d: f32 = a
+            .train_x
+            .iter()
+            .zip(&b.train_x)
+            .map(|(x, y)| (x - y).abs())
+            .sum::<f32>()
+            / a.train_x.len() as f32;
+        assert!(d > 0.1, "seeds produced near-identical data");
+    }
+
+    #[test]
+    fn text_batches_valid_tokens() {
+        let ds = TextDataset::synth_sst(2, 128, 12, 64, 5);
+        let mut rng = Rng::new(6);
+        let (x, y) = ds.train_batch(&mut rng, 8);
+        assert_eq!(x.shape, vec![8, 12]);
+        assert!(x.data.iter().all(|&t| t >= 0.0 && t < 64.0));
+        assert!(y.iter().all(|&c| c < 2));
+    }
+
+    #[test]
+    fn text_classes_statistically_distinct() {
+        let ds = TextDataset::synth_sst(2, 512, 12, 64, 7);
+        // class-0 samples should use tokens < 32 more often
+        let mut frac0 = [0.0f32; 2];
+        let mut counts = [0usize; 2];
+        for i in 0..ds.train_len() {
+            let c = ds.train_y[i];
+            counts[c] += 1;
+            let low = ds.train_x[i * 12..(i + 1) * 12]
+                .iter()
+                .filter(|&&t| t < 32.0)
+                .count();
+            frac0[c] += low as f32 / 12.0;
+        }
+        for c in 0..2 {
+            frac0[c] /= counts[c].max(1) as f32;
+        }
+        assert!(frac0[0] > frac0[1] + 0.2, "{frac0:?}");
+    }
+}

@@ -1,0 +1,857 @@
+//! SPA-IR interpreter with reverse-mode autodiff.
+//!
+//! This is the substrate the paper obtains by converting ONNX models back
+//! to PyTorch (§3.3): a framework that can run *pruned* graphs of any
+//! shape forward (evaluation, calibration, BN recalibration) and backward
+//! (gradient-based criteria, fine-tuning, prune-train). It interprets the
+//! computational graph directly — no conversion step can desynchronize
+//! the pruned structure from the executed model.
+//!
+//! Fixed-shape *unpruned* models additionally run through the PJRT
+//! artifact path (`crate::runtime`); an integration test cross-checks the
+//! two executors' numerics.
+
+use crate::ir::{DataId, DataKind, Graph, OpId, OpKind};
+use crate::tensor::{ops, Tensor};
+use std::collections::HashMap;
+
+/// Execution mode: `Train` uses batch statistics in BatchNorm (and records
+/// them for running-stat updates); `Eval` uses running statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Train,
+    Eval,
+}
+
+/// Per-op saved state needed by the backward pass.
+#[derive(Debug, Clone)]
+enum Aux {
+    None,
+    MaxPool { argmax: Vec<usize> },
+    BatchNorm { xhat: Tensor, var: Tensor, mean: Tensor },
+    LayerNorm { xhat: Tensor, inv_stds: Vec<f32> },
+    Softmax { y: Tensor },
+    Act { x: Tensor },
+}
+
+/// Result of a forward pass: every data-node value plus backward state.
+pub struct Forward {
+    /// Value per data id (params included for convenience).
+    pub values: Vec<Option<Tensor>>,
+    aux: HashMap<OpId, Aux>,
+    mode: Mode,
+}
+
+impl Forward {
+    pub fn value(&self, id: DataId) -> &Tensor {
+        self.values[id]
+            .as_ref()
+            .unwrap_or_else(|| panic!("data {id} not computed"))
+    }
+
+    /// The first graph output (logits for classifiers).
+    pub fn logits<'a>(&'a self, g: &Graph) -> &'a Tensor {
+        self.value(g.outputs[0])
+    }
+}
+
+/// Gradients from a backward pass.
+pub struct Grads {
+    /// d loss / d data-node for every reached node.
+    pub by_data: HashMap<DataId, Tensor>,
+}
+
+impl Grads {
+    pub fn param_grad(&self, id: DataId) -> Option<&Tensor> {
+        self.by_data.get(&id)
+    }
+}
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation (matches jax.nn.gelu default closely)
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Broadcast-expand `b` to shape `a_shape` (channel/row semantics of
+/// `crate::ir::shape::broadcast_ok`).
+fn broadcast_to(a_shape: &[usize], b: &Tensor) -> Tensor {
+    if b.shape == a_shape {
+        return b.clone();
+    }
+    let mut out = Tensor::zeros(a_shape);
+    if b.rank() == 1 {
+        let c = b.numel();
+        match a_shape.len() {
+            2 => {
+                for i in 0..a_shape[0] {
+                    for j in 0..c {
+                        out.data[i * c + j] = b.data[j];
+                    }
+                }
+            }
+            3 => {
+                let rows = a_shape[0] * a_shape[1];
+                for i in 0..rows {
+                    for j in 0..c {
+                        out.data[i * c + j] = b.data[j];
+                    }
+                }
+            }
+            4 => {
+                let inner = a_shape[2] * a_shape[3];
+                for img in 0..a_shape[0] {
+                    for ch in 0..c {
+                        let base = (img * c + ch) * inner;
+                        for i in 0..inner {
+                            out.data[base + i] = b.data[ch];
+                        }
+                    }
+                }
+            }
+            _ => panic!("unsupported broadcast"),
+        }
+    } else if b.rank() == 4 && b.shape[2] == 1 && b.shape[3] == 1 {
+        let inner = a_shape[2] * a_shape[3];
+        for i in 0..b.numel() {
+            for j in 0..inner {
+                out.data[i * inner + j] = b.data[i];
+            }
+        }
+    } else if b.rank() == 2 && a_shape.len() == 4 {
+        // [N,C] gate over [N,C,H,W]
+        let inner = a_shape[2] * a_shape[3];
+        for i in 0..b.numel() {
+            for j in 0..inner {
+                out.data[i * inner + j] = b.data[i];
+            }
+        }
+    } else if b.rank() == 3 && b.shape[0] == 1 {
+        let block = b.numel();
+        for img in 0..a_shape[0] {
+            out.data[img * block..(img + 1) * block].copy_from_slice(&b.data);
+        }
+    } else {
+        panic!("unsupported broadcast {:?} -> {:?}", b.shape, a_shape);
+    }
+    out
+}
+
+/// Reduce a full-shaped gradient back to the broadcast operand's shape.
+fn reduce_to(b_shape: &[usize], g: &Tensor) -> Tensor {
+    if b_shape == g.shape.as_slice() {
+        return g.clone();
+    }
+    let mut out = Tensor::zeros(b_shape);
+    if b_shape.len() == 1 {
+        let c = b_shape[0];
+        match g.rank() {
+            2 => {
+                for i in 0..g.shape[0] {
+                    for j in 0..c {
+                        out.data[j] += g.data[i * c + j];
+                    }
+                }
+            }
+            3 => {
+                let rows = g.shape[0] * g.shape[1];
+                for i in 0..rows {
+                    for j in 0..c {
+                        out.data[j] += g.data[i * c + j];
+                    }
+                }
+            }
+            4 => {
+                let inner = g.shape[2] * g.shape[3];
+                for img in 0..g.shape[0] {
+                    for ch in 0..c {
+                        let base = (img * c + ch) * inner;
+                        out.data[ch] += g.data[base..base + inner].iter().sum::<f32>();
+                    }
+                }
+            }
+            _ => panic!("unsupported reduce"),
+        }
+    } else if (b_shape.len() == 4 && b_shape[2] == 1 && b_shape[3] == 1)
+        || (b_shape.len() == 2 && g.rank() == 4)
+    {
+        let inner = g.shape[2] * g.shape[3];
+        for i in 0..out.numel() {
+            out.data[i] = g.data[i * inner..(i + 1) * inner].iter().sum::<f32>();
+        }
+    } else if b_shape.len() == 3 && b_shape[0] == 1 {
+        let block: usize = b_shape.iter().product();
+        for img in 0..g.shape[0] {
+            for i in 0..block {
+                out.data[i] += g.data[img * block + i];
+            }
+        }
+    } else {
+        panic!("unsupported reduce {:?} -> {:?}", g.shape, b_shape);
+    }
+    out
+}
+
+/// Run the graph forward. `feeds` binds graph-input data ids to values;
+/// batch size may differ from the recorded nominal shape (all shape-
+/// dependent ops re-derive from actual tensors).
+pub fn forward(g: &Graph, feeds: &[(DataId, Tensor)], mode: Mode) -> anyhow::Result<Forward> {
+    let mut values: Vec<Option<Tensor>> = vec![None; g.datas.len()];
+    for d in &g.datas {
+        if let DataKind::Param(t) = &d.kind {
+            values[d.id] = Some(t.clone());
+        }
+    }
+    for (id, t) in feeds {
+        anyhow::ensure!(
+            matches!(g.datas[*id].kind, DataKind::Input),
+            "feed target `{}` is not an input",
+            g.datas[*id].name
+        );
+        values[*id] = Some(t.clone());
+    }
+    let mut aux: HashMap<OpId, Aux> = HashMap::new();
+    for op_id in g.topo_order()? {
+        let op = &g.ops[op_id];
+        let ins: Vec<&Tensor> = op
+            .inputs
+            .iter()
+            .map(|&i| {
+                values[i]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("missing input to `{}`", op.name))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let (out, a) = eval_op(&op.kind, &ins, mode)?;
+        values[op.outputs[0]] = Some(out);
+        if !matches!(a, Aux::None) {
+            aux.insert(op_id, a);
+        }
+    }
+    Ok(Forward { values, aux, mode })
+}
+
+fn eval_op(kind: &OpKind, ins: &[&Tensor], mode: Mode) -> anyhow::Result<(Tensor, Aux)> {
+    Ok(match kind {
+        OpKind::Conv2d { stride, pad, groups } => (
+            ops::conv2d(ins[0], ins[1], ins.get(2).copied(), *stride, *pad, *groups),
+            Aux::None,
+        ),
+        OpKind::Gemm => (ops::linear(ins[0], ins[1], ins.get(2).copied()), Aux::None),
+        OpKind::BatchNorm { eps } => match mode {
+            Mode::Eval => (
+                ops::batchnorm_infer(ins[0], ins[1], ins[2], ins[3], ins[4], *eps),
+                Aux::None,
+            ),
+            Mode::Train => {
+                let (y, mean, var, xhat) = ops::batchnorm_train(ins[0], ins[1], ins[2], *eps);
+                (y, Aux::BatchNorm { xhat, var, mean })
+            }
+        },
+        OpKind::LayerNorm { eps } => {
+            let (y, _m, inv_stds, xhat) = ops::layernorm(ins[0], ins[1], ins[2], *eps);
+            (y, Aux::LayerNorm { xhat, inv_stds })
+        }
+        OpKind::Relu => (
+            ins[0].map(|v| v.max(0.0)),
+            Aux::Act { x: ins[0].clone() },
+        ),
+        OpKind::Gelu => (ins[0].map(gelu), Aux::Act { x: ins[0].clone() }),
+        OpKind::Silu => (
+            ins[0].map(|v| v / (1.0 + (-v).exp())),
+            Aux::Act { x: ins[0].clone() },
+        ),
+        OpKind::Sigmoid => (
+            ins[0].map(|v| 1.0 / (1.0 + (-v).exp())),
+            Aux::Act { x: ins[0].clone() },
+        ),
+        OpKind::Tanh => (ins[0].map(f32::tanh), Aux::Act { x: ins[0].clone() }),
+        OpKind::Add => {
+            let b = broadcast_to(&ins[0].shape, ins[1]);
+            (ins[0].add(&b), Aux::None)
+        }
+        OpKind::Mul => {
+            let b = broadcast_to(&ins[0].shape, ins[1]);
+            (ins[0].mul(&b), Aux::None)
+        }
+        OpKind::MaxPool2d { k, stride, pad } => {
+            let (y, argmax) = ops::maxpool2d(ins[0], *k, *stride, *pad);
+            (y, Aux::MaxPool { argmax })
+        }
+        OpKind::AvgPool2d { k, stride, pad } => {
+            (ops::avgpool2d(ins[0], *k, *stride, *pad), Aux::None)
+        }
+        OpKind::GlobalAvgPool => (ops::global_avgpool(ins[0]), Aux::None),
+        OpKind::Flatten => {
+            let n = ins[0].shape[0];
+            let rest: usize = ins[0].shape[1..].iter().product();
+            (ins[0].reshaped(vec![n, rest]), Aux::None)
+        }
+        OpKind::Concat { axis } => {
+            let shapes: Vec<&[usize]> = ins.iter().map(|t| t.shape.as_slice()).collect();
+            let mut out_shape = shapes[0].to_vec();
+            out_shape[*axis] = shapes.iter().map(|s| s[*axis]).sum();
+            let outer: usize = out_shape[..*axis].iter().product();
+            let inner: usize = out_shape[*axis + 1..].iter().product();
+            let mut out = Vec::with_capacity(out_shape.iter().product());
+            for o in 0..outer {
+                for t in ins {
+                    let d = t.shape[*axis];
+                    let base = o * d * inner;
+                    out.extend_from_slice(&t.data[base..base + d * inner]);
+                }
+            }
+            (Tensor::new(out_shape, out), Aux::None)
+        }
+        OpKind::Softmax => {
+            let y = ops::softmax_lastdim(ins[0]);
+            (y.clone(), Aux::Softmax { y })
+        }
+        OpKind::MatMul => (ops::batch_matmul(ins[0], ins[1]), Aux::None),
+        OpKind::Transpose { perm } => (ops::transpose(ins[0], perm), Aux::None),
+        OpKind::SplitHeads { heads } => {
+            let (n, t, d) = (ins[0].shape[0], ins[0].shape[1], ins[0].shape[2]);
+            let r = ins[0].reshaped(vec![n, t, *heads, d / heads]);
+            (ops::transpose(&r, &[0, 2, 1, 3]), Aux::None)
+        }
+        OpKind::MergeHeads => {
+            let (n, h, t, d) = (
+                ins[0].shape[0],
+                ins[0].shape[1],
+                ins[0].shape[2],
+                ins[0].shape[3],
+            );
+            let tr = ops::transpose(ins[0], &[0, 2, 1, 3]);
+            (tr.reshaped(vec![n, t, h * d]), Aux::None)
+        }
+        OpKind::Scale { c } => (ins[0].scale(*c), Aux::None),
+        OpKind::Embedding => (ops::embedding(ins[0], ins[1]), Aux::None),
+        OpKind::ReduceMean { axis } => {
+            let x = ins[0];
+            let outer: usize = x.shape[..*axis].iter().product();
+            let d = x.shape[*axis];
+            let inner: usize = x.shape[*axis + 1..].iter().product();
+            let mut out = vec![0.0f32; outer * inner];
+            let inv = 1.0 / d as f32;
+            for o in 0..outer {
+                for k in 0..d {
+                    for i in 0..inner {
+                        out[o * inner + i] += x.data[(o * d + k) * inner + i] * inv;
+                    }
+                }
+            }
+            let shape: Vec<usize> = x
+                .shape
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i != axis)
+                .map(|(_, &v)| v)
+                .collect();
+            (Tensor::new(shape, out), Aux::None)
+        }
+        OpKind::NchwToTokens => {
+            // [N,C,H,W] → [N,HW,C]
+            let t = ops::transpose(ins[0], &[0, 2, 3, 1]);
+            let (n, h, w, c) = (
+                ins[0].shape[0],
+                ins[0].shape[2],
+                ins[0].shape[3],
+                ins[0].shape[1],
+            );
+            (t.reshaped(vec![n, h * w, c]), Aux::None)
+        }
+        OpKind::Identity => (ins[0].clone(), Aux::None),
+    })
+}
+
+/// Reverse pass: seed gradients at `out_grads` (usually dLoss/dLogits on
+/// the graph output) and propagate to every parameter and input.
+pub fn backward(g: &Graph, fwd: &Forward, out_grads: &[(DataId, Tensor)]) -> anyhow::Result<Grads> {
+    let mut by_data: HashMap<DataId, Tensor> = HashMap::new();
+    for (id, t) in out_grads {
+        by_data.insert(*id, t.clone());
+    }
+    let order = g.topo_order()?;
+    for &op_id in order.iter().rev() {
+        let op = &g.ops[op_id];
+        let out_id = op.outputs[0];
+        let dy = match by_data.get(&out_id) {
+            Some(t) => t.clone(),
+            None => continue, // output unused by the loss
+        };
+        let ins: Vec<&Tensor> = op.inputs.iter().map(|&i| fwd.value(i)).collect();
+        let aux = fwd.aux.get(&op_id).unwrap_or(&Aux::None);
+        let din = backprop_op(&op.kind, &ins, &dy, aux, fwd.mode)?;
+        for (slot, grad) in din.into_iter().enumerate() {
+            if let Some(grad) = grad {
+                let id = op.inputs[slot];
+                match by_data.get_mut(&id) {
+                    Some(acc) => *acc = acc.add(&grad),
+                    None => {
+                        by_data.insert(id, grad);
+                    }
+                }
+            }
+        }
+    }
+    Ok(Grads { by_data })
+}
+
+/// Per-op VJP: returns one optional gradient per positional input.
+fn backprop_op(
+    kind: &OpKind,
+    ins: &[&Tensor],
+    dy: &Tensor,
+    aux: &Aux,
+    mode: Mode,
+) -> anyhow::Result<Vec<Option<Tensor>>> {
+    Ok(match kind {
+        OpKind::Conv2d { stride, pad, groups } => {
+            let (dx, dw, db) = ops::conv2d_backward(ins[0], ins[1], dy, *stride, *pad, *groups);
+            let mut out = vec![Some(dx), Some(dw)];
+            if ins.len() > 2 {
+                out.push(Some(db));
+            }
+            out
+        }
+        OpKind::Gemm => {
+            // x [rows,K] w [N,K]: dx = dy·w ; dw = dyᵀ·x ; db = Σ dy
+            let k = ins[0].dim(-1);
+            let rows = ins[0].numel() / k;
+            let n = ins[1].shape[0];
+            let x2 = ins[0].reshaped(vec![rows, k]);
+            let dy2 = dy.reshaped(vec![rows, n]);
+            let dx = ops::matmul(&dy2, ins[1]).reshaped(ins[0].shape.clone());
+            let dw = ops::matmul(&dy2.t2(), &x2);
+            let mut out = vec![Some(dx), Some(dw)];
+            if ins.len() > 2 {
+                let mut db = vec![0.0f32; n];
+                for r in 0..rows {
+                    for j in 0..n {
+                        db[j] += dy2.data[r * n + j];
+                    }
+                }
+                out.push(Some(Tensor::new(vec![n], db)));
+            }
+            out
+        }
+        OpKind::BatchNorm { eps } => match (mode, aux) {
+            (Mode::Train, Aux::BatchNorm { xhat, var, .. }) => {
+                let (dx, dgamma, dbeta) = ops::batchnorm_backward(dy, xhat, ins[1], var, *eps);
+                vec![Some(dx), Some(dgamma), Some(dbeta), None, None]
+            }
+            _ => {
+                // eval-mode BN is an affine map per channel
+                let c = ins[0].shape[1];
+                let inner: usize = ins[0].shape[2..].iter().product();
+                let nimg = ins[0].shape[0];
+                let mut dx = Tensor::zeros(&ins[0].shape);
+                let mut dgamma = vec![0.0f32; c];
+                let mut dbeta = vec![0.0f32; c];
+                for img in 0..nimg {
+                    for ch in 0..c {
+                        let inv_std = 1.0 / (ins[4].data[ch] + eps).sqrt();
+                        let scale = ins[1].data[ch] * inv_std;
+                        let base = (img * c + ch) * inner;
+                        for i in 0..inner {
+                            dx.data[base + i] = dy.data[base + i] * scale;
+                            dgamma[ch] += dy.data[base + i]
+                                * (ins[0].data[base + i] - ins[3].data[ch])
+                                * inv_std;
+                            dbeta[ch] += dy.data[base + i];
+                        }
+                    }
+                }
+                vec![
+                    Some(dx),
+                    Some(Tensor::new(vec![c], dgamma)),
+                    Some(Tensor::new(vec![c], dbeta)),
+                    None,
+                    None,
+                ]
+            }
+        },
+        OpKind::LayerNorm { .. } => {
+            if let Aux::LayerNorm { xhat, inv_stds } = aux {
+                let (dx, dgamma, dbeta) = ops::layernorm_backward(dy, xhat, ins[1], inv_stds);
+                vec![Some(dx), Some(dgamma), Some(dbeta)]
+            } else {
+                anyhow::bail!("layernorm missing aux")
+            }
+        }
+        OpKind::Relu => {
+            let x = match aux {
+                Aux::Act { x } => x,
+                _ => ins[0],
+            };
+            vec![Some(dy.zip(x, |g, v| if v > 0.0 { g } else { 0.0 }))]
+        }
+        OpKind::Gelu => {
+            let x = match aux {
+                Aux::Act { x } => x,
+                _ => ins[0],
+            };
+            vec![Some(dy.zip(x, |g, v| g * gelu_grad(v)))]
+        }
+        OpKind::Silu => {
+            let x = match aux {
+                Aux::Act { x } => x,
+                _ => ins[0],
+            };
+            vec![Some(dy.zip(x, |g, v| {
+                let s = 1.0 / (1.0 + (-v).exp());
+                g * (s + v * s * (1.0 - s))
+            }))]
+        }
+        OpKind::Sigmoid => {
+            let x = match aux {
+                Aux::Act { x } => x,
+                _ => ins[0],
+            };
+            vec![Some(dy.zip(x, |g, v| {
+                let s = 1.0 / (1.0 + (-v).exp());
+                g * s * (1.0 - s)
+            }))]
+        }
+        OpKind::Tanh => {
+            let x = match aux {
+                Aux::Act { x } => x,
+                _ => ins[0],
+            };
+            vec![Some(dy.zip(x, |g, v| {
+                let t = v.tanh();
+                g * (1.0 - t * t)
+            }))]
+        }
+        OpKind::Add => {
+            let db = reduce_to(&ins[1].shape, dy);
+            vec![Some(dy.clone()), Some(db)]
+        }
+        OpKind::Mul => {
+            let b_full = broadcast_to(&ins[0].shape, ins[1]);
+            let da = dy.mul(&b_full);
+            let db_full = dy.mul(ins[0]);
+            let db = reduce_to(&ins[1].shape, &db_full);
+            vec![Some(da), Some(db)]
+        }
+        OpKind::MaxPool2d { .. } => {
+            if let Aux::MaxPool { argmax } = aux {
+                let dx = ops::maxpool2d_backward(dy, argmax, ins[0].numel());
+                vec![Some(dx.reshaped(ins[0].shape.clone()))]
+            } else {
+                anyhow::bail!("maxpool missing aux")
+            }
+        }
+        OpKind::AvgPool2d { k, stride, pad } => {
+            vec![Some(ops::avgpool2d_backward(dy, &ins[0].shape, *k, *stride, *pad))]
+        }
+        OpKind::GlobalAvgPool => {
+            vec![Some(ops::global_avgpool_backward(dy, &ins[0].shape))]
+        }
+        OpKind::Flatten => vec![Some(dy.reshaped(ins[0].shape.clone()))],
+        OpKind::Concat { axis } => {
+            let out_shape_axis: usize = ins.iter().map(|t| t.shape[*axis]).sum();
+            let outer: usize = ins[0].shape[..*axis].iter().product();
+            let inner: usize = ins[0].shape[*axis + 1..].iter().product();
+            let mut grads: Vec<Option<Tensor>> = Vec::with_capacity(ins.len());
+            let mut offset = 0usize;
+            for t in ins {
+                let d = t.shape[*axis];
+                let mut gdat = Vec::with_capacity(t.numel());
+                for o in 0..outer {
+                    let base = (o * out_shape_axis + offset) * inner;
+                    gdat.extend_from_slice(&dy.data[base..base + d * inner]);
+                }
+                grads.push(Some(Tensor::new(t.shape.clone(), gdat)));
+                offset += d;
+            }
+            grads
+        }
+        OpKind::Softmax => {
+            if let Aux::Softmax { y } = aux {
+                vec![Some(ops::softmax_backward(dy, y))]
+            } else {
+                anyhow::bail!("softmax missing aux")
+            }
+        }
+        OpKind::MatMul => {
+            // y = a·b: da = dy·bᵀ, db = aᵀ·dy (batched)
+            let rank = ins[0].rank();
+            let mut perm: Vec<usize> = (0..rank).collect();
+            perm.swap(rank - 1, rank - 2);
+            let bt = ops::transpose(ins[1], &perm);
+            let at = ops::transpose(ins[0], &perm);
+            vec![
+                Some(ops::batch_matmul(dy, &bt)),
+                Some(ops::batch_matmul(&at, dy)),
+            ]
+        }
+        OpKind::Transpose { perm } => {
+            vec![Some(ops::transpose(dy, &ops::inverse_perm(perm)))]
+        }
+        OpKind::SplitHeads { .. } => {
+            // forward: [N,T,D] -> reshape -> transpose(0,2,1,3)
+            let tr = ops::transpose(dy, &[0, 2, 1, 3]);
+            vec![Some(tr.reshaped(ins[0].shape.clone()))]
+        }
+        OpKind::MergeHeads => {
+            let (n, h, t, d) = (
+                ins[0].shape[0],
+                ins[0].shape[1],
+                ins[0].shape[2],
+                ins[0].shape[3],
+            );
+            let r = dy.reshaped(vec![n, t, h, d]);
+            vec![Some(ops::transpose(&r, &[0, 2, 1, 3]))]
+        }
+        OpKind::Scale { c } => vec![Some(dy.scale(*c))],
+        OpKind::Embedding => {
+            let dt = ops::embedding_backward(ins[0], dy, &ins[1].shape);
+            vec![None, Some(dt)]
+        }
+        OpKind::ReduceMean { axis } => {
+            let x = ins[0];
+            let outer: usize = x.shape[..*axis].iter().product();
+            let d = x.shape[*axis];
+            let inner: usize = x.shape[*axis + 1..].iter().product();
+            let inv = 1.0 / d as f32;
+            let mut dx = Tensor::zeros(&x.shape);
+            for o in 0..outer {
+                for k in 0..d {
+                    for i in 0..inner {
+                        dx.data[(o * d + k) * inner + i] = dy.data[o * inner + i] * inv;
+                    }
+                }
+            }
+            vec![Some(dx)]
+        }
+        OpKind::NchwToTokens => {
+            let (n, c, h, w) = (
+                ins[0].shape[0],
+                ins[0].shape[1],
+                ins[0].shape[2],
+                ins[0].shape[3],
+            );
+            let r = dy.reshaped(vec![n, h, w, c]);
+            vec![Some(ops::transpose(&r, &[0, 3, 1, 2]))]
+        }
+        OpKind::Identity => vec![Some(dy.clone())],
+    })
+}
+
+/// Update BatchNorm running statistics from a training forward pass
+/// (momentum-EMA, PyTorch semantics).
+pub fn update_bn_stats(g: &mut Graph, fwd: &Forward, momentum: f32) {
+    for op in 0..g.ops.len() {
+        if let Some(Aux::BatchNorm { mean, var, .. }) = fwd.aux.get(&op) {
+            let (mean, var) = (mean.clone(), var.clone());
+            let mean_id = g.ops[op].inputs[3];
+            let var_id = g.ops[op].inputs[4];
+            if let Some(rm) = g.datas[mean_id].param_mut() {
+                for (r, &b) in rm.data.iter_mut().zip(&mean.data) {
+                    *r = (1.0 - momentum) * *r + momentum * b;
+                }
+            }
+            if let Some(rv) = g.datas[var_id].param_mut() {
+                for (r, &b) in rv.data.iter_mut().zip(&var.data) {
+                    *r = (1.0 - momentum) * *r + momentum * b;
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: eval-mode logits for a batch of images/ids.
+pub fn predict(g: &Graph, x: Tensor) -> anyhow::Result<Tensor> {
+    let fwd = forward(g, &[(g.inputs[0], x)], Mode::Eval)?;
+    Ok(fwd.logits(g).clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::tensor::assert_allclose;
+    use crate::util::Rng;
+
+    fn small_cnn() -> Graph {
+        let mut b = GraphBuilder::new("cnn", 7);
+        let x = b.input("x", vec![2, 3, 8, 8]);
+        let c1 = b.conv2d("c1", x, 8, 3, 1, 1, 1, true);
+        let n1 = b.batchnorm("bn1", c1);
+        let r1 = b.relu("r1", n1);
+        let c2 = b.conv2d("c2", r1, 8, 3, 1, 1, 1, false);
+        let n2 = b.batchnorm("bn2", c2);
+        let s = b.add("res", n2, r1);
+        let r2 = b.relu("r2", s);
+        let p = b.maxpool2d("mp", r2, 2, 2, 0);
+        let g = b.global_avgpool("gap", p);
+        let out = b.gemm("fc", g, 5, true);
+        b.output(out);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let g = small_cnn();
+        let mut rng = Rng::new(1);
+        let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 3 * 64, -1.0, 1.0));
+        let fwd = forward(&g, &[(g.inputs[0], x)], Mode::Eval).unwrap();
+        assert_eq!(fwd.logits(&g).shape, vec![2, 5]);
+    }
+
+    #[test]
+    fn batch_size_flexible() {
+        // nominal batch is 2; run with 5
+        let g = small_cnn();
+        let mut rng = Rng::new(2);
+        let x = Tensor::new(vec![5, 3, 8, 8], rng.uniform_vec(5 * 3 * 64, -1.0, 1.0));
+        let fwd = forward(&g, &[(g.inputs[0], x)], Mode::Eval).unwrap();
+        assert_eq!(fwd.logits(&g).shape, vec![5, 5]);
+    }
+
+    #[test]
+    fn end_to_end_gradcheck() {
+        // numerical gradient of sum(logits·seed) w.r.t. a few params
+        let g = small_cnn();
+        let mut rng = Rng::new(3);
+        let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 3 * 64, -0.5, 0.5));
+        let seed = Tensor::new(vec![2, 5], rng.uniform_vec(10, -1.0, 1.0));
+        let loss = |g: &Graph| {
+            let fwd = forward(g, &[(g.inputs[0], x.clone())], Mode::Train).unwrap();
+            fwd.logits(g)
+                .data
+                .iter()
+                .zip(&seed.data)
+                .map(|(&a, &b)| a * b)
+                .sum::<f32>()
+        };
+        let fwd = forward(&g, &[(g.inputs[0], x.clone())], Mode::Train).unwrap();
+        let grads = backward(&g, &fwd, &[(g.outputs[0], seed.clone())]).unwrap();
+        // check conv1 weight, fc weight, bn gamma
+        for pname in ["c1.w", "fc.w", "bn1.gamma"] {
+            let pid = g.data_by_name(pname).unwrap().id;
+            let analytic = grads.param_grad(pid).unwrap().clone();
+            let idxs = [0usize, analytic.numel() / 2];
+            for &i in &idxs {
+                let eps = 1e-2;
+                let mut gp = g.clone();
+                gp.datas[pid].param_mut().unwrap().data[i] += eps;
+                let mut gm = g.clone();
+                gm.datas[pid].param_mut().unwrap().data[i] -= eps;
+                let num = (loss(&gp) - loss(&gm)) / (2.0 * eps);
+                let ana = analytic.data[i];
+                assert!(
+                    (num - ana).abs() < 0.05 * (1.0 + ana.abs()),
+                    "{pname}[{i}]: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bn_stats_update() {
+        let mut g = small_cnn();
+        let mut rng = Rng::new(4);
+        let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 3 * 64, 1.0, 3.0));
+        let before = g.data_by_name("bn1.mean").unwrap().param().unwrap().clone();
+        let fwd = forward(&g, &[(g.inputs[0], x)], Mode::Train).unwrap();
+        update_bn_stats(&mut g, &fwd, 0.5);
+        let after = g.data_by_name("bn1.mean").unwrap().param().unwrap().clone();
+        assert!(before.l2_dist(&after) > 1e-3, "running mean should move");
+    }
+
+    #[test]
+    fn transformer_block_runs_and_gradchecks() {
+        let mut b = GraphBuilder::new("tf", 5);
+        let x = b.input("x", vec![2, 4, 16]);
+        let ln = b.layernorm("ln", x);
+        let q = b.gemm("q", ln, 16, true);
+        let k = b.gemm("k", ln, 16, true);
+        let v = b.gemm("v", ln, 16, true);
+        let qh = b.split_heads("qh", q, 4);
+        let kh = b.split_heads("kh", k, 4);
+        let vh = b.split_heads("vh", v, 4);
+        let kt = b.transpose("kt", kh, vec![0, 1, 3, 2]);
+        let sc = b.matmul("qk", qh, kt);
+        let scl = b.scale("scl", sc, 0.5);
+        let sm = b.softmax("sm", scl);
+        let ctx = b.matmul("av", sm, vh);
+        let mh = b.merge_heads("mh", ctx);
+        let o = b.gemm("o", mh, 16, true);
+        let res = b.add("res", o, x);
+        let pooled = b.reduce_mean("pool", res, 1);
+        let out = b.gemm("cls", pooled, 3, true);
+        b.output(out);
+        let g = b.finish().unwrap();
+        let mut rng = Rng::new(6);
+        let x = Tensor::new(vec![2, 4, 16], rng.uniform_vec(128, -1.0, 1.0));
+        let seed = Tensor::new(vec![2, 3], rng.uniform_vec(6, -1.0, 1.0));
+        let loss = |g: &Graph| {
+            let fwd = forward(g, &[(g.inputs[0], x.clone())], Mode::Train).unwrap();
+            fwd.logits(g)
+                .data
+                .iter()
+                .zip(&seed.data)
+                .map(|(&a, &b)| a * b)
+                .sum::<f32>()
+        };
+        let fwd = forward(&g, &[(g.inputs[0], x.clone())], Mode::Train).unwrap();
+        let grads = backward(&g, &fwd, &[(g.outputs[0], seed.clone())]).unwrap();
+        for pname in ["q.w", "o.w", "ln.gamma", "cls.w"] {
+            let pid = g.data_by_name(pname).unwrap().id;
+            let analytic = grads.param_grad(pid).unwrap().clone();
+            let i = analytic.numel() / 3;
+            let eps = 1e-2;
+            let mut gp = g.clone();
+            gp.datas[pid].param_mut().unwrap().data[i] += eps;
+            let mut gm = g.clone();
+            gm.datas[pid].param_mut().unwrap().data[i] -= eps;
+            let num = (loss(&gp) - loss(&gm)) / (2.0 * eps);
+            let ana = analytic.data[i];
+            assert!(
+                (num - ana).abs() < 0.05 * (1.0 + ana.abs()),
+                "{pname}[{i}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_and_depthwise_forward() {
+        let mut b = GraphBuilder::new("grp", 8);
+        let x = b.input("x", vec![1, 8, 6, 6]);
+        let g1 = b.conv2d("gconv", x, 8, 3, 1, 1, 4, false);
+        let d1 = b.conv2d("dwconv", g1, 8, 3, 1, 1, 8, false);
+        let gp = b.global_avgpool("gap", d1);
+        let out = b.gemm("fc", gp, 2, true);
+        b.output(out);
+        let g = b.finish().unwrap();
+        let mut rng = Rng::new(9);
+        let x = Tensor::new(vec![1, 8, 6, 6], rng.uniform_vec(8 * 36, -1.0, 1.0));
+        let y = predict(&g, x).unwrap();
+        assert_eq!(y.shape, vec![1, 2]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn broadcast_helpers_inverse() {
+        let mut rng = Rng::new(10);
+        let b = Tensor::new(vec![6], rng.uniform_vec(6, -1.0, 1.0));
+        let full = broadcast_to(&[2, 6, 3, 3], &b);
+        assert_eq!(full.shape, vec![2, 6, 3, 3]);
+        let back = reduce_to(&[6], &Tensor::ones(&[2, 6, 3, 3]));
+        assert_eq!(back.data, vec![18.0; 6]);
+        // reduce(broadcast(x)) = x * count
+        let r = reduce_to(&[6], &full);
+        let expect = b.scale(18.0);
+        assert_allclose(&r, &expect, 1e-4, 1e-4);
+    }
+}

@@ -1,0 +1,550 @@
+//! Framework frontends — "Prune Any Framework" (paper §3.1, Tab. 1).
+//!
+//! The paper funnels PyTorch / TensorFlow / MXNet / JAX models through
+//! ONNX into one standardized computational graph. We reproduce the same
+//! pipeline with four *dialects*: serialized model descriptions in each
+//! framework's idiom, normalized by [`import_model`] into SPA-IR:
+//!
+//! | dialect | layout | conventions normalized at import |
+//! |---|---|---|
+//! | `torch`  | NCHW | separate conv/bias, `Linear` weight `[out,in]` |
+//! | `tf`     | NHWC | HWIO conv kernels, bias fused into `Conv2D`, `Dense` weight `[in,out]` |
+//! | `jax`    | NHWC | flax-style `Conv`/`Dense` (HWIO, `[in,out]`), functional naming |
+//! | `mxnet`  | NCHW | `Convolution`/`FullyConnected`, BN with `fix_gamma` |
+//!
+//! [`export_model`] writes a SPA-IR graph *into* a dialect (simulating "a
+//! model trained in framework X" — the sandbox has no real PyTorch/TF/
+//! MXNet). The importer is the code path under test: heterogeneous
+//! layouts and op vocabularies all normalize to one graph, after which
+//! pruning is framework-agnostic. Import/export round-trips preserve
+//! numerics exactly (see tests), mirroring the paper's Tab. 6 conversion
+//! measurements.
+
+use crate::ir::{DataKind, Graph, OpKind};
+use crate::tensor::{ops as tops, Tensor};
+use crate::util::json::{Json, JsonObj};
+use crate::util::parse_json;
+
+/// A source/target framework dialect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dialect {
+    Torch,
+    Tf,
+    Jax,
+    Mxnet,
+}
+
+impl Dialect {
+    pub const ALL: [Dialect; 4] = [Dialect::Torch, Dialect::Tf, Dialect::Jax, Dialect::Mxnet];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dialect::Torch => "torch",
+            Dialect::Tf => "tf",
+            Dialect::Jax => "jax",
+            Dialect::Mxnet => "mxnet",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Dialect> {
+        Ok(match s {
+            "torch" | "pytorch" => Dialect::Torch,
+            "tf" | "tensorflow" => Dialect::Tf,
+            "jax" => Dialect::Jax,
+            "mxnet" => Dialect::Mxnet,
+            _ => anyhow::bail!("unknown dialect `{s}`"),
+        })
+    }
+
+    /// Channels-last frameworks store conv kernels HWIO and dense [in,out].
+    fn channels_last(&self) -> bool {
+        matches!(self, Dialect::Tf | Dialect::Jax)
+    }
+
+    /// Framework-idiomatic name for an operator.
+    fn op_name(&self, kind: &OpKind) -> String {
+        let s = match (self, kind) {
+            (Dialect::Torch, OpKind::Conv2d { .. }) => "Conv2d",
+            (Dialect::Tf, OpKind::Conv2d { .. }) => "Conv2D",
+            (Dialect::Jax, OpKind::Conv2d { .. }) => "Conv",
+            (Dialect::Mxnet, OpKind::Conv2d { .. }) => "Convolution",
+            (Dialect::Torch, OpKind::Gemm) => "Linear",
+            (Dialect::Tf, OpKind::Gemm) | (Dialect::Jax, OpKind::Gemm) => "Dense",
+            (Dialect::Mxnet, OpKind::Gemm) => "FullyConnected",
+            (Dialect::Torch, OpKind::BatchNorm { .. }) => "BatchNorm2d",
+            (Dialect::Tf, OpKind::BatchNorm { .. }) => "FusedBatchNorm",
+            (Dialect::Jax, OpKind::BatchNorm { .. }) => "BatchNorm",
+            (Dialect::Mxnet, OpKind::BatchNorm { .. }) => "BatchNorm",
+            (Dialect::Torch, OpKind::MaxPool2d { .. }) => "MaxPool2d",
+            (_, OpKind::MaxPool2d { .. }) => "MaxPool",
+            (Dialect::Torch, OpKind::AvgPool2d { .. }) => "AvgPool2d",
+            (_, OpKind::AvgPool2d { .. }) => "AvgPool",
+            (Dialect::Torch, OpKind::GlobalAvgPool) => "AdaptiveAvgPool2d",
+            (_, OpKind::GlobalAvgPool) => "GlobalAveragePooling",
+            (_, OpKind::Relu) => "ReLU",
+            (_, OpKind::Gelu) => "GELU",
+            (_, OpKind::Silu) => "SiLU",
+            (_, OpKind::Sigmoid) => "Sigmoid",
+            (_, OpKind::Tanh) => "Tanh",
+            (_, OpKind::Add) => "Add",
+            (_, OpKind::Mul) => "Mul",
+            (_, OpKind::Flatten) => "Flatten",
+            (_, OpKind::Concat { .. }) => "Concat",
+            (_, OpKind::Softmax) => "Softmax",
+            (_, OpKind::MatMul) => "MatMul",
+            (_, OpKind::Transpose { .. }) => "Transpose",
+            (_, OpKind::LayerNorm { .. }) => "LayerNorm",
+            (_, OpKind::SplitHeads { .. }) => "SplitHeads",
+            (_, OpKind::MergeHeads) => "MergeHeads",
+            (_, OpKind::Scale { .. }) => "Scale",
+            (_, OpKind::Embedding) => "Embedding",
+            (_, OpKind::ReduceMean { .. }) => "ReduceMean",
+            (_, OpKind::NchwToTokens) => "PatchFlatten",
+            (_, OpKind::Identity) => "Identity",
+        };
+        s.to_string()
+    }
+}
+
+/// OIHW ↔ HWIO kernel layout conversion.
+fn oihw_to_hwio(t: &Tensor) -> Tensor {
+    tops::transpose(t, &[2, 3, 1, 0])
+}
+
+fn hwio_to_oihw(t: &Tensor) -> Tensor {
+    tops::transpose(t, &[3, 2, 0, 1])
+}
+
+/// Export a SPA-IR graph into a framework dialect document.
+///
+/// The document lists tensors (with framework-native layouts) and a node
+/// list using framework-native op names and attribute spellings.
+pub fn export_model(g: &Graph, dialect: Dialect) -> Json {
+    let mut root = JsonObj::new();
+    root.insert("framework", dialect.name());
+    root.insert("format_version", 1usize);
+    root.insert("name", g.name.as_str());
+    let mut tensors: Vec<Json> = Vec::new();
+    for d in &g.datas {
+        let mut o = JsonObj::new();
+        o.insert("name", d.name.as_str());
+        match &d.kind {
+            DataKind::Input => {
+                o.insert("role", "input");
+                // channels-last dialects declare NHWC input signatures
+                let shape = if dialect.channels_last() && d.shape.len() == 4 {
+                    vec![d.shape[0], d.shape[2], d.shape[3], d.shape[1]]
+                } else {
+                    d.shape.clone()
+                };
+                o.insert("shape", shape.as_slice());
+            }
+            DataKind::Activation => {
+                o.insert("role", "activation");
+            }
+            DataKind::Param(t) => {
+                o.insert("role", "param");
+                // convert layouts: conv kernels + dense weights
+                let native = native_param(g, d.id, t, dialect);
+                o.insert("shape", native.shape.as_slice());
+                o.insert("data", native.data.as_slice());
+            }
+        }
+        tensors.push(Json::Obj(o));
+    }
+    root.insert("tensors", tensors);
+    let nodes: Vec<Json> = g
+        .ops
+        .iter()
+        .map(|op| {
+            let mut o = JsonObj::new();
+            o.insert("op", dialect.op_name(&op.kind));
+            o.insert("name", op.name.as_str());
+            o.insert(
+                "inputs",
+                op.inputs.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+            );
+            o.insert(
+                "outputs",
+                op.outputs.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+            );
+            let mut attrs = JsonObj::new();
+            match &op.kind {
+                OpKind::Conv2d { stride, pad, groups } => {
+                    attrs.insert("stride", *stride);
+                    match dialect {
+                        Dialect::Tf | Dialect::Jax => {
+                            attrs.insert("padding", if *pad > 0 { "SAME" } else { "VALID" });
+                            attrs.insert("pad_amount", *pad);
+                            attrs.insert("feature_group_count", *groups);
+                        }
+                        _ => {
+                            attrs.insert("pad", *pad);
+                            attrs.insert("groups", *groups);
+                        }
+                    }
+                }
+                OpKind::BatchNorm { eps } | OpKind::LayerNorm { eps } => {
+                    attrs.insert("eps", *eps as f64);
+                    if matches!(dialect, Dialect::Mxnet) {
+                        attrs.insert("fix_gamma", false);
+                    }
+                }
+                OpKind::MaxPool2d { k, stride, pad } | OpKind::AvgPool2d { k, stride, pad } => {
+                    attrs.insert("kernel", *k);
+                    attrs.insert("stride", *stride);
+                    attrs.insert("pad", *pad);
+                }
+                OpKind::Concat { axis } => {
+                    // channels-last dialects concat on the last axis
+                    let native_axis = if dialect.channels_last() && *axis == 1 { 3 } else { *axis };
+                    attrs.insert("axis", native_axis);
+                }
+                OpKind::Transpose { perm } => attrs.insert("perm", perm.as_slice()),
+                OpKind::SplitHeads { heads } => attrs.insert("heads", *heads),
+                OpKind::Scale { c } => attrs.insert("c", *c as f64),
+                OpKind::ReduceMean { axis } => attrs.insert("axis", *axis),
+                _ => {}
+            }
+            o.insert("attrs", attrs);
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("nodes", nodes);
+    root.insert(
+        "inputs",
+        g.inputs.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+    );
+    root.insert(
+        "outputs",
+        g.outputs.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+    );
+    Json::Obj(root)
+}
+
+/// Convert a parameter to the dialect's native layout.
+fn native_param(g: &Graph, id: usize, t: &Tensor, dialect: Dialect) -> Tensor {
+    if !dialect.channels_last() {
+        return t.clone();
+    }
+    // which op consumes this param and in which slot?
+    for op in &g.ops {
+        if let Some(slot) = op.inputs.iter().position(|&i| i == id) {
+            match (&op.kind, slot) {
+                (OpKind::Conv2d { .. }, 1) => return oihw_to_hwio(t),
+                (OpKind::Gemm, 1) => return t.t2(),
+                _ => {}
+            }
+        }
+    }
+    t.clone()
+}
+
+/// Import a framework dialect document into SPA-IR — the paper's
+/// "convert to ONNX" step. All layouts normalize to NCHW / `[out,in]`.
+pub fn import_model(doc: &Json) -> anyhow::Result<Graph> {
+    let dialect = Dialect::parse(
+        doc.field("framework")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("framework not a string"))?,
+    )?;
+    let name = doc.field("name")?.as_str().unwrap_or("model").to_string();
+    let mut g = Graph {
+        name: format!("{name}@{}", dialect.name()),
+        ..Default::default()
+    };
+    // Pass 1: create data nodes (shapes for activations filled by
+    // inference afterwards).
+    let tensors = doc
+        .field("tensors")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("tensors not an array"))?;
+    for (id, tj) in tensors.iter().enumerate() {
+        let tname = tj.field("name")?.as_str().unwrap_or("").to_string();
+        let role = tj.field("role")?.as_str().unwrap_or("");
+        let (kind, shape) = match role {
+            "input" => {
+                let mut shape = tj.field("shape")?.usize_vec()?;
+                if dialect.channels_last() && shape.len() == 4 {
+                    shape = vec![shape[0], shape[3], shape[1], shape[2]];
+                }
+                (DataKind::Input, shape)
+            }
+            "activation" => (DataKind::Activation, Vec::new()),
+            "param" => {
+                let shape = tj.field("shape")?.usize_vec()?;
+                let data = tj.field("data")?.f32_vec()?;
+                (DataKind::Param(Tensor::new(shape.clone(), data)), shape)
+            }
+            other => anyhow::bail!("bad tensor role `{other}`"),
+        };
+        g.datas.push(crate::ir::DataNode {
+            id,
+            name: tname,
+            shape,
+            kind,
+            producer: None,
+            consumers: Vec::new(),
+        });
+    }
+    // Pass 2: nodes.
+    let nodes = doc
+        .field("nodes")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("nodes not an array"))?;
+    for (op_id, nj) in nodes.iter().enumerate() {
+        let op_name = nj.field("name")?.as_str().unwrap_or("").to_string();
+        let native = nj.field("op")?.as_str().unwrap_or("");
+        let attrs = nj.field("attrs")?;
+        let au = |k: &str| -> usize {
+            attrs
+                .as_obj()
+                .and_then(|o| o.get(k))
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0)
+        };
+        let af = |k: &str| -> f32 {
+            attrs
+                .as_obj()
+                .and_then(|o| o.get(k))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as f32
+        };
+        let kind = match native {
+            "Conv2d" | "Conv2D" | "Conv" | "Convolution" => {
+                let groups = if dialect.channels_last() {
+                    au("feature_group_count").max(1)
+                } else {
+                    au("groups").max(1)
+                };
+                let pad = if dialect.channels_last() {
+                    au("pad_amount")
+                } else {
+                    au("pad")
+                };
+                OpKind::Conv2d {
+                    stride: au("stride").max(1),
+                    pad,
+                    groups,
+                }
+            }
+            "Linear" | "Dense" | "FullyConnected" => OpKind::Gemm,
+            "BatchNorm2d" | "FusedBatchNorm" | "BatchNorm" => {
+                OpKind::BatchNorm { eps: af("eps").max(1e-6) }
+            }
+            "LayerNorm" => OpKind::LayerNorm { eps: af("eps").max(1e-6) },
+            "ReLU" => OpKind::Relu,
+            "GELU" => OpKind::Gelu,
+            "SiLU" => OpKind::Silu,
+            "Sigmoid" => OpKind::Sigmoid,
+            "Tanh" => OpKind::Tanh,
+            "Add" => OpKind::Add,
+            "Mul" => OpKind::Mul,
+            "MaxPool2d" | "MaxPool" => OpKind::MaxPool2d {
+                k: au("kernel").max(1),
+                stride: au("stride").max(1),
+                pad: au("pad"),
+            },
+            "AvgPool2d" | "AvgPool" => OpKind::AvgPool2d {
+                k: au("kernel").max(1),
+                stride: au("stride").max(1),
+                pad: au("pad"),
+            },
+            "AdaptiveAvgPool2d" | "GlobalAveragePooling" => OpKind::GlobalAvgPool,
+            "Flatten" => OpKind::Flatten,
+            "Concat" => {
+                let native_axis = au("axis");
+                let axis = if dialect.channels_last() && native_axis == 3 {
+                    1
+                } else {
+                    native_axis
+                };
+                OpKind::Concat { axis }
+            }
+            "Softmax" => OpKind::Softmax,
+            "MatMul" => OpKind::MatMul,
+            "Transpose" => OpKind::Transpose {
+                perm: attrs.field("perm")?.usize_vec()?,
+            },
+            "SplitHeads" => OpKind::SplitHeads { heads: au("heads").max(1) },
+            "MergeHeads" => OpKind::MergeHeads,
+            "Scale" => OpKind::Scale { c: af("c") },
+            "Embedding" => OpKind::Embedding,
+            "ReduceMean" => OpKind::ReduceMean { axis: au("axis") },
+            "PatchFlatten" => OpKind::NchwToTokens,
+            "Identity" => OpKind::Identity,
+            other => anyhow::bail!("dialect {} has unknown op `{other}`", dialect.name()),
+        };
+        let inputs = nj.field("inputs")?.usize_vec()?;
+        let outputs = nj.field("outputs")?.usize_vec()?;
+        // normalize param layouts for channels-last dialects
+        if dialect.channels_last() {
+            match kind {
+                OpKind::Conv2d { .. } => {
+                    if let Some(&w) = inputs.get(1) {
+                        if let Some(t) = g.datas[w].param() {
+                            if t.rank() == 4 {
+                                let conv = hwio_to_oihw(t);
+                                g.datas[w].shape = conv.shape.clone();
+                                g.datas[w].kind = DataKind::Param(conv);
+                            }
+                        }
+                    }
+                }
+                OpKind::Gemm => {
+                    if let Some(&w) = inputs.get(1) {
+                        if let Some(t) = g.datas[w].param() {
+                            if t.rank() == 2 {
+                                let conv = t.t2();
+                                g.datas[w].shape = conv.shape.clone();
+                                g.datas[w].kind = DataKind::Param(conv);
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for &i in &inputs {
+            g.datas[i].consumers.push(op_id);
+        }
+        for &o in &outputs {
+            g.datas[o].producer = Some(op_id);
+        }
+        g.ops.push(crate::ir::OpNode {
+            id: op_id,
+            name: op_name,
+            kind,
+            inputs,
+            outputs,
+        });
+    }
+    g.inputs = doc.field("inputs")?.usize_vec()?;
+    g.outputs = doc.field("outputs")?.usize_vec()?;
+    g.refresh_shapes()?;
+    g.validate()?;
+    Ok(g)
+}
+
+/// Serialize + parse convenience used by the conversion-time bench.
+pub fn export_to_string(g: &Graph, dialect: Dialect) -> String {
+    export_model(g, dialect).to_string()
+}
+
+pub fn import_from_string(s: &str) -> anyhow::Result<Graph> {
+    import_model(&parse_json(s)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine;
+    use crate::util::Rng;
+    use crate::zoo::{self, ImageCfg};
+
+    fn check_round_trip(dialect: Dialect) {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let g = zoo::resnet18(cfg, 42);
+        let doc = export_model(&g, dialect);
+        let g2 = import_model(&doc).unwrap_or_else(|e| panic!("{}: {e}", dialect.name()));
+        g2.validate().unwrap();
+        assert_eq!(g.num_params(), g2.num_params(), "{}", dialect.name());
+        // numerics identical after layout round-trip
+        let mut rng = Rng::new(7);
+        let x = crate::tensor::Tensor::new(
+            vec![2, 3, 8, 8],
+            rng.uniform_vec(2 * 3 * 64, -1.0, 1.0),
+        );
+        let y1 = engine::predict(&g, x.clone()).unwrap();
+        let y2 = engine::predict(&g2, x).unwrap();
+        crate::tensor::assert_allclose(&y2, &y1, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn torch_round_trip() {
+        check_round_trip(Dialect::Torch);
+    }
+
+    #[test]
+    fn tf_round_trip() {
+        check_round_trip(Dialect::Tf);
+    }
+
+    #[test]
+    fn jax_round_trip() {
+        check_round_trip(Dialect::Jax);
+    }
+
+    #[test]
+    fn mxnet_round_trip() {
+        check_round_trip(Dialect::Mxnet);
+    }
+
+    #[test]
+    fn tf_uses_native_conventions() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let g = zoo::resnet18(cfg, 1);
+        let doc = export_model(&g, Dialect::Tf);
+        let s = doc.to_string();
+        assert!(s.contains("\"Conv2D\""), "tf conv name");
+        assert!(s.contains("FusedBatchNorm"), "tf bn name");
+        // input signature NHWC
+        let tensors = doc.field("tensors").unwrap().as_arr().unwrap();
+        let input = tensors
+            .iter()
+            .find(|t| t.field("role").unwrap().as_str() == Some("input"))
+            .unwrap();
+        let shape = input.field("shape").unwrap().usize_vec().unwrap();
+        assert_eq!(shape, vec![cfg.batch, 8, 8, 3], "NHWC signature");
+        // conv kernel stored HWIO: stem conv is [3,3,3,16] not [16,3,3,3]
+        let stem = tensors
+            .iter()
+            .find(|t| t.field("name").unwrap().as_str() == Some("stem.conv.w"))
+            .unwrap();
+        let kshape = stem.field("shape").unwrap().usize_vec().unwrap();
+        assert_eq!(kshape, vec![3, 3, 3, 16], "HWIO kernel layout");
+    }
+
+    #[test]
+    fn import_rejects_unknown_op() {
+        let doc = parse_json(
+            r#"{"framework":"torch","format_version":1,"name":"x",
+                "tensors":[{"name":"x","role":"input","shape":[1,3,4,4]}],
+                "nodes":[{"op":"FancyNewLayer","name":"f","inputs":[0],"outputs":[0],"attrs":{}}],
+                "inputs":[0],"outputs":[0]}"#,
+        )
+        .unwrap();
+        let err = import_model(&doc).unwrap_err().to_string();
+        assert!(err.contains("FancyNewLayer"), "{err}");
+    }
+
+    #[test]
+    fn all_dialects_produce_prunable_graphs() {
+        use crate::prune::{self, build_groups, score_groups, Agg, Norm};
+        use std::collections::HashMap;
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        for d in Dialect::ALL {
+            let src = zoo::resnet18(cfg, 3);
+            let mut g = import_model(&export_model(&src, d)).unwrap();
+            let groups = build_groups(&g).unwrap();
+            let mut scores = HashMap::new();
+            for pid in g.param_ids() {
+                scores.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+            }
+            let ranked = score_groups(&g, &groups, &scores, Agg::Sum, Norm::Mean);
+            let sel = prune::select_lowest(&groups, &ranked, 0.4, 1);
+            prune::apply_pruning(&mut g, &groups, &sel)
+                .unwrap_or_else(|e| panic!("{}: {e}", d.name()));
+            g.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! Fluent builder for SPA-IR graphs.
+//!
+//! Used by the model zoo and the frontend importers. Parameters are
+//! Kaiming-initialized from a deterministic per-builder RNG (seeded by the
+//! builder's `seed` so every experiment is reproducible); shape inference
+//! runs incrementally so each `DataNode` has a static shape at build time.
+
+use super::shape::infer_op_output_shapes;
+use super::{DataId, DataKind, DataNode, Graph, OpId, OpKind, OpNode};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub struct GraphBuilder {
+    graph: Graph,
+    rng: Rng,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, seed: u64) -> Self {
+        GraphBuilder {
+            graph: Graph {
+                name: name.to_string(),
+                ..Default::default()
+            },
+            rng: Rng::new(seed ^ 0x5370417273u64), // "SPArs"
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    fn add_data(&mut self, name: String, shape: Vec<usize>, kind: DataKind) -> DataId {
+        let id = self.graph.datas.len();
+        self.graph.datas.push(DataNode {
+            id,
+            name,
+            shape,
+            kind,
+            producer: None,
+            consumers: Vec::new(),
+        });
+        id
+    }
+
+    /// Add a graph input with the given (batched) shape.
+    pub fn input(&mut self, name: &str, shape: Vec<usize>) -> DataId {
+        let id = self.add_data(name.to_string(), shape, DataKind::Input);
+        self.graph.inputs.push(id);
+        id
+    }
+
+    /// Add a parameter node with explicit data.
+    pub fn param(&mut self, name: &str, t: Tensor) -> DataId {
+        let shape = t.shape.clone();
+        self.add_data(name.to_string(), shape, DataKind::Param(t))
+    }
+
+    /// Add a Kaiming-initialized parameter.
+    pub fn param_kaiming(&mut self, name: &str, shape: &[usize], fan_in: usize) -> DataId {
+        let t = Tensor::kaiming(shape, fan_in, &mut self.rng);
+        self.param(name, t)
+    }
+
+    /// Core: add an operator, infer output shapes, create output data nodes.
+    pub fn add_op(&mut self, name: &str, kind: OpKind, inputs: Vec<DataId>) -> DataId {
+        let op_id: OpId = self.graph.ops.len();
+        let in_shapes: Vec<Vec<usize>> = inputs
+            .iter()
+            .map(|&i| self.graph.datas[i].shape.clone())
+            .collect();
+        let out_shapes = infer_op_output_shapes(&kind, &in_shapes)
+            .unwrap_or_else(|e| panic!("shape inference failed for op `{name}`: {e}"));
+        assert_eq!(out_shapes.len(), 1, "builder supports single-output ops");
+        let out = self.add_data(
+            format!("{name}.out"),
+            out_shapes[0].clone(),
+            DataKind::Activation,
+        );
+        self.graph.datas[out].producer = Some(op_id);
+        for &i in &inputs {
+            self.graph.datas[i].consumers.push(op_id);
+        }
+        self.graph.ops.push(OpNode {
+            id: op_id,
+            name: name.to_string(),
+            kind,
+            inputs,
+            outputs: vec![out],
+        });
+        out
+    }
+
+    // ---- layer helpers -------------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: DataId,
+        co: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        bias: bool,
+    ) -> DataId {
+        let ci = self.graph.datas[x].shape[1];
+        assert_eq!(ci % groups, 0, "{name}: Ci {ci} % groups {groups} != 0");
+        let w = self.param_kaiming(
+            &format!("{name}.w"),
+            &[co, ci / groups, k, k],
+            ci / groups * k * k,
+        );
+        let mut inputs = vec![x, w];
+        if bias {
+            let b = self.param(&format!("{name}.b"), Tensor::zeros(&[co]));
+            inputs.push(b);
+        }
+        self.add_op(name, OpKind::Conv2d { stride, pad, groups }, inputs)
+    }
+
+    pub fn gemm(&mut self, name: &str, x: DataId, co: usize, bias: bool) -> DataId {
+        let k = *self.graph.datas[x].shape.last().unwrap();
+        let w = self.param_kaiming(&format!("{name}.w"), &[co, k], k);
+        let mut inputs = vec![x, w];
+        if bias {
+            let b = self.param(&format!("{name}.b"), Tensor::zeros(&[co]));
+            inputs.push(b);
+        }
+        self.add_op(name, OpKind::Gemm, inputs)
+    }
+
+    pub fn batchnorm(&mut self, name: &str, x: DataId) -> DataId {
+        let c = self.graph.datas[x].shape[1];
+        let gamma = self.param(&format!("{name}.gamma"), Tensor::ones(&[c]));
+        let beta = self.param(&format!("{name}.beta"), Tensor::zeros(&[c]));
+        let mean = self.param(&format!("{name}.mean"), Tensor::zeros(&[c]));
+        let var = self.param(&format!("{name}.var"), Tensor::ones(&[c]));
+        self.add_op(
+            name,
+            OpKind::BatchNorm { eps: 1e-5 },
+            vec![x, gamma, beta, mean, var],
+        )
+    }
+
+    pub fn layernorm(&mut self, name: &str, x: DataId) -> DataId {
+        let d = *self.graph.datas[x].shape.last().unwrap();
+        let gamma = self.param(&format!("{name}.gamma"), Tensor::ones(&[d]));
+        let beta = self.param(&format!("{name}.beta"), Tensor::zeros(&[d]));
+        self.add_op(name, OpKind::LayerNorm { eps: 1e-5 }, vec![x, gamma, beta])
+    }
+
+    pub fn relu(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::Relu, vec![x])
+    }
+
+    pub fn gelu(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::Gelu, vec![x])
+    }
+
+    pub fn silu(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::Silu, vec![x])
+    }
+
+    pub fn sigmoid(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::Sigmoid, vec![x])
+    }
+
+    pub fn tanh(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::Tanh, vec![x])
+    }
+
+    pub fn add(&mut self, name: &str, a: DataId, b: DataId) -> DataId {
+        self.add_op(name, OpKind::Add, vec![a, b])
+    }
+
+    pub fn mul(&mut self, name: &str, a: DataId, b: DataId) -> DataId {
+        self.add_op(name, OpKind::Mul, vec![a, b])
+    }
+
+    pub fn maxpool2d(&mut self, name: &str, x: DataId, k: usize, stride: usize, pad: usize) -> DataId {
+        self.add_op(name, OpKind::MaxPool2d { k, stride, pad }, vec![x])
+    }
+
+    pub fn avgpool2d(&mut self, name: &str, x: DataId, k: usize, stride: usize, pad: usize) -> DataId {
+        self.add_op(name, OpKind::AvgPool2d { k, stride, pad }, vec![x])
+    }
+
+    pub fn global_avgpool(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::GlobalAvgPool, vec![x])
+    }
+
+    pub fn flatten(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::Flatten, vec![x])
+    }
+
+    pub fn concat(&mut self, name: &str, xs: &[DataId], axis: usize) -> DataId {
+        self.add_op(name, OpKind::Concat { axis }, xs.to_vec())
+    }
+
+    pub fn softmax(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::Softmax, vec![x])
+    }
+
+    pub fn matmul(&mut self, name: &str, a: DataId, b: DataId) -> DataId {
+        self.add_op(name, OpKind::MatMul, vec![a, b])
+    }
+
+    pub fn transpose(&mut self, name: &str, x: DataId, perm: Vec<usize>) -> DataId {
+        self.add_op(name, OpKind::Transpose { perm }, vec![x])
+    }
+
+    pub fn split_heads(&mut self, name: &str, x: DataId, heads: usize) -> DataId {
+        self.add_op(name, OpKind::SplitHeads { heads }, vec![x])
+    }
+
+    pub fn merge_heads(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::MergeHeads, vec![x])
+    }
+
+    pub fn scale(&mut self, name: &str, x: DataId, c: f32) -> DataId {
+        self.add_op(name, OpKind::Scale { c }, vec![x])
+    }
+
+    pub fn embedding(&mut self, name: &str, ids: DataId, vocab: usize, dim: usize) -> DataId {
+        let table = {
+            let t = Tensor::kaiming(&[vocab, dim], dim, &mut self.rng);
+            self.param(&format!("{name}.table"), t)
+        };
+        self.add_op(name, OpKind::Embedding, vec![ids, table])
+    }
+
+    pub fn reduce_mean(&mut self, name: &str, x: DataId, axis: usize) -> DataId {
+        self.add_op(name, OpKind::ReduceMean { axis }, vec![x])
+    }
+
+    pub fn identity(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::Identity, vec![x])
+    }
+
+    pub fn nchw_to_tokens(&mut self, name: &str, x: DataId) -> DataId {
+        self.add_op(name, OpKind::NchwToTokens, vec![x])
+    }
+
+    /// Shape of an already-built data node.
+    pub fn peek_shape(&self, id: DataId) -> Vec<usize> {
+        self.graph.datas[id].shape.clone()
+    }
+
+    /// Mark a data node as a graph output.
+    pub fn output(&mut self, id: DataId) {
+        self.graph.outputs.push(id);
+    }
+
+    /// Finalize: validate and return the graph.
+    pub fn finish(self) -> anyhow::Result<Graph> {
+        let g = self.graph;
+        anyhow::ensure!(!g.outputs.is_empty(), "graph `{}` has no outputs", g.name);
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_block_builds() {
+        let mut b = GraphBuilder::new("res", 1);
+        let x = b.input("x", vec![1, 8, 4, 4]);
+        let c1 = b.conv2d("c1", x, 8, 3, 1, 1, 1, false);
+        let n1 = b.batchnorm("bn1", c1);
+        let r1 = b.relu("r1", n1);
+        let c2 = b.conv2d("c2", r1, 8, 3, 1, 1, 1, false);
+        let n2 = b.batchnorm("bn2", c2);
+        let s = b.add("skip", n2, x);
+        let out = b.relu("r2", s);
+        b.output(out);
+        let g = b.finish().unwrap();
+        assert_eq!(g.data(s).shape, vec![1, 8, 4, 4]);
+        // x feeds both c1 and the add
+        let xid = g.inputs[0];
+        assert_eq!(g.data(xid).consumers.len(), 2);
+    }
+
+    #[test]
+    fn attention_shapes() {
+        let mut b = GraphBuilder::new("attn", 2);
+        let x = b.input("x", vec![2, 5, 16]); // [N,T,D]
+        let q = b.gemm("q", x, 16, true);
+        let k = b.gemm("k", x, 16, true);
+        let v = b.gemm("v", x, 16, true);
+        let qh = b.split_heads("qh", q, 4); // [2,4,5,4]
+        let kh = b.split_heads("kh", k, 4);
+        let vh = b.split_heads("vh", v, 4);
+        let kt = b.transpose("kt", kh, vec![0, 1, 3, 2]); // [2,4,4,5]
+        let scores = b.matmul("qk", qh, kt); // [2,4,5,5]
+        let scaled = b.scale("scl", scores, 0.5);
+        let attn = b.softmax("sm", scaled);
+        let ctx = b.matmul("av", attn, vh); // [2,4,5,4]
+        let merged = b.merge_heads("mh", ctx); // [2,5,16]
+        let out = b.gemm("o", merged, 16, true);
+        b.output(out);
+        let g = b.finish().unwrap();
+        assert_eq!(g.data(scores).shape, vec![2, 4, 5, 5]);
+        assert_eq!(g.data(merged).shape, vec![2, 5, 16]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape inference failed")]
+    fn bad_shapes_panic() {
+        let mut b = GraphBuilder::new("bad", 1);
+        let x = b.input("x", vec![1, 3, 4, 4]);
+        let y = b.input("y", vec![1, 5, 4, 4]);
+        b.add("oops", x, y);
+    }
+}

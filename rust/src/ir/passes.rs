@@ -1,0 +1,360 @@
+//! Graph-rewriting passes over SPA-IR.
+//!
+//! The paper's deployment story ends at "convert the pruned ONNX model
+//! back to the original framework"; a production pruning toolchain also
+//! wants inference-time simplification of the pruned graph. These passes
+//! do the standard ones:
+//!
+//! * [`fold_batchnorm`] — fold eval-mode BatchNorm affine transforms into
+//!   the preceding conv/gemm weights (exact at inference);
+//! * [`eliminate_identity`] — drop Identity ops;
+//! * [`prune_dead_nodes`] — drop data nodes (incl. orphaned params) that
+//!   no longer feed the outputs.
+//!
+//! Passes preserve numerics exactly (see tests) and re-validate.
+
+use super::{DataId, DataKind, Graph, OpId, OpKind};
+
+/// Redirect every consumer of `from` to read `to` instead, and transfer
+/// graph-output status.
+fn replace_uses(g: &mut Graph, from: DataId, to: DataId) {
+    let consumers = std::mem::take(&mut g.datas[from].consumers);
+    for &op_id in &consumers {
+        for slot in g.ops[op_id].inputs.iter_mut() {
+            if *slot == from {
+                *slot = to;
+            }
+        }
+        g.datas[to].consumers.push(op_id);
+    }
+    for out in g.outputs.iter_mut() {
+        if *out == from {
+            *out = to;
+        }
+    }
+}
+
+/// Remove a unary pass-through op, splicing its input to its consumers.
+fn bypass_op(g: &mut Graph, op_id: OpId) {
+    let input = g.ops[op_id].inputs[0];
+    let output = g.ops[op_id].outputs[0];
+    // detach op from its input's consumer list
+    g.datas[input].consumers.retain(|&c| c != op_id);
+    replace_uses(g, output, input);
+    g.datas[output].producer = None;
+    // neutralize the op: keep ids stable by replacing with a no-input
+    // Identity that produces nothing (swept by rebuild)
+    g.ops[op_id].inputs.clear();
+    g.ops[op_id].outputs.clear();
+}
+
+/// Compact the graph: drop neutralized ops and unreachable data nodes,
+/// re-indexing ids. Returns the number of (ops, datas) removed.
+pub fn prune_dead_nodes(g: &mut Graph) -> anyhow::Result<(usize, usize)> {
+    // liveness: walk back from outputs
+    let mut live_data = vec![false; g.datas.len()];
+    let mut live_op = vec![false; g.ops.len()];
+    let mut stack: Vec<DataId> = g.outputs.clone();
+    while let Some(d) = stack.pop() {
+        if live_data[d] {
+            continue;
+        }
+        live_data[d] = true;
+        if let Some(p) = g.datas[d].producer {
+            if !live_op[p] {
+                live_op[p] = true;
+                for &i in &g.ops[p].inputs {
+                    stack.push(i);
+                }
+            }
+        }
+    }
+    // keep graph inputs alive (callers feed them)
+    for &i in &g.inputs {
+        live_data[i] = true;
+    }
+    let removed_ops = live_op.iter().filter(|&&l| !l).count();
+    let removed_datas = live_data.iter().filter(|&&l| !l).count();
+    // remap
+    let data_map: Vec<Option<DataId>> = {
+        let mut next = 0usize;
+        live_data
+            .iter()
+            .map(|&l| {
+                if l {
+                    let id = next;
+                    next += 1;
+                    Some(id)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    };
+    let op_map: Vec<Option<OpId>> = {
+        let mut next = 0usize;
+        live_op
+            .iter()
+            .map(|&l| {
+                if l {
+                    let id = next;
+                    next += 1;
+                    Some(id)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    };
+    let mut new_datas = Vec::new();
+    for (old_id, d) in g.datas.drain(..).enumerate() {
+        if let Some(new_id) = data_map[old_id] {
+            let mut d = d;
+            d.id = new_id;
+            d.producer = d.producer.and_then(|p| op_map[p]);
+            d.consumers = d
+                .consumers
+                .iter()
+                .filter_map(|&c| op_map[c])
+                .collect();
+            new_datas.push(d);
+        }
+    }
+    g.datas = new_datas;
+    let mut new_ops = Vec::new();
+    for (old_id, op) in g.ops.drain(..).enumerate() {
+        if let Some(new_id) = op_map[old_id] {
+            let mut op = op;
+            op.id = new_id;
+            op.inputs = op.inputs.iter().map(|&i| data_map[i].unwrap()).collect();
+            op.outputs = op.outputs.iter().map(|&o| data_map[o].unwrap()).collect();
+            new_ops.push(op);
+        }
+    }
+    g.ops = new_ops;
+    g.inputs = g.inputs.iter().filter_map(|&i| data_map[i]).collect();
+    g.outputs = g.outputs.iter().map(|&o| data_map[o].unwrap()).collect();
+    g.validate()?;
+    Ok((removed_ops, removed_datas))
+}
+
+/// Drop all Identity ops.
+pub fn eliminate_identity(g: &mut Graph) -> anyhow::Result<usize> {
+    let ids: Vec<OpId> = g
+        .ops
+        .iter()
+        .filter(|o| matches!(o.kind, OpKind::Identity) && !o.inputs.is_empty())
+        .map(|o| o.id)
+        .collect();
+    for id in &ids {
+        bypass_op(g, *id);
+    }
+    prune_dead_nodes(g)?;
+    Ok(ids.len())
+}
+
+/// Fold eval-mode BatchNorm into the preceding Conv2d/Gemm:
+/// `w' = w·γ/√(σ²+ε)` per output channel, `b' = (b−μ)·γ/√(σ²+ε)+β`.
+/// Only BNs whose input is produced by a conv/gemm consumed *solely* by
+/// that BN are folded. Returns the number folded.
+pub fn fold_batchnorm(g: &mut Graph) -> anyhow::Result<usize> {
+    let mut folded = 0usize;
+    for bn_id in 0..g.ops.len() {
+        if !matches!(g.ops[bn_id].kind, OpKind::BatchNorm { .. }) {
+            continue;
+        }
+        let x = match g.ops[bn_id].inputs.first() {
+            Some(&x) => x,
+            None => continue, // already neutralized
+        };
+        let Some(prod) = g.datas[x].producer else {
+            continue;
+        };
+        if g.datas[x].consumers.len() != 1 {
+            continue; // conv output used elsewhere (e.g. residual)
+        }
+        let has_bias = match g.ops[prod].kind {
+            OpKind::Conv2d { .. } => g.ops[prod].inputs.len() > 2,
+            OpKind::Gemm => g.ops[prod].inputs.len() > 2,
+            _ => continue,
+        };
+        let eps = match g.ops[bn_id].kind {
+            OpKind::BatchNorm { eps } => eps,
+            _ => unreachable!(),
+        };
+        // gather BN params
+        let (gamma, beta, mean, var) = {
+            let ins = &g.ops[bn_id].inputs;
+            (
+                g.datas[ins[1]].param().unwrap().clone(),
+                g.datas[ins[2]].param().unwrap().clone(),
+                g.datas[ins[3]].param().unwrap().clone(),
+                g.datas[ins[4]].param().unwrap().clone(),
+            )
+        };
+        let co = gamma.numel();
+        let scale: Vec<f32> = (0..co)
+            .map(|c| gamma.data[c] / (var.data[c] + eps).sqrt())
+            .collect();
+        // scale weight rows
+        let wid = g.ops[prod].inputs[1];
+        {
+            let w = g.datas[wid].param_mut().unwrap();
+            let inner = w.numel() / co;
+            for c in 0..co {
+                for v in &mut w.data[c * inner..(c + 1) * inner] {
+                    *v *= scale[c];
+                }
+            }
+        }
+        // fold bias
+        if has_bias {
+            let bid = g.ops[prod].inputs[2];
+            let b = g.datas[bid].param_mut().unwrap();
+            for c in 0..co {
+                b.data[c] = (b.data[c] - mean.data[c]) * scale[c] + beta.data[c];
+            }
+        } else {
+            // create a bias param absorbed from the BN shift
+            let bias: Vec<f32> = (0..co)
+                .map(|c| -mean.data[c] * scale[c] + beta.data[c])
+                .collect();
+            let bid = g.datas.len();
+            g.datas.push(super::DataNode {
+                id: bid,
+                name: format!("{}.folded_bias", g.ops[prod].name),
+                shape: vec![co],
+                kind: DataKind::Param(crate::tensor::Tensor::new(vec![co], bias)),
+                producer: None,
+                consumers: vec![prod],
+            });
+            g.ops[prod].inputs.push(bid);
+        }
+        // detach BN params + bypass
+        for slot in 1..5 {
+            let pid = g.ops[bn_id].inputs[slot];
+            g.datas[pid].consumers.retain(|&c| c != bn_id);
+        }
+        g.ops[bn_id].inputs.truncate(1);
+        bypass_op(g, bn_id);
+        folded += 1;
+    }
+    prune_dead_nodes(g)?;
+    Ok(folded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine;
+    use crate::ir::GraphBuilder;
+    use crate::tensor::{assert_allclose, Tensor};
+    use crate::util::Rng;
+    use crate::zoo::{self, ImageCfg};
+
+    #[test]
+    fn identity_elimination_preserves_numerics() {
+        let mut b = GraphBuilder::new("id", 1);
+        let x = b.input("x", vec![1, 3, 4, 4]);
+        let i1 = b.identity("drop1", x);
+        let c = b.conv2d("c", i1, 4, 3, 1, 1, 1, true);
+        let i2 = b.identity("drop2", c);
+        let g2 = b.global_avgpool("gap", i2);
+        let out = b.gemm("fc", g2, 2, false);
+        b.output(out);
+        let mut g = b.finish().unwrap();
+        let mut rng = Rng::new(2);
+        let xv = Tensor::new(vec![1, 3, 4, 4], rng.uniform_vec(48, -1.0, 1.0));
+        let before = engine::predict(&g, xv.clone()).unwrap();
+        let n = eliminate_identity(&mut g).unwrap();
+        assert_eq!(n, 2);
+        assert!(g.ops.iter().all(|o| !matches!(o.kind, OpKind::Identity)));
+        let after = engine::predict(&g, xv).unwrap();
+        assert_allclose(&after, &before, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn bn_fold_exact_on_vgg() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::vgg16(cfg, 3);
+        // randomize BN stats so folding is non-trivial
+        let mut rng = Rng::new(4);
+        for d in &mut g.datas {
+            let name = d.name.clone();
+            if let Some(t) = d.param_mut() {
+                if name.ends_with(".mean") {
+                    t.data = rng.uniform_vec(t.numel(), -0.5, 0.5);
+                } else if name.ends_with(".var") {
+                    t.data = rng.uniform_vec(t.numel(), 0.5, 2.0);
+                } else if name.ends_with(".gamma") {
+                    t.data = rng.uniform_vec(t.numel(), 0.5, 1.5);
+                }
+            }
+        }
+        let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 192, -1.0, 1.0));
+        let before = engine::predict(&g, x.clone()).unwrap();
+        let ops_before = g.ops.len();
+        let params_before = g.num_params();
+        let folded = fold_batchnorm(&mut g).unwrap();
+        assert!(folded >= 10, "folded only {folded}");
+        assert!(g.ops.len() < ops_before);
+        assert!(g.num_params() < params_before, "BN params must vanish");
+        let after = engine::predict(&g, x).unwrap();
+        assert_allclose(&after, &before, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn bn_fold_skips_shared_outputs() {
+        // conv output feeding BOTH a BN and a residual add must not fold
+        let mut b = GraphBuilder::new("res", 5);
+        let x = b.input("x", vec![1, 4, 4, 4]);
+        let c = b.conv2d("c", x, 4, 3, 1, 1, 1, false);
+        let n = b.batchnorm("bn", c);
+        let s = b.add("add", n, c); // c used twice
+        b.output(s);
+        let mut g = b.finish().unwrap();
+        let folded = fold_batchnorm(&mut g).unwrap();
+        assert_eq!(folded, 0);
+    }
+
+    #[test]
+    fn dead_node_sweep_drops_orphans() {
+        let mut b = GraphBuilder::new("dead", 6);
+        let x = b.input("x", vec![1, 4]);
+        let _unused = b.gemm("orphan", x, 8, true); // output never used
+        let out = b.gemm("used", x, 2, true);
+        b.output(out);
+        let mut g = b.finish().unwrap();
+        let before = g.num_params();
+        let (ops, datas) = prune_dead_nodes(&mut g).unwrap();
+        assert_eq!(ops, 1);
+        assert!(datas >= 2);
+        assert!(g.num_params() < before);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn fold_then_prune_pipeline_composes() {
+        // passes + pruning compose: fold BN, then structural pruning works
+        use crate::prune::{self, build_groups, score_groups, Agg, Norm};
+        use std::collections::HashMap;
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::vgg16(cfg, 7);
+        fold_batchnorm(&mut g).unwrap();
+        let groups = build_groups(&g).unwrap();
+        let mut l1 = HashMap::new();
+        for pid in g.param_ids() {
+            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+        }
+        let ranked = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        let sel = prune::select_lowest(&groups, &ranked, 0.4, 1);
+        prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        g.validate().unwrap();
+    }
+}

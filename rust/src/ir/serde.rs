@@ -1,0 +1,301 @@
+//! SPA-IR (de)serialization — the library's interchange format.
+//!
+//! Plays the role ONNX files play in the paper: a standardized, framework-
+//! independent serialized computational graph. Frontends (crate::frontends)
+//! convert framework dialect descriptions *into* this form; the pruner can
+//! dump pruned models back out, and the engine can reload them — the paper's
+//! "convert back to the original framework" step (Fig. 1).
+
+use super::{DataKind, DataNode, Graph, OpKind, OpNode};
+use crate::tensor::Tensor;
+use crate::util::json::{Json, JsonObj};
+
+fn op_kind_to_json(kind: &OpKind) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.insert("op", kind.name());
+    match kind {
+        OpKind::Conv2d { stride, pad, groups } => {
+            o.insert("stride", *stride);
+            o.insert("pad", *pad);
+            o.insert("groups", *groups);
+        }
+        OpKind::BatchNorm { eps } | OpKind::LayerNorm { eps } => {
+            o.insert("eps", *eps as f64);
+        }
+        OpKind::MaxPool2d { k, stride, pad } | OpKind::AvgPool2d { k, stride, pad } => {
+            o.insert("k", *k);
+            o.insert("stride", *stride);
+            o.insert("pad", *pad);
+        }
+        OpKind::Concat { axis } => o.insert("axis", *axis),
+        OpKind::Transpose { perm } => o.insert("perm", perm.as_slice()),
+        OpKind::SplitHeads { heads } => o.insert("heads", *heads),
+        OpKind::Scale { c } => o.insert("c", *c as f64),
+        OpKind::ReduceMean { axis } => o.insert("axis", *axis),
+        _ => {}
+    }
+    o
+}
+
+fn op_kind_from_json(o: &Json) -> anyhow::Result<OpKind> {
+    let name = o
+        .field("op")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("op name not a string"))?;
+    let usize_f = |k: &str| -> anyhow::Result<usize> {
+        o.field(k)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("field {k} not a number"))
+    };
+    let f32_f = |k: &str| -> anyhow::Result<f32> {
+        Ok(o.field(k)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("field {k} not a number"))? as f32)
+    };
+    Ok(match name {
+        "conv2d" => OpKind::Conv2d {
+            stride: usize_f("stride")?,
+            pad: usize_f("pad")?,
+            groups: usize_f("groups")?,
+        },
+        "gemm" => OpKind::Gemm,
+        "batchnorm" => OpKind::BatchNorm { eps: f32_f("eps")? },
+        "layernorm" => OpKind::LayerNorm { eps: f32_f("eps")? },
+        "relu" => OpKind::Relu,
+        "gelu" => OpKind::Gelu,
+        "silu" => OpKind::Silu,
+        "sigmoid" => OpKind::Sigmoid,
+        "tanh" => OpKind::Tanh,
+        "add" => OpKind::Add,
+        "mul" => OpKind::Mul,
+        "maxpool2d" => OpKind::MaxPool2d {
+            k: usize_f("k")?,
+            stride: usize_f("stride")?,
+            pad: usize_f("pad")?,
+        },
+        "avgpool2d" => OpKind::AvgPool2d {
+            k: usize_f("k")?,
+            stride: usize_f("stride")?,
+            pad: usize_f("pad")?,
+        },
+        "globalavgpool" => OpKind::GlobalAvgPool,
+        "flatten" => OpKind::Flatten,
+        "concat" => OpKind::Concat { axis: usize_f("axis")? },
+        "softmax" => OpKind::Softmax,
+        "matmul" => OpKind::MatMul,
+        "transpose" => OpKind::Transpose {
+            perm: o.field("perm")?.usize_vec()?,
+        },
+        "splitheads" => OpKind::SplitHeads { heads: usize_f("heads")? },
+        "mergeheads" => OpKind::MergeHeads,
+        "scale" => OpKind::Scale { c: f32_f("c")? },
+        "embedding" => OpKind::Embedding,
+        "reducemean" => OpKind::ReduceMean { axis: usize_f("axis")? },
+        "nchwtotokens" => OpKind::NchwToTokens,
+        "identity" => OpKind::Identity,
+        other => anyhow::bail!("unknown op kind `{other}`"),
+    })
+}
+
+/// Serialize a graph to a JSON value. `with_weights` controls whether
+/// parameter tensors are embedded (true for model checkpoints, false for
+/// structure-only dumps).
+pub fn graph_to_json(g: &Graph, with_weights: bool) -> Json {
+    let mut root = JsonObj::new();
+    root.insert("format", "spa-ir-v1");
+    root.insert("name", g.name.as_str());
+    let datas: Vec<Json> = g
+        .datas
+        .iter()
+        .map(|d| {
+            let mut o = JsonObj::new();
+            o.insert("name", d.name.as_str());
+            o.insert("shape", d.shape.as_slice());
+            match &d.kind {
+                DataKind::Input => o.insert("kind", "input"),
+                DataKind::Activation => o.insert("kind", "activation"),
+                DataKind::Param(t) => {
+                    o.insert("kind", "param");
+                    if with_weights {
+                        o.insert("data", t.data.as_slice());
+                    }
+                }
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("datas", datas);
+    let ops: Vec<Json> = g
+        .ops
+        .iter()
+        .map(|op| {
+            let mut o = op_kind_to_json(&op.kind);
+            o.insert("name", op.name.as_str());
+            o.insert(
+                "inputs",
+                op.inputs.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+            );
+            o.insert(
+                "outputs",
+                op.outputs.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("ops", ops);
+    root.insert(
+        "inputs",
+        g.inputs.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+    );
+    root.insert(
+        "outputs",
+        g.outputs.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+    );
+    Json::Obj(root)
+}
+
+/// Deserialize a graph from JSON. Missing weights are zero-initialized.
+pub fn graph_from_json(j: &Json) -> anyhow::Result<Graph> {
+    anyhow::ensure!(
+        j.field("format")?.as_str() == Some("spa-ir-v1"),
+        "not a spa-ir-v1 document"
+    );
+    let name = j.field("name")?.as_str().unwrap_or("graph").to_string();
+    let mut g = Graph {
+        name,
+        ..Default::default()
+    };
+    for (id, dj) in j.field("datas")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+        let dname = dj.field("name")?.as_str().unwrap_or("").to_string();
+        let shape = dj.field("shape")?.usize_vec()?;
+        let kind = match dj.field("kind")?.as_str() {
+            Some("input") => DataKind::Input,
+            Some("activation") => DataKind::Activation,
+            Some("param") => {
+                let data = match dj.as_obj().and_then(|o| o.get("data")) {
+                    Some(arr) => arr.f32_vec()?,
+                    None => vec![0.0; shape.iter().product()],
+                };
+                DataKind::Param(Tensor::new(shape.clone(), data))
+            }
+            other => anyhow::bail!("bad data kind {:?}", other),
+        };
+        g.datas.push(DataNode {
+            id,
+            name: dname,
+            shape,
+            kind,
+            producer: None,
+            consumers: Vec::new(),
+        });
+    }
+    for (id, oj) in j.field("ops")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+        let kind = op_kind_from_json(oj)?;
+        let name = oj.field("name")?.as_str().unwrap_or("").to_string();
+        let inputs = oj.field("inputs")?.usize_vec()?;
+        let outputs = oj.field("outputs")?.usize_vec()?;
+        for &i in &inputs {
+            anyhow::ensure!(i < g.datas.len(), "op `{name}` bad input id");
+            g.datas[i].consumers.push(id);
+        }
+        for &o in &outputs {
+            anyhow::ensure!(o < g.datas.len(), "op `{name}` bad output id");
+            g.datas[o].producer = Some(id);
+        }
+        g.ops.push(OpNode {
+            id,
+            name,
+            kind,
+            inputs,
+            outputs,
+        });
+    }
+    g.inputs = j.field("inputs")?.usize_vec()?;
+    g.outputs = j.field("outputs")?.usize_vec()?;
+    g.validate()?;
+    Ok(g)
+}
+
+/// Write a graph to a file.
+pub fn save_graph(g: &Graph, path: &str, with_weights: bool) -> anyhow::Result<()> {
+    std::fs::write(path, graph_to_json(g, with_weights).to_string())?;
+    Ok(())
+}
+
+/// Read a graph from a file.
+pub fn load_graph(path: &str) -> anyhow::Result<Graph> {
+    let text = std::fs::read_to_string(path)?;
+    graph_from_json(&crate::util::parse_json(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    fn sample() -> Graph {
+        let mut b = GraphBuilder::new("serde-test", 3);
+        let x = b.input("x", vec![1, 3, 8, 8]);
+        let c = b.conv2d("c1", x, 6, 3, 1, 1, 1, true);
+        let n = b.batchnorm("bn", c);
+        let r = b.relu("r", n);
+        let c2 = b.conv2d("c2", r, 6, 3, 1, 1, 3, false); // grouped
+        let s = b.add("res", c2, r);
+        let g = b.global_avgpool("gap", s);
+        let out = b.gemm("fc", g, 4, true);
+        b.output(out);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn round_trip_with_weights() {
+        let g = sample();
+        let j = graph_to_json(&g, true);
+        let g2 = graph_from_json(&j).unwrap();
+        assert_eq!(g.name, g2.name);
+        assert_eq!(g.ops.len(), g2.ops.len());
+        assert_eq!(g.datas.len(), g2.datas.len());
+        for (a, b) in g.datas.iter().zip(&g2.datas) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.name, b.name);
+            match (&a.kind, &b.kind) {
+                (DataKind::Param(ta), DataKind::Param(tb)) => assert_eq!(ta.data, tb.data),
+                (x, y) => assert_eq!(
+                    std::mem::discriminant(x),
+                    std::mem::discriminant(y)
+                ),
+            }
+        }
+        for (a, b) in g.ops.iter().zip(&g2.ops) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.inputs, b.inputs);
+        }
+    }
+
+    #[test]
+    fn round_trip_structure_only() {
+        let g = sample();
+        let j = graph_to_json(&g, false);
+        let g2 = graph_from_json(&j).unwrap();
+        g2.validate().unwrap();
+        // weights zeroed but shapes preserved
+        let p = g2.datas.iter().find(|d| d.is_param()).unwrap();
+        assert!(p.param().unwrap().data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let g = sample();
+        let path = std::env::temp_dir().join("spa_serde_test.json");
+        save_graph(&g, path.to_str().unwrap(), true).unwrap();
+        let g2 = load_graph(path.to_str().unwrap()).unwrap();
+        assert_eq!(g.num_params(), g2.num_params());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let j = crate::util::parse_json(r#"{"format":"onnx","name":"x"}"#).unwrap();
+        assert!(graph_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! Shape inference over SPA-IR.
+//!
+//! The computational graph stores static shapes (the paper relies on ONNX
+//! shape information to drive mask propagation, §3.1); this module derives
+//! activation shapes from input/param shapes per operator semantics, both
+//! at build time and after structural pruning (`Graph::refresh_shapes`).
+
+use super::{Graph, OpKind};
+use crate::tensor::ops::conv_out_dim;
+use std::collections::HashMap;
+
+/// Infer the output shapes of one operator from its input shapes.
+pub fn infer_op_output_shapes(
+    kind: &OpKind,
+    ins: &[Vec<usize>],
+) -> anyhow::Result<Vec<Vec<usize>>> {
+    let one = |s: Vec<usize>| Ok(vec![s]);
+    match kind {
+        OpKind::Conv2d { stride, pad, groups } => {
+            anyhow::ensure!(ins.len() >= 2, "conv2d needs x,w");
+            let (x, w) = (&ins[0], &ins[1]);
+            anyhow::ensure!(x.len() == 4 && w.len() == 4, "conv2d ranks");
+            anyhow::ensure!(
+                x[1] == w[1] * groups,
+                "conv2d Ci mismatch: x has {}, w expects {}x{}",
+                x[1],
+                w[1],
+                groups
+            );
+            anyhow::ensure!(w[0] % groups == 0, "conv2d Co % groups");
+            if let Some(b) = ins.get(2) {
+                anyhow::ensure!(b == &vec![w[0]], "conv2d bias shape");
+            }
+            one(vec![
+                x[0],
+                w[0],
+                conv_out_dim(x[2], w[2], *stride, *pad),
+                conv_out_dim(x[3], w[3], *stride, *pad),
+            ])
+        }
+        OpKind::Gemm => {
+            anyhow::ensure!(ins.len() >= 2, "gemm needs x,w");
+            let (x, w) = (&ins[0], &ins[1]);
+            anyhow::ensure!(w.len() == 2, "gemm weight rank");
+            anyhow::ensure!(
+                x.last() == Some(&w[1]),
+                "gemm in-dim mismatch: x {:?} vs w {:?}",
+                x,
+                w
+            );
+            if let Some(b) = ins.get(2) {
+                anyhow::ensure!(b == &vec![w[0]], "gemm bias shape");
+            }
+            let mut out = x[..x.len() - 1].to_vec();
+            out.push(w[0]);
+            one(out)
+        }
+        OpKind::BatchNorm { .. } => {
+            anyhow::ensure!(ins.len() == 5, "batchnorm needs x,gamma,beta,mean,var");
+            let c = ins[0][1];
+            for p in &ins[1..] {
+                anyhow::ensure!(p == &vec![c], "batchnorm param shape {:?} vs C {}", p, c);
+            }
+            one(ins[0].clone())
+        }
+        OpKind::LayerNorm { .. } => {
+            anyhow::ensure!(ins.len() == 3, "layernorm needs x,gamma,beta");
+            let d = *ins[0].last().unwrap();
+            anyhow::ensure!(ins[1] == vec![d] && ins[2] == vec![d], "layernorm params");
+            one(ins[0].clone())
+        }
+        OpKind::Relu
+        | OpKind::Gelu
+        | OpKind::Silu
+        | OpKind::Sigmoid
+        | OpKind::Tanh
+        | OpKind::Softmax
+        | OpKind::Scale { .. }
+        | OpKind::Identity => one(ins[0].clone()),
+        OpKind::Add | OpKind::Mul => {
+            anyhow::ensure!(ins.len() == 2, "binary op arity");
+            let (a, b) = (&ins[0], &ins[1]);
+            if a == b {
+                return one(a.clone());
+            }
+            // channel broadcast: b is [C] or [1,C,1,1]-style against a's dim 1,
+            // or [.., 1, D]-style row broadcast for transformers
+            if broadcast_ok(a, b) {
+                return one(a.clone());
+            }
+            anyhow::bail!("binary op shape mismatch {:?} vs {:?}", a, b)
+        }
+        OpKind::MaxPool2d { k, stride, pad } | OpKind::AvgPool2d { k, stride, pad } => {
+            let x = &ins[0];
+            anyhow::ensure!(x.len() == 4, "pool rank");
+            one(vec![
+                x[0],
+                x[1],
+                conv_out_dim(x[2], *k, *stride, *pad),
+                conv_out_dim(x[3], *k, *stride, *pad),
+            ])
+        }
+        OpKind::GlobalAvgPool => {
+            let x = &ins[0];
+            anyhow::ensure!(x.len() == 4, "gap rank");
+            one(vec![x[0], x[1]])
+        }
+        OpKind::Flatten => {
+            let x = &ins[0];
+            anyhow::ensure!(x.len() >= 2, "flatten rank");
+            one(vec![x[0], x[1..].iter().product()])
+        }
+        OpKind::Concat { axis } => {
+            anyhow::ensure!(!ins.is_empty(), "concat arity");
+            let mut out = ins[0].clone();
+            anyhow::ensure!(*axis < out.len(), "concat axis");
+            for s in &ins[1..] {
+                anyhow::ensure!(s.len() == out.len(), "concat rank mismatch");
+                for (d, (&a, &b)) in out.iter().zip(s).enumerate() {
+                    if d == *axis {
+                        continue;
+                    }
+                    anyhow::ensure!(a == b, "concat non-axis dim mismatch");
+                }
+                out[*axis] += s[*axis];
+            }
+            one(out)
+        }
+        OpKind::MatMul => {
+            let (a, b) = (&ins[0], &ins[1]);
+            anyhow::ensure!(a.len() >= 2 && a.len() == b.len(), "matmul ranks");
+            anyhow::ensure!(
+                a[..a.len() - 2] == b[..b.len() - 2],
+                "matmul batch dims {:?} vs {:?}",
+                a,
+                b
+            );
+            anyhow::ensure!(
+                a[a.len() - 1] == b[b.len() - 2],
+                "matmul contraction {:?} vs {:?}",
+                a,
+                b
+            );
+            let mut out = a[..a.len() - 1].to_vec();
+            out.push(b[b.len() - 1]);
+            one(out)
+        }
+        OpKind::Transpose { perm } => {
+            let x = &ins[0];
+            anyhow::ensure!(perm.len() == x.len(), "transpose perm rank");
+            one(perm.iter().map(|&p| x[p]).collect())
+        }
+        OpKind::SplitHeads { heads } => {
+            let x = &ins[0];
+            anyhow::ensure!(x.len() == 3, "splitheads rank (want [N,T,D])");
+            anyhow::ensure!(x[2] % heads == 0, "D % heads");
+            one(vec![x[0], *heads, x[1], x[2] / heads])
+        }
+        OpKind::MergeHeads => {
+            let x = &ins[0];
+            anyhow::ensure!(x.len() == 4, "mergeheads rank (want [N,h,T,d])");
+            one(vec![x[0], x[2], x[1] * x[3]])
+        }
+        OpKind::Embedding => {
+            anyhow::ensure!(ins.len() == 2, "embedding arity");
+            let (ids, table) = (&ins[0], &ins[1]);
+            anyhow::ensure!(table.len() == 2, "embedding table rank");
+            let mut out = ids.clone();
+            out.push(table[1]);
+            one(out)
+        }
+        OpKind::NchwToTokens => {
+            let x = &ins[0];
+            anyhow::ensure!(x.len() == 4, "nchwtotokens rank");
+            one(vec![x[0], x[2] * x[3], x[1]])
+        }
+        OpKind::ReduceMean { axis } => {
+            let x = &ins[0];
+            anyhow::ensure!(*axis < x.len(), "reducemean axis");
+            let out: Vec<usize> = x
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i != axis)
+                .map(|(_, &d)| d)
+                .collect();
+            one(out)
+        }
+    }
+}
+
+/// Channel/row broadcast compatibility for Add/Mul: `b` may be [C] against
+/// a 2-D [N,C]; [C] or [1,C,1,1] against 4-D dim 1; [D] or [1,1,D] against
+/// 3-D last dim; or per-sample scale [N,C,1,1] against [N,C,H,W].
+pub fn broadcast_ok(a: &[usize], b: &[usize]) -> bool {
+    if b.len() == 1 {
+        return match a.len() {
+            2 => b[0] == a[1],
+            3 => b[0] == a[2],
+            4 => b[0] == a[1],
+            _ => false,
+        };
+    }
+    if a.len() == 4 && b.len() == 2 {
+        // per-sample channel gate [N,C] against [N,C,H,W] (SE blocks)
+        return b[0] == a[0] && b[1] == a[1];
+    }
+    if a.len() == 4 && b.len() == 4 {
+        // spatial broadcast for SE-style gates
+        return b[0] == a[0] && b[1] == a[1] && b[2] == 1 && b[3] == 1;
+    }
+    if a.len() == 3 && b.len() == 3 {
+        // position-embedding broadcast over batch
+        return b[0] == 1 && b[1] == a[1] && b[2] == a[2];
+    }
+    false
+}
+
+/// Infer shapes for every data node reachable from graph inputs/params.
+pub fn infer_shapes(g: &Graph) -> anyhow::Result<HashMap<usize, Vec<usize>>> {
+    let mut shapes: HashMap<usize, Vec<usize>> = HashMap::new();
+    for d in &g.datas {
+        if d.producer.is_none() {
+            shapes.insert(d.id, d.shape.clone());
+        }
+    }
+    for op_id in g.topo_order()? {
+        let op = &g.ops[op_id];
+        let ins: Vec<Vec<usize>> = op
+            .inputs
+            .iter()
+            .map(|&i| {
+                shapes
+                    .get(&i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("unshaped input to `{}`", op.name))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let outs = infer_op_output_shapes(&op.kind, &ins)
+            .map_err(|e| anyhow::anyhow!("op `{}`: {e}", op.name))?;
+        for (&out_id, s) in op.outputs.iter().zip(outs) {
+            shapes.insert(out_id, s);
+        }
+    }
+    Ok(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape() {
+        let out = infer_op_output_shapes(
+            &OpKind::Conv2d { stride: 2, pad: 1, groups: 1 },
+            &[vec![4, 3, 32, 32], vec![16, 3, 3, 3], vec![16]],
+        )
+        .unwrap();
+        assert_eq!(out, vec![vec![4, 16, 16, 16]]);
+    }
+
+    #[test]
+    fn conv_rejects_ci_mismatch() {
+        assert!(infer_op_output_shapes(
+            &OpKind::Conv2d { stride: 1, pad: 0, groups: 1 },
+            &[vec![1, 4, 8, 8], vec![8, 3, 3, 3]],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn gemm_3d_input() {
+        let out = infer_op_output_shapes(&OpKind::Gemm, &[vec![2, 7, 16], vec![32, 16]]).unwrap();
+        assert_eq!(out, vec![vec![2, 7, 32]]);
+    }
+
+    #[test]
+    fn concat_axis1() {
+        let out = infer_op_output_shapes(
+            &OpKind::Concat { axis: 1 },
+            &[vec![1, 4, 8, 8], vec![1, 6, 8, 8]],
+        )
+        .unwrap();
+        assert_eq!(out, vec![vec![1, 10, 8, 8]]);
+    }
+
+    #[test]
+    fn split_merge_heads() {
+        let s = infer_op_output_shapes(&OpKind::SplitHeads { heads: 4 }, &[vec![2, 9, 32]]).unwrap();
+        assert_eq!(s, vec![vec![2, 4, 9, 8]]);
+        let m = infer_op_output_shapes(&OpKind::MergeHeads, &[vec![2, 4, 9, 8]]).unwrap();
+        assert_eq!(m, vec![vec![2, 9, 32]]);
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        assert!(broadcast_ok(&[2, 8, 4, 4], &[8]));
+        assert!(broadcast_ok(&[2, 8], &[8]));
+        assert!(broadcast_ok(&[2, 8, 4, 4], &[2, 8, 1, 1]));
+        assert!(broadcast_ok(&[2, 9, 32], &[1, 9, 32]));
+        assert!(!broadcast_ok(&[2, 8, 4, 4], &[4]));
+        assert!(!broadcast_ok(&[2, 8, 4, 4], &[2, 8, 4, 1]));
+    }
+
+    #[test]
+    fn flatten_and_reduce() {
+        let f = infer_op_output_shapes(&OpKind::Flatten, &[vec![2, 8, 4, 4]]).unwrap();
+        assert_eq!(f, vec![vec![2, 128]]);
+        let r = infer_op_output_shapes(&OpKind::ReduceMean { axis: 1 }, &[vec![2, 9, 32]]).unwrap();
+        assert_eq!(r, vec![vec![2, 32]]);
+    }
+}

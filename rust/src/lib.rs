@@ -1,0 +1,35 @@
+//! # SPA — Structurally Prune Anything
+//!
+//! A Rust + JAX + Pallas reproduction of *"Structurally Prune Anything:
+//! Any Architecture, Any Framework, Any Time"* (2024).
+//!
+//! * **Any architecture** — [`ir`] is a standardized computational graph
+//!   (operator / data / parameter nodes, the paper's ONNX analog);
+//!   [`prune`] discovers coupled channels by mask propagation with per-
+//!   operator rules, groups them, and structurally deletes them for any
+//!   topology (residual, concat/dense, group/depthwise conv, attention).
+//! * **Any framework** — [`frontends`] normalizes heterogeneous framework
+//!   dialect exports (torch-like NCHW, tf-like NHWC-fused, jax-like,
+//!   mxnet-like) into SPA-IR, mirroring the paper's ONNX funnel.
+//! * **Any time** — [`coordinator`] drives prune-train,
+//!   train-prune-finetune, and train-prune pipelines; [`criteria`]
+//!   transfers magnitude / SNIP / GraSP / CroP scores into grouped
+//!   structured form (Eq. 1); [`obspa`] implements the paper's OBSPA
+//!   data-free reconstruction, whose hot kernels are AOT-compiled Pallas
+//!   programs executed through [`runtime`] (PJRT).
+
+pub mod analysis;
+pub mod baselines;
+pub mod coordinator;
+pub mod criteria;
+pub mod data;
+pub mod engine;
+pub mod frontends;
+pub mod ir;
+pub mod obspa;
+pub mod prune;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod zoo;

@@ -1,0 +1,5 @@
+//! SPA command-line interface — see `spa --help`.
+
+fn main() -> anyhow::Result<()> {
+    spa::coordinator::cli::run(std::env::args().skip(1).collect())
+}

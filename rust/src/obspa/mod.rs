@@ -1,0 +1,436 @@
+//! OBSPA — Optimal Brain SPA (paper §3.3 "Train-Prune" + App. A.6).
+//!
+//! Structured pruning *without fine-tuning*: coupled channels are scored
+//! with the layer-OBS criterion (Eq. 12), selected group-wise (Eq. 1),
+//! and the surviving weights are reconstructed with a SparseGPT-style
+//! column sweep (Eqs. 13-14) so each layer's output is preserved on the
+//! calibration distribution. Calibration can be In-Distribution,
+//! Out-Of-Distribution, or fully DataFree (uniform noise, §B.3), and BN
+//! statistics are re-calibrated for ID/OOD (never for DataFree — noise
+//! would distort them, exactly the paper's observation).
+//!
+//! The column sweep and Hessian accumulation execute through the PJRT
+//! Pallas artifacts (`crate::runtime::kernels`), with native fallback.
+
+use crate::engine::{self, Mode};
+use crate::ir::{DataId, Graph, OpId, OpKind};
+use crate::prune::{self, build_groups, score_groups, Agg, Groups, Norm};
+use crate::runtime::kernels as rk;
+use crate::tensor::{ops, Tensor};
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Where calibration data comes from (paper Tab. 4 settings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CalibSource {
+    /// Samples from the training distribution.
+    InDistribution,
+    /// Samples from a different distribution (e.g. CIFAR-100 for CIFAR-10).
+    OutOfDistribution,
+    /// Uniform noise in [0, 1) — the strictest data-free setting.
+    DataFree,
+}
+
+impl CalibSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CalibSource::InDistribution => "ID",
+            CalibSource::OutOfDistribution => "OOD",
+            CalibSource::DataFree => "DataFree",
+        }
+    }
+}
+
+/// OBSPA configuration.
+#[derive(Debug, Clone)]
+pub struct ObspaCfg {
+    /// Hessian damping as a fraction of the mean diagonal.
+    pub damp: f32,
+    /// FLOPs reduction target (paper's RF).
+    pub target_rf: f64,
+    /// Minimum CCs kept per group.
+    pub min_keep: usize,
+    /// Re-calibrate BN running stats after reconstruction (ID/OOD only).
+    pub bn_recalibrate: bool,
+    /// AGG / Norm of the group scoring (Eq. 1 hyper-parameters).
+    pub agg: Agg,
+    pub norm: Norm,
+}
+
+impl Default for ObspaCfg {
+    fn default() -> Self {
+        ObspaCfg {
+            damp: 0.01,
+            target_rf: 1.5,
+            min_keep: 1,
+            bn_recalibrate: true,
+            agg: Agg::Sum,
+            norm: Norm::Mean,
+        }
+    }
+}
+
+/// Per-layer Hessian state captured from calibration activations.
+struct LayerState {
+    /// One Hessian per conv group (gemm: single entry). [K, K]
+    hessians: Vec<Tensor>,
+    /// Diagonal of H⁻¹ per group (for OBS scores).
+    hinv_diag: Vec<Vec<f32>>,
+    /// Sweep matrix (upper Cholesky of H⁻¹) per group.
+    sweeps: Vec<Tensor>,
+    /// kdim (columns of the layer's GEMM view).
+    kdim: usize,
+    /// spatial kernel block (kh·kw for conv, 1 for gemm).
+    kblock: usize,
+}
+
+/// Report of an OBSPA run.
+#[derive(Debug, Clone)]
+pub struct ObspaReport {
+    pub layers_updated: usize,
+    pub ccs_removed: usize,
+    pub backend: rk::Backend,
+    pub seconds: f64,
+}
+
+/// Generate uniform-noise calibration input matching a graph input shape
+/// (the paper's DataFree setting: U[0,1)).
+pub fn datafree_calib(g: &Graph, samples: usize, rng: &mut Rng) -> Tensor {
+    let mut shape = g.data(g.inputs[0]).shape.clone();
+    shape[0] = samples;
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, rng.uniform_vec(n, 0.0, 1.0))
+}
+
+/// Which ops get OBS reconstruction.
+fn is_obs_layer(kind: &OpKind) -> bool {
+    matches!(kind, OpKind::Conv2d { .. } | OpKind::Gemm)
+}
+
+/// Capture per-layer input matrices (GEMM view) from calibration data and
+/// accumulate Hessians through the runtime kernel.
+fn capture_hessians(
+    g: &Graph,
+    calib: &Tensor,
+    damp: f32,
+) -> anyhow::Result<(HashMap<OpId, LayerState>, rk::Backend)> {
+    let fwd = engine::forward(g, &[(g.inputs[0], calib.clone())], Mode::Eval)?;
+    let mut states = HashMap::new();
+    let mut backend = rk::Backend::Native;
+    for op in &g.ops {
+        if !is_obs_layer(&op.kind) {
+            continue;
+        }
+        let x = fwd.value(op.inputs[0]);
+        let w_shape = &g.data(op.inputs[1]).shape;
+        let (xs, kblock): (Vec<Tensor>, usize) = match &op.kind {
+            OpKind::Conv2d { stride, pad, groups } => (
+                ops::unfold_conv_inputs(x, w_shape, *stride, *pad, *groups),
+                w_shape[2] * w_shape[3],
+            ),
+            OpKind::Gemm => {
+                let k = x.dim(-1);
+                let rows = x.numel() / k;
+                // X [K, rows]
+                (vec![x.reshaped(vec![rows, k]).t2()], 1)
+            }
+            _ => unreachable!(),
+        };
+        let kdim = xs[0].shape[0];
+        let mut hessians = Vec::new();
+        let mut hinv_diag = Vec::new();
+        let mut sweeps = Vec::new();
+        for xg in &xs {
+            let (mut h, be) = rk::hessian_accum(&Tensor::zeros(&[kdim, kdim]), xg)?;
+            backend = be;
+            let mean_diag =
+                (0..kdim).map(|i| h.data[i * kdim + i]).sum::<f32>() / kdim as f32;
+            let lambda = damp * mean_diag.max(1e-6);
+            for i in 0..kdim {
+                h.data[i * kdim + i] += lambda;
+            }
+            let hinv = rk::spd_inverse(&h)?;
+            hinv_diag.push((0..kdim).map(|i| hinv.data[i * kdim + i]).collect());
+            let l = rk::cholesky(&hinv)?;
+            sweeps.push(l.t2());
+            hessians.push(h);
+        }
+        states.insert(
+            op.id,
+            LayerState {
+                hessians,
+                hinv_diag,
+                sweeps,
+                kdim,
+                kblock,
+            },
+        );
+    }
+    Ok((states, backend))
+}
+
+/// Layer-OBS per-parameter scores (Eq. 12): S(θ_rj) = θ²/[H⁻¹]_jj, plus
+/// magnitude² for parameters without a Hessian (BN/LN/bias/embedding).
+fn obs_param_scores(
+    g: &Graph,
+    states: &HashMap<OpId, LayerState>,
+) -> HashMap<DataId, Tensor> {
+    let mut scores: HashMap<DataId, Tensor> = HashMap::new();
+    for pid in g.param_ids() {
+        scores.insert(pid, g.data(pid).param().unwrap().map(|v| v * v));
+    }
+    for op in &g.ops {
+        let Some(state) = states.get(&op.id) else {
+            continue;
+        };
+        let wid = op.inputs[1];
+        let w = g.data(wid).param().unwrap();
+        let mut s = w.map(|v| v * v);
+        match &op.kind {
+            OpKind::Gemm => {
+                let (co, k) = (w.shape[0], w.shape[1]);
+                let diag = &state.hinv_diag[0];
+                for r in 0..co {
+                    for j in 0..k {
+                        s.data[r * k + j] /= diag[j].max(1e-12);
+                    }
+                }
+            }
+            OpKind::Conv2d { groups, .. } => {
+                let co = w.shape[0];
+                let kdim = state.kdim;
+                let cog = co / groups;
+                for r in 0..co {
+                    let diag = &state.hinv_diag[r / cog];
+                    for j in 0..kdim {
+                        s.data[r * kdim + j] /= diag[j].max(1e-12);
+                    }
+                }
+            }
+            _ => {}
+        }
+        scores.insert(wid, s);
+    }
+    scores
+}
+
+/// Column prune-mask per OBS layer from the selected coupled channels:
+/// dim-1 deletions of the weight map to kblock-wide column spans.
+fn column_masks(
+    g: &Graph,
+    groups: &Groups,
+    selected: &[(usize, usize)],
+    states: &HashMap<OpId, LayerState>,
+) -> HashMap<OpId, Vec<f32>> {
+    // param data id → owning OBS op
+    let mut owner: HashMap<DataId, OpId> = HashMap::new();
+    for op in &g.ops {
+        if states.contains_key(&op.id) {
+            owner.insert(op.inputs[1], op.id);
+        }
+    }
+    let mut masks: HashMap<OpId, Vec<f32>> = HashMap::new();
+    for &(gid, cc) in selected {
+        for loc in &groups.groups[gid].ccs[cc].locs {
+            if loc.dim != 1 {
+                continue;
+            }
+            let Some(&op_id) = owner.get(&loc.data) else {
+                continue;
+            };
+            let st = &states[&op_id];
+            let mask = masks.entry(op_id).or_insert_with(|| vec![0.0; st.kdim]);
+            for j in loc.idx * st.kblock..(loc.idx + 1) * st.kblock {
+                if j < mask.len() {
+                    mask[j] = 1.0;
+                }
+            }
+        }
+    }
+    masks
+}
+
+/// Run OBSPA on a graph in place: score → select → reconstruct → delete
+/// (→ optionally recalibrate BN). Returns a report.
+pub fn obspa_prune(
+    g: &mut Graph,
+    calib: &Tensor,
+    cfg: &ObspaCfg,
+) -> anyhow::Result<ObspaReport> {
+    let t0 = std::time::Instant::now();
+    let (states, backend) = capture_hessians(g, calib, cfg.damp)?;
+    let groups = build_groups(g)?;
+    let scores = obs_param_scores(g, &states);
+    let ranked = score_groups(g, &groups, &scores, cfg.agg, cfg.norm);
+    let selected =
+        prune::select_by_flops_target(g, &groups, &ranked, cfg.target_rf, cfg.min_keep)?;
+    // Reconstruct each affected layer before deletion.
+    let masks = column_masks(g, &groups, &selected, &states);
+    let mut layers_updated = 0usize;
+    let mut backend_final = backend;
+    for (&op_id, mask) in &masks {
+        let st = &states[&op_id];
+        let wid = g.ops[op_id].inputs[1];
+        let w = g.data(wid).param().unwrap().clone();
+        let kind = g.ops[op_id].kind.clone();
+        let new_w = match kind {
+            OpKind::Gemm => {
+                let (updated, be) = rk::obs_update(&w, &st.sweeps[0], mask)?;
+                backend_final = be;
+                updated
+            }
+            OpKind::Conv2d { groups: gcount, .. } => {
+                let co = w.shape[0];
+                let cog = co / gcount;
+                let kdim = st.kdim;
+                let flat = w.reshaped(vec![co, kdim]);
+                let mut out = Tensor::zeros(&[co, kdim]);
+                for grp in 0..gcount {
+                    let rows: Vec<usize> = (grp * cog..(grp + 1) * cog).collect();
+                    let wg = flat.take_indices(0, &rows);
+                    let (updated, be) = rk::obs_update(&wg, &st.sweeps[grp], mask)?;
+                    backend_final = be;
+                    for (ri, &r) in rows.iter().enumerate() {
+                        out.data[r * kdim..(r + 1) * kdim]
+                            .copy_from_slice(&updated.data[ri * kdim..(ri + 1) * kdim]);
+                    }
+                }
+                out.reshaped(w.shape.clone())
+            }
+            _ => unreachable!(),
+        };
+        *g.datas[wid].param_mut().unwrap() = new_w;
+        layers_updated += 1;
+        let _ = &st.hessians; // retained for future iterative variants
+    }
+    let outcome = prune::apply_pruning(g, &groups, &selected)?;
+    if cfg.bn_recalibrate {
+        recalibrate_bn(g, calib)?;
+    }
+    Ok(ObspaReport {
+        layers_updated,
+        ccs_removed: outcome.ccs_removed,
+        backend: backend_final,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// BN statistic re-calibration (paper §B.3): forward the calibration data
+/// twice in training-stats mode, EMA-updating running mean/var.
+pub fn recalibrate_bn(g: &mut Graph, calib: &Tensor) -> anyhow::Result<()> {
+    for pass in 0..2 {
+        let fwd = engine::forward(g, &[(g.inputs[0], calib.clone())], Mode::Train)?;
+        let momentum = if pass == 0 { 1.0 } else { 0.5 };
+        engine::update_bn_stats(g, &fwd, momentum);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::data;
+    use crate::zoo::{self, ImageCfg};
+
+    fn acc_of(g: &Graph, ds: &data::ImageDataset) -> f32 {
+        let (x, y) = ds.test_batch(0, 64);
+        let logits = engine::predict(g, x).unwrap();
+        ops::accuracy(&logits, &y)
+    }
+
+    #[test]
+    fn obspa_prunes_to_target_and_beats_naive_zeroing() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let ds = data::ImageDataset::synth_cifar(10, 512, 8, 3, 42);
+        let mut g = zoo::resnet18(cfg, 7);
+        // quick-train so weights encode signal worth preserving
+        crate::train::quick_train(&mut g, &ds, 60, 0.05).unwrap();
+        let base_acc = acc_of(&g, &ds);
+        let (calib, _) = ds.train_batch_seeded(99, 128);
+        // OBSPA
+        let mut g_obs = g.clone();
+        let rep = obspa_prune(
+            &mut g_obs,
+            &calib,
+            &ObspaCfg {
+                target_rf: 1.3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(rep.layers_updated > 0);
+        let r = analysis::reduction(&g, &g_obs);
+        assert!(r.rf >= 1.3, "rf {}", r.rf);
+        let obs_acc = acc_of(&g_obs, &ds);
+        // naive baseline: same selection machinery via magnitude, no update
+        let mut g_naive = g.clone();
+        let groups = build_groups(&g_naive).unwrap();
+        let mut l1 = HashMap::new();
+        for pid in g_naive.param_ids() {
+            l1.insert(pid, g_naive.data(pid).param().unwrap().map(f32::abs));
+        }
+        let ranked = score_groups(&g_naive, &groups, &l1, Agg::Sum, Norm::Mean);
+        let sel =
+            prune::select_by_flops_target(&g_naive, &groups, &ranked, 1.3, 1).unwrap();
+        prune::apply_pruning(&mut g_naive, &groups, &sel).unwrap();
+        let naive_acc = acc_of(&g_naive, &ds);
+        // The paper's Tab. 4 shape: OBSPA's acc drop ≪ data-free magnitude
+        // drop. Allow slack for the tiny regime but require clear ordering.
+        assert!(
+            obs_acc >= naive_acc - 0.02,
+            "obspa {obs_acc} should not trail naive {naive_acc}"
+        );
+        assert!(
+            base_acc - obs_acc < 0.25,
+            "obspa dropped too much: {base_acc} -> {obs_acc}"
+        );
+    }
+
+    #[test]
+    fn datafree_calibration_runs() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::vgg16(cfg, 3);
+        let mut rng = Rng::new(5);
+        let calib = datafree_calib(&g, 32, &mut rng);
+        let rep = obspa_prune(
+            &mut g,
+            &calib,
+            &ObspaCfg {
+                target_rf: 1.3,
+                bn_recalibrate: false, // paper: never recalibrate on noise
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(rep.ccs_removed > 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn bn_recalibration_moves_stats() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::resnet18(cfg, 9);
+        let ds = data::ImageDataset::synth_cifar(10, 128, 8, 3, 43);
+        let (calib, _) = ds.train_batch_seeded(1, 64);
+        let before: Vec<f32> = g
+            .data_by_name("stem.bn.mean")
+            .unwrap()
+            .param()
+            .unwrap()
+            .data
+            .clone();
+        recalibrate_bn(&mut g, &calib).unwrap();
+        let after = &g.data_by_name("stem.bn.mean").unwrap().param().unwrap().data;
+        assert!(before.iter().zip(after).any(|(a, b)| (a - b).abs() > 1e-4));
+    }
+}

@@ -1,0 +1,255 @@
+//! Channel grouping — the paper's Alg. 2.
+//!
+//! Loops over operators with prunable output dimensions (conv / gemm
+//! weights), propagates a mask per not-yet-covered output channel, and
+//! collects the resulting coupled channel sets into [`Group`]s. Operators
+//! whose channels were already swept into an earlier group are skipped
+//! (the paper's `analyzed_ops` marking), so e.g. all convs tied by a
+//! residual chain form ONE group.
+
+use super::rules::{param_locs, propagate, Mask};
+use super::Loc;
+use crate::ir::{DataId, DataKind, Graph, OpId, OpKind};
+use std::collections::HashSet;
+
+/// One set of channels that must be pruned together (same color in the
+/// paper's Fig. 5). `locs` are parameter channel locations; `acts` are the
+/// activation locations the mask sweep covered (used for prunability
+/// checks against graph inputs/outputs).
+#[derive(Debug, Clone)]
+pub struct CoupledChannels {
+    pub locs: Vec<Loc>,
+    pub acts: Vec<Loc>,
+}
+
+/// A group of identically-patterned coupled channel sets.
+#[derive(Debug, Clone)]
+pub struct Group {
+    pub id: usize,
+    /// The operator whose output channels seeded this group.
+    pub source_op: OpId,
+    pub ccs: Vec<CoupledChannels>,
+    /// False when the group touches a graph input/output (e.g. classifier
+    /// logits) or an embedding-id path and must not be pruned.
+    pub prunable: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Groups {
+    pub groups: Vec<Group>,
+}
+
+impl Groups {
+    /// Number of prunable coupled-channel sets across all groups.
+    pub fn num_prunable_ccs(&self) -> usize {
+        self.groups
+            .iter()
+            .filter(|g| g.prunable)
+            .map(|g| g.ccs.len())
+            .sum()
+    }
+}
+
+/// The prunable source parameter of an operator: (param data id, out dim).
+pub fn prunable_source(g: &Graph, op_id: OpId) -> Option<(DataId, usize)> {
+    let op = g.op(op_id);
+    match op.kind {
+        OpKind::Conv2d { .. } | OpKind::Gemm => Some((op.inputs[1], 0)),
+        _ => None,
+    }
+}
+
+/// Build all groups for a graph (paper Alg. 2). `O(|E|)` per group sweep
+/// as analyzed in §3.2 — each channel's propagation touches each edge a
+/// bounded number of times and channels covered by earlier groups are
+/// never re-propagated.
+pub fn build_groups(g: &Graph) -> anyhow::Result<Groups> {
+    let mut covered: HashSet<Loc> = HashSet::new();
+    let mut groups = Vec::new();
+    let graph_io: HashSet<DataId> = g.inputs.iter().chain(&g.outputs).copied().collect();
+    for op_id in g.topo_order()? {
+        let Some((src, out_dim)) = prunable_source(g, op_id) else {
+            continue;
+        };
+        let channels = g.data(src).shape[out_dim];
+        let mut ccs = Vec::new();
+        let mut prunable = true;
+        for c in 0..channels {
+            let seed = Loc {
+                data: src,
+                dim: out_dim,
+                idx: c,
+            };
+            if covered.contains(&seed) {
+                continue;
+            }
+            let masks = propagate(g, Mask::single(g, src, out_dim, c));
+            let locs = param_locs(g, &masks);
+            let mut acts = Vec::new();
+            for ((data, dim), m) in &masks {
+                let dn = g.data(*data);
+                if matches!(dn.kind, DataKind::Param(_)) {
+                    continue;
+                }
+                for idx in m.indices() {
+                    acts.push(Loc {
+                        data: *data,
+                        dim: *dim,
+                        idx,
+                    });
+                }
+                // Touching channel dims of a graph input or output makes
+                // the whole group un-prunable (e.g. logits, RGB input).
+                if graph_io.contains(data) {
+                    prunable = false;
+                }
+            }
+            // Mark every prunable-source channel in this CC as covered so
+            // coupled operators are not re-analyzed (paper l.11-13).
+            for l in &locs {
+                covered.insert(*l);
+            }
+            acts.sort();
+            ccs.push(CoupledChannels { locs, acts });
+        }
+        if !ccs.is_empty() {
+            groups.push(Group {
+                id: groups.len(),
+                source_op: op_id,
+                ccs,
+                prunable,
+            });
+        }
+    }
+    Ok(Groups { groups })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    fn resnet_like() -> Graph {
+        let mut b = GraphBuilder::new("resnetish", 1);
+        let x = b.input("x", vec![1, 3, 8, 8]);
+        let c0 = b.conv2d("c0", x, 8, 3, 1, 1, 1, false);
+        let n0 = b.batchnorm("bn0", c0);
+        let r0 = b.relu("r0", n0);
+        // block: two convs + residual
+        let c1 = b.conv2d("c1", r0, 8, 3, 1, 1, 1, false);
+        let n1 = b.batchnorm("bn1", c1);
+        let r1 = b.relu("r1", n1);
+        let c2 = b.conv2d("c2", r1, 8, 3, 1, 1, 1, false);
+        let n2 = b.batchnorm("bn2", c2);
+        let s = b.add("add", n2, r0);
+        let r2 = b.relu("r2", s);
+        let gp = b.global_avgpool("gap", r2);
+        let fc = b.gemm("fc", gp, 4, true);
+        b.output(fc);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn residual_chain_forms_one_group() {
+        let g = resnet_like();
+        let groups = build_groups(&g).unwrap();
+        // c0 and c2 are residual-coupled (via add) → same group;
+        // c1 is independent (inner channels); fc is output → un-prunable
+        let by_src: Vec<(&str, usize, bool)> = groups
+            .groups
+            .iter()
+            .map(|gr| {
+                (
+                    g.op(gr.source_op).name.as_str(),
+                    gr.ccs.len(),
+                    gr.prunable,
+                )
+            })
+            .collect();
+        assert_eq!(by_src.len(), 3, "{by_src:?}");
+        assert_eq!(by_src[0], ("c0", 8, true));
+        assert_eq!(by_src[1], ("c1", 8, true));
+        assert_eq!(by_src[2].0, "fc");
+        assert!(!by_src[2].2, "classifier output must be un-prunable");
+        // the c0 group's CCs include both c0.w dim0 and c2.w dim0
+        let w0 = g.data_by_name("c0.w").unwrap().id;
+        let w2 = g.data_by_name("c2.w").unwrap().id;
+        let cc = &groups.groups[0].ccs[0];
+        assert!(cc.locs.iter().any(|l| l.data == w0 && l.dim == 0));
+        assert!(cc.locs.iter().any(|l| l.data == w2 && l.dim == 0));
+    }
+
+    #[test]
+    fn ccs_partition_source_channels() {
+        let g = resnet_like();
+        let groups = build_groups(&g).unwrap();
+        // every (source param, dim0, channel) appears in exactly one CC
+        let mut seen: HashSet<Loc> = HashSet::new();
+        for gr in &groups.groups {
+            for cc in &gr.ccs {
+                for l in &cc.locs {
+                    if l.dim == 0 && g.data(l.data).name.ends_with(".w") {
+                        assert!(seen.insert(*l), "duplicate loc {:?}", l);
+                    }
+                }
+            }
+        }
+        for d in &g.datas {
+            if d.name.ends_with(".w") && d.shape.len() >= 2 {
+                for c in 0..d.shape[0] {
+                    assert!(
+                        seen.contains(&Loc { data: d.id, dim: 0, idx: c }),
+                        "{}[{}] not covered",
+                        d.name,
+                        c
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_conv_ccs_span_groups() {
+        let mut b = GraphBuilder::new("grp", 2);
+        let x = b.input("x", vec![1, 4, 6, 6]);
+        let c0 = b.conv2d("c0", x, 8, 1, 1, 0, 1, false);
+        let c1 = b.conv2d("c1", c0, 8, 3, 1, 1, 4, false);
+        let gp = b.global_avgpool("gap", c1);
+        let fc = b.gemm("fc", gp, 2, false);
+        b.output(fc);
+        let g = b.finish().unwrap();
+        let groups = build_groups(&g).unwrap();
+        let g0 = &groups.groups[0];
+        // c0 has 8 output channels but closure ties pairs {c, c+2, ...}
+        // across the 4 groups of c1 (cig=2): each CC covers 4 channels →
+        // only 2 CCs
+        assert_eq!(g.op(g0.source_op).name, "c0");
+        assert_eq!(g0.ccs.len(), 2, "position closure should merge channels");
+    }
+
+    #[test]
+    fn densenet_concat_groups() {
+        let mut b = GraphBuilder::new("dense", 3);
+        let x = b.input("x", vec![1, 4, 6, 6]);
+        let c1 = b.conv2d("c1", x, 4, 3, 1, 1, 1, false);
+        let cat = b.concat("cat", &[x, c1], 1);
+        let c2 = b.conv2d("c2", cat, 6, 3, 1, 1, 1, false);
+        let gp = b.global_avgpool("gap", c2);
+        let fc = b.gemm("fc", gp, 2, false);
+        b.output(fc);
+        let g = b.finish().unwrap();
+        let groups = build_groups(&g).unwrap();
+        // c1's group: prunable (concat carries x but x channels only occupy
+        // offsets 0..4; c1's channels occupy 4..8 and do not touch x)
+        let gc1 = groups
+            .groups
+            .iter()
+            .find(|gr| g.op(gr.source_op).name == "c1")
+            .unwrap();
+        assert!(gc1.prunable);
+        let w2 = g.data_by_name("c2.w").unwrap().id;
+        // each c1 CC hits c2's in-dim at offset+4
+        let cc0 = &gc1.ccs[0];
+        assert!(cc0.locs.iter().any(|l| l.data == w2 && l.dim == 1 && l.idx == 4));
+    }
+}

@@ -1,0 +1,270 @@
+//! Group-level importance estimation — Eq. 1 of the paper:
+//!
+//! `s_{i,j} = Norm_{CC_l ∈ g_i}( { AGG( S(θ_k), ∀θ_k ∈ CC_j ) } )`
+//!
+//! Per-parameter scores `S` come from a criterion (`crate::criteria`) as a
+//! map from parameter data id to a score tensor of the parameter's shape.
+//! `AGG` collapses each coupled channel set to a scalar; `Norm` rescales
+//! scalars within each group so scores are comparable *across* groups for
+//! global ranking (the paper's Alg. 3).
+
+use super::grouping::Groups;
+use super::Loc;
+use crate::ir::{DataId, Graph};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Aggregation operator over the scores of a coupled channel set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Agg {
+    Sum,
+    Mean,
+    Max,
+    Prod,
+    /// L2 norm of the score vector.
+    L2,
+}
+
+impl Agg {
+    pub fn apply(&self, scores: &[f32]) -> f32 {
+        if scores.is_empty() {
+            return 0.0;
+        }
+        match self {
+            Agg::Sum => scores.iter().sum(),
+            Agg::Mean => scores.iter().sum::<f32>() / scores.len() as f32,
+            Agg::Max => scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+            Agg::Prod => scores.iter().fold(1.0, |a, &b| a * b.abs().max(1e-30)),
+            Agg::L2 => scores.iter().map(|s| s * s).sum::<f32>().sqrt(),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Agg> {
+        Ok(match s {
+            "sum" => Agg::Sum,
+            "mean" => Agg::Mean,
+            "max" => Agg::Max,
+            "prod" => Agg::Prod,
+            "l2" => Agg::L2,
+            _ => anyhow::bail!("unknown AGG `{s}`"),
+        })
+    }
+}
+
+/// Normalization of CC scores within a group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Norm {
+    /// Divide by the group sum.
+    Sum,
+    /// Divide by the group max.
+    Max,
+    /// Divide by the group mean.
+    Mean,
+    /// Divide by the group median.
+    Median,
+    /// No normalization.
+    None,
+}
+
+impl Norm {
+    pub fn apply(&self, scores: &mut [f32]) {
+        if scores.is_empty() {
+            return;
+        }
+        let denom = match self {
+            Norm::Sum => scores.iter().sum::<f32>(),
+            Norm::Max => scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+            Norm::Mean => scores.iter().sum::<f32>() / scores.len() as f32,
+            Norm::Median => {
+                let mut s = scores.to_vec();
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                s[s.len() / 2]
+            }
+            Norm::None => 1.0,
+        };
+        if denom.abs() > 1e-30 {
+            for v in scores.iter_mut() {
+                *v /= denom;
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Norm> {
+        Ok(match s {
+            "sum" => Norm::Sum,
+            "max" => Norm::Max,
+            "mean" => Norm::Mean,
+            "median" => Norm::Median,
+            "none" => Norm::None,
+            _ => anyhow::bail!("unknown Norm `{s}`"),
+        })
+    }
+}
+
+/// The score of one coupled channel set.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupScore {
+    pub group: usize,
+    pub cc: usize,
+    pub score: f32,
+}
+
+/// Gather the per-parameter scores at channel location `loc` (the whole
+/// slice along `loc.dim` at `loc.idx`).
+fn slice_scores(score: &Tensor, loc: &Loc, out: &mut Vec<f32>) {
+    let dim = loc.dim;
+    let d = score.shape[dim];
+    let outer: usize = score.shape[..dim].iter().product();
+    let inner: usize = score.shape[dim + 1..].iter().product();
+    for o in 0..outer {
+        let base = (o * d + loc.idx) * inner;
+        out.extend_from_slice(&score.data[base..base + inner]);
+    }
+}
+
+/// Which parameters of a coupled channel set contribute to its score.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// SPA's grouped estimation: every coupled weight slice (Eq. 1).
+    FullCc,
+    /// The classic "structured" baselines (SNAP, structured-CroP/GraSP,
+    /// ungrouped L1): only the source operator's own filter slice.
+    SourceOnly,
+}
+
+/// Apply Eq. 1 over all prunable groups. `param_scores` maps parameter
+/// data ids to score tensors (criteria that do not score a parameter —
+/// e.g. BN running stats — are simply skipped).
+pub fn score_groups(
+    g: &Graph,
+    groups: &Groups,
+    param_scores: &HashMap<DataId, Tensor>,
+    agg: Agg,
+    norm: Norm,
+) -> Vec<GroupScore> {
+    score_groups_scoped(g, groups, param_scores, agg, norm, Scope::FullCc)
+}
+
+/// [`score_groups`] with an explicit scoring [`Scope`].
+pub fn score_groups_scoped(
+    g: &Graph,
+    groups: &Groups,
+    param_scores: &HashMap<DataId, Tensor>,
+    agg: Agg,
+    norm: Norm,
+    scope: Scope,
+) -> Vec<GroupScore> {
+    let mut out = Vec::new();
+    for group in &groups.groups {
+        if !group.prunable {
+            continue;
+        }
+        // For SourceOnly scoring, restrict to the source op's weight dim 0.
+        let src_w = g.op(group.source_op).inputs.get(1).copied();
+        let mut scores: Vec<f32> = Vec::with_capacity(group.ccs.len());
+        for cc in &group.ccs {
+            let mut vals = Vec::new();
+            for loc in &cc.locs {
+                if scope == Scope::SourceOnly
+                    && (Some(loc.data) != src_w || loc.dim != 0)
+                {
+                    continue;
+                }
+                if let Some(s) = param_scores.get(&loc.data) {
+                    slice_scores(s, loc, &mut vals);
+                }
+            }
+            scores.push(agg.apply(&vals));
+        }
+        norm.apply(&mut scores);
+        for (cc, &score) in scores.iter().enumerate() {
+            out.push(GroupScore {
+                group: group.id,
+                cc,
+                score,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::prune::build_groups;
+
+    #[test]
+    fn agg_operators() {
+        let v = [1.0, 2.0, 3.0];
+        assert_eq!(Agg::Sum.apply(&v), 6.0);
+        assert_eq!(Agg::Mean.apply(&v), 2.0);
+        assert_eq!(Agg::Max.apply(&v), 3.0);
+        assert!((Agg::L2.apply(&v) - 14.0f32.sqrt()).abs() < 1e-6);
+        assert_eq!(Agg::Prod.apply(&v), 6.0);
+    }
+
+    #[test]
+    fn norm_operators() {
+        let mut v = [1.0, 3.0];
+        Norm::Sum.apply(&mut v);
+        assert_eq!(v, [0.25, 0.75]);
+        let mut v = [1.0, 4.0];
+        Norm::Max.apply(&mut v);
+        assert_eq!(v, [0.25, 1.0]);
+        let mut v = [2.0, 6.0];
+        Norm::Mean.apply(&mut v);
+        assert_eq!(v, [0.5, 1.5]);
+        let mut v = [5.0, 7.0];
+        Norm::None.apply(&mut v);
+        assert_eq!(v, [5.0, 7.0]);
+    }
+
+    #[test]
+    fn scores_rank_planted_channel_lowest() {
+        // zero out channel 2 of c0: with L1 scores it must rank lowest
+        let mut b = GraphBuilder::new("rank", 1);
+        let x = b.input("x", vec![1, 3, 6, 6]);
+        let c0 = b.conv2d("c0", x, 6, 3, 1, 1, 1, false);
+        let gp = b.global_avgpool("gap", c0);
+        let fc = b.gemm("fc", gp, 2, false);
+        b.output(fc);
+        let mut g = b.finish().unwrap();
+        let w0 = g.data_by_name("c0.w").unwrap().id;
+        {
+            let t = g.datas[w0].param_mut().unwrap();
+            let inner = 3 * 3 * 3;
+            for i in 2 * inner..3 * inner {
+                t.data[i] = 0.0;
+            }
+        }
+        let groups = build_groups(&g).unwrap();
+        // L1 magnitude scores
+        let mut scores = HashMap::new();
+        for pid in g.param_ids() {
+            scores.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+        }
+        let ranked = score_groups(&g, &groups, &scores, Agg::Sum, Norm::Mean);
+        let group0: Vec<&GroupScore> = ranked.iter().filter(|s| s.group == 0).collect();
+        assert_eq!(group0.len(), 6);
+        let min = group0
+            .iter()
+            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .unwrap();
+        assert_eq!(min.cc, 2, "planted zero channel should score lowest");
+    }
+
+    #[test]
+    fn unprunable_groups_excluded() {
+        let mut b = GraphBuilder::new("x", 2);
+        let x = b.input("x", vec![1, 3, 4, 4]);
+        let gp = b.global_avgpool("gap", x);
+        let fc = b.gemm("fc", gp, 2, false);
+        b.output(fc);
+        let g = b.finish().unwrap();
+        let groups = build_groups(&g).unwrap();
+        let scores = HashMap::new();
+        let ranked = score_groups(&g, &groups, &scores, Agg::Sum, Norm::None);
+        assert!(ranked.is_empty(), "only group is the classifier → nothing");
+    }
+}

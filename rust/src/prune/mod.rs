@@ -1,0 +1,34 @@
+//! Structured pruning core — the paper's four-step procedure (§3.2):
+//!
+//! 1. **Coupling channels via mask propagation** ([`rules`], [`propagate`])
+//!    — per-operator rules move channel masks between the data nodes an
+//!    operator touches; a worklist closure finds every coupled channel.
+//! 2. **Grouping coupled channels** ([`grouping`]) — one propagation per
+//!    source channel, organized into groups of identically-patterned
+//!    coupled channel sets (Alg. 2).
+//! 3. **Importance estimation** ([`importance`]) — Eq. 1:
+//!    `Norm ∘ AGG ∘ S` over each coupled set, with pluggable criteria.
+//! 4. **Pruning** ([`pruner`]) — physical deletion of channels from
+//!    parameter tensors, attribute fix-up (e.g. depthwise group counts),
+//!    shape re-inference, and validation.
+
+pub mod grouping;
+pub mod importance;
+pub mod pruner;
+pub mod rules;
+
+pub use grouping::{build_groups, CoupledChannels, Group, Groups};
+pub use importance::{score_groups, score_groups_scoped, Agg, GroupScore, Norm, Scope};
+pub use pruner::{apply_pruning, select_by_flops_target, select_lowest, PruneOutcome};
+pub use rules::{propagate, Mask};
+
+use crate::ir::DataId;
+
+/// A single channel location: index `idx` along dimension `dim` of data
+/// node `data`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Loc {
+    pub data: DataId,
+    pub dim: usize,
+    pub idx: usize,
+}

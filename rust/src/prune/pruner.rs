@@ -1,0 +1,352 @@
+//! Step 4 — physical pruning (paper §3.2).
+//!
+//! Given the coupled channel sets selected for removal, delete the
+//! corresponding slices from every parameter tensor, fix operator
+//! attributes whose semantics depend on channel counts (depthwise conv
+//! group counts), re-run shape inference, and validate the rewritten
+//! graph. Selection helpers implement global lowest-score pruning and
+//! FLOPs-targeted pruning (used to hit the paper's "~2× RF" setups).
+
+use super::grouping::Groups;
+use super::importance::GroupScore;
+use crate::analysis;
+use crate::ir::{DataId, Graph, OpKind};
+use std::collections::{HashMap, HashSet};
+
+/// Result of a pruning application.
+#[derive(Debug, Clone)]
+pub struct PruneOutcome {
+    /// Channels deleted per parameter (data id → per-dim index lists).
+    pub deleted: HashMap<DataId, HashMap<usize, Vec<usize>>>,
+    /// Number of coupled channel sets removed.
+    pub ccs_removed: usize,
+}
+
+/// Select the `frac` lowest-scoring CCs globally, but never remove all
+/// CCs of one group — at least `min_keep` survive per group.
+pub fn select_lowest(
+    groups: &Groups,
+    scores: &[GroupScore],
+    frac: f64,
+    min_keep: usize,
+) -> Vec<(usize, usize)> {
+    let mut ranked: Vec<&GroupScore> = scores.iter().collect();
+    ranked.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
+    let target = ((scores.len() as f64) * frac).round() as usize;
+    let mut kept_per_group: HashMap<usize, usize> = HashMap::new();
+    for gr in &groups.groups {
+        kept_per_group.insert(gr.id, gr.ccs.len());
+    }
+    let mut selected = Vec::new();
+    for s in ranked {
+        if selected.len() >= target {
+            break;
+        }
+        let kept = kept_per_group.get_mut(&s.group).unwrap();
+        if *kept <= min_keep {
+            continue;
+        }
+        *kept -= 1;
+        selected.push((s.group, s.cc));
+    }
+    selected
+}
+
+/// Iteratively grow the selection until the pruned model's FLOPs drop by
+/// `target_rf` (e.g. 2.0 for the paper's ~2× settings). Uses a bisection
+/// over the global fraction; returns the selected CCs.
+pub fn select_by_flops_target(
+    g: &Graph,
+    groups: &Groups,
+    scores: &[GroupScore],
+    target_rf: f64,
+    min_keep: usize,
+) -> anyhow::Result<Vec<(usize, usize)>> {
+    let base = analysis::flops(g) as f64;
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    let mut best = Vec::new();
+    for _ in 0..12 {
+        let mid = 0.5 * (lo + hi);
+        let sel = select_lowest(groups, scores, mid, min_keep);
+        let mut trial = g.clone();
+        apply_pruning(&mut trial, groups, &sel)?;
+        let rf = base / analysis::flops(&trial).max(1) as f64;
+        if rf < target_rf {
+            lo = mid;
+        } else {
+            hi = mid;
+            best = sel;
+        }
+    }
+    if best.is_empty() {
+        best = select_lowest(groups, scores, hi, min_keep);
+    }
+    Ok(best)
+}
+
+/// Apply the selected CC deletions to the graph in place.
+pub fn apply_pruning(
+    g: &mut Graph,
+    groups: &Groups,
+    selected: &[(usize, usize)],
+) -> anyhow::Result<PruneOutcome> {
+    // Gather per-(data, dim) deletion sets.
+    let mut by_loc: HashMap<(DataId, usize), HashSet<usize>> = HashMap::new();
+    let mut ccs_removed = 0usize;
+    for &(gid, cc) in selected {
+        let group = &groups.groups[gid];
+        anyhow::ensure!(group.prunable, "group {gid} is not prunable");
+        let cc = &group.ccs[cc];
+        ccs_removed += 1;
+        for loc in &cc.locs {
+            by_loc.entry((loc.data, loc.dim)).or_default().insert(loc.idx);
+        }
+    }
+    // Sanity: never delete an entire dimension.
+    for ((data, dim), idxs) in &by_loc {
+        let n = g.data(*data).shape[*dim];
+        anyhow::ensure!(
+            idxs.len() < n,
+            "refusing to delete all {n} channels of `{}` dim {dim}",
+            g.data(*data).name
+        );
+    }
+    // Delete slices from parameter tensors.
+    let mut deleted: HashMap<DataId, HashMap<usize, Vec<usize>>> = HashMap::new();
+    // Per-data: apply higher dims first so indices stay valid (dims are
+    // independent, but record sorted lists).
+    let mut by_data: HashMap<DataId, Vec<(usize, Vec<usize>)>> = HashMap::new();
+    for ((data, dim), idxs) in by_loc {
+        let mut v: Vec<usize> = idxs.into_iter().collect();
+        v.sort();
+        by_data.entry(data).or_default().push((dim, v));
+    }
+    for (data, mut dims) in by_data {
+        dims.sort_by_key(|(d, _)| *d);
+        let dn = &mut g.datas[data];
+        let t = dn
+            .param_mut()
+            .ok_or_else(|| anyhow::anyhow!("pruning a non-param data node"))?;
+        for (dim, idxs) in &dims {
+            *t = t.delete_indices(*dim, idxs);
+        }
+        dn.shape = dn.param().unwrap().shape.clone();
+        let entry = deleted.entry(data).or_default();
+        for (dim, idxs) in dims {
+            entry.insert(dim, idxs);
+        }
+    }
+    // Fix conv attributes: depthwise-style convs (weight in-dim 1) must
+    // track the new input channel count in `groups`.
+    refresh_depthwise_groups(g)?;
+    g.refresh_shapes()?;
+    g.validate()?;
+    Ok(PruneOutcome {
+        deleted,
+        ccs_removed,
+    })
+}
+
+/// Recompute `groups` for convs whose weight in-dim is 1 (depthwise /
+/// depthwise-multiplier convs): groups must equal the current input
+/// channel count.
+fn refresh_depthwise_groups(g: &mut Graph) -> anyhow::Result<()> {
+    // Input channel counts come from shape inference with current params;
+    // iterate ops in topo order, tracking shapes manually.
+    let order = g.topo_order()?;
+    let mut shapes: HashMap<DataId, Vec<usize>> = HashMap::new();
+    for d in &g.datas {
+        if d.producer.is_none() {
+            shapes.insert(d.id, d.shape.clone());
+        }
+    }
+    for op_id in order {
+        // compute input shapes
+        let ins: Vec<Vec<usize>> = g.ops[op_id]
+            .inputs
+            .iter()
+            .map(|&i| shapes.get(&i).cloned().unwrap_or_default())
+            .collect();
+        if let OpKind::Conv2d { groups: grp, .. } = &mut g.ops[op_id].kind {
+            let w = &ins[1];
+            if w.len() == 4 && w[1] == 1 && *grp > 1 {
+                let ci = ins[0][1];
+                *grp = ci;
+            }
+        }
+        let op = &g.ops[op_id];
+        let outs = crate::ir::shape::infer_op_output_shapes(&op.kind, &ins)
+            .map_err(|e| anyhow::anyhow!("post-prune shape check at `{}`: {e}", op.name))?;
+        for (&o, s) in op.outputs.iter().zip(outs) {
+            shapes.insert(o, s);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine;
+    use crate::ir::GraphBuilder;
+    use crate::prune::{build_groups, score_groups, Agg, Norm};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+    use std::collections::HashMap as Map;
+
+    fn l1_scores(g: &Graph) -> Map<DataId, Tensor> {
+        g.param_ids()
+            .into_iter()
+            .map(|id| (id, g.data(id).param().unwrap().map(f32::abs)))
+            .collect()
+    }
+
+    fn resnet_like(seed: u64) -> Graph {
+        let mut b = GraphBuilder::new("resnetish", seed);
+        let x = b.input("x", vec![1, 3, 8, 8]);
+        let c0 = b.conv2d("c0", x, 8, 3, 1, 1, 1, false);
+        let n0 = b.batchnorm("bn0", c0);
+        let r0 = b.relu("r0", n0);
+        let c1 = b.conv2d("c1", r0, 8, 3, 1, 1, 1, false);
+        let n1 = b.batchnorm("bn1", c1);
+        let r1 = b.relu("r1", n1);
+        let c2 = b.conv2d("c2", r1, 8, 3, 1, 1, 1, false);
+        let n2 = b.batchnorm("bn2", c2);
+        let s = b.add("add", n2, r0);
+        let r2 = b.relu("r2", s);
+        let gp = b.global_avgpool("gap", r2);
+        let fc = b.gemm("fc", gp, 4, true);
+        b.output(fc);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn prune_residual_network_stays_valid_and_runs() {
+        let mut g = resnet_like(1);
+        let before = analysis::flops(&g);
+        let groups = build_groups(&g).unwrap();
+        let scores = score_groups(&g, &groups, &l1_scores(&g), Agg::Sum, Norm::Mean);
+        let sel = select_lowest(&groups, &scores, 0.5, 1);
+        assert!(!sel.is_empty());
+        apply_pruning(&mut g, &groups, &sel).unwrap();
+        g.validate().unwrap();
+        assert!(analysis::flops(&g) < before);
+        // executes end-to-end
+        let mut rng = Rng::new(2);
+        let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 3 * 64, -1.0, 1.0));
+        let y = engine::predict(&g, x).unwrap();
+        assert_eq!(y.shape, vec![2, 4]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pruned_outputs_match_manual_channel_removal() {
+        // prune CC {channel k of c1} and verify logits equal the original
+        // model with that channel's weights zeroed (structural deletion is
+        // exact for inner channels feeding only conv+bn+relu)
+        let mut g = resnet_like(3);
+        // make BN an identity so zeroing a conv channel is exactly
+        // equivalent to deleting it (running stats already mean 0 var 1)
+        let groups = build_groups(&g).unwrap();
+        // group seeded by c1 (inner channels)
+        let gid = groups
+            .groups
+            .iter()
+            .find(|gr| g.op(gr.source_op).name == "c1")
+            .unwrap()
+            .id;
+        let cc = 5usize;
+        // zero reference: zero out c1.w[5], bn1 gamma/beta[5], and c2.w[:,5]
+        let mut zeroed = g.clone();
+        for loc in &groups.groups[gid].ccs[cc].locs {
+            let t = zeroed.datas[loc.data].param_mut().unwrap();
+            let d = t.shape[loc.dim];
+            let outer: usize = t.shape[..loc.dim].iter().product();
+            let inner: usize = t.shape[loc.dim + 1..].iter().product();
+            for o in 0..outer {
+                let base = (o * d + loc.idx) * inner;
+                for v in &mut t.data[base..base + inner] {
+                    *v = 0.0;
+                }
+            }
+        }
+        let mut pruned = g.clone();
+        apply_pruning(&mut pruned, &groups, &[(gid, cc)]).unwrap();
+        let mut rng = Rng::new(4);
+        let x = Tensor::new(vec![1, 3, 8, 8], rng.uniform_vec(3 * 64, -1.0, 1.0));
+        let y_zero = engine::predict(&zeroed, x.clone()).unwrap();
+        let y_pruned = engine::predict(&pruned, x).unwrap();
+        // NOTE: zeroing a BN'd channel is not perfectly identical to
+        // deletion (beta shift remains), so compare with loose tolerance
+        // after also zeroing beta — our CC includes beta, so exact:
+        crate::tensor::assert_allclose(&y_pruned, &y_zero, 1e-4, 1e-3);
+    }
+
+    #[test]
+    fn depthwise_groups_updated() {
+        let mut b = GraphBuilder::new("dw", 5);
+        let x = b.input("x", vec![1, 3, 8, 8]);
+        let c0 = b.conv2d("c0", x, 8, 1, 1, 0, 1, false);
+        let dw = b.conv2d("dw", c0, 8, 3, 1, 1, 8, false);
+        let c2 = b.conv2d("c2", dw, 6, 1, 1, 0, 1, false);
+        let gp = b.global_avgpool("gap", c2);
+        let fc = b.gemm("fc", gp, 3, false);
+        b.output(fc);
+        let mut g = b.finish().unwrap();
+        let groups = build_groups(&g).unwrap();
+        let scores = score_groups(&g, &groups, &l1_scores(&g), Agg::Sum, Norm::Mean);
+        let sel = select_lowest(&groups, &scores, 0.4, 1);
+        apply_pruning(&mut g, &groups, &sel).unwrap();
+        let dw_op = g.op_by_name("dw").unwrap();
+        if let OpKind::Conv2d { groups: grp, .. } = dw_op.kind {
+            let ci = g.data(g.op_by_name("c0").unwrap().inputs[1]).shape[0];
+            assert_eq!(grp, ci, "depthwise groups must track channel count");
+        }
+        let mut rng = Rng::new(6);
+        let x = Tensor::new(vec![1, 3, 64], rng.uniform_vec(3 * 64, -1.0, 1.0))
+            .reshaped(vec![1, 3, 8, 8]);
+        assert!(engine::predict(&g, x).is_ok());
+    }
+
+    #[test]
+    fn flops_target_selection_hits_ratio() {
+        let g = resnet_like(7);
+        let groups = build_groups(&g).unwrap();
+        let scores = score_groups(&g, &groups, &l1_scores(&g), Agg::Sum, Norm::Mean);
+        let sel = select_by_flops_target(&g, &groups, &scores, 1.7, 1).unwrap();
+        let mut pruned = g.clone();
+        apply_pruning(&mut pruned, &groups, &sel).unwrap();
+        let r = analysis::reduction(&g, &pruned);
+        assert!(r.rf >= 1.7, "rf {} below target", r.rf);
+        assert!(r.rf < 3.5, "rf {} wildly above target", r.rf);
+    }
+
+    #[test]
+    fn refuses_to_delete_whole_group() {
+        let mut g = resnet_like(8);
+        let groups = build_groups(&g).unwrap();
+        let gid = groups.groups[0].id;
+        let all: Vec<(usize, usize)> =
+            (0..groups.groups[0].ccs.len()).map(|c| (gid, c)).collect();
+        assert!(apply_pruning(&mut g, &groups, &all).is_err());
+    }
+
+    #[test]
+    fn min_keep_respected() {
+        let g = resnet_like(9);
+        let groups = build_groups(&g).unwrap();
+        let scores = score_groups(&g, &groups, &l1_scores(&g), Agg::Sum, Norm::Mean);
+        let sel = select_lowest(&groups, &scores, 1.0, 2);
+        // per group at most ccs-2 selected
+        let mut count: HashMap<usize, usize> = HashMap::new();
+        for (g_, _) in &sel {
+            *count.entry(*g_).or_default() += 1;
+        }
+        for gr in &groups.groups {
+            if let Some(&c) = count.get(&gr.id) {
+                assert!(c + 2 <= gr.ccs.len());
+            }
+        }
+    }
+}

@@ -1,0 +1,852 @@
+//! Mask propagation rules per operator — the paper's Alg. 1 + App. A.3.
+//!
+//! A [`Mask`] marks a channel set along one dimension of one data node.
+//! For each operator we define how a mask on any connected data node
+//! induces masks on the operator's other data nodes (the paper's Tab. 5
+//! documents exactly this for GeMM). Rules are *locally* primitive; the
+//! worklist in [`propagate`] iterates them to a fixed point, which
+//! automatically computes non-trivial closures:
+//!
+//! * grouped conv — an input-channel mask maps to a weight in-position,
+//!   which maps back to the same position in *every* group;
+//! * flatten — a feature mask maps back to its source channel, which maps
+//!   forward to the channel's whole `H·W` feature block;
+//! * attention heads — a hidden-channel mask maps to a per-head
+//!   sub-position, which maps back to that sub-position in every head
+//!   (heads stay intact, head dim shrinks uniformly — the adaptation
+//!   DepGraph/OTO-v2 need manual treatment for, §2).
+
+use super::Loc;
+use crate::ir::{DataId, Graph, OpId, OpKind, OpNode};
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// A channel mask: `set[i]` marks channel `i` along `dim` of data node
+/// `data`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mask {
+    pub data: DataId,
+    pub dim: usize,
+    pub set: Vec<bool>,
+}
+
+impl Mask {
+    pub fn single(g: &Graph, data: DataId, dim: usize, idx: usize) -> Mask {
+        let n = g.data(data).shape[dim];
+        let mut set = vec![false; n];
+        set[idx] = true;
+        Mask { data, dim, set }
+    }
+
+    pub fn indices(&self) -> Vec<usize> {
+        self.set
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn count(&self) -> usize {
+        self.set.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Partial mask emitted by a rule before merging.
+type Emit = (DataId, usize, Vec<usize>);
+
+fn idxs(set: &[bool]) -> Vec<usize> {
+    set.iter()
+        .enumerate()
+        .filter(|(_, &b)| b)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Identity coupling of `dim` between two data nodes.
+fn ident(to: DataId, dim: usize, set: &[bool]) -> Emit {
+    (to, dim, idxs(set))
+}
+
+/// Apply the propagation rule of operator `op` to a mask sitting on
+/// `(from_data, from_dim)`. Returns induced masks on the op's other data
+/// nodes (and possibly closure masks on the source node itself).
+pub fn op_rule(
+    g: &Graph,
+    op: &OpNode,
+    from_data: DataId,
+    from_dim: usize,
+    set: &[bool],
+) -> Vec<Emit> {
+    let i = op.inputs.iter().position(|&d| d == from_data);
+    let o = op.outputs.iter().position(|&d| d == from_data);
+    let x = op.inputs.first().copied();
+    let y = op.outputs[0];
+    let mut out: Vec<Emit> = Vec::new();
+    match &op.kind {
+        OpKind::Conv2d { groups, .. } => {
+            let w = op.inputs[1];
+            let b = op.inputs.get(2).copied();
+            let w_shape = &g.data(w).shape;
+            let (co, cig) = (w_shape[0], w_shape[1]);
+            let gcount = *groups;
+            let cog = co / gcount;
+            let ci = cig * gcount;
+            match (i, o, from_dim) {
+                // output-channel mask: couple w out-dim (+ bias)
+                (None, Some(_), 1) => {
+                    out.push(ident(w, 0, set));
+                    if let Some(b) = b {
+                        out.push(ident(b, 0, set));
+                    }
+                    if cig == 1 {
+                        // depthwise(-multiplier): out block [q·cog,(q+1)·cog)
+                        // couples to input channel q
+                        let mut xs = vec![false; ci];
+                        for j in idxs(set) {
+                            xs[j / cog] = true;
+                        }
+                        out.push((x.unwrap(), 1, idxs(&xs)));
+                    } else if gcount > 1 {
+                        // grouped: same within-group position in every group
+                        let mut ys = vec![false; co];
+                        for j in idxs(set) {
+                            let r = j % cog;
+                            for k in 0..gcount {
+                                ys[r + k * cog] = true;
+                            }
+                        }
+                        out.push((y, 1, idxs(&ys)));
+                    }
+                }
+                // weight out-dim mask: mirror onto y dim1 (+ bias)
+                (Some(1), None, 0) => {
+                    out.push(ident(y, 1, set));
+                    if let Some(b) = b {
+                        out.push(ident(b, 0, set));
+                    }
+                }
+                // weight in-dim mask: every group's matching input channel.
+                // For depthwise (cig==1) the in-dim is never deleted — the
+                // coupling runs through w dim0 instead.
+                (Some(1), None, 1) if cig > 1 => {
+                    let mut xs = vec![false; ci];
+                    for r in idxs(set) {
+                        for k in 0..gcount {
+                            xs[r + k * cig] = true;
+                        }
+                    }
+                    out.push((x.unwrap(), 1, idxs(&xs)));
+                }
+                // bias mask
+                (Some(2), None, 0) => {
+                    out.push(ident(y, 1, set));
+                    out.push(ident(w, 0, set));
+                }
+                // input-channel mask: weight in-position (+ depthwise out)
+                (Some(0), None, 1) => {
+                    if cig > 1 {
+                        let mut ws = vec![false; cig];
+                        for c in idxs(set) {
+                            ws[c % cig] = true;
+                        }
+                        out.push((w, 1, idxs(&ws)));
+                    }
+                    if cig == 1 {
+                        let mut ys = vec![false; co];
+                        for c in idxs(set) {
+                            for j in c * cog..(c + 1) * cog {
+                                ys[j] = true;
+                            }
+                        }
+                        out.push((y, 1, idxs(&ys)));
+                        out.push((w, 0, idxs(&ys)));
+                    }
+                }
+                // batch dim passthrough
+                (Some(0), None, 0) => out.push(ident(y, 0, set)),
+                (None, Some(_), 0) => out.push(ident(x.unwrap(), 0, set)),
+                _ => {}
+            }
+        }
+        OpKind::Gemm => {
+            let w = op.inputs[1];
+            let b = op.inputs.get(2).copied();
+            let x_id = x.unwrap();
+            let x_rank = g.data(x_id).shape.len();
+            let y_rank = g.data(y).shape.len();
+            match (i, o, from_dim) {
+                (Some(0), None, d) if d == x_rank - 1 => out.push((w, 1, idxs(set))),
+                (Some(0), None, d) => out.push(ident(y, d, set)), // batch/time dims
+                (Some(1), None, 0) => {
+                    out.push((y, y_rank - 1, idxs(set)));
+                    if let Some(b) = b {
+                        out.push(ident(b, 0, set));
+                    }
+                }
+                (Some(1), None, 1) => out.push((x_id, x_rank - 1, idxs(set))),
+                (Some(2), None, 0) => {
+                    out.push((y, y_rank - 1, idxs(set)));
+                    out.push((w, 0, idxs(set)));
+                }
+                (None, Some(_), d) if d == y_rank - 1 => {
+                    out.push((w, 0, idxs(set)));
+                    if let Some(b) = b {
+                        out.push(ident(b, 0, set));
+                    }
+                }
+                (None, Some(_), d) => out.push(ident(x_id, d, set)),
+                _ => {}
+            }
+        }
+        OpKind::BatchNorm { .. } => {
+            // x dim1 ⇔ y dim1 ⇔ all four params dim0; other dims x⇔y
+            let x_id = x.unwrap();
+            let params = &op.inputs[1..];
+            let from_bn_param = matches!(i, Some(s) if s >= 1);
+            match (i, o, from_dim) {
+                (Some(0), None, 1) | (None, Some(_), 1) | (Some(_), None, 0)
+                    if from_bn_param || from_dim == 1 =>
+                {
+                    let from_param = from_bn_param;
+                    if from_param || i == Some(0) {
+                        out.push(ident(y, 1, set));
+                    }
+                    if from_param || o.is_some() {
+                        out.push(ident(x_id, 1, set));
+                    }
+                    for &p in params {
+                        if p != from_data {
+                            out.push(ident(p, 0, set));
+                        }
+                    }
+                }
+                (Some(0), None, d) => out.push(ident(y, d, set)),
+                (None, Some(_), d) => out.push(ident(x_id, d, set)),
+                _ => {}
+            }
+        }
+        OpKind::LayerNorm { .. } => {
+            let x_id = x.unwrap();
+            let last = g.data(x_id).shape.len() - 1;
+            let params = &op.inputs[1..];
+            match (i, o, from_dim) {
+                (Some(0), None, d) if d == last => {
+                    out.push(ident(y, d, set));
+                    for &p in params {
+                        out.push(ident(p, 0, set));
+                    }
+                }
+                (None, Some(_), d) if d == last => {
+                    out.push(ident(x_id, d, set));
+                    for &p in params {
+                        out.push(ident(p, 0, set));
+                    }
+                }
+                (Some(_), None, 0) if from_data != x_id => {
+                    out.push(ident(x_id, last, set));
+                    out.push(ident(y, last, set));
+                    for &p in params {
+                        if p != from_data {
+                            out.push(ident(p, 0, set));
+                        }
+                    }
+                }
+                (Some(0), None, d) => out.push(ident(y, d, set)),
+                (None, Some(_), d) => out.push(ident(x_id, d, set)),
+                _ => {}
+            }
+        }
+        // shape-preserving unary ops: every dim couples x⇔y
+        OpKind::Relu
+        | OpKind::Gelu
+        | OpKind::Silu
+        | OpKind::Sigmoid
+        | OpKind::Tanh
+        | OpKind::Softmax
+        | OpKind::Scale { .. }
+        | OpKind::Identity => {
+            let x_id = x.unwrap();
+            if i == Some(0) {
+                out.push(ident(y, from_dim, set));
+            } else if o.is_some() {
+                out.push(ident(x_id, from_dim, set));
+            }
+        }
+        OpKind::Add | OpKind::Mul => {
+            // identity coupling across a, b, y with broadcast dim mapping
+            let a = op.inputs[0];
+            let bb = op.inputs[1];
+            let a_shape = g.data(a).shape.clone();
+            let b_shape = g.data(bb).shape.clone();
+            let same = a_shape == b_shape;
+            // [N,C] gate against [N,C,H,W] (SE): couple dims 0,1 directly
+            if !same && a_shape.len() == 4 && b_shape.len() == 2 {
+                match (i, o) {
+                    (Some(0), None) => {
+                        out.push(ident(y, from_dim, set));
+                        if from_dim <= 1 {
+                            out.push(ident(bb, from_dim, set));
+                        }
+                    }
+                    (Some(1), None) => {
+                        out.push(ident(a, from_dim, set));
+                        out.push(ident(y, from_dim, set));
+                    }
+                    (None, Some(_)) => {
+                        out.push(ident(a, from_dim, set));
+                        if from_dim <= 1 {
+                            out.push(ident(bb, from_dim, set));
+                        }
+                    }
+                    _ => {}
+                }
+                return out;
+            }
+            // channel dim of the full-shape operand for 1-D broadcast
+            let bcast_dim = match a_shape.len() {
+                2 => 1,
+                3 => 2,
+                4 => 1,
+                _ => usize::MAX,
+            };
+            match (i, o) {
+                (Some(0), None) => {
+                    out.push(ident(y, from_dim, set));
+                    if same {
+                        out.push(ident(bb, from_dim, set));
+                    } else if b_shape.len() == 1 && from_dim == bcast_dim {
+                        out.push(ident(bb, 0, set));
+                    } else if b_shape.len() == a_shape.len() {
+                        // [N,C,1,1] or [1,T,D]-style: couple dims of size>1
+                        if b_shape[from_dim] == a_shape[from_dim] {
+                            out.push(ident(bb, from_dim, set));
+                        }
+                    }
+                }
+                (Some(1), None) => {
+                    if same {
+                        out.push(ident(a, from_dim, set));
+                        out.push(ident(y, from_dim, set));
+                    } else if b_shape.len() == 1 {
+                        out.push(ident(a, bcast_dim, set));
+                        out.push(ident(y, bcast_dim, set));
+                    } else if b_shape[from_dim] == a_shape[from_dim] {
+                        out.push(ident(a, from_dim, set));
+                        out.push(ident(y, from_dim, set));
+                    }
+                }
+                (None, Some(_)) => {
+                    out.push(ident(a, from_dim, set));
+                    if same {
+                        out.push(ident(bb, from_dim, set));
+                    } else if b_shape.len() == 1 && from_dim == bcast_dim {
+                        out.push(ident(bb, 0, set));
+                    } else if b_shape.len() == a_shape.len()
+                        && b_shape[from_dim] == a_shape[from_dim]
+                    {
+                        out.push(ident(bb, from_dim, set));
+                    }
+                }
+                _ => {}
+            }
+        }
+        OpKind::MaxPool2d { .. } | OpKind::AvgPool2d { .. } => {
+            // spatial dims change; batch + channel couple
+            let x_id = x.unwrap();
+            if from_dim <= 1 {
+                if i == Some(0) {
+                    out.push(ident(y, from_dim, set));
+                } else {
+                    out.push(ident(x_id, from_dim, set));
+                }
+            }
+        }
+        OpKind::GlobalAvgPool => {
+            let x_id = x.unwrap();
+            if from_dim <= 1 {
+                if i == Some(0) {
+                    out.push(ident(y, from_dim, set));
+                } else {
+                    out.push(ident(x_id, from_dim, set));
+                }
+            }
+        }
+        OpKind::Flatten => {
+            let x_id = x.unwrap();
+            let x_shape = g.data(x_id).shape.clone();
+            let block: usize = x_shape[2..].iter().product::<usize>().max(1);
+            match (i, o, from_dim) {
+                (Some(0), None, 0) | (None, Some(_), 0) => {
+                    let other = if i.is_some() { y } else { x_id };
+                    out.push(ident(other, 0, set));
+                }
+                (Some(0), None, 1) => {
+                    // channel c → feature block
+                    let feat = g.data(y).shape[1];
+                    let mut ys = vec![false; feat];
+                    for c in idxs(set) {
+                        for f in c * block..(c + 1) * block {
+                            ys[f] = true;
+                        }
+                    }
+                    out.push((y, 1, idxs(&ys)));
+                }
+                (None, Some(_), 1) => {
+                    // feature f → source channel (worklist closes the block)
+                    let mut xs = vec![false; x_shape[1]];
+                    for f in idxs(set) {
+                        xs[f / block] = true;
+                    }
+                    out.push((x_id, 1, idxs(&xs)));
+                }
+                _ => {}
+            }
+        }
+        OpKind::Concat { axis } => {
+            let offsets: Vec<usize> = {
+                let mut acc = 0;
+                op.inputs
+                    .iter()
+                    .map(|&d| {
+                        let o = acc;
+                        acc += g.data(d).shape[*axis];
+                        o
+                    })
+                    .collect()
+            };
+            match (i, o) {
+                (Some(slot), None) => {
+                    if from_dim == *axis {
+                        let ylen = g.data(y).shape[*axis];
+                        let mut ys = vec![false; ylen];
+                        for k in idxs(set) {
+                            ys[offsets[slot] + k] = true;
+                        }
+                        out.push((y, *axis, idxs(&ys)));
+                    } else {
+                        out.push(ident(y, from_dim, set));
+                        for (s, &other) in op.inputs.iter().enumerate() {
+                            if s != slot {
+                                out.push(ident(other, from_dim, set));
+                            }
+                        }
+                    }
+                }
+                (None, Some(_)) => {
+                    if from_dim == *axis {
+                        for (slot, &inp) in op.inputs.iter().enumerate() {
+                            let d = g.data(inp).shape[*axis];
+                            let mut s = vec![false; d];
+                            let mut any = false;
+                            for j in idxs(set) {
+                                if j >= offsets[slot] && j < offsets[slot] + d {
+                                    s[j - offsets[slot]] = true;
+                                    any = true;
+                                }
+                            }
+                            if any {
+                                out.push((inp, *axis, idxs(&s)));
+                            }
+                        }
+                    } else {
+                        for &inp in &op.inputs {
+                            out.push(ident(inp, from_dim, set));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        OpKind::MatMul => {
+            // a[...,M,K] · b[...,K,N] = y[...,M,N]
+            let a = op.inputs[0];
+            let bb = op.inputs[1];
+            let rank = g.data(a).shape.len();
+            let (mdim, kdim_a) = (rank - 2, rank - 1);
+            let (kdim_b, ndim) = (rank - 2, rank - 1);
+            match (i, o, from_dim) {
+                (Some(0), None, d) if d == kdim_a => out.push((bb, kdim_b, idxs(set))),
+                (Some(0), None, d) if d == mdim => out.push((y, mdim, idxs(set))),
+                (Some(0), None, d) => {
+                    out.push(ident(bb, d, set));
+                    out.push(ident(y, d, set));
+                }
+                (Some(1), None, d) if d == kdim_b => out.push((a, kdim_a, idxs(set))),
+                (Some(1), None, d) if d == ndim => out.push((y, ndim, idxs(set))),
+                (Some(1), None, d) => {
+                    out.push(ident(a, d, set));
+                    out.push(ident(y, d, set));
+                }
+                (None, Some(_), d) if d == mdim => out.push((a, mdim, idxs(set))),
+                (None, Some(_), d) if d == ndim => out.push((bb, ndim, idxs(set))),
+                (None, Some(_), d) => {
+                    out.push(ident(a, d, set));
+                    out.push(ident(bb, d, set));
+                }
+                _ => {}
+            }
+        }
+        OpKind::Transpose { perm } => {
+            let x_id = x.unwrap();
+            match (i, o) {
+                (Some(0), None) => {
+                    // y dim j has x dim perm[j]; find j with perm[j]==from_dim
+                    let j = perm.iter().position(|&p| p == from_dim).unwrap();
+                    out.push(ident(y, j, set));
+                }
+                (None, Some(_)) => out.push(ident(x_id, perm[from_dim], set)),
+                _ => {}
+            }
+        }
+        OpKind::SplitHeads { heads } => {
+            // x [N,T,D] → y [N,h,T,d]; hidden channel c ↔ (head c/d, sub c%d)
+            let x_id = x.unwrap();
+            let d_sub = g.data(x_id).shape[2] / heads;
+            match (i, o, from_dim) {
+                (Some(0), None, 2) => {
+                    // channel → sub-position (closure re-expands across heads)
+                    let mut ys = vec![false; d_sub];
+                    for c in idxs(set) {
+                        ys[c % d_sub] = true;
+                    }
+                    out.push((y, 3, idxs(&ys)));
+                }
+                (None, Some(_), 3) => {
+                    let dd = g.data(x_id).shape[2];
+                    let mut xs = vec![false; dd];
+                    for s in idxs(set) {
+                        for k in 0..*heads {
+                            xs[s + k * d_sub] = true;
+                        }
+                    }
+                    out.push((x_id, 2, idxs(&xs)));
+                }
+                (Some(0), None, 0) => out.push(ident(y, 0, set)),
+                (Some(0), None, 1) => out.push(ident(y, 2, set)),
+                (None, Some(_), 0) => out.push(ident(x_id, 0, set)),
+                (None, Some(_), 2) => out.push(ident(x_id, 1, set)),
+                _ => {}
+            }
+        }
+        OpKind::MergeHeads => {
+            // x [N,h,T,d] → y [N,T,D]
+            let x_id = x.unwrap();
+            let (h, d_sub) = (g.data(x_id).shape[1], g.data(x_id).shape[3]);
+            match (i, o, from_dim) {
+                (Some(0), None, 3) => {
+                    let mut ys = vec![false; h * d_sub];
+                    for s in idxs(set) {
+                        for k in 0..h {
+                            ys[s + k * d_sub] = true;
+                        }
+                    }
+                    out.push((y, 2, idxs(&ys)));
+                }
+                (None, Some(_), 2) => {
+                    let mut xs = vec![false; d_sub];
+                    for c in idxs(set) {
+                        xs[c % d_sub] = true;
+                    }
+                    out.push((x_id, 3, idxs(&xs)));
+                }
+                (Some(0), None, 0) => out.push(ident(y, 0, set)),
+                (Some(0), None, 2) => out.push(ident(y, 1, set)),
+                (None, Some(_), 0) => out.push(ident(x_id, 0, set)),
+                (None, Some(_), 1) => out.push(ident(x_id, 2, set)),
+                _ => {}
+            }
+        }
+        OpKind::Embedding => {
+            let table = op.inputs[1];
+            let y_rank = g.data(y).shape.len();
+            match (i, o, from_dim) {
+                (Some(1), None, 1) => out.push((y, y_rank - 1, idxs(set))),
+                (None, Some(_), d) if d == y_rank - 1 => out.push((table, 1, idxs(set))),
+                _ => {}
+            }
+        }
+        OpKind::NchwToTokens => {
+            // x [N,C,H,W] → y [N,HW,C]: C ↔ last dim, N ↔ N
+            let x_id = x.unwrap();
+            match (i, o, from_dim) {
+                (Some(0), None, 1) => out.push(ident(y, 2, set)),
+                (None, Some(_), 2) => out.push(ident(x_id, 1, set)),
+                (Some(0), None, 0) => out.push(ident(y, 0, set)),
+                (None, Some(_), 0) => out.push(ident(x_id, 0, set)),
+                _ => {}
+            }
+        }
+        OpKind::ReduceMean { axis } => {
+            let x_id = x.unwrap();
+            match (i, o) {
+                (Some(0), None) => {
+                    if from_dim != *axis {
+                        let yd = if from_dim > *axis { from_dim - 1 } else { from_dim };
+                        out.push(ident(y, yd, set));
+                    }
+                }
+                (None, Some(_)) => {
+                    let xd = if from_dim >= *axis { from_dim + 1 } else { from_dim };
+                    out.push(ident(x_id, xd, set));
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// The paper's Alg. 1: worklist closure of mask propagation starting from
+/// a source mask. Returns the final mask per (data, dim) location.
+pub fn propagate(g: &Graph, source: Mask) -> HashMap<(DataId, usize), Mask> {
+    let mut masks: HashMap<(DataId, usize), Mask> = HashMap::new();
+    let mut queue: VecDeque<(DataId, usize)> = VecDeque::new();
+    masks.insert((source.data, source.dim), source.clone());
+    queue.push_back((source.data, source.dim));
+    // Track which (op, data, dim, revision) have been applied to avoid
+    // re-running rules whose input has not grown.
+    let mut applied: HashSet<(OpId, DataId, usize, usize)> = HashSet::new();
+    while let Some((data, dim)) = queue.pop_front() {
+        let cur = masks[&(data, dim)].clone();
+        let rev = cur.count();
+        for op_id in g.neighbor_ops(data) {
+            if !applied.insert((op_id, data, dim, rev)) {
+                continue;
+            }
+            let op = g.op(op_id);
+            for (to, to_dim, add) in op_rule(g, op, data, dim, &cur.set) {
+                if add.is_empty() {
+                    continue;
+                }
+                let n = g.data(to).shape[to_dim];
+                let entry = masks.entry((to, to_dim)).or_insert_with(|| Mask {
+                    data: to,
+                    dim: to_dim,
+                    set: vec![false; n],
+                });
+                let mut grew = false;
+                for idx in add {
+                    debug_assert!(idx < entry.set.len());
+                    if !entry.set[idx] {
+                        entry.set[idx] = true;
+                        grew = true;
+                    }
+                }
+                if grew {
+                    queue.push_back((to, to_dim));
+                }
+            }
+        }
+    }
+    masks
+}
+
+/// All param channel locations covered by a propagation result.
+pub fn param_locs(g: &Graph, masks: &HashMap<(DataId, usize), Mask>) -> Vec<Loc> {
+    let mut out = Vec::new();
+    for ((data, dim), m) in masks {
+        if g.data(*data).is_param() {
+            for idx in m.indices() {
+                out.push(Loc {
+                    data: *data,
+                    dim: *dim,
+                    idx,
+                });
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn gemm_chain_matches_paper_fig6() {
+        // Two connected GeMMs; masking W1's first output channel must mask
+        // the first input channel of W2 and nothing in X1/X3 (App. A.3).
+        let mut b = GraphBuilder::new("gemm2", 1);
+        let x1 = b.input("x1", vec![3, 4]);
+        let h = b.gemm("g1", x1, 4, false);
+        let out = b.gemm("g2", h, 5, false);
+        b.output(out);
+        let g = b.finish().unwrap();
+        let w1 = g.data_by_name("g1.w").unwrap().id;
+        let w2 = g.data_by_name("g2.w").unwrap().id;
+        let masks = propagate(&g, Mask::single(&g, w1, 0, 0));
+        assert_eq!(masks[&(w1, 0)].indices(), vec![0]);
+        assert_eq!(masks[&(w2, 1)].indices(), vec![0]);
+        // X2 (g1 output) channel 0 masked
+        let x2 = g.op_by_name("g1").unwrap().outputs[0];
+        assert_eq!(masks[&(x2, 1)].indices(), vec![0]);
+        // X1 and final output unaffected
+        assert!(!masks.contains_key(&(x1, 1)));
+        let x3 = g.op_by_name("g2").unwrap().outputs[0];
+        assert!(!masks.contains_key(&(x3, 1)));
+    }
+
+    #[test]
+    fn residual_couples_both_convs() {
+        // conv1 and conv2 feed an Add: pruning conv1's out channel c must
+        // also prune conv2's out channel c (Fig. 5 of the paper).
+        let mut b = GraphBuilder::new("res", 2);
+        let x = b.input("x", vec![1, 4, 6, 6]);
+        let c1 = b.conv2d("c1", x, 8, 3, 1, 1, 1, false);
+        let n1 = b.batchnorm("bn1", c1);
+        let r1 = b.relu("r1", n1);
+        let c2 = b.conv2d("c2", r1, 8, 3, 1, 1, 1, false);
+        let n2 = b.batchnorm("bn2", c2);
+        let s = b.add("add", n2, n1);
+        b.output(s);
+        let g = b.finish().unwrap();
+        let w1 = g.data_by_name("c1.w").unwrap().id;
+        let w2 = g.data_by_name("c2.w").unwrap().id;
+        let masks = propagate(&g, Mask::single(&g, w1, 0, 3));
+        // w2 out-dim 3 coupled through the Add
+        assert_eq!(masks[&(w2, 0)].indices(), vec![3]);
+        // w2 in-dim 3 coupled through r1 feeding conv2
+        assert_eq!(masks[&(w2, 1)].indices(), vec![3]);
+        // both BN gammas coupled
+        let g1 = g.data_by_name("bn1.gamma").unwrap().id;
+        let g2 = g.data_by_name("bn2.gamma").unwrap().id;
+        assert_eq!(masks[&(g1, 0)].indices(), vec![3]);
+        assert_eq!(masks[&(g2, 0)].indices(), vec![3]);
+    }
+
+    #[test]
+    fn flatten_expands_feature_block() {
+        let mut b = GraphBuilder::new("flat", 3);
+        let x = b.input("x", vec![1, 3, 4, 4]);
+        let c = b.conv2d("c", x, 5, 3, 1, 1, 1, false);
+        let f = b.flatten("f", c);
+        let out = b.gemm("fc", f, 2, false);
+        b.output(out);
+        let g = b.finish().unwrap();
+        let cw = g.data_by_name("c.w").unwrap().id;
+        let fcw = g.data_by_name("fc.w").unwrap().id;
+        let masks = propagate(&g, Mask::single(&g, cw, 0, 2));
+        // channel 2 of 5, spatial 4x4 → features 32..48 of fc's in-dim
+        let want: Vec<usize> = (32..48).collect();
+        assert_eq!(masks[&(fcw, 1)].indices(), want);
+    }
+
+    #[test]
+    fn grouped_conv_position_closure() {
+        // conv(8→8, groups=4): input channels couple across groups
+        let mut b = GraphBuilder::new("grp", 4);
+        let x = b.input("x", vec![1, 8, 4, 4]);
+        let c0 = b.conv2d("c0", x, 8, 1, 1, 0, 1, false);
+        let c1 = b.conv2d("c1", c0, 8, 3, 1, 1, 4, false);
+        b.output(c1);
+        let g = b.finish().unwrap();
+        let w0 = g.data_by_name("c0.w").unwrap().id;
+        let w1 = g.data_by_name("c1.w").unwrap().id;
+        // pruning c0 out-channel 0 hits c1's input position 0 → closure to
+        // channels {0, 2, 4, 6} (cig = 2), which are c0's outputs 0,2,4,6
+        let masks = propagate(&g, Mask::single(&g, w0, 0, 0));
+        assert_eq!(masks[&(w0, 0)].indices(), vec![0, 2, 4, 6]);
+        assert_eq!(masks[&(w1, 1)].indices(), vec![0]);
+    }
+
+    #[test]
+    fn depthwise_couples_in_and_out() {
+        let mut b = GraphBuilder::new("dw", 5);
+        let x = b.input("x", vec![1, 6, 4, 4]);
+        let c0 = b.conv2d("c0", x, 6, 1, 1, 0, 1, false);
+        let dw = b.conv2d("dw", c0, 6, 3, 1, 1, 6, false);
+        let c2 = b.conv2d("c2", dw, 4, 1, 1, 0, 1, false);
+        b.output(c2);
+        let g = b.finish().unwrap();
+        let w0 = g.data_by_name("c0.w").unwrap().id;
+        let wdw = g.data_by_name("dw.w").unwrap().id;
+        let w2 = g.data_by_name("c2.w").unwrap().id;
+        let masks = propagate(&g, Mask::single(&g, w0, 0, 2));
+        // depthwise filter 2 and c2's input 2 coupled; no closure beyond
+        assert_eq!(masks[&(w0, 0)].indices(), vec![2]);
+        assert_eq!(masks[&(wdw, 0)].indices(), vec![2]);
+        assert_eq!(masks[&(w2, 1)].indices(), vec![2]);
+        assert!(!masks.contains_key(&(w2, 0)));
+    }
+
+    #[test]
+    fn concat_offsets() {
+        let mut b = GraphBuilder::new("cat", 6);
+        let x = b.input("x", vec![1, 3, 4, 4]);
+        let a = b.conv2d("a", x, 4, 3, 1, 1, 1, false);
+        let c = b.conv2d("c", x, 6, 3, 1, 1, 1, false);
+        let cat = b.concat("cat", &[a, c], 1);
+        let d = b.conv2d("d", cat, 5, 1, 1, 0, 1, false);
+        b.output(d);
+        let g = b.finish().unwrap();
+        let wc = g.data_by_name("c.w").unwrap().id;
+        let wd = g.data_by_name("d.w").unwrap().id;
+        // channel 1 of conv c lands at concat offset 4+1=5
+        let masks = propagate(&g, Mask::single(&g, wc, 0, 1));
+        assert_eq!(masks[&(wd, 1)].indices(), vec![5]);
+        let wa = g.data_by_name("a.w").unwrap().id;
+        assert!(!masks.contains_key(&(wa, 0)), "branch a must be untouched");
+    }
+
+    #[test]
+    fn attention_head_subposition_closure() {
+        // q/k/v projections with 2 heads of dim 4: pruning q.w out-channel 1
+        // couples the same sub-position in head 2 (channel 5) and k.w via
+        // the QKᵀ contraction.
+        let mut b = GraphBuilder::new("attn", 7);
+        let x = b.input("x", vec![1, 3, 8]);
+        let q = b.gemm("q", x, 8, false);
+        let k = b.gemm("k", x, 8, false);
+        let v = b.gemm("v", x, 8, false);
+        let qh = b.split_heads("qh", q, 2);
+        let kh = b.split_heads("kh", k, 2);
+        let vh = b.split_heads("vh", v, 2);
+        let kt = b.transpose("kt", kh, vec![0, 1, 3, 2]);
+        let sc = b.matmul("qk", qh, kt);
+        let sm = b.softmax("sm", sc);
+        let ctx = b.matmul("av", sm, vh);
+        let mh = b.merge_heads("mh", ctx);
+        let o = b.gemm("o", mh, 8, false);
+        b.output(o);
+        let g = b.finish().unwrap();
+        let qw = g.data_by_name("q.w").unwrap().id;
+        let kw = g.data_by_name("k.w").unwrap().id;
+        let vw = g.data_by_name("v.w").unwrap().id;
+        let ow = g.data_by_name("o.w").unwrap().id;
+        let masks = propagate(&g, Mask::single(&g, qw, 0, 1));
+        // sub-position 1 in both heads: channels {1, 5}
+        assert_eq!(masks[&(qw, 0)].indices(), vec![1, 5]);
+        assert_eq!(masks[&(kw, 0)].indices(), vec![1, 5], "QKᵀ couples k");
+        // v is NOT coupled through the scores (contraction eliminates d)
+        assert!(!masks.contains_key(&(vw, 0)));
+        assert!(!masks.contains_key(&(ow, 1)));
+        // pruning v couples o's input instead
+        let masks_v = propagate(&g, Mask::single(&g, vw, 0, 2));
+        assert_eq!(masks_v[&(vw, 0)].indices(), vec![2, 6]);
+        assert_eq!(masks_v[&(ow, 1)].indices(), vec![2, 6]);
+        assert!(!masks_v.contains_key(&(qw, 0)));
+    }
+
+    #[test]
+    fn propagation_is_symmetric() {
+        // if source a couples channel x of b, then source b couples a
+        let mut b = GraphBuilder::new("sym", 8);
+        let x = b.input("x", vec![1, 4, 6, 6]);
+        let c1 = b.conv2d("c1", x, 8, 3, 1, 1, 1, false);
+        let n1 = b.batchnorm("bn1", c1);
+        let c2 = b.conv2d("c2", n1, 8, 3, 1, 1, 1, false);
+        let s = b.add("add", c2, n1);
+        b.output(s);
+        let g = b.finish().unwrap();
+        let w1 = g.data_by_name("c1.w").unwrap().id;
+        let w2 = g.data_by_name("c2.w").unwrap().id;
+        let m1 = propagate(&g, Mask::single(&g, w1, 0, 5));
+        assert!(m1[&(w2, 0)].set[5]);
+        let m2 = propagate(&g, Mask::single(&g, w2, 0, 5));
+        assert!(m2[&(w1, 0)].set[5]);
+        // full coupled sets identical
+        assert_eq!(param_locs(&g, &m1), param_locs(&g, &m2));
+    }
+}

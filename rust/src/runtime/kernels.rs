@@ -1,0 +1,354 @@
+//! Kernel entry points: the OBSPA hot path, executed through the PJRT
+//! artifacts (Pallas-lowered) with a bit-exact Rust-native fallback.
+//!
+//! The fallback exists so `cargo test` passes without `make artifacts`
+//! and so the PJRT path can be cross-checked against it (see
+//! `rust/tests/pjrt_parity.rs`). Padding to the canonical ladder is
+//! exact: zero rows are independent, zero columns with identity-padded
+//! sweep matrix produce zero error terms (proved in the L1 pytest
+//! suite, `test_obs_update_column_padding_exact`).
+
+use super::{ladder_cols, Runtime, M_BLOCK, ROW_BLOCK};
+use crate::tensor::Tensor;
+
+/// Which executor ran a kernel (reported by benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    Native,
+}
+
+/// Structured OBS column sweep (native reference, mirrors
+/// `python/compile/kernels/ref.py::obs_update_ref`).
+pub fn obs_update_native(w: &Tensor, sweep: &Tensor, mask: &[f32]) -> Tensor {
+    let (r, c) = (w.shape[0], w.shape[1]);
+    assert_eq!(sweep.shape, vec![c, c]);
+    assert_eq!(mask.len(), c);
+    let mut out = w.clone();
+    for i in 0..c {
+        if mask[i] <= 0.0 {
+            continue;
+        }
+        let hii = sweep.data[i * c + i];
+        for row in 0..r {
+            let err = out.data[row * c + i] / hii;
+            if err == 0.0 {
+                continue;
+            }
+            let base = row * c;
+            for j in i..c {
+                out.data[base + j] -= err * sweep.data[i * c + j];
+            }
+        }
+        for row in 0..r {
+            out.data[row * c + i] = 0.0;
+        }
+    }
+    out
+}
+
+/// Hessian accumulation H + X·Xᵀ (native reference).
+pub fn hessian_accum_native(h: &Tensor, x: &Tensor) -> Tensor {
+    let c = h.shape[0];
+    let m = x.shape[1];
+    assert_eq!(x.shape[0], c);
+    let mut out = h.clone();
+    for i in 0..c {
+        for j in i..c {
+            let mut acc = 0.0f32;
+            let (ri, rj) = (&x.data[i * m..(i + 1) * m], &x.data[j * m..(j + 1) * m]);
+            for k in 0..m {
+                acc += ri[k] * rj[k];
+            }
+            out.data[i * c + j] += acc;
+            if i != j {
+                out.data[j * c + i] += acc;
+            }
+        }
+    }
+    out
+}
+
+/// OBSPA structured update of a full weight matrix `w` [R, C] using the
+/// sweep matrix (upper Cholesky factor of H⁻¹) and a column prune mask.
+/// Uses the PJRT Pallas artifact when available, padding rows to
+/// ROW_BLOCK multiples and columns to the canonical ladder.
+pub fn obs_update(w: &Tensor, sweep: &Tensor, mask: &[f32]) -> anyhow::Result<(Tensor, Backend)> {
+    let (r, c) = (w.shape[0], w.shape[1]);
+    let Some(rt) = Runtime::global() else {
+        return Ok((obs_update_native(w, sweep, mask), Backend::Native));
+    };
+    let cpad = match ladder_cols(c) {
+        Ok(c) => c,
+        Err(_) => return Ok((obs_update_native(w, sweep, mask), Backend::Native)),
+    };
+    // sweep: identity-pad to the ladder; mask: zero-pad
+    let mut sp = Tensor::zeros(&[cpad, cpad]);
+    for i in 0..cpad {
+        sp.data[i * cpad + i] = 1.0;
+    }
+    for i in 0..c {
+        sp.data[i * cpad..i * cpad + c].copy_from_slice(&sweep.data[i * c..(i + 1) * c]);
+    }
+    let mut mp = Tensor::zeros(&[cpad]);
+    mp.data[..c].copy_from_slice(mask);
+    // The artifact is lowered at exactly [ROW_BLOCK, cpad]; rows are
+    // independent, so stream W in zero-padded ROW_BLOCK chunks.
+    let name = format!("obs_update_c{cpad}");
+    let mut out = Tensor::zeros(&[r, c]);
+    let mut row = 0usize;
+    while row < r {
+        let take = ROW_BLOCK.min(r - row);
+        let mut wp = Tensor::zeros(&[ROW_BLOCK, cpad]);
+        for i in 0..take {
+            wp.data[i * cpad..i * cpad + c]
+                .copy_from_slice(&w.data[(row + i) * c..(row + i + 1) * c]);
+        }
+        let outs = rt.execute(&name, &[&wp, &sp, &mp])?;
+        let blk = &outs[0];
+        for i in 0..take {
+            out.data[(row + i) * c..(row + i + 1) * c]
+                .copy_from_slice(&blk.data[i * cpad..i * cpad + c]);
+        }
+        row += take;
+    }
+    Ok((out, Backend::Pjrt))
+}
+
+/// Accumulate a calibration block into a Hessian: H += X·Xᵀ where X is
+/// [C, M]. PJRT path pads C to the ladder and M to M_BLOCK multiples.
+pub fn hessian_accum(h: &Tensor, x: &Tensor) -> anyhow::Result<(Tensor, Backend)> {
+    let c = h.shape[0];
+    let m = x.shape[1];
+    let Some(rt) = Runtime::global() else {
+        return Ok((hessian_accum_native(h, x), Backend::Native));
+    };
+    let cpad = match ladder_cols(c) {
+        Ok(c) => c,
+        Err(_) => return Ok((hessian_accum_native(h, x), Backend::Native)),
+    };
+    let mut hp = Tensor::zeros(&[cpad, cpad]);
+    for i in 0..c {
+        hp.data[i * cpad..i * cpad + c].copy_from_slice(&h.data[i * c..(i + 1) * c]);
+    }
+    // stream X in M_BLOCK chunks (zero-pad the tail — zero columns add 0)
+    let blocks = m.div_ceil(M_BLOCK);
+    for b in 0..blocks {
+        let mut xb = Tensor::zeros(&[cpad, M_BLOCK]);
+        let lo = b * M_BLOCK;
+        let hi = (lo + M_BLOCK).min(m);
+        for i in 0..c {
+            xb.data[i * M_BLOCK..i * M_BLOCK + (hi - lo)]
+                .copy_from_slice(&x.data[i * m + lo..i * m + hi]);
+        }
+        let outs = rt.execute(&format!("hessian_c{cpad}"), &[&hp, &xb])?;
+        hp = outs.into_iter().next().unwrap();
+    }
+    let mut out = Tensor::zeros(&[c, c]);
+    for i in 0..c {
+        out.data[i * c..(i + 1) * c].copy_from_slice(&hp.data[i * cpad..i * cpad + c]);
+    }
+    Ok((out, Backend::Pjrt))
+}
+
+/// Cholesky decomposition of an SPD matrix: returns lower-triangular L
+/// with A = L·Lᵀ. Substrate for H⁻¹ and its Cholesky factor — jax's
+/// `linalg` lowers to lapack FFI custom-calls the pinned xla_extension
+/// cannot execute, so the factorization is native Rust.
+pub fn cholesky(a: &Tensor) -> anyhow::Result<Tensor> {
+    let n = a.shape[0];
+    anyhow::ensure!(a.shape == vec![n, n], "cholesky needs square");
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.data[i * n + j];
+            for k in 0..j {
+                sum -= l.data[i * n + k] * l.data[j * n + k];
+            }
+            if i == j {
+                anyhow::ensure!(sum > 0.0, "matrix not positive definite at {i} (sum {sum})");
+                l.data[i * n + i] = sum.sqrt();
+            } else {
+                l.data[i * n + j] = sum / l.data[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ·L⁻¹.
+pub fn spd_inverse(a: &Tensor) -> anyhow::Result<Tensor> {
+    let n = a.shape[0];
+    let l = cholesky(a)?;
+    // invert L (lower triangular) by forward substitution per column
+    let mut linv = Tensor::zeros(&[n, n]);
+    for col in 0..n {
+        linv.data[col * n + col] = 1.0 / l.data[col * n + col];
+        for i in col + 1..n {
+            let mut sum = 0.0f32;
+            for k in col..i {
+                sum -= l.data[i * n + k] * linv.data[k * n + col];
+            }
+            linv.data[i * n + col] = sum / l.data[i * n + i];
+        }
+    }
+    // A⁻¹ = Linvᵀ · Linv
+    let mut inv = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in i..n {
+            let mut acc = 0.0f32;
+            // sum over k >= max(i, j): linv[k,i]*linv[k,j]
+            for k in j..n {
+                acc += linv.data[k * n + i] * linv.data[k * n + j];
+            }
+            inv.data[i * n + j] = acc;
+            inv.data[j * n + i] = acc;
+        }
+    }
+    Ok(inv)
+}
+
+/// The SparseGPT sweep matrix: upper Cholesky factor U of H⁻¹ (H⁻¹ = UᵀU).
+pub fn sweep_matrix(h: &Tensor) -> anyhow::Result<Tensor> {
+    let inv = spd_inverse(h)?;
+    let l = cholesky(&inv)?;
+    Ok(l.t2())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{assert_allclose, ops};
+    use crate::util::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Tensor {
+        let x = Tensor::new(vec![n, n + 4], rng.uniform_vec(n * (n + 4), -1.0, 1.0));
+        let mut h = ops::matmul(&x, &x.t2());
+        for i in 0..n {
+            h.data[i * n + i] += 0.5;
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        let a = spd(&mut rng, 12);
+        let l = cholesky(&a).unwrap();
+        let back = ops::matmul(&l, &l.t2());
+        assert_allclose(&back, &a, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(2);
+        let a = spd(&mut rng, 16);
+        let inv = spd_inverse(&a).unwrap();
+        let eye = ops::matmul(&a, &inv);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (eye.data[i * 16 + j] - want).abs() < 1e-2,
+                    "({i},{j}) = {}",
+                    eye.data[i * 16 + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_matrix_factorizes_inverse() {
+        let mut rng = Rng::new(3);
+        let a = spd(&mut rng, 10);
+        let u = sweep_matrix(&a).unwrap();
+        let inv = spd_inverse(&a).unwrap();
+        let back = ops::matmul(&u.t2(), &u);
+        assert_allclose(&back, &inv, 1e-2, 1e-2);
+        // upper triangular
+        for i in 0..10 {
+            for j in 0..i {
+                assert_eq!(u.data[i * 10 + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn native_obs_update_zeroes_and_compensates() {
+        let mut rng = Rng::new(4);
+        let c = 8;
+        let w = Tensor::new(vec![4, c], rng.uniform_vec(4 * c, -1.0, 1.0));
+        let h = spd(&mut rng, c);
+        let u = sweep_matrix(&h).unwrap();
+        let mut mask = vec![0.0f32; c];
+        mask[2] = 1.0;
+        mask[5] = 1.0;
+        let out = obs_update_native(&w, &u, &mask);
+        for row in 0..4 {
+            assert_eq!(out.data[row * c + 2], 0.0);
+            assert_eq!(out.data[row * c + 5], 0.0);
+        }
+        // unpruned columns before the first pruned column are untouched
+        for row in 0..4 {
+            assert_eq!(out.data[row * c], w.data[row * c]);
+            assert_eq!(out.data[row * c + 1], w.data[row * c + 1]);
+        }
+        // at least one surviving later column was adjusted
+        assert!(out.data[3] != w.data[3] || out.data[4] != w.data[4]);
+    }
+
+    #[test]
+    fn native_hessian_accum_symmetric() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::new(vec![6, 20], rng.uniform_vec(120, -1.0, 1.0));
+        let h = hessian_accum_native(&Tensor::zeros(&[6, 6]), &x);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((h.data[i * 6 + j] - h.data[j * 6 + i]).abs() < 1e-5);
+            }
+        }
+        // equals matmul reference
+        let want = ops::matmul(&x, &x.t2());
+        assert_allclose(&h, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn obs_update_reduces_layer_reconstruction_error() {
+        // end-to-end: correlated calibration features, prune 25% of
+        // columns; OBS compensation must beat naive zeroing
+        let mut rng = Rng::new(6);
+        let (c, m, r) = (16usize, 128usize, 8usize);
+        // low-rank + noise features
+        let basis = Tensor::new(vec![c, 4], rng.uniform_vec(c * 4, -1.0, 1.0));
+        let coef = Tensor::new(vec![4, m], rng.uniform_vec(4 * m, -1.0, 1.0));
+        let mut x = ops::matmul(&basis, &coef);
+        for v in &mut x.data {
+            *v += rng.normal() * 0.05;
+        }
+        let w = Tensor::new(vec![r, c], rng.uniform_vec(r * c, -1.0, 1.0));
+        let mut h = hessian_accum_native(&Tensor::zeros(&[c, c]), &x);
+        let damp = 0.01 * (0..c).map(|i| h.data[i * c + i]).sum::<f32>() / c as f32;
+        for i in 0..c {
+            h.data[i * c + i] += damp;
+        }
+        let u = sweep_matrix(&h).unwrap();
+        let mut mask = vec![0.0f32; c];
+        for i in [1usize, 6, 9, 13] {
+            mask[i] = 1.0;
+        }
+        let w_obs = obs_update_native(&w, &u, &mask);
+        let mut w_zero = w.clone();
+        for row in 0..r {
+            for i in [1usize, 6, 9, 13] {
+                w_zero.data[row * c + i] = 0.0;
+            }
+        }
+        let ref_out = ops::matmul(&w, &x);
+        let err_obs = ref_out.l2_dist(&ops::matmul(&w_obs, &x));
+        let err_zero = ref_out.l2_dist(&ops::matmul(&w_zero, &x));
+        assert!(
+            err_obs < err_zero * 0.9,
+            "obs {err_obs} not better than zero {err_zero}"
+        );
+    }
+}

@@ -1,0 +1,293 @@
+//! Dense f32 tensor substrate.
+//!
+//! The fine-tuning / evaluation engine (`crate::engine`) interprets SPA-IR
+//! graphs directly on these kernels — this is the role PyTorch plays in
+//! the paper (§3.3: ONNX is converted to PyTorch for gradient computation
+//! and fine-tuning). Layout is row-major; images are NCHW.
+
+pub mod ops;
+
+use crate::util::Rng;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    /// Kaiming-normal initialization for a weight with `fan_in`.
+    pub fn kaiming(shape: &[usize], fan_in: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / fan_in.max(1) as f32).sqrt();
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec(shape.iter().product(), std),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Dimension size with python-style negative indexing.
+    pub fn dim(&self, i: isize) -> usize {
+        let n = self.shape.len() as isize;
+        let i = if i < 0 { n + i } else { i };
+        self.shape[i as usize]
+    }
+
+    pub fn reshaped(&self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.numel());
+        Tensor {
+            shape,
+            data: self.data.clone(),
+        }
+    }
+
+    /// Strides (in elements) for the row-major layout.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, c: f32) -> Tensor {
+        self.map(|x| x * c)
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn abs_sum(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    pub fn sq_sum(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// L2 distance to another tensor (for numeric cross-checks).
+    pub fn l2_dist(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    /// Remove the given (sorted, unique) indices along `dim`, returning a
+    /// structurally smaller tensor. This is the physical channel deletion
+    /// primitive of the pruner (paper §3.2 step 4).
+    pub fn delete_indices(&self, dim: usize, del: &[usize]) -> Tensor {
+        assert!(dim < self.shape.len(), "dim {dim} out of range");
+        debug_assert!(del.windows(2).all(|w| w[0] < w[1]), "indices must be sorted unique");
+        assert!(
+            del.iter().all(|&i| i < self.shape[dim]),
+            "delete index out of range"
+        );
+        let keep: Vec<usize> = (0..self.shape[dim])
+            .filter(|i| del.binary_search(i).is_err())
+            .collect();
+        self.take_indices(dim, &keep)
+    }
+
+    /// Keep only the given indices along `dim` (gather).
+    pub fn take_indices(&self, dim: usize, keep: &[usize]) -> Tensor {
+        let mut new_shape = self.shape.clone();
+        new_shape[dim] = keep.len();
+        let outer: usize = self.shape[..dim].iter().product();
+        let inner: usize = self.shape[dim + 1..].iter().product();
+        let d = self.shape[dim];
+        let mut out = Vec::with_capacity(outer * keep.len() * inner);
+        for o in 0..outer {
+            for &k in keep {
+                let base = (o * d + k) * inner;
+                out.extend_from_slice(&self.data[base..base + inner]);
+            }
+        }
+        Tensor::new(new_shape, out)
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn t2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(vec![c, r], out)
+    }
+}
+
+/// Assert element-wise closeness, reporting the worst offender.
+pub fn assert_allclose(a: &Tensor, b: &Tensor, atol: f32, rtol: f32) {
+    assert_eq!(a.shape, b.shape, "shape mismatch {:?} vs {:?}", a.shape, b.shape);
+    let mut worst = (0usize, 0.0f32);
+    for (i, (&x, &y)) in a.data.iter().zip(&b.data).enumerate() {
+        let err = (x - y).abs();
+        let tol = atol + rtol * y.abs();
+        if err > tol && err > worst.1 {
+            worst = (i, err);
+        }
+    }
+    assert!(
+        worst.1 == 0.0,
+        "tensors differ: idx {} err {} (a={} b={})",
+        worst.0,
+        worst.1,
+        a.data[worst.0],
+        b.data[worst.0]
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_strides() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.dim(-1), 4);
+        assert_eq!(t.dim(0), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn delete_indices_dim0() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let d = t.delete_indices(0, &[1]);
+        assert_eq!(d.shape, vec![2, 2]);
+        assert_eq!(d.data, vec![1., 2., 5., 6.]);
+    }
+
+    #[test]
+    fn delete_indices_dim1() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let d = t.delete_indices(1, &[0, 2]);
+        assert_eq!(d.shape, vec![2, 1]);
+        assert_eq!(d.data, vec![2., 5.]);
+    }
+
+    #[test]
+    fn delete_inner_dim_of_4d() {
+        // conv weight [2,2,1,1], delete input channel 0
+        let t = Tensor::new(vec![2, 2, 1, 1], vec![1., 2., 3., 4.]);
+        let d = t.delete_indices(1, &[0]);
+        assert_eq!(d.shape, vec![2, 1, 1, 1]);
+        assert_eq!(d.data, vec![2., 4.]);
+    }
+
+    #[test]
+    fn transpose2() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.t2();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn kaiming_scale() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::kaiming(&[64, 64], 64, &mut rng);
+        let var = t.sq_sum() / t.numel() as f32;
+        assert!((var - 2.0 / 64.0).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![2], vec![1.0 + 1e-7, 2.0]);
+        assert_allclose(&a, &b, 1e-5, 1e-5);
+        let c = Tensor::new(vec![2], vec![1.5, 2.0]);
+        let r = std::panic::catch_unwind(|| assert_allclose(&a, &c, 1e-5, 1e-5));
+        assert!(r.is_err());
+    }
+}

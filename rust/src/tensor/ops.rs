@@ -1,0 +1,1178 @@
+//! Neural-network kernels over [`Tensor`]: GEMM, im2col convolution (with
+//! stride / padding / groups / depthwise), pooling, normalization,
+//! activations, softmax / cross-entropy, embedding — forward *and* the
+//! backward primitives the autodiff engine composes.
+//!
+//! GEMM is the hot kernel: a blocked microkernel (`MC`×`NC` tiles with an
+//! unrolled inner product) keeps it cache-friendly; everything convolution
+//! lowers onto it via im2col.
+
+use super::Tensor;
+
+// Cache-blocking parameters for the GEMM microkernel.
+const MC: usize = 128;
+const NC: usize = 256;
+
+/// C[m,n] = A[m,k] · B[k,n]
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2, "matmul lhs must be 2-D");
+    assert_eq!(b.rank(), 2, "matmul rhs must be 2-D");
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    gemm_into(&a.data, &b.data, &mut out, m, k, n);
+    Tensor::new(vec![m, n], out)
+}
+
+/// out[m,n] += A[m,k] · B[k,n] on raw slices (row-major).
+pub fn gemm_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    // i-k-j loop order with j-blocking: streams B rows, accumulates into
+    // the C row held in cache.
+    for jc in (0..n).step_by(NC) {
+        let jn = (jc + NC).min(n);
+        for ic in (0..m).step_by(MC) {
+            let im = (ic + MC).min(m);
+            for i in ic..im {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut out[i * n..(i + 1) * n];
+                for (p, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n + jc..p * n + jn];
+                    let cslice = &mut crow[jc..jn];
+                    for (c, &bv) in cslice.iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Batched matmul on the last two dims: a[..., M, K] · b[..., K, N].
+/// Leading dims must match exactly.
+pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert!(a.rank() >= 2 && b.rank() >= 2);
+    assert_eq!(a.rank(), b.rank(), "batch_matmul rank mismatch");
+    assert_eq!(
+        a.shape[..a.rank() - 2],
+        b.shape[..b.rank() - 2],
+        "batch dims mismatch"
+    );
+    let (m, k) = (a.dim(-2), a.dim(-1));
+    let (k2, n) = (b.dim(-2), b.dim(-1));
+    assert_eq!(k, k2, "batch_matmul inner dim mismatch");
+    let batch: usize = a.shape[..a.rank() - 2].iter().product();
+    let mut shape = a.shape[..a.rank() - 2].to_vec();
+    shape.push(m);
+    shape.push(n);
+    let mut out = vec![0.0f32; batch * m * n];
+    for bi in 0..batch {
+        gemm_into(
+            &a.data[bi * m * k..(bi + 1) * m * k],
+            &b.data[bi * k * n..(bi + 1) * k * n],
+            &mut out[bi * m * n..(bi + 1) * m * n],
+            m,
+            k,
+            n,
+        );
+    }
+    Tensor::new(shape, out)
+}
+
+/// Linear layer: x[..., K] · wᵀ where w is [N, K]; bias optional [N].
+///
+/// Perf note (§Perf iteration 1): the naive per-row dot walked `w`
+/// column-major through the inner product; transposing `w` once and
+/// running the blocked [`gemm_into`] keeps both operands streaming
+/// row-major. For single-row inputs the transpose overhead dominates, so
+/// the dot path is kept for `rows == 1`.
+pub fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
+    assert_eq!(w.rank(), 2, "linear weight must be [out, in]");
+    let kin = x.dim(-1);
+    assert_eq!(kin, w.shape[1], "linear in-dim mismatch");
+    let rows: usize = x.numel() / kin;
+    let n = w.shape[0];
+    let mut out = vec![0.0f32; rows * n];
+    if rows == 1 {
+        for j in 0..n {
+            let wr = &w.data[j * kin..(j + 1) * kin];
+            let mut acc = 0.0f32;
+            for p in 0..kin {
+                acc += x.data[p] * wr[p];
+            }
+            out[j] = acc;
+        }
+    } else {
+        let wt = w.t2(); // [kin, n]
+        gemm_into(&x.data, &wt.data, &mut out, rows, kin, n);
+    }
+    if let Some(b) = b {
+        assert_eq!(b.numel(), n, "bias dim mismatch");
+        for i in 0..rows {
+            for j in 0..n {
+                out[i * n + j] += b.data[j];
+            }
+        }
+    }
+    let mut shape = x.shape[..x.rank() - 1].to_vec();
+    shape.push(n);
+    Tensor::new(shape, out)
+}
+
+/// Spatial conv output size for one dimension.
+pub fn conv_out_dim(input: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - k) / stride + 1
+}
+
+/// im2col for one image group-slice: x[ci, h, w] → cols[(ci·kh·kw), (ho·wo)].
+fn im2col_single(
+    x: &[f32],
+    ci: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    cols: &mut [f32],
+) {
+    let ho = conv_out_dim(h, kh, stride, pad);
+    let wo = conv_out_dim(w, kw, stride, pad);
+    let owh = ho * wo;
+    for c in 0..ci {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = (c * kh + ky) * kw + kx;
+                let dst = &mut cols[row * owh..(row + 1) * owh];
+                for oy in 0..ho {
+                    let iy = oy * stride + ky;
+                    let iy = iy as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        for v in &mut dst[oy * wo..(oy + 1) * wo] {
+                            *v = 0.0;
+                        }
+                        continue;
+                    }
+                    let src_base = (c * h + iy as usize) * w;
+                    for ox in 0..wo {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        dst[oy * wo + ox] = if ix < 0 || ix >= w as isize {
+                            0.0
+                        } else {
+                            x[src_base + ix as usize]
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// col2im: scatter-add of cols[(ci·kh·kw), (ho·wo)] back into x[ci, h, w].
+fn col2im_single(
+    cols: &[f32],
+    ci: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    x: &mut [f32],
+) {
+    let ho = conv_out_dim(h, kh, stride, pad);
+    let wo = conv_out_dim(w, kw, stride, pad);
+    let owh = ho * wo;
+    for c in 0..ci {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = (c * kh + ky) * kw + kx;
+                let src = &cols[row * owh..(row + 1) * owh];
+                for oy in 0..ho {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let dst_base = (c * h + iy as usize) * w;
+                    for ox in 0..wo {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix >= 0 && ix < w as isize {
+                            x[dst_base + ix as usize] += src[oy * wo + ox];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2-D convolution: x[N,Ci,H,W] * w[Co,Ci/g,kh,kw] (+ b[Co]) → y[N,Co,Ho,Wo].
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Tensor {
+    assert_eq!(x.rank(), 4, "conv2d input must be NCHW");
+    assert_eq!(w.rank(), 4, "conv2d weight must be [Co,Ci/g,kh,kw]");
+    let (n, ci, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(ci % groups, 0, "Ci {ci} not divisible by groups {groups}");
+    assert_eq!(co % groups, 0, "Co {co} not divisible by groups {groups}");
+    assert_eq!(cig, ci / groups, "weight in-channels mismatch");
+    let ho = conv_out_dim(h, kh, stride, pad);
+    let wo = conv_out_dim(wd, kw, stride, pad);
+    let cog = co / groups;
+    let kdim = cig * kh * kw;
+    let owh = ho * wo;
+    let mut out = vec![0.0f32; n * co * owh];
+    let mut cols = vec![0.0f32; kdim * owh];
+    for img in 0..n {
+        for g in 0..groups {
+            let xs = &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+            im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
+            // w_g [cog, kdim] · cols [kdim, owh] → y_g [cog, owh]
+            let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
+            let ys =
+                &mut out[(img * co + g * cog) * owh..(img * co + (g + 1) * cog) * owh];
+            gemm_into(wg, &cols, ys, cog, kdim, owh);
+        }
+    }
+    if let Some(b) = b {
+        assert_eq!(b.numel(), co);
+        for img in 0..n {
+            for c in 0..co {
+                let base = (img * co + c) * owh;
+                let bv = b.data[c];
+                for v in &mut out[base..base + owh] {
+                    *v += bv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, co, ho, wo], out)
+}
+
+/// Gradients of conv2d: returns (dx, dw, db).
+pub fn conv2d_backward(
+    x: &Tensor,
+    w: &Tensor,
+    dy: &Tensor,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let (n, ci, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (ho, wo) = (dy.shape[2], dy.shape[3]);
+    let cog = co / groups;
+    let kdim = cig * kh * kw;
+    let owh = ho * wo;
+    let mut dx = vec![0.0f32; x.numel()];
+    let mut dw = vec![0.0f32; w.numel()];
+    let mut db = vec![0.0f32; co];
+    let mut cols = vec![0.0f32; kdim * owh];
+    let mut dcols = vec![0.0f32; kdim * owh];
+    for img in 0..n {
+        for g in 0..groups {
+            let xs = &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+            im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
+            let dys = &dy.data[(img * co + g * cog) * owh..(img * co + (g + 1) * cog) * owh];
+            // dw_g [cog, kdim] += dy_g [cog, owh] · cols^T [owh, kdim]
+            let dwg = &mut dw[g * cog * kdim..(g + 1) * cog * kdim];
+            for oc in 0..cog {
+                let dyr = &dys[oc * owh..(oc + 1) * owh];
+                let dwr = &mut dwg[oc * kdim..(oc + 1) * kdim];
+                for p in 0..kdim {
+                    let colr = &cols[p * owh..(p + 1) * owh];
+                    let mut acc = 0.0f32;
+                    for q in 0..owh {
+                        acc += dyr[q] * colr[q];
+                    }
+                    dwr[p] += acc;
+                }
+            }
+            // dcols [kdim, owh] = w_g^T [kdim, cog] · dy_g [cog, owh]
+            dcols.iter_mut().for_each(|v| *v = 0.0);
+            let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
+            for oc in 0..cog {
+                let dyr = &dys[oc * owh..(oc + 1) * owh];
+                let wr = &wg[oc * kdim..(oc + 1) * kdim];
+                for p in 0..kdim {
+                    let wv = wr[p];
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    let dcr = &mut dcols[p * owh..(p + 1) * owh];
+                    for q in 0..owh {
+                        dcr[q] += wv * dyr[q];
+                    }
+                }
+            }
+            let dxs = &mut dx
+                [(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+            col2im_single(&dcols, cig, h, wd, kh, kw, stride, pad, dxs);
+        }
+        for c in 0..co {
+            let base = (img * co + c) * owh;
+            db[c] += dy.data[base..base + owh].iter().sum::<f32>();
+        }
+    }
+    (
+        Tensor::new(x.shape.clone(), dx),
+        Tensor::new(w.shape.clone(), dw),
+        Tensor::new(vec![co], db),
+    )
+}
+
+/// Unfold conv inputs to GEMM form for OBSPA's layer-wise Hessian
+/// (H = X·Xᵀ over the im2col matrix, App. A.5 Eq. 12): returns one
+/// [kdim, N·Ho·Wo] matrix per conv group.
+pub fn unfold_conv_inputs(
+    x: &Tensor,
+    w_shape: &[usize],
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Vec<Tensor> {
+    let (n, ci, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cig, kh, kw) = (w_shape[1], w_shape[2], w_shape[3]);
+    assert_eq!(cig, ci / groups);
+    let ho = conv_out_dim(h, kh, stride, pad);
+    let wo = conv_out_dim(wd, kw, stride, pad);
+    let kdim = cig * kh * kw;
+    let owh = ho * wo;
+    let mut out: Vec<Vec<f32>> = vec![vec![0.0; kdim * n * owh]; groups];
+    let mut cols = vec![0.0f32; kdim * owh];
+    for img in 0..n {
+        for g in 0..groups {
+            let xs = &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+            im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
+            // scatter image block into [kdim, n*owh] at column offset img*owh
+            let dst = &mut out[g];
+            for row in 0..kdim {
+                dst[row * n * owh + img * owh..row * n * owh + (img + 1) * owh]
+                    .copy_from_slice(&cols[row * owh..(row + 1) * owh]);
+            }
+        }
+    }
+    out.into_iter()
+        .map(|d| Tensor::new(vec![kdim, n * owh], d))
+        .collect()
+}
+
+/// Max pooling: returns (y, argmax) with argmax flat indices into x for backward.
+pub fn maxpool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, Vec<usize>) {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = conv_out_dim(h, k, stride, pad);
+    let wo = conv_out_dim(w, k, stride, pad);
+    let mut out = vec![f32::NEG_INFINITY; n * c * ho * wo];
+    let mut arg = vec![0usize; n * c * ho * wo];
+    for img in 0..n {
+        for ch in 0..c {
+            let xbase = (img * c + ch) * h * w;
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let oidx = ((img * c + ch) * ho + oy) * wo + ox;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xi = xbase + iy as usize * w + ix as usize;
+                            if x.data[xi] > out[oidx] {
+                                out[oidx] = x.data[xi];
+                                arg[oidx] = xi;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(vec![n, c, ho, wo], out), arg)
+}
+
+/// Scatter pooled gradients back to the argmax positions; returns a flat
+/// tensor the caller reshapes to the input shape.
+pub fn maxpool2d_backward(dy: &Tensor, argmax: &[usize], x_numel: usize) -> Tensor {
+    let mut dx = vec![0.0f32; x_numel];
+    for (i, &a) in argmax.iter().enumerate() {
+        dx[a] += dy.data[i];
+    }
+    Tensor::new(vec![x_numel], dx)
+}
+
+/// Average pooling.
+pub fn avgpool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = conv_out_dim(h, k, stride, pad);
+    let wo = conv_out_dim(w, k, stride, pad);
+    let inv = 1.0 / (k * k) as f32;
+    let mut out = vec![0.0f32; n * c * ho * wo];
+    for img in 0..n {
+        for ch in 0..c {
+            let xbase = (img * c + ch) * h * w;
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0f32;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix >= 0 && ix < w as isize {
+                                acc += x.data[xbase + iy as usize * w + ix as usize];
+                            }
+                        }
+                    }
+                    out[((img * c + ch) * ho + oy) * wo + ox] = acc * inv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, c, ho, wo], out)
+}
+
+pub fn avgpool2d_backward(
+    dy: &Tensor,
+    x_shape: &[usize],
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (n, c, h, w) = (x_shape[0], x_shape[1], x_shape[2], x_shape[3]);
+    let (ho, wo) = (dy.shape[2], dy.shape[3]);
+    let inv = 1.0 / (k * k) as f32;
+    let mut dx = vec![0.0f32; n * c * h * w];
+    for img in 0..n {
+        for ch in 0..c {
+            let xbase = (img * c + ch) * h * w;
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let g = dy.data[((img * c + ch) * ho + oy) * wo + ox] * inv;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix >= 0 && ix < w as isize {
+                                dx[xbase + iy as usize * w + ix as usize] += g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(x_shape.to_vec(), dx)
+}
+
+/// Global average pool [N,C,H,W] → [N,C].
+pub fn global_avgpool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = vec![0.0f32; n * c];
+    for i in 0..n * c {
+        out[i] = x.data[i * h * w..(i + 1) * h * w].iter().sum::<f32>() * inv;
+    }
+    Tensor::new(vec![n, c], out)
+}
+
+pub fn global_avgpool_backward(dy: &Tensor, x_shape: &[usize]) -> Tensor {
+    let (h, w) = (x_shape[2], x_shape[3]);
+    let inv = 1.0 / (h * w) as f32;
+    let mut dx = vec![0.0f32; x_shape.iter().product()];
+    for i in 0..dy.numel() {
+        let g = dy.data[i] * inv;
+        for v in &mut dx[i * h * w..(i + 1) * h * w] {
+            *v = g;
+        }
+    }
+    Tensor::new(x_shape.to_vec(), dx)
+}
+
+/// BatchNorm inference: y = γ·(x−μ)/√(σ²+ε) + β over the channel dim (dim 1
+/// for 4-D, last-as-feature for 2-D [N,C]).
+pub fn batchnorm_infer(
+    x: &Tensor,
+    gamma: &Tensor,
+    beta: &Tensor,
+    mean: &Tensor,
+    var: &Tensor,
+    eps: f32,
+) -> Tensor {
+    let c = x.shape[1];
+    assert_eq!(gamma.numel(), c);
+    let inner: usize = x.shape[2..].iter().product();
+    let n = x.shape[0];
+    let mut out = vec![0.0f32; x.numel()];
+    for img in 0..n {
+        for ch in 0..c {
+            let scale = gamma.data[ch] / (var.data[ch] + eps).sqrt();
+            let shift = beta.data[ch] - mean.data[ch] * scale;
+            let base = (img * c + ch) * inner;
+            for i in 0..inner {
+                out[base + i] = x.data[base + i] * scale + shift;
+            }
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+/// BatchNorm training forward: returns (y, batch_mean, batch_var, x_hat).
+pub fn batchnorm_train(
+    x: &Tensor,
+    gamma: &Tensor,
+    beta: &Tensor,
+    eps: f32,
+) -> (Tensor, Tensor, Tensor, Tensor) {
+    let c = x.shape[1];
+    let inner: usize = x.shape[2..].iter().product();
+    let n = x.shape[0];
+    let cnt = (n * inner) as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * inner;
+            mean[ch] += x.data[base..base + inner].iter().sum::<f32>();
+        }
+    }
+    for m in &mut mean {
+        *m /= cnt;
+    }
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * inner;
+            let m = mean[ch];
+            var[ch] += x.data[base..base + inner]
+                .iter()
+                .map(|&v| (v - m) * (v - m))
+                .sum::<f32>();
+        }
+    }
+    for v in &mut var {
+        *v /= cnt;
+    }
+    let mut xhat = vec![0.0f32; x.numel()];
+    let mut out = vec![0.0f32; x.numel()];
+    for img in 0..n {
+        for ch in 0..c {
+            let inv_std = 1.0 / (var[ch] + eps).sqrt();
+            let base = (img * c + ch) * inner;
+            for i in 0..inner {
+                let xh = (x.data[base + i] - mean[ch]) * inv_std;
+                xhat[base + i] = xh;
+                out[base + i] = gamma.data[ch] * xh + beta.data[ch];
+            }
+        }
+    }
+    (
+        Tensor::new(x.shape.clone(), out),
+        Tensor::new(vec![c], mean),
+        Tensor::new(vec![c], var),
+        Tensor::new(x.shape.clone(), xhat),
+    )
+}
+
+/// BatchNorm backward: returns (dx, dgamma, dbeta).
+pub fn batchnorm_backward(
+    dy: &Tensor,
+    xhat: &Tensor,
+    gamma: &Tensor,
+    var: &Tensor,
+    eps: f32,
+) -> (Tensor, Tensor, Tensor) {
+    let c = dy.shape[1];
+    let inner: usize = dy.shape[2..].iter().product();
+    let n = dy.shape[0];
+    let cnt = (n * inner) as f32;
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * inner;
+            for i in 0..inner {
+                dgamma[ch] += dy.data[base + i] * xhat.data[base + i];
+                dbeta[ch] += dy.data[base + i];
+            }
+        }
+    }
+    let mut dx = vec![0.0f32; dy.numel()];
+    for img in 0..n {
+        for ch in 0..c {
+            let inv_std = 1.0 / (var.data[ch] + eps).sqrt();
+            let base = (img * c + ch) * inner;
+            let k = gamma.data[ch] * inv_std / cnt;
+            for i in 0..inner {
+                dx[base + i] = k
+                    * (cnt * dy.data[base + i]
+                        - dbeta[ch]
+                        - xhat.data[base + i] * dgamma[ch]);
+            }
+        }
+    }
+    (
+        Tensor::new(dy.shape.clone(), dx),
+        Tensor::new(vec![c], dgamma),
+        Tensor::new(vec![c], dbeta),
+    )
+}
+
+/// LayerNorm over the last dim: returns (y, mean, inv_std, xhat).
+pub fn layernorm(
+    x: &Tensor,
+    gamma: &Tensor,
+    beta: &Tensor,
+    eps: f32,
+) -> (Tensor, Vec<f32>, Vec<f32>, Tensor) {
+    let d = x.dim(-1);
+    assert_eq!(gamma.numel(), d);
+    let rows = x.numel() / d;
+    let mut out = vec![0.0f32; x.numel()];
+    let mut xhat = vec![0.0f32; x.numel()];
+    let mut means = vec![0.0f32; rows];
+    let mut inv_stds = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xs = &x.data[r * d..(r + 1) * d];
+        let mean = xs.iter().sum::<f32>() / d as f32;
+        let var = xs.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv_std = 1.0 / (var + eps).sqrt();
+        means[r] = mean;
+        inv_stds[r] = inv_std;
+        for i in 0..d {
+            let xh = (xs[i] - mean) * inv_std;
+            xhat[r * d + i] = xh;
+            out[r * d + i] = gamma.data[i] * xh + beta.data[i];
+        }
+    }
+    (
+        Tensor::new(x.shape.clone(), out),
+        means,
+        inv_stds,
+        Tensor::new(x.shape.clone(), xhat),
+    )
+}
+
+/// LayerNorm backward: (dx, dgamma, dbeta).
+pub fn layernorm_backward(
+    dy: &Tensor,
+    xhat: &Tensor,
+    gamma: &Tensor,
+    inv_stds: &[f32],
+) -> (Tensor, Tensor, Tensor) {
+    let d = dy.dim(-1);
+    let rows = dy.numel() / d;
+    let mut dgamma = vec![0.0f32; d];
+    let mut dbeta = vec![0.0f32; d];
+    let mut dx = vec![0.0f32; dy.numel()];
+    for r in 0..rows {
+        let dys = &dy.data[r * d..(r + 1) * d];
+        let xhs = &xhat.data[r * d..(r + 1) * d];
+        let mut sum_dy_g = 0.0f32;
+        let mut sum_dy_g_xh = 0.0f32;
+        for i in 0..d {
+            let g = dys[i] * gamma.data[i];
+            sum_dy_g += g;
+            sum_dy_g_xh += g * xhs[i];
+            dgamma[i] += dys[i] * xhs[i];
+            dbeta[i] += dys[i];
+        }
+        let inv_d = 1.0 / d as f32;
+        for i in 0..d {
+            let g = dys[i] * gamma.data[i];
+            dx[r * d + i] =
+                inv_stds[r] * (g - inv_d * sum_dy_g - xhs[i] * inv_d * sum_dy_g_xh);
+        }
+    }
+    (
+        Tensor::new(dy.shape.clone(), dx),
+        Tensor::new(vec![d], dgamma),
+        Tensor::new(vec![d], dbeta),
+    )
+}
+
+/// Softmax along the last dim.
+pub fn softmax_lastdim(x: &Tensor) -> Tensor {
+    let d = x.dim(-1);
+    let rows = x.numel() / d;
+    let mut out = vec![0.0f32; x.numel()];
+    for r in 0..rows {
+        let xs = &x.data[r * d..(r + 1) * d];
+        let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for i in 0..d {
+            let e = (xs[i] - mx).exp();
+            out[r * d + i] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for i in 0..d {
+            out[r * d + i] *= inv;
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+/// Softmax backward given y = softmax(x): dx = y ⊙ (dy − Σ dy·y).
+pub fn softmax_backward(dy: &Tensor, y: &Tensor) -> Tensor {
+    let d = y.dim(-1);
+    let rows = y.numel() / d;
+    let mut dx = vec![0.0f32; y.numel()];
+    for r in 0..rows {
+        let ys = &y.data[r * d..(r + 1) * d];
+        let dys = &dy.data[r * d..(r + 1) * d];
+        let dot: f32 = ys.iter().zip(dys).map(|(&a, &b)| a * b).sum();
+        for i in 0..d {
+            dx[r * d + i] = ys[i] * (dys[i] - dot);
+        }
+    }
+    Tensor::new(y.shape.clone(), dx)
+}
+
+/// Mean softmax cross-entropy over a batch of logits [N, K] with integer
+/// labels; returns (loss, dlogits).
+pub fn cross_entropy(logits: &Tensor, labels: &[usize]) -> (f32, Tensor) {
+    assert_eq!(logits.rank(), 2);
+    let (n, k) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), n);
+    let probs = softmax_lastdim(logits);
+    let mut loss = 0.0f32;
+    let mut dl = probs.data.clone();
+    let inv_n = 1.0 / n as f32;
+    for i in 0..n {
+        let p = probs.data[i * k + labels[i]].max(1e-12);
+        loss -= p.ln();
+        dl[i * k + labels[i]] -= 1.0;
+    }
+    for v in &mut dl {
+        *v *= inv_n;
+    }
+    (loss * inv_n, Tensor::new(vec![n, k], dl))
+}
+
+/// Classification accuracy of logits [N, K] against labels.
+pub fn accuracy(logits: &Tensor, labels: &[usize]) -> f32 {
+    let (n, k) = (logits.shape[0], logits.shape[1]);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits.data[i * k..(i + 1) * k];
+        let mut best = 0usize;
+        for j in 1..k {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f32 / n as f32
+}
+
+/// Top-k accuracy.
+pub fn topk_accuracy(logits: &Tensor, labels: &[usize], kk: usize) -> f32 {
+    let (n, k) = (logits.shape[0], logits.shape[1]);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits.data[i * k..(i + 1) * k];
+        let mut idx: Vec<usize> = (0..k).collect();
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        if idx[..kk.min(k)].contains(&labels[i]) {
+            correct += 1;
+        }
+    }
+    correct as f32 / n as f32
+}
+
+/// Embedding lookup: ids [N,T] (stored as f32 indices), table [V,D] → [N,T,D].
+pub fn embedding(ids: &Tensor, table: &Tensor) -> Tensor {
+    assert_eq!(table.rank(), 2);
+    let (v, d) = (table.shape[0], table.shape[1]);
+    let n = ids.numel();
+    let mut out = vec![0.0f32; n * d];
+    for (i, &id) in ids.data.iter().enumerate() {
+        let id = id as usize;
+        assert!(id < v, "embedding id {id} out of range {v}");
+        out[i * d..(i + 1) * d].copy_from_slice(&table.data[id * d..(id + 1) * d]);
+    }
+    let mut shape = ids.shape.clone();
+    shape.push(d);
+    Tensor::new(shape, out)
+}
+
+/// Embedding backward: accumulate dy rows into dtable.
+pub fn embedding_backward(ids: &Tensor, dy: &Tensor, table_shape: &[usize]) -> Tensor {
+    let d = table_shape[1];
+    let mut dt = vec![0.0f32; table_shape.iter().product()];
+    for (i, &id) in ids.data.iter().enumerate() {
+        let id = id as usize;
+        for j in 0..d {
+            dt[id * d + j] += dy.data[i * d + j];
+        }
+    }
+    Tensor::new(table_shape.to_vec(), dt)
+}
+
+/// Transpose arbitrary-rank tensor by `perm`.
+pub fn transpose(x: &Tensor, perm: &[usize]) -> Tensor {
+    assert_eq!(perm.len(), x.rank());
+    let in_strides = x.strides();
+    let out_shape: Vec<usize> = perm.iter().map(|&p| x.shape[p]).collect();
+    let mut out = vec![0.0f32; x.numel()];
+    let mut out_strides = vec![1usize; perm.len()];
+    for i in (0..perm.len().saturating_sub(1)).rev() {
+        out_strides[i] = out_strides[i + 1] * out_shape[i + 1];
+    }
+    // Walk output in order, gather from input.
+    let rank = perm.len();
+    let mut idx = vec![0usize; rank];
+    for o in 0..x.numel() {
+        let mut rem = o;
+        for i in 0..rank {
+            idx[i] = rem / out_strides[i];
+            rem %= out_strides[i];
+        }
+        let mut src = 0usize;
+        for i in 0..rank {
+            src += idx[i] * in_strides[perm[i]];
+        }
+        out[o] = x.data[src];
+    }
+    Tensor::new(out_shape, out)
+}
+
+/// Inverse permutation.
+pub fn inverse_perm(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::assert_allclose;
+    use crate::util::Rng;
+
+    fn t(shape: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(shape.to_vec(), data.to_vec())
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = t(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let b = t(&[3, 2], &[7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut rng = Rng::new(2);
+        for _ in 0..5 {
+            let (m, k, n) = (1 + rng.below(20), 1 + rng.below(20), 1 + rng.below(20));
+            let a = Tensor::new(vec![m, k], rng.uniform_vec(m * k, -1.0, 1.0));
+            let b = Tensor::new(vec![k, n], rng.uniform_vec(k * n, -1.0, 1.0));
+            let c = matmul(&a, &b);
+            let mut naive = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    for p in 0..k {
+                        naive[i * n + j] += a.data[i * k + p] * b.data[p * n + j];
+                    }
+                }
+            }
+            assert_allclose(&c, &Tensor::new(vec![m, n], naive), 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn linear_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::new(vec![4, 6], rng.uniform_vec(24, -1.0, 1.0));
+        let w = Tensor::new(vec![5, 6], rng.uniform_vec(30, -1.0, 1.0));
+        let y = linear(&x, &w, None);
+        let y2 = matmul(&x, &w.t2());
+        assert_allclose(&y, &y2, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weight = passthrough
+        let x = t(&[1, 2, 2, 2], &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let w = t(&[2, 2, 1, 1], &[1., 0., 0., 1.]);
+        let y = conv2d(&x, &w, None, 1, 0, 1);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_known_3x3() {
+        // single channel 3x3 input, 3x3 averaging-ish kernel, pad 1
+        let x = t(&[1, 1, 3, 3], &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let w = Tensor::ones(&[1, 1, 3, 3]);
+        let y = conv2d(&x, &w, None, 1, 1, 1);
+        assert_eq!(y.shape, vec![1, 1, 3, 3]);
+        // center = sum of all = 45
+        assert_eq!(y.data[4], 45.0);
+        // top-left = 1+2+4+5 = 12
+        assert_eq!(y.data[0], 12.0);
+    }
+
+    #[test]
+    fn conv_stride_and_shape() {
+        let x = Tensor::ones(&[2, 3, 8, 8]);
+        let w = Tensor::ones(&[4, 3, 3, 3]);
+        let y = conv2d(&x, &w, None, 2, 1, 1);
+        assert_eq!(y.shape, vec![2, 4, 4, 4]);
+    }
+
+    #[test]
+    fn grouped_conv_matches_blockdiag() {
+        // groups=2 conv equals two independent convs concatenated
+        let mut rng = Rng::new(5);
+        let x = Tensor::new(vec![1, 4, 5, 5], rng.uniform_vec(100, -1.0, 1.0));
+        let w = Tensor::new(vec![6, 2, 3, 3], rng.uniform_vec(6 * 2 * 9, -1.0, 1.0));
+        let y = conv2d(&x, &w, None, 1, 1, 2);
+        // manual: first group = x[:, :2] conv w[:3], second = x[:, 2:] conv w[3:]
+        let x1 = x.take_indices(1, &[0, 1]);
+        let x2 = x.take_indices(1, &[2, 3]);
+        let w1 = w.take_indices(0, &[0, 1, 2]);
+        let w2 = w.take_indices(0, &[3, 4, 5]);
+        let y1 = conv2d(&x1, &w1, None, 1, 1, 1);
+        let y2 = conv2d(&x2, &w2, None, 1, 1, 1);
+        let y1c = y.take_indices(1, &[0, 1, 2]);
+        let y2c = y.take_indices(1, &[3, 4, 5]);
+        assert_allclose(&y1c, &y1, 1e-5, 1e-5);
+        assert_allclose(&y2c, &y2, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn depthwise_conv() {
+        let x = t(&[1, 2, 2, 2], &[1., 2., 3., 4., 10., 20., 30., 40.]);
+        let w = t(&[2, 1, 1, 1], &[2., 3.]);
+        let y = conv2d(&x, &w, None, 1, 0, 2);
+        assert_eq!(y.data, vec![2., 4., 6., 8., 30., 60., 90., 120.]);
+    }
+
+    #[test]
+    fn conv_backward_gradcheck() {
+        let mut rng = Rng::new(7);
+        let x = Tensor::new(vec![1, 2, 4, 4], rng.uniform_vec(32, -1.0, 1.0));
+        let w = Tensor::new(vec![3, 2, 3, 3], rng.uniform_vec(54, -0.5, 0.5));
+        let dy = Tensor::ones(&[1, 3, 4, 4]);
+        let (dx, dw, _db) = conv2d_backward(&x, &w, &dy, 1, 1, 1);
+        // finite-difference check a few coordinates
+        let f = |x: &Tensor, w: &Tensor| conv2d(x, w, None, 1, 1, 1).sum();
+        let eps = 1e-3;
+        for &i in &[0usize, 7, 31] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (f(&xp, &w) - f(&xm, &w)) / (2.0 * eps);
+            assert!((num - dx.data[i]).abs() < 2e-2, "dx[{i}]: {num} vs {}", dx.data[i]);
+        }
+        for &i in &[0usize, 20, 53] {
+            let mut wp = w.clone();
+            wp.data[i] += eps;
+            let mut wm = w.clone();
+            wm.data[i] -= eps;
+            let num = (f(&x, &wp) - f(&x, &wm)) / (2.0 * eps);
+            assert!((num - dw.data[i]).abs() < 2e-2, "dw[{i}]: {num} vs {}", dw.data[i]);
+        }
+    }
+
+    #[test]
+    fn maxpool_and_backward() {
+        let x = t(&[1, 1, 2, 2], &[1., 5., 3., 2.]);
+        let (y, arg) = maxpool2d(&x, 2, 2, 0);
+        assert_eq!(y.data, vec![5.0]);
+        let dy = t(&[1, 1, 1, 1], &[2.0]);
+        let dx = maxpool2d_backward(&dy, &arg, 4);
+        assert_eq!(dx.data, vec![0., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn avgpool_known() {
+        let x = t(&[1, 1, 2, 2], &[1., 2., 3., 4.]);
+        let y = avgpool2d(&x, 2, 2, 0);
+        assert_eq!(y.data, vec![2.5]);
+        let dx = avgpool2d_backward(&t(&[1, 1, 1, 1], &[4.0]), &[1, 1, 2, 2], 2, 2, 0);
+        assert_eq!(dx.data, vec![1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn global_avgpool_roundtrip() {
+        let x = t(&[1, 2, 1, 2], &[1., 3., 10., 30.]);
+        let y = global_avgpool(&x);
+        assert_eq!(y.shape, vec![1, 2]);
+        assert_eq!(y.data, vec![2., 20.]);
+        let dx = global_avgpool_backward(&y, &[1, 2, 1, 2]);
+        assert_eq!(dx.data, vec![1., 1., 10., 10.]);
+    }
+
+    #[test]
+    fn batchnorm_train_normalizes() {
+        let mut rng = Rng::new(9);
+        let x = Tensor::new(vec![4, 3, 2, 2], rng.uniform_vec(48, -3.0, 7.0));
+        let g = Tensor::ones(&[3]);
+        let b = Tensor::zeros(&[3]);
+        let (y, _m, _v, _xh) = batchnorm_train(&x, &g, &b, 1e-5);
+        // per-channel mean ≈ 0, var ≈ 1
+        for ch in 0..3 {
+            let mut vals = Vec::new();
+            for img in 0..4 {
+                let base = (img * 3 + ch) * 4;
+                vals.extend_from_slice(&y.data[base..base + 4]);
+            }
+            let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var: f32 =
+                vals.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / vals.len() as f32;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn batchnorm_backward_gradcheck() {
+        let mut rng = Rng::new(10);
+        let x = Tensor::new(vec![2, 2, 2, 2], rng.uniform_vec(16, -1.0, 1.0));
+        let g = Tensor::new(vec![2], vec![1.5, 0.7]);
+        let b = Tensor::new(vec![2], vec![0.1, -0.2]);
+        let dy = Tensor::new(vec![2, 2, 2, 2], rng.uniform_vec(16, -1.0, 1.0));
+        let (_y, _m, v, xh) = batchnorm_train(&x, &g, &b, 1e-5);
+        let (dx, dgamma, dbeta) = batchnorm_backward(&dy, &xh, &g, &v, 1e-5);
+        let f = |x: &Tensor| {
+            let (y, _, _, _) = batchnorm_train(x, &g, &b, 1e-5);
+            y.data.iter().zip(&dy.data).map(|(&a, &b)| a * b).sum::<f32>()
+        };
+        let eps = 1e-3;
+        for &i in &[0usize, 5, 15] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!(
+                (num - dx.data[i]).abs() < 5e-2,
+                "dx[{i}]: {num} vs {}",
+                dx.data[i]
+            );
+        }
+        assert_eq!(dgamma.numel(), 2);
+        assert_eq!(dbeta.numel(), 2);
+    }
+
+    #[test]
+    fn layernorm_backward_gradcheck() {
+        let mut rng = Rng::new(11);
+        let x = Tensor::new(vec![3, 5], rng.uniform_vec(15, -1.0, 1.0));
+        let g = Tensor::new(vec![5], rng.uniform_vec(5, 0.5, 1.5));
+        let b = Tensor::zeros(&[5]);
+        let dy = Tensor::new(vec![3, 5], rng.uniform_vec(15, -1.0, 1.0));
+        let (_y, _m, inv, xh) = layernorm(&x, &g, &b, 1e-5);
+        let (dx, _dg, _db) = layernorm_backward(&dy, &xh, &g, &inv);
+        let f = |x: &Tensor| {
+            let (y, _, _, _) = layernorm(x, &g, &b, 1e-5);
+            y.data.iter().zip(&dy.data).map(|(&a, &b)| a * b).sum::<f32>()
+        };
+        let eps = 1e-3;
+        for &i in &[0usize, 7, 14] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((num - dx.data[i]).abs() < 5e-2, "dx[{i}]");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(12);
+        let x = Tensor::new(vec![4, 7], rng.uniform_vec(28, -5.0, 5.0));
+        let y = softmax_lastdim(&x);
+        for r in 0..4 {
+            let s: f32 = y.data[r * 7..(r + 1) * 7].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform() {
+        let logits = Tensor::zeros(&[2, 4]);
+        let (loss, dl) = cross_entropy(&logits, &[0, 3]);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5);
+        assert_eq!(dl.shape, vec![2, 4]);
+        // gradient rows sum to zero
+        for r in 0..2 {
+            let s: f32 = dl.data[r * 4..(r + 1) * 4].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn accuracy_and_topk() {
+        let logits = t(&[2, 3], &[0.1, 0.9, 0.0, 0.8, 0.1, 0.3]);
+        assert_eq!(accuracy(&logits, &[1, 0]), 1.0);
+        assert_eq!(accuracy(&logits, &[0, 0]), 0.5);
+        assert_eq!(topk_accuracy(&logits, &[2, 2], 1), 0.0);
+        assert_eq!(topk_accuracy(&logits, &[0, 2], 2), 1.0);
+    }
+
+    #[test]
+    fn embedding_and_backward() {
+        let ids = t(&[1, 3], &[0., 2., 0.]);
+        let table = t(&[3, 2], &[1., 2., 3., 4., 5., 6.]);
+        let y = embedding(&ids, &table);
+        assert_eq!(y.shape, vec![1, 3, 2]);
+        assert_eq!(y.data, vec![1., 2., 5., 6., 1., 2.]);
+        let dy = Tensor::ones(&[1, 3, 2]);
+        let dt = embedding_backward(&ids, &dy, &[3, 2]);
+        assert_eq!(dt.data, vec![2., 2., 0., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(13);
+        let x = Tensor::new(vec![2, 3, 4], rng.uniform_vec(24, -1.0, 1.0));
+        let perm = vec![2, 0, 1];
+        let y = transpose(&x, &perm);
+        assert_eq!(y.shape, vec![4, 2, 3]);
+        let back = transpose(&y, &inverse_perm(&perm));
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn batch_matmul_matches_loop() {
+        let mut rng = Rng::new(14);
+        let a = Tensor::new(vec![2, 3, 4], rng.uniform_vec(24, -1.0, 1.0));
+        let b = Tensor::new(vec![2, 4, 5], rng.uniform_vec(40, -1.0, 1.0));
+        let c = batch_matmul(&a, &b);
+        assert_eq!(c.shape, vec![2, 3, 5]);
+        for bi in 0..2 {
+            let am = Tensor::new(vec![3, 4], a.data[bi * 12..(bi + 1) * 12].to_vec());
+            let bm = Tensor::new(vec![4, 5], b.data[bi * 20..(bi + 1) * 20].to_vec());
+            let cm = matmul(&am, &bm);
+            assert_eq!(&c.data[bi * 15..(bi + 1) * 15], &cm.data[..]);
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Training / fine-tuning loop over the SPA-IR engine: SGD with momentum
+//! + cosine LR (the paper's §B.3 optimization recipe), usable for base
+//! training, prune-train, and post-prune fine-tuning — the graphs can be
+//! pruned to any shape and train identically.
+
+use crate::data::{ImageDataset, TextDataset};
+use crate::engine::{self, Mode};
+use crate::ir::{DataId, Graph};
+use crate::tensor::{ops, Tensor};
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Cosine-anneal the LR to ~0 over `steps` (paper uses
+    /// CosineAnnealingLR).
+    pub cosine: bool,
+    pub bn_momentum: f32,
+    pub seed: u64,
+    /// Log loss every `log_every` steps into the history (0 = never).
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 200,
+            batch: 32,
+            lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            cosine: true,
+            bn_momentum: 0.1,
+            seed: 0x7124,
+            log_every: 10,
+        }
+    }
+}
+
+/// Loss-curve entry.
+#[derive(Debug, Clone, Copy)]
+pub struct LogEntry {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+}
+
+/// Result of a training run.
+pub struct TrainReport {
+    pub history: Vec<LogEntry>,
+    pub final_loss: f32,
+}
+
+/// Generic batch source so images and text share the loop.
+pub trait BatchSource {
+    fn next_batch(&self, rng: &mut Rng, bs: usize) -> (Tensor, Vec<usize>);
+}
+
+impl BatchSource for ImageDataset {
+    fn next_batch(&self, rng: &mut Rng, bs: usize) -> (Tensor, Vec<usize>) {
+        self.train_batch(rng, bs)
+    }
+}
+
+impl BatchSource for TextDataset {
+    fn next_batch(&self, rng: &mut Rng, bs: usize) -> (Tensor, Vec<usize>) {
+        self.train_batch(rng, bs)
+    }
+}
+
+/// SGD train/fine-tune a graph in place.
+pub fn train<D: BatchSource>(g: &mut Graph, ds: &D, cfg: &TrainCfg) -> anyhow::Result<TrainReport> {
+    let params = g.param_ids();
+    // momentum buffers (skip BN running stats: they are not SGD params)
+    let trainable: Vec<DataId> = params
+        .into_iter()
+        .filter(|&id| {
+            let n = &g.data(id).name;
+            !n.ends_with(".mean") && !n.ends_with(".var")
+        })
+        .collect();
+    let mut velocity: HashMap<DataId, Tensor> = trainable
+        .iter()
+        .map(|&id| (id, Tensor::zeros(&g.data(id).shape)))
+        .collect();
+    let mut rng = Rng::new(cfg.seed);
+    let mut history = Vec::new();
+    let mut last_loss = f32::NAN;
+    for step in 0..cfg.steps {
+        let lr = if cfg.cosine {
+            0.5 * cfg.lr
+                * (1.0
+                    + (std::f32::consts::PI * step as f32 / cfg.steps.max(1) as f32).cos())
+        } else {
+            cfg.lr
+        };
+        let (x, labels) = ds.next_batch(&mut rng, cfg.batch);
+        let fwd = engine::forward(g, &[(g.inputs[0], x)], Mode::Train)?;
+        let (loss, dlogits) = ops::cross_entropy(fwd.logits(g), &labels);
+        last_loss = loss;
+        let grads = engine::backward(g, &fwd, &[(g.outputs[0], dlogits)])?;
+        engine::update_bn_stats(g, &fwd, cfg.bn_momentum);
+        for &id in &trainable {
+            let Some(grad) = grads.by_data.get(&id) else {
+                continue;
+            };
+            let v = velocity.get_mut(&id).unwrap();
+            let theta = g.datas[id].param_mut().unwrap();
+            for i in 0..theta.data.len() {
+                let gi = grad.data[i] + cfg.weight_decay * theta.data[i];
+                v.data[i] = cfg.momentum * v.data[i] + gi;
+                theta.data[i] -= lr * v.data[i];
+            }
+        }
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            history.push(LogEntry { step, loss, lr });
+        }
+    }
+    Ok(TrainReport {
+        history,
+        final_loss: last_loss,
+    })
+}
+
+/// Short-and-simple training used by tests and pipelines.
+pub fn quick_train(g: &mut Graph, ds: &ImageDataset, steps: usize, lr: f32) -> anyhow::Result<TrainReport> {
+    train(
+        g,
+        ds,
+        &TrainCfg {
+            steps,
+            lr,
+            batch: 32,
+            ..Default::default()
+        },
+    )
+}
+
+/// Test-set accuracy over up to `max_samples` samples.
+pub fn evaluate(g: &Graph, ds: &ImageDataset, max_samples: usize) -> anyhow::Result<f32> {
+    let mut correct = 0.0f32;
+    let mut total = 0usize;
+    let bs = 64;
+    let mut offset = 0;
+    while offset < ds.test_len().min(max_samples) {
+        let (x, y) = ds.test_batch(offset, bs);
+        let n = y.len();
+        let logits = engine::predict(g, x)?;
+        correct += ops::accuracy(&logits, &y) * n as f32;
+        total += n;
+        offset += n;
+        if n < bs {
+            break;
+        }
+    }
+    Ok(correct / total.max(1) as f32)
+}
+
+/// Test-set accuracy for text datasets.
+pub fn evaluate_text(g: &Graph, ds: &TextDataset, max_samples: usize) -> anyhow::Result<f32> {
+    let mut correct = 0.0f32;
+    let mut total = 0usize;
+    let bs = 64;
+    let mut offset = 0;
+    while offset < ds.test_len().min(max_samples) {
+        let (x, y) = ds.test_batch(offset, bs);
+        let n = y.len();
+        let logits = engine::predict(g, x)?;
+        correct += ops::accuracy(&logits, &y) * n as f32;
+        total += n;
+        offset += n;
+        if n < bs {
+            break;
+        }
+    }
+    Ok(correct / total.max(1) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ImageDataset;
+    use crate::zoo::{self, ImageCfg};
+
+    #[test]
+    fn loss_decreases_on_small_cnn() {
+        let cfg = ImageCfg {
+            hw: 8,
+            classes: 4,
+            ..Default::default()
+        };
+        let ds = ImageDataset::synth_cifar(4, 256, 8, 3, 11);
+        let mut g = zoo::mlp(cfg, &[32], 1);
+        let rep = train(
+            &mut g,
+            &ds,
+            &TrainCfg {
+                steps: 80,
+                lr: 0.1,
+                log_every: 5,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let first = rep.history.first().unwrap().loss;
+        assert!(
+            rep.final_loss < first * 0.8,
+            "loss {first} -> {} did not decrease",
+            rep.final_loss
+        );
+    }
+
+    #[test]
+    fn training_beats_chance() {
+        let cfg = ImageCfg {
+            hw: 8,
+            classes: 4,
+            ..Default::default()
+        };
+        let ds = ImageDataset::synth_cifar(4, 512, 8, 3, 12);
+        let mut g = zoo::resnet18(cfg, 2);
+        quick_train(&mut g, &ds, 80, 0.05).unwrap();
+        let acc = evaluate(&g, &ds, 128).unwrap();
+        assert!(acc > 0.5, "accuracy {acc} barely above chance (0.25)");
+    }
+
+    #[test]
+    fn cosine_schedule_decays() {
+        let cfg = TrainCfg {
+            steps: 100,
+            lr: 1.0,
+            cosine: true,
+            log_every: 1,
+            ..Default::default()
+        };
+        let ds = ImageDataset::synth_cifar(2, 64, 8, 3, 13);
+        let mut g = zoo::mlp(
+            ImageCfg {
+                hw: 8,
+                classes: 2,
+                ..Default::default()
+            },
+            &[8],
+            3,
+        );
+        let rep = train(&mut g, &ds, &cfg).unwrap();
+        let first_lr = rep.history.first().unwrap().lr;
+        let last_lr = rep.history.last().unwrap().lr;
+        assert!(first_lr > 0.9 && last_lr < 0.05, "{first_lr} {last_lr}");
+    }
+
+    #[test]
+    fn finetune_recovers_pruned_model() {
+        use crate::prune::{self, build_groups, score_groups, Agg, Norm};
+        use std::collections::HashMap as Map;
+        let icfg = ImageCfg {
+            hw: 8,
+            classes: 4,
+            ..Default::default()
+        };
+        let ds = ImageDataset::synth_cifar(4, 512, 8, 3, 14);
+        let mut g = zoo::resnet18(icfg, 4);
+        quick_train(&mut g, &ds, 100, 0.05).unwrap();
+        let base = evaluate(&g, &ds, 128).unwrap();
+        let groups = build_groups(&g).unwrap();
+        let mut l1 = Map::new();
+        for pid in g.param_ids() {
+            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+        }
+        let ranked = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        let sel = prune::select_by_flops_target(&g, &groups, &ranked, 1.6, 1).unwrap();
+        prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        let pruned_acc = evaluate(&g, &ds, 128).unwrap();
+        quick_train(&mut g, &ds, 60, 0.02).unwrap();
+        let finetuned = evaluate(&g, &ds, 128).unwrap();
+        assert!(
+            finetuned >= pruned_acc - 0.05,
+            "finetune should not hurt: {pruned_acc} -> {finetuned}"
+        );
+        assert!(
+            finetuned > base - 0.2,
+            "finetuned {finetuned} too far below base {base}"
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! Tiny benchmarking + table-reporting harness.
+//!
+//! `criterion` is unavailable in the offline sandbox, so `cargo bench`
+//! targets use this: warmup + timed iterations with mean/stddev/min, and
+//! an ASCII table printer that renders each paper table/figure in the
+//! same rows/columns layout the paper reports.
+
+use std::time::Instant;
+
+/// Timing statistics for one benchmark case (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>12.3} ms/iter (±{:.3}, min {:.3}, n={})",
+            self.name,
+            self.mean_ns / 1e6,
+            self.std_ns / 1e6,
+            self.min_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured and `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: min,
+    };
+    println!("{stats}");
+    stats
+}
+
+/// Time a single invocation, returning (result, seconds).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// ASCII table builder used by every paper-table bench to print the
+/// reproduced rows next to the paper's reported numbers.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<width$} |", cells[i], width = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let stats = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(stats.mean_ns > 0.0);
+        assert_eq!(stats.iters, 5);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Tab X", &["model", "acc", "RF"]);
+        t.rows_str(&["resnet", "93.2%", "2.1x"]);
+        t.rows_str(&["vgg", "91.0%", "2.0x"]);
+        let r = t.render();
+        assert!(r.contains("Tab X"));
+        assert!(r.contains("resnet"));
+        assert!(r.lines().filter(|l| l.starts_with('+')).count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.rows_str(&["only-one"]);
+    }
+}

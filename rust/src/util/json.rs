@@ -1,0 +1,518 @@
+//! Minimal JSON parser and writer.
+//!
+//! The build sandbox has no `serde`/`serde_json`, so SPA-IR serialization,
+//! experiment configs, and frontend dialect files use this self-contained
+//! implementation. It supports the full JSON grammar (objects, arrays,
+//! strings with escapes, numbers, booleans, null) and preserves object key
+//! insertion order, which keeps graph round-trips deterministic.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Object keys keep a sorted map plus an insertion-order
+/// index so serialization is stable and diffs are readable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(JsonObj),
+}
+
+/// JSON object preserving insertion order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JsonObj {
+    map: BTreeMap<String, Json>,
+    order: Vec<String>,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, value: impl Into<Json>) {
+        let key = key.into();
+        if !self.map.contains_key(&key) {
+            self.order.push(key.clone());
+        }
+        self.map.insert(key, value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.map.get(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.order.iter()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Json)> {
+        self.order.iter().map(move |k| (k, &self.map[k]))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<f32> for Json {
+    fn from(v: f32) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Self {
+        Json::Arr(v)
+    }
+}
+impl From<JsonObj> for Json {
+    fn from(v: JsonObj) -> Self {
+        Json::Obj(v)
+    }
+}
+impl From<&[usize]> for Json {
+    fn from(v: &[usize]) -> Self {
+        Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+}
+impl From<&[f32]> for Json {
+    fn from(v: &[f32]) -> Self {
+        Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+}
+
+impl Json {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&JsonObj> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Fetch `key` from an object value; error if missing or not an object.
+    pub fn field(&self, key: &str) -> anyhow::Result<&Json> {
+        self.as_obj()
+            .and_then(|o| o.get(key))
+            .ok_or_else(|| anyhow::anyhow!("missing json field `{key}`"))
+    }
+
+    /// Parse a usize-vector field (e.g. tensor shapes).
+    pub fn usize_vec(&self) -> anyhow::Result<Vec<usize>> {
+        self.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected array"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("expected number"))
+            })
+            .collect()
+    }
+
+    /// Parse an f32-vector field (e.g. weights).
+    pub fn f32_vec(&self) -> anyhow::Result<Vec<f32>> {
+        self.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected array"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|x| x as f32)
+                    .ok_or_else(|| anyhow::anyhow!("expected number"))
+            })
+            .collect()
+    }
+
+    /// Serialize to compact JSON text.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string())
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse JSON text into a [`Json`] value.
+pub fn parse(text: &str) -> anyhow::Result<Json> {
+    let mut p = Parser {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        anyhow::bail!("trailing characters at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> anyhow::Result<u8> {
+        let b = self
+            .peek()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of json"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            anyhow::bail!(
+                "expected `{}` got `{}` at byte {}",
+                b as char,
+                got as char,
+                self.pos - 1
+            );
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.keyword("true", Json::Bool(true)),
+            Some(b'f') => self.keyword("false", Json::Bool(false)),
+            Some(b'n') => self.keyword("null", Json::Null),
+            Some(_) => self.number(),
+            None => anyhow::bail!("unexpected end of json"),
+        }
+    }
+
+    fn keyword(&mut self, kw: &str, v: Json) -> anyhow::Result<Json> {
+        if self.bytes[self.pos..].starts_with(kw.as_bytes()) {
+            self.pos += kw.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("invalid keyword at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| {
+            anyhow::anyhow!("bad number `{s}` at byte {start}: {e}")
+        })?))
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let b = self.bump()?;
+            match b {
+                b'"' => return Ok(s),
+                b'\\' => match self.bump()? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'n' => s.push('\n'),
+                    b'r' => s.push('\r'),
+                    b't' => s.push('\t'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let h = self.bump()?;
+                            code = code * 16
+                                + (h as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
+                        }
+                        s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    other => anyhow::bail!("bad escape `\\{}`", other as char),
+                },
+                _ => {
+                    // Re-decode multi-byte UTF-8 sequences.
+                    if b < 0x80 {
+                        s.push(b as char);
+                    } else {
+                        let len = if b >= 0xf0 {
+                            4
+                        } else if b >= 0xe0 {
+                            3
+                        } else {
+                            2
+                        };
+                        let start = self.pos - 1;
+                        self.pos = start + len;
+                        s.push_str(std::str::from_utf8(&self.bytes[start..self.pos])?);
+                    }
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Json::Arr(items)),
+                other => anyhow::bail!("expected `,` or `]`, got `{}`", other as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut obj = JsonObj::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(obj));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            obj.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Json::Obj(obj)),
+                other => anyhow::bail!("expected `,` or `}}`, got `{}`", other as char),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(parse("3.5").unwrap(), Json::Num(3.5));
+        assert_eq!(parse("-12").unwrap(), Json::Num(-12.0));
+        assert_eq!(parse("1e3").unwrap(), Json::Num(1000.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "c\nd"}], "e": null}"#).unwrap();
+        let obj = v.as_obj().unwrap();
+        let arr = obj.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(
+            arr[2].as_obj().unwrap().get("b").unwrap().as_str().unwrap(),
+            "c\nd"
+        );
+        assert_eq!(obj.get("e"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn round_trip() {
+        let cases = [
+            r#"{"shape":[1,3,32,32],"name":"conv1","nested":{"x":true}}"#,
+            r#"[1,2.5,"s",null,false,[]]"#,
+            r#"{}"#,
+        ];
+        for c in cases {
+            let v = parse(c).unwrap();
+            let v2 = parse(&v.to_string()).unwrap();
+            assert_eq!(v, v2, "case {c}");
+        }
+    }
+
+    #[test]
+    fn preserves_key_order() {
+        let v = parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
+        let keys: Vec<_> = v.as_obj().unwrap().keys().cloned().collect();
+        assert_eq!(keys, vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn escapes_round_trip() {
+        let v = Json::Str("a\"b\\c\nd\te\u{1}".into());
+        assert_eq!(parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = parse("\"héllo ☃\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo ☃");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn usize_and_f32_vec() {
+        let v = parse("[1,2,3]").unwrap();
+        assert_eq!(v.usize_vec().unwrap(), vec![1, 2, 3]);
+        let v = parse("[1.5,-2]").unwrap();
+        assert_eq!(v.f32_vec().unwrap(), vec![1.5, -2.0]);
+    }
+}

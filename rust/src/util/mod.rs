@@ -1,0 +1,13 @@
+//! Self-contained utility substrate: JSON, RNG, benchmarking/tables, and a
+//! mini property-testing harness. The build environment is offline with a
+//! small crate cache (no serde/clap/criterion/proptest/rand), so these are
+//! implemented here and used across the whole library.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use bench::{bench, time_once, BenchStats, Table};
+pub use json::{parse as parse_json, Json, JsonObj};
+pub use rng::Rng;

@@ -1,0 +1,114 @@
+//! Mini property-based testing harness.
+//!
+//! `proptest` is unavailable offline; this gives the same shape of tests —
+//! "for N random inputs drawn from a strategy, the invariant holds, and on
+//! failure report the seed that reproduces it" — with deterministic
+//! seeding so CI failures replay exactly.
+
+use super::rng::Rng;
+
+/// Run `prop` against `cases` randomly-generated inputs.
+///
+/// `gen` draws one input from the RNG; `prop` returns `Err(msg)` when the
+/// invariant is violated. Panics with the violating seed + message.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, base_seed: u64, gen: G, prop: P)
+where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Strategy helpers for common SPA domains.
+pub mod strategies {
+    use super::Rng;
+
+    /// A random tensor shape with `rank` dims each in [1, max_dim].
+    pub fn shape(rng: &mut Rng, rank: usize, max_dim: usize) -> Vec<usize> {
+        (0..rank).map(|_| 1 + rng.below(max_dim)).collect()
+    }
+
+    /// Random f32 data of length `n` in [-scale, scale].
+    pub fn data(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        rng.uniform_vec(n, -scale, scale)
+    }
+
+    /// A random subset of [0, n) of size in [1, n-1] (never empty, never
+    /// everything) — the shape of a valid channel prune set.
+    pub fn proper_subset(rng: &mut Rng, n: usize) -> Vec<usize> {
+        assert!(n >= 2);
+        let k = 1 + rng.below(n - 1);
+        let mut s = rng.sample_indices(n, k);
+        s.sort();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            "sort-idempotent",
+            50,
+            1,
+            |rng| strategies::data(rng, 20, 10.0),
+            |xs| {
+                let mut a = xs.clone();
+                a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                let mut b = a.clone();
+                b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                if a == b {
+                    Ok(())
+                } else {
+                    Err("sort not idempotent".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn failing_property_reports_seed() {
+        check(
+            "always-fails",
+            3,
+            2,
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn proper_subset_bounds() {
+        check(
+            "proper-subset",
+            100,
+            3,
+            |rng| {
+                let n = 2 + rng.below(30);
+                (n, strategies::proper_subset(rng, n))
+            },
+            |(n, s)| {
+                if s.is_empty() || s.len() >= *n {
+                    return Err(format!("bad size {} of {}", s.len(), n));
+                }
+                if s.iter().any(|&i| i >= *n) {
+                    return Err("out of range".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

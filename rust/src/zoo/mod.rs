@@ -1,0 +1,612 @@
+//! Model zoo — the architectures of the paper's Tab. 2, scaled to the
+//! synthetic-data regime (≈0.05–1 M params) while keeping every coupling
+//! pattern that makes structured pruning hard:
+//!
+//! | model | coupling pattern exercised |
+//! |---|---|
+//! | `mlp`             | plain GEMM chains |
+//! | `alexnet`         | conv → flatten → fc feature blocks |
+//! | `vgg16` / `vgg19` | deep conv chains + maxpool + classifier head |
+//! | `resnet18/50/101` | residual Add coupling (+ bottlenecks, downsample) |
+//! | `wideresnet`      | wide residual blocks |
+//! | `resnext`         | grouped convolutions (cross-group position ties) |
+//! | `densenet`        | concat growth (offset mapping) |
+//! | `mobilenetv2`     | depthwise + inverted residual |
+//! | `efficientnet`    | depthwise + squeeze-excite gates (Mul coupling) |
+//! | `regnet`          | group conv + residual |
+//! | `vit`             | attention head sub-position ties + LayerNorm |
+//! | `distilbert`      | text transformer: embeddings + attention + GELU MLP |
+//!
+//! Builders are deterministic in `seed`; `by_name` is the single lookup
+//! the CLI / benches / examples use.
+
+use crate::ir::{DataId, Graph, GraphBuilder};
+
+/// Configuration shared by image models.
+#[derive(Debug, Clone, Copy)]
+pub struct ImageCfg {
+    pub channels: usize,
+    pub hw: usize,
+    pub classes: usize,
+    pub batch: usize,
+}
+
+impl Default for ImageCfg {
+    fn default() -> Self {
+        ImageCfg {
+            channels: 3,
+            hw: 16,
+            classes: 10,
+            batch: 8,
+        }
+    }
+}
+
+/// Configuration for text models.
+#[derive(Debug, Clone, Copy)]
+pub struct TextCfg {
+    pub vocab: usize,
+    pub seq: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub classes: usize,
+    pub batch: usize,
+}
+
+impl Default for TextCfg {
+    fn default() -> Self {
+        TextCfg {
+            vocab: 64,
+            seq: 12,
+            dim: 32,
+            heads: 4,
+            layers: 2,
+            classes: 2,
+            batch: 8,
+        }
+    }
+}
+
+/// conv + bn + relu convenience.
+fn cbr(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: DataId,
+    co: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> DataId {
+    let c = b.conv2d(&format!("{name}.conv"), x, co, k, stride, pad, groups, false);
+    let n = b.batchnorm(&format!("{name}.bn"), c);
+    b.relu(&format!("{name}.relu"), n)
+}
+
+/// Plain MLP on flattened images.
+pub fn mlp(cfg: ImageCfg, widths: &[usize], seed: u64) -> Graph {
+    let mut b = GraphBuilder::new("mlp", seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    let mut h = b.flatten("flat", x);
+    for (i, &w) in widths.iter().enumerate() {
+        h = b.gemm(&format!("fc{i}"), h, w, true);
+        h = b.relu(&format!("relu{i}"), h);
+    }
+    let out = b.gemm("head", h, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("mlp")
+}
+
+/// AlexNet-mini: conv stack then large fc layers through a flatten.
+pub fn alexnet(cfg: ImageCfg, seed: u64) -> Graph {
+    let mut b = GraphBuilder::new("alexnet", seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    let c1 = b.conv2d("c1", x, 16, 3, 1, 1, 1, true);
+    let r1 = b.relu("r1", c1);
+    let p1 = b.maxpool2d("p1", r1, 2, 2, 0);
+    let c2 = b.conv2d("c2", p1, 32, 3, 1, 1, 1, true);
+    let r2 = b.relu("r2", c2);
+    let p2 = b.maxpool2d("p2", r2, 2, 2, 0);
+    let c3 = b.conv2d("c3", p2, 48, 3, 1, 1, 1, true);
+    let r3 = b.relu("r3", c3);
+    let c4 = b.conv2d("c4", r3, 32, 3, 1, 1, 1, true);
+    let r4 = b.relu("r4", c4);
+    let f = b.flatten("flat", r4);
+    let fc1 = b.gemm("fc1", f, 64, true);
+    let fr1 = b.relu("fr1", fc1);
+    let fc2 = b.gemm("fc2", fr1, 64, true);
+    let fr2 = b.relu("fr2", fc2);
+    let out = b.gemm("head", fr2, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("alexnet")
+}
+
+/// VGG-style plain conv stack. `plan` gives channels per stage.
+fn vgg(name: &str, cfg: ImageCfg, plan: &[&[usize]], seed: u64) -> Graph {
+    let mut b = GraphBuilder::new(name, seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    let mut h = x;
+    for (si, stage) in plan.iter().enumerate() {
+        for (ci, &co) in stage.iter().enumerate() {
+            h = cbr(&mut b, &format!("s{si}b{ci}"), h, co, 3, 1, 1, 1);
+        }
+        if si + 1 < plan.len() {
+            h = b.maxpool2d(&format!("pool{si}"), h, 2, 2, 0);
+        }
+    }
+    let g = b.global_avgpool("gap", h);
+    let fc = b.gemm("fc1", g, 64, true);
+    let fr = b.relu("fr", fc);
+    let out = b.gemm("head", fr, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("vgg")
+}
+
+pub fn vgg16(cfg: ImageCfg, seed: u64) -> Graph {
+    vgg(
+        "vgg16",
+        cfg,
+        &[&[16, 16], &[32, 32], &[48, 48, 48], &[64, 64, 64]],
+        seed,
+    )
+}
+
+pub fn vgg19(cfg: ImageCfg, seed: u64) -> Graph {
+    vgg(
+        "vgg19",
+        cfg,
+        &[&[16, 16], &[32, 32], &[48, 48, 48, 48], &[64, 64, 64, 64]],
+        seed,
+    )
+}
+
+/// Basic residual block (ResNet-18 style).
+fn basic_block(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: DataId,
+    co: usize,
+    stride: usize,
+    in_ch: usize,
+) -> DataId {
+    let c1 = b.conv2d(&format!("{name}.c1"), x, co, 3, stride, 1, 1, false);
+    let n1 = b.batchnorm(&format!("{name}.bn1"), c1);
+    let r1 = b.relu(&format!("{name}.r1"), n1);
+    let c2 = b.conv2d(&format!("{name}.c2"), r1, co, 3, 1, 1, 1, false);
+    let n2 = b.batchnorm(&format!("{name}.bn2"), c2);
+    let short = if stride != 1 || in_ch != co {
+        let sc = b.conv2d(&format!("{name}.down"), x, co, 1, stride, 0, 1, false);
+        b.batchnorm(&format!("{name}.downbn"), sc)
+    } else {
+        x
+    };
+    let s = b.add(&format!("{name}.add"), n2, short);
+    b.relu(&format!("{name}.out"), s)
+}
+
+/// Bottleneck residual block (ResNet-50/101 style), expansion 2.
+fn bottleneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: DataId,
+    mid: usize,
+    stride: usize,
+    in_ch: usize,
+    groups: usize,
+) -> DataId {
+    let out_ch = mid * 2;
+    let c1 = b.conv2d(&format!("{name}.c1"), x, mid, 1, 1, 0, 1, false);
+    let n1 = b.batchnorm(&format!("{name}.bn1"), c1);
+    let r1 = b.relu(&format!("{name}.r1"), n1);
+    let c2 = b.conv2d(&format!("{name}.c2"), r1, mid, 3, stride, 1, groups, false);
+    let n2 = b.batchnorm(&format!("{name}.bn2"), c2);
+    let r2 = b.relu(&format!("{name}.r2"), n2);
+    let c3 = b.conv2d(&format!("{name}.c3"), r2, out_ch, 1, 1, 0, 1, false);
+    let n3 = b.batchnorm(&format!("{name}.bn3"), c3);
+    let short = if stride != 1 || in_ch != out_ch {
+        let sc = b.conv2d(&format!("{name}.down"), x, out_ch, 1, stride, 0, 1, false);
+        b.batchnorm(&format!("{name}.downbn"), sc)
+    } else {
+        x
+    };
+    let s = b.add(&format!("{name}.add"), n3, short);
+    b.relu(&format!("{name}.out"), s)
+}
+
+fn resnet_basic(name: &str, cfg: ImageCfg, widths: &[usize], blocks: &[usize], seed: u64) -> Graph {
+    let mut b = GraphBuilder::new(name, seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    let mut h = cbr(&mut b, "stem", x, widths[0], 3, 1, 1, 1);
+    let mut in_ch = widths[0];
+    for (si, (&w, &n)) in widths.iter().zip(blocks).enumerate() {
+        for bi in 0..n {
+            let stride = if bi == 0 && si > 0 { 2 } else { 1 };
+            h = basic_block(&mut b, &format!("s{si}b{bi}"), h, w, stride, in_ch);
+            in_ch = w;
+        }
+    }
+    let g = b.global_avgpool("gap", h);
+    let out = b.gemm("head", g, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("resnet")
+}
+
+fn resnet_bottleneck(
+    name: &str,
+    cfg: ImageCfg,
+    mids: &[usize],
+    blocks: &[usize],
+    groups: usize,
+    seed: u64,
+) -> Graph {
+    let mut b = GraphBuilder::new(name, seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    let mut h = cbr(&mut b, "stem", x, mids[0], 3, 1, 1, 1);
+    let mut in_ch = mids[0];
+    for (si, (&m, &n)) in mids.iter().zip(blocks).enumerate() {
+        for bi in 0..n {
+            let stride = if bi == 0 && si > 0 { 2 } else { 1 };
+            h = bottleneck(&mut b, &format!("s{si}b{bi}"), h, m, stride, in_ch, groups);
+            in_ch = m * 2;
+        }
+    }
+    let g = b.global_avgpool("gap", h);
+    let out = b.gemm("head", g, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("resnet-bottleneck")
+}
+
+pub fn resnet18(cfg: ImageCfg, seed: u64) -> Graph {
+    resnet_basic("resnet18", cfg, &[16, 32, 64], &[2, 2, 2], seed)
+}
+
+pub fn resnet50(cfg: ImageCfg, seed: u64) -> Graph {
+    resnet_bottleneck("resnet50", cfg, &[16, 32, 64], &[3, 4, 3], 1, seed)
+}
+
+pub fn resnet101(cfg: ImageCfg, seed: u64) -> Graph {
+    resnet_bottleneck("resnet101", cfg, &[16, 32, 48], &[3, 8, 3], 1, seed)
+}
+
+pub fn wideresnet(cfg: ImageCfg, seed: u64) -> Graph {
+    resnet_basic("wideresnet", cfg, &[32, 64, 128], &[2, 2, 2], seed)
+}
+
+pub fn resnext(cfg: ImageCfg, seed: u64) -> Graph {
+    resnet_bottleneck("resnext", cfg, &[16, 32, 64], &[2, 2, 2], 4, seed)
+}
+
+pub fn regnet(cfg: ImageCfg, seed: u64) -> Graph {
+    resnet_bottleneck("regnet", cfg, &[16, 24, 48], &[1, 2, 3], 2, seed)
+}
+
+/// DenseNet-mini: concat growth inside dense blocks, 1×1 transitions.
+pub fn densenet(cfg: ImageCfg, seed: u64) -> Graph {
+    let mut b = GraphBuilder::new("densenet", seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    let growth = 8;
+    let mut h = cbr(&mut b, "stem", x, 16, 3, 1, 1, 1);
+    for blk in 0..2 {
+        for layer in 0..3 {
+            let name = format!("d{blk}l{layer}");
+            let c = cbr(&mut b, &name, h, growth, 3, 1, 1, 1);
+            h = b.concat(&format!("{name}.cat"), &[h, c], 1);
+        }
+        let tname = format!("t{blk}");
+        h = cbr(&mut b, &tname, h, 24, 1, 1, 0, 1);
+        if blk == 0 {
+            h = b.avgpool2d(&format!("{tname}.pool"), h, 2, 2, 0);
+        }
+    }
+    let g = b.global_avgpool("gap", h);
+    let out = b.gemm("head", g, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("densenet")
+}
+
+/// Inverted residual block (MobileNet-v2).
+fn inverted_residual(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: DataId,
+    in_ch: usize,
+    out_ch: usize,
+    expand: usize,
+    stride: usize,
+) -> DataId {
+    let mid = in_ch * expand;
+    let e = cbr(b, &format!("{name}.expand"), x, mid, 1, 1, 0, 1);
+    let dwc = b.conv2d(&format!("{name}.dw.conv"), e, mid, 3, stride, 1, mid, false);
+    let dwn = b.batchnorm(&format!("{name}.dw.bn"), dwc);
+    let dwr = b.relu(&format!("{name}.dw.relu"), dwn);
+    let pc = b.conv2d(&format!("{name}.proj.conv"), dwr, out_ch, 1, 1, 0, 1, false);
+    let pn = b.batchnorm(&format!("{name}.proj.bn"), pc);
+    if stride == 1 && in_ch == out_ch {
+        b.add(&format!("{name}.add"), pn, x)
+    } else {
+        pn
+    }
+}
+
+pub fn mobilenetv2(cfg: ImageCfg, seed: u64) -> Graph {
+    let mut b = GraphBuilder::new("mobilenetv2", seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    let mut h = cbr(&mut b, "stem", x, 16, 3, 1, 1, 1);
+    h = inverted_residual(&mut b, "ir0", h, 16, 16, 2, 1);
+    h = inverted_residual(&mut b, "ir1", h, 16, 24, 2, 2);
+    h = inverted_residual(&mut b, "ir2", h, 24, 24, 2, 1);
+    h = inverted_residual(&mut b, "ir3", h, 24, 32, 2, 2);
+    h = cbr(&mut b, "headconv", h, 64, 1, 1, 0, 1);
+    let g = b.global_avgpool("gap", h);
+    let out = b.gemm("head", g, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("mobilenetv2")
+}
+
+/// Squeeze-and-excitation gate: GAP → fc → relu → fc → sigmoid → Mul.
+/// The [N,C] gate broadcasts over the spatial dims; the Mul ties the gate
+/// channels to the trunk channels (a coupling pattern unique to SE nets).
+fn se_gate(b: &mut GraphBuilder, name: &str, x: DataId, ch: usize, r: usize) -> DataId {
+    let g = b.global_avgpool(&format!("{name}.gap"), x);
+    let d = b.gemm(&format!("{name}.down"), g, (ch / r).max(1), true);
+    let dr = b.relu(&format!("{name}.relu"), d);
+    let u = b.gemm(&format!("{name}.up"), dr, ch, true);
+    let s = b.sigmoid(&format!("{name}.sig"), u);
+    b.mul(&format!("{name}.mul"), x, s)
+}
+
+pub fn efficientnet(cfg: ImageCfg, seed: u64) -> Graph {
+    let mut b = GraphBuilder::new("efficientnet", seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    let mut h = cbr(&mut b, "stem", x, 16, 3, 1, 1, 1);
+    for (i, (out_ch, stride)) in [(16usize, 1usize), (24, 2), (24, 1)].iter().enumerate() {
+        let name = format!("mb{i}");
+        let in_ch = b.peek_shape(h)[1];
+        let mid = in_ch * 2;
+        let e = cbr(&mut b, &format!("{name}.expand"), h, mid, 1, 1, 0, 1);
+        let dwc = b.conv2d(&format!("{name}.dw.conv"), e, mid, 3, *stride, 1, mid, false);
+        let dwn = b.batchnorm(&format!("{name}.dw.bn"), dwc);
+        let dwr = b.silu(&format!("{name}.dw.act"), dwn);
+        let se = se_gate(&mut b, &format!("{name}.se"), dwr, mid, 4);
+        let pc = b.conv2d(&format!("{name}.proj.conv"), se, *out_ch, 1, 1, 0, 1, false);
+        let pn = b.batchnorm(&format!("{name}.proj.bn"), pc);
+        h = if *stride == 1 && in_ch == *out_ch {
+            b.add(&format!("{name}.add"), pn, h)
+        } else {
+            pn
+        };
+    }
+    let hc = cbr(&mut b, "headconv", h, 48, 1, 1, 0, 1);
+    let g = b.global_avgpool("gap", hc);
+    let out = b.gemm("head", g, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("efficientnet")
+}
+
+/// One pre-norm transformer encoder block.
+#[allow(clippy::too_many_arguments)]
+fn transformer_block(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: DataId,
+    dim: usize,
+    heads: usize,
+    mlp_mult: usize,
+) -> DataId {
+    let scale = 1.0 / ((dim / heads) as f32).sqrt();
+    let ln1 = b.layernorm(&format!("{name}.ln1"), x);
+    let q = b.gemm(&format!("{name}.q"), ln1, dim, true);
+    let k = b.gemm(&format!("{name}.k"), ln1, dim, true);
+    let v = b.gemm(&format!("{name}.v"), ln1, dim, true);
+    let qh = b.split_heads(&format!("{name}.qh"), q, heads);
+    let kh = b.split_heads(&format!("{name}.kh"), k, heads);
+    let vh = b.split_heads(&format!("{name}.vh"), v, heads);
+    let kt = b.transpose(&format!("{name}.kt"), kh, vec![0, 1, 3, 2]);
+    let sc = b.matmul(&format!("{name}.qk"), qh, kt);
+    let scl = b.scale(&format!("{name}.scale"), sc, scale);
+    let sm = b.softmax(&format!("{name}.sm"), scl);
+    let ctx = b.matmul(&format!("{name}.av"), sm, vh);
+    let mh = b.merge_heads(&format!("{name}.mh"), ctx);
+    let proj = b.gemm(&format!("{name}.proj"), mh, dim, true);
+    let res1 = b.add(&format!("{name}.res1"), proj, x);
+    let ln2 = b.layernorm(&format!("{name}.ln2"), res1);
+    let up = b.gemm(&format!("{name}.up"), ln2, dim * mlp_mult, true);
+    let act = b.gelu(&format!("{name}.gelu"), up);
+    let down = b.gemm(&format!("{name}.down"), act, dim, true);
+    b.add(&format!("{name}.res2"), down, res1)
+}
+
+/// ViT-mini: patchify conv → transformer blocks → mean-pool → head.
+pub fn vit(cfg: ImageCfg, seed: u64) -> Graph {
+    let dim = 32;
+    let heads = 4;
+    let patch = 4;
+    let mut b = GraphBuilder::new("vit", seed);
+    let x = b.input("x", vec![cfg.batch, cfg.channels, cfg.hw, cfg.hw]);
+    // patch embedding: conv stride=patch then flatten spatial to tokens
+    let pe = b.conv2d("patch", x, dim, patch, patch, 0, 1, true);
+    let tokens = b.nchw_to_tokens("tok", pe);
+    let mut h = tokens;
+    for i in 0..2 {
+        h = transformer_block(&mut b, &format!("blk{i}"), h, dim, heads, 2);
+    }
+    let ln = b.layernorm("final_ln", h);
+    let pooled = b.reduce_mean("pool", ln, 1);
+    let out = b.gemm("head", pooled, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("vit")
+}
+
+/// DistilBERT-mini: token embedding + transformer + mean-pool classifier.
+pub fn distilbert(cfg: TextCfg, seed: u64) -> Graph {
+    let mut b = GraphBuilder::new("distilbert", seed);
+    let ids = b.input("ids", vec![cfg.batch, cfg.seq]);
+    let emb = b.embedding("emb", ids, cfg.vocab, cfg.dim);
+    let pos = {
+        let t = crate::tensor::Tensor::kaiming(&[1, cfg.seq, cfg.dim], cfg.dim, b.rng());
+        b.param("pos", t)
+    };
+    let mut h = b.add("posadd", emb, pos);
+    for i in 0..cfg.layers {
+        h = transformer_block(&mut b, &format!("blk{i}"), h, cfg.dim, cfg.heads, 2);
+    }
+    let ln = b.layernorm("final_ln", h);
+    let pooled = b.reduce_mean("pool", ln, 1);
+    let out = b.gemm("head", pooled, cfg.classes, true);
+    b.output(out);
+    b.finish().expect("distilbert")
+}
+
+/// All image-model names (Tab. 2 order).
+pub const IMAGE_MODELS: &[&str] = &[
+    "alexnet",
+    "densenet",
+    "efficientnet",
+    "mobilenetv2",
+    "regnet",
+    "resnet50",
+    "resnext",
+    "vgg16",
+    "wideresnet",
+    "vit",
+];
+
+/// Build an image model by name.
+pub fn by_name(name: &str, cfg: ImageCfg, seed: u64) -> anyhow::Result<Graph> {
+    Ok(match name {
+        "mlp" => mlp(cfg, &[64, 64], seed),
+        "alexnet" => alexnet(cfg, seed),
+        "vgg16" => vgg16(cfg, seed),
+        "vgg19" => vgg19(cfg, seed),
+        "resnet18" => resnet18(cfg, seed),
+        "resnet50" => resnet50(cfg, seed),
+        "resnet101" => resnet101(cfg, seed),
+        "wideresnet" => wideresnet(cfg, seed),
+        "resnext" => resnext(cfg, seed),
+        "regnet" => regnet(cfg, seed),
+        "densenet" => densenet(cfg, seed),
+        "mobilenetv2" => mobilenetv2(cfg, seed),
+        "efficientnet" => efficientnet(cfg, seed),
+        "vit" => vit(cfg, seed),
+        other => anyhow::bail!("unknown model `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine;
+    use crate::prune::{self, build_groups, score_groups, Agg, Norm};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    fn all_models() -> Vec<Graph> {
+        let cfg = ImageCfg::default();
+        let mut v: Vec<Graph> = IMAGE_MODELS
+            .iter()
+            .map(|m| by_name(m, cfg, 1).unwrap())
+            .collect();
+        v.push(by_name("mlp", cfg, 1).unwrap());
+        v.push(by_name("resnet18", cfg, 1).unwrap());
+        v.push(by_name("resnet101", cfg, 1).unwrap());
+        v.push(by_name("vgg19", cfg, 1).unwrap());
+        v.push(distilbert(TextCfg::default(), 1));
+        v
+    }
+
+    #[test]
+    fn all_models_validate() {
+        for g in all_models() {
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            assert!(g.num_params() > 500, "{} too small", g.name);
+        }
+    }
+
+    #[test]
+    fn all_image_models_run_forward() {
+        let cfg = ImageCfg::default();
+        let mut rng = Rng::new(2);
+        for name in IMAGE_MODELS {
+            let g = by_name(name, cfg, 1).unwrap();
+            let x = Tensor::new(
+                vec![2, cfg.channels, cfg.hw, cfg.hw],
+                rng.uniform_vec(2 * cfg.channels * cfg.hw * cfg.hw, -1.0, 1.0),
+            );
+            let y = engine::predict(&g, x).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(y.shape, vec![2, cfg.classes], "{name}");
+            assert!(y.data.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn distilbert_runs_forward() {
+        let cfg = TextCfg::default();
+        let g = distilbert(cfg, 3);
+        let mut rng = Rng::new(4);
+        let ids = Tensor::new(
+            vec![2, cfg.seq],
+            (0..2 * cfg.seq)
+                .map(|_| rng.below(cfg.vocab) as f32)
+                .collect(),
+        );
+        let y = engine::predict(&g, ids).unwrap();
+        assert_eq!(y.shape, vec![2, cfg.classes]);
+    }
+
+    #[test]
+    fn every_model_is_prunable_2x() {
+        // the Tab. 2 experiment in miniature: every architecture must
+        // survive grouping + ~2x FLOPs pruning + forward execution
+        let cfg = ImageCfg::default();
+        let mut rng = Rng::new(5);
+        for name in IMAGE_MODELS {
+            let mut g = by_name(name, cfg, 1).unwrap();
+            let groups = build_groups(&g).unwrap();
+            assert!(
+                groups.num_prunable_ccs() > 4,
+                "{name}: too few prunable CCs"
+            );
+            let mut scores = HashMap::new();
+            for pid in g.param_ids() {
+                scores.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+            }
+            let ranked = score_groups(&g, &groups, &scores, Agg::Sum, Norm::Mean);
+            let sel =
+                prune::select_by_flops_target(&g, &groups, &ranked, 1.5, 1).unwrap();
+            assert!(!sel.is_empty(), "{name}: empty selection");
+            prune::apply_pruning(&mut g, &groups, &sel)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            let x = Tensor::new(
+                vec![1, cfg.channels, cfg.hw, cfg.hw],
+                rng.uniform_vec(cfg.channels * cfg.hw * cfg.hw, -1.0, 1.0),
+            );
+            let y = engine::predict(&g, x).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(y.data.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn distilbert_prunable() {
+        let cfg = TextCfg::default();
+        let mut g = distilbert(cfg, 7);
+        let groups = build_groups(&g).unwrap();
+        let mut scores = HashMap::new();
+        for pid in g.param_ids() {
+            scores.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+        }
+        let ranked = score_groups(&g, &groups, &scores, Agg::Sum, Norm::Mean);
+        let sel = prune::select_lowest(&groups, &ranked, 0.3, 2);
+        assert!(!sel.is_empty());
+        prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        let mut rng = Rng::new(8);
+        let ids = Tensor::new(
+            vec![1, cfg.seq],
+            (0..cfg.seq).map(|_| rng.below(cfg.vocab) as f32).collect(),
+        );
+        let y = engine::predict(&g, ids).unwrap();
+        assert_eq!(y.shape, vec![1, cfg.classes]);
+    }
+}

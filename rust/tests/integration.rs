@@ -1,0 +1,229 @@
+//! Cross-module integration tests: full pipelines over real zoo models,
+//! dialect funnels feeding pipelines, serde round-trips of pruned graphs,
+//! and property-based invariants over random graphs (mini-proptest).
+
+use spa::analysis;
+use spa::criteria::Criterion;
+use spa::coordinator::{prune_train, train_prune_finetune, PipelineCfg};
+use spa::data::ImageDataset;
+use spa::engine;
+use spa::frontends::{export_model, import_model, Dialect};
+use spa::ir::{serde as ir_serde, Graph, GraphBuilder};
+use spa::prune::{self, build_groups, score_groups, Agg, Norm};
+use spa::tensor::Tensor;
+use spa::train::TrainCfg;
+use spa::util::proptest::check;
+use spa::util::Rng;
+use spa::zoo::{self, ImageCfg};
+use std::collections::HashMap;
+
+fn l1_scores(g: &Graph) -> HashMap<usize, Tensor> {
+    g.param_ids()
+        .into_iter()
+        .map(|id| (id, g.data(id).param().unwrap().map(f32::abs)))
+        .collect()
+}
+
+#[test]
+fn dialect_to_pipeline_to_serde() {
+    // tf-dialect resnet → import → train-prune-finetune → save → load → eval
+    let icfg = ImageCfg {
+        hw: 8,
+        classes: 4,
+        ..Default::default()
+    };
+    let ds = ImageDataset::synth_cifar(4, 256, 8, 3, 77);
+    let src = zoo::resnet18(icfg, 5);
+    let g = import_model(&export_model(&src, Dialect::Tf)).unwrap();
+    let cfg = PipelineCfg {
+        target_rf: 1.4,
+        train: TrainCfg {
+            steps: 40,
+            ..Default::default()
+        },
+        finetune: TrainCfg {
+            steps: 20,
+            lr: 0.02,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (pruned, rep) = train_prune_finetune(g, &ds, &cfg).unwrap();
+    assert!(rep.rf >= 1.4);
+    // round-trip the pruned model through the IR format
+    let path = std::env::temp_dir().join("spa_integration_pruned.json");
+    ir_serde::save_graph(&pruned, path.to_str().unwrap(), true).unwrap();
+    let loaded = ir_serde::load_graph(path.to_str().unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut rng = Rng::new(1);
+    let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 3 * 64, -1.0, 1.0));
+    let y1 = engine::predict(&pruned, x.clone()).unwrap();
+    let y2 = engine::predict(&loaded, x).unwrap();
+    spa::tensor::assert_allclose(&y2, &y1, 1e-5, 1e-5);
+}
+
+#[test]
+fn snip_prune_train_on_mobilenet() {
+    let icfg = ImageCfg {
+        hw: 8,
+        classes: 4,
+        ..Default::default()
+    };
+    let ds = ImageDataset::synth_cifar(4, 256, 8, 3, 88);
+    let g = zoo::mobilenetv2(icfg, 6);
+    let cfg = PipelineCfg {
+        criterion: Criterion::Snip,
+        target_rf: 1.3,
+        train: TrainCfg {
+            steps: 60,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (pruned, rep) = prune_train(g, &ds, &cfg).unwrap();
+    pruned.validate().unwrap();
+    assert!(rep.rf >= 1.3);
+    assert!(rep.final_acc > 0.3, "final {}", rep.final_acc);
+}
+
+// ---- property-based invariants over random residual graphs -------------
+
+/// Generate a random conv net with optional residuals/concats/group convs.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut b = GraphBuilder::new("rand", rng.next_u64());
+    let ch0 = [4usize, 6, 8][rng.below(3)];
+    let x = b.input("x", vec![1, 3, 8, 8]);
+    let mut h = b.conv2d("stem", x, ch0, 3, 1, 1, 1, false);
+    let mut ch = ch0;
+    let blocks = 1 + rng.below(3);
+    for i in 0..blocks {
+        match rng.below(3) {
+            0 => {
+                // residual pair
+                let c1 = b.conv2d(&format!("b{i}a"), h, ch, 3, 1, 1, 1, false);
+                let n1 = b.batchnorm(&format!("b{i}bn"), c1);
+                let r1 = b.relu(&format!("b{i}r"), n1);
+                let c2 = b.conv2d(&format!("b{i}b"), r1, ch, 3, 1, 1, 1, false);
+                h = b.add(&format!("b{i}add"), c2, h);
+            }
+            1 => {
+                // concat growth
+                let c1 = b.conv2d(&format!("b{i}g"), h, 4, 3, 1, 1, 1, false);
+                h = b.concat(&format!("b{i}cat"), &[h, c1], 1);
+                ch += 4;
+            }
+            _ => {
+                // grouped conv (groups divide both in and out)
+                let groups = if ch % 2 == 0 { 2 } else { 1 };
+                let co = ch;
+                h = b.conv2d(&format!("b{i}grp"), h, co, 3, 1, 1, groups, false);
+            }
+        }
+    }
+    let g = b.global_avgpool("gap", h);
+    let out = b.gemm("head", g, 3, false);
+    b.output(out);
+    b.finish().expect("random graph")
+}
+
+#[test]
+fn prop_random_graphs_prune_and_run() {
+    check(
+        "random-graph-prunes-validly",
+        12,
+        0xBEEF,
+        |rng| random_graph(rng),
+        |g| {
+            let groups = build_groups(g).map_err(|e| e.to_string())?;
+            let scores = score_groups(g, &groups, &l1_scores(g), Agg::Sum, Norm::Mean);
+            let sel = prune::select_lowest(&groups, &scores, 0.4, 1);
+            if sel.is_empty() {
+                return Ok(());
+            }
+            let mut pruned = g.clone();
+            prune::apply_pruning(&mut pruned, &groups, &sel).map_err(|e| e.to_string())?;
+            pruned.validate().map_err(|e| e.to_string())?;
+            // FLOPs monotone
+            if analysis::flops(&pruned) >= analysis::flops(g) {
+                return Err("flops did not decrease".into());
+            }
+            // still executes with finite outputs
+            let mut rng2 = Rng::new(1);
+            let x = Tensor::new(vec![1, 3, 8, 8], rng2.uniform_vec(3 * 64, -1.0, 1.0));
+            let y = engine::predict(&pruned, x).map_err(|e| e.to_string())?;
+            if !y.data.iter().all(|v| v.is_finite()) {
+                return Err("non-finite output".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_propagation_coupling_is_symmetric() {
+    use spa::prune::rules::{param_locs, propagate, Mask};
+    check(
+        "coupling-symmetry",
+        8,
+        0xCAFE,
+        |rng| {
+            let g = random_graph(rng);
+            // pick a random conv weight + channel
+            let convs: Vec<usize> = g
+                .datas
+                .iter()
+                .filter(|d| d.is_param() && d.shape.len() == 4)
+                .map(|d| d.id)
+                .collect();
+            let w = convs[rng.below(convs.len())];
+            let c = rng.below(g.data(w).shape[0]);
+            (g, w, c)
+        },
+        |(g, w, c)| {
+            let m1 = propagate(g, Mask::single(g, *w, 0, *c));
+            let locs1 = param_locs(g, &m1);
+            // symmetry: re-propagating from any coupled source loc yields
+            // the same coupled set
+            for loc in locs1.iter().take(3) {
+                if !g.data(loc.data).is_param() {
+                    continue;
+                }
+                let m2 = propagate(g, Mask::single(g, loc.data, loc.dim, loc.idx));
+                let locs2 = param_locs(g, &m2);
+                if locs2 != locs1 {
+                    return Err(format!(
+                        "asymmetric coupling from {:?}: {} vs {} locs",
+                        loc,
+                        locs2.len(),
+                        locs1.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pruned_params_strictly_decrease() {
+    check(
+        "params-monotone",
+        10,
+        0xD00D,
+        |rng| random_graph(rng),
+        |g| {
+            let groups = build_groups(g).map_err(|e| e.to_string())?;
+            let scores = score_groups(g, &groups, &l1_scores(g), Agg::Sum, Norm::Mean);
+            let sel = prune::select_lowest(&groups, &scores, 0.3, 1);
+            if sel.is_empty() {
+                return Ok(());
+            }
+            let mut pruned = g.clone();
+            prune::apply_pruning(&mut pruned, &groups, &sel).map_err(|e| e.to_string())?;
+            if pruned.num_params() >= g.num_params() {
+                return Err("params did not decrease".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,123 @@
+//! Integration tests for the PJRT artifact path: the Rust engine and the
+//! JAX-lowered executables must agree numerically, and the Pallas OBSPA
+//! kernel must match the native fallback bit-for-bit (within fp32 noise).
+//!
+//! Tests that need artifacts skip gracefully when `make artifacts` has
+//! not been run (CI always runs it via `make test`).
+
+use spa::runtime::{kernels as rk, Runtime, M_BLOCK, ROW_BLOCK};
+use spa::tensor::{assert_allclose, ops, Tensor};
+use spa::util::Rng;
+
+fn runtime() -> Option<std::rc::Rc<Runtime>> {
+    let rt = Runtime::global();
+    if rt.is_none() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    rt
+}
+
+/// Mirror of python/compile/aot.py MODEL_SHAPES.
+const BATCH: usize = 4;
+const CIN: usize = 3;
+const HW: usize = 8;
+const COUT: usize = 8;
+const CLASSES: usize = 10;
+
+#[test]
+fn model_fwd_artifact_matches_engine() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(42);
+    let x = Tensor::new(
+        vec![BATCH, CIN, HW, HW],
+        rng.uniform_vec(BATCH * CIN * HW * HW, -1.0, 1.0),
+    );
+    let w = Tensor::new(
+        vec![COUT, CIN, 3, 3],
+        rng.uniform_vec(COUT * CIN * 9, -0.3, 0.3),
+    );
+    let b = Tensor::new(vec![COUT], rng.uniform_vec(COUT, -0.1, 0.1));
+    let wf = Tensor::new(
+        vec![CLASSES, COUT],
+        rng.uniform_vec(CLASSES * COUT, -0.3, 0.3),
+    );
+    let bf = Tensor::zeros(&[CLASSES]);
+    // PJRT path (JAX-lowered HLO)
+    let outs = rt
+        .execute("model_fwd", &[&x, &w, &b, &wf, &bf])
+        .expect("model_fwd artifact must execute");
+    // native engine path: same computation
+    let conv = ops::conv2d(&x, &w, Some(&b), 1, 1, 1);
+    let relu = conv.map(|v| v.max(0.0));
+    let pooled = ops::global_avgpool(&relu);
+    let logits = ops::linear(&pooled, &wf, Some(&bf));
+    assert_eq!(outs.len(), 1);
+    assert_allclose(&outs[0], &logits, 1e-4, 1e-4);
+}
+
+#[test]
+fn obs_update_pjrt_matches_native() {
+    let Some(_rt) = runtime() else { return };
+    let mut rng = Rng::new(7);
+    for &c in &[16usize, 48, 100] {
+        let r = 20usize;
+        let w = Tensor::new(vec![r, c], rng.uniform_vec(r * c, -1.0, 1.0));
+        // SPD → sweep matrix, as the solver does
+        let x = Tensor::new(vec![c, c + 8], rng.uniform_vec(c * (c + 8), -1.0, 1.0));
+        let mut h = ops::matmul(&x, &x.t2());
+        for i in 0..c {
+            h.data[i * c + i] += 0.5;
+        }
+        let sweep = rk::sweep_matrix(&h).unwrap();
+        let mut mask = vec![0.0f32; c];
+        for i in (0..c).step_by(3) {
+            mask[i] = 1.0;
+        }
+        let native = rk::obs_update_native(&w, &sweep, &mask);
+        let (pjrt, backend) = rk::obs_update(&w, &sweep, &mask).unwrap();
+        assert_eq!(backend, rk::Backend::Pjrt, "artifacts exist → PJRT path");
+        assert_allclose(&pjrt, &native, 5e-3, 5e-3);
+    }
+}
+
+#[test]
+fn hessian_pjrt_matches_native() {
+    let Some(_rt) = runtime() else { return };
+    let mut rng = Rng::new(8);
+    for &(c, m) in &[(16usize, 64usize), (40, 200), (128, M_BLOCK)] {
+        let h0 = Tensor::new(vec![c, c], rng.uniform_vec(c * c, -0.2, 0.2));
+        // symmetrize
+        let mut h0s = h0.clone();
+        for i in 0..c {
+            for j in 0..c {
+                h0s.data[i * c + j] = 0.5 * (h0.data[i * c + j] + h0.data[j * c + i]);
+            }
+        }
+        let x = Tensor::new(vec![c, m], rng.uniform_vec(c * m, -1.0, 1.0));
+        let native = rk::hessian_accum_native(&h0s, &x);
+        let (pjrt, backend) = rk::hessian_accum(&h0s, &x).unwrap();
+        assert_eq!(backend, rk::Backend::Pjrt);
+        assert_allclose(&pjrt, &native, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn obs_update_row_padding_is_exact() {
+    let Some(_rt) = runtime() else { return };
+    // rows not a multiple of ROW_BLOCK force padding inside the kernel call
+    let mut rng = Rng::new(9);
+    let (r, c) = (ROW_BLOCK + 17, 32usize);
+    let w = Tensor::new(vec![r, c], rng.uniform_vec(r * c, -1.0, 1.0));
+    let x = Tensor::new(vec![c, c + 8], rng.uniform_vec(c * (c + 8), -1.0, 1.0));
+    let mut h = ops::matmul(&x, &x.t2());
+    for i in 0..c {
+        h.data[i * c + i] += 0.5;
+    }
+    let sweep = rk::sweep_matrix(&h).unwrap();
+    let mut mask = vec![0.0f32; c];
+    mask[5] = 1.0;
+    mask[20] = 1.0;
+    let native = rk::obs_update_native(&w, &sweep, &mask);
+    let (pjrt, _) = rk::obs_update(&w, &sweep, &mask).unwrap();
+    assert_allclose(&pjrt, &native, 5e-3, 5e-3);
+}

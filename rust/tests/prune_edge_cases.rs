@@ -1,0 +1,196 @@
+//! Edge-case and failure-injection tests for the pruning stack: malformed
+//! selections, extreme ratios, degenerate graphs, serde of pruned +
+//! BN-folded models, and criteria behaviour on pathological weights.
+
+use spa::analysis;
+use spa::criteria::{self, Batch, Criterion};
+use spa::engine;
+use spa::ir::{passes, serde as ir_serde, GraphBuilder};
+use spa::prune::{self, build_groups, score_groups, Agg, Norm};
+use spa::tensor::Tensor;
+use spa::util::Rng;
+use spa::zoo::{self, ImageCfg};
+use std::collections::HashMap;
+
+fn l1(g: &spa::ir::Graph) -> HashMap<usize, Tensor> {
+    g.param_ids()
+        .into_iter()
+        .map(|id| (id, g.data(id).param().unwrap().map(f32::abs)))
+        .collect()
+}
+
+#[test]
+fn extreme_ratio_is_capped_by_min_keep() {
+    // asking for RF 1000x must not destroy the network: min_keep floors it
+    let g = zoo::resnet18(ImageCfg { hw: 8, ..Default::default() }, 1);
+    let groups = build_groups(&g).unwrap();
+    let ranked = score_groups(&g, &groups, &l1(&g), Agg::Sum, Norm::Mean);
+    let sel = prune::select_by_flops_target(&g, &groups, &ranked, 1000.0, 2).unwrap();
+    let mut pruned = g.clone();
+    prune::apply_pruning(&mut pruned, &groups, &sel).unwrap();
+    pruned.validate().unwrap();
+    // every conv keeps >= 2 channels
+    for d in &pruned.datas {
+        if d.name.ends_with(".w") && d.shape.len() == 4 {
+            assert!(d.shape[0] >= 2, "{} over-pruned: {:?}", d.name, d.shape);
+        }
+    }
+    // and it still runs
+    let mut rng = Rng::new(2);
+    let x = Tensor::new(vec![1, 3, 8, 8], rng.uniform_vec(192, -1.0, 1.0));
+    engine::predict(&pruned, x).unwrap();
+}
+
+#[test]
+fn duplicate_selection_is_idempotent() {
+    let g = zoo::vgg16(ImageCfg { hw: 8, ..Default::default() }, 2);
+    let groups = build_groups(&g).unwrap();
+    let gid = groups.groups.iter().find(|gr| gr.prunable).unwrap().id;
+    let mut a = g.clone();
+    prune::apply_pruning(&mut a, &groups, &[(gid, 0), (gid, 0)]).unwrap();
+    let mut b = g.clone();
+    prune::apply_pruning(&mut b, &groups, &[(gid, 0)]).unwrap();
+    assert_eq!(a.num_params(), b.num_params());
+}
+
+#[test]
+fn zero_selection_is_noop() {
+    let g = zoo::resnet18(ImageCfg { hw: 8, ..Default::default() }, 3);
+    let mut pruned = g.clone();
+    let groups = build_groups(&g).unwrap();
+    prune::apply_pruning(&mut pruned, &groups, &[]).unwrap();
+    assert_eq!(g.num_params(), pruned.num_params());
+    assert_eq!(analysis::flops(&g), analysis::flops(&pruned));
+}
+
+#[test]
+fn single_channel_layers_never_vanish() {
+    // a bottleneck squeezed to width 2: pruning keeps the graph connected
+    let mut b = GraphBuilder::new("narrow", 4);
+    let x = b.input("x", vec![1, 3, 6, 6]);
+    let c1 = b.conv2d("c1", x, 2, 3, 1, 1, 1, false);
+    let c2 = b.conv2d("c2", c1, 8, 3, 1, 1, 1, false);
+    let gp = b.global_avgpool("gap", c2);
+    let out = b.gemm("fc", gp, 2, false);
+    b.output(out);
+    let g = b.finish().unwrap();
+    let groups = build_groups(&g).unwrap();
+    let ranked = score_groups(&g, &groups, &l1(&g), Agg::Sum, Norm::Mean);
+    let sel = prune::select_lowest(&groups, &ranked, 1.0, 1);
+    let mut pruned = g.clone();
+    prune::apply_pruning(&mut pruned, &groups, &sel).unwrap();
+    let c1w = pruned.data_by_name("c1.w").unwrap();
+    assert!(c1w.shape[0] >= 1);
+    pruned.validate().unwrap();
+}
+
+#[test]
+fn pruned_then_folded_then_serialized_round_trips() {
+    // compose everything: prune → BN-fold → save → load → same numerics
+    let mut g = zoo::resnet18(ImageCfg { hw: 8, ..Default::default() }, 5);
+    // randomize stats so folding is non-trivial
+    let mut rng = Rng::new(6);
+    for d in &mut g.datas {
+        let name = d.name.clone();
+        if let Some(t) = d.param_mut() {
+            if name.ends_with(".var") {
+                t.data = rng.uniform_vec(t.numel(), 0.5, 2.0);
+            }
+        }
+    }
+    let groups = build_groups(&g).unwrap();
+    let ranked = score_groups(&g, &groups, &l1(&g), Agg::Sum, Norm::Mean);
+    let sel = prune::select_lowest(&groups, &ranked, 0.3, 1);
+    prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+    passes::fold_batchnorm(&mut g).unwrap();
+    let x = Tensor::new(vec![1, 3, 8, 8], rng.uniform_vec(192, -1.0, 1.0));
+    let before = engine::predict(&g, x.clone()).unwrap();
+    let path = std::env::temp_dir().join("spa_edge_roundtrip.json");
+    ir_serde::save_graph(&g, path.to_str().unwrap(), true).unwrap();
+    let loaded = ir_serde::load_graph(path.to_str().unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let after = engine::predict(&loaded, x).unwrap();
+    spa::tensor::assert_allclose(&after, &before, 1e-5, 1e-5);
+}
+
+#[test]
+fn criteria_handle_all_zero_weights() {
+    // degenerate: a model whose conv weights are all zero must still
+    // score/select/prune without NaNs or panics
+    let mut g = zoo::vgg16(ImageCfg { hw: 8, ..Default::default() }, 7);
+    for d in &mut g.datas {
+        let name = d.name.clone();
+        if let Some(t) = d.param_mut() {
+            if name.ends_with(".w") {
+                t.data.iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+    }
+    let groups = build_groups(&g).unwrap();
+    let ranked = score_groups(&g, &groups, &l1(&g), Agg::Sum, Norm::Mean);
+    assert!(ranked.iter().all(|s| s.score.is_finite()));
+    let sel = prune::select_lowest(&groups, &ranked, 0.3, 1);
+    let mut pruned = g.clone();
+    prune::apply_pruning(&mut pruned, &groups, &sel).unwrap();
+    pruned.validate().unwrap();
+}
+
+#[test]
+fn fisher_criterion_scores_are_finite_and_nonneg() {
+    let g = zoo::resnet18(ImageCfg { hw: 8, classes: 4, ..Default::default() }, 8);
+    let mut rng = Rng::new(9);
+    let x = Tensor::new(vec![4, 3, 8, 8], rng.uniform_vec(4 * 192, -1.0, 1.0));
+    let labels: Vec<usize> = (0..4).map(|_| rng.below(4)).collect();
+    let scores =
+        criteria::param_scores(&g, Criterion::Fisher, Some(&Batch { x: &x, labels: &labels }))
+            .unwrap();
+    for (_, t) in scores {
+        assert!(t.data.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+}
+
+#[test]
+fn obspa_rejects_oversized_layers_gracefully() {
+    // kdim beyond the ladder must fall back to native, not error
+    use spa::runtime::kernels as rk;
+    let mut rng = Rng::new(10);
+    let c = 600usize; // > 512 ladder max
+    let w = Tensor::new(vec![4, c], rng.uniform_vec(4 * c, -1.0, 1.0));
+    let mut h = Tensor::zeros(&[c, c]);
+    for i in 0..c {
+        h.data[i * c + i] = 1.0;
+    }
+    let sweep = rk::sweep_matrix(&h).unwrap();
+    let mask = vec![0.0f32; c];
+    let (out, backend) = rk::obs_update(&w, &sweep, &mask).unwrap();
+    assert_eq!(backend, rk::Backend::Native);
+    spa::tensor::assert_allclose(&out, &w, 1e-5, 1e-5);
+}
+
+#[test]
+fn importance_norms_keep_relative_order_within_group() {
+    // Norm rescales but must not reorder CCs within a group
+    let g = zoo::vgg16(ImageCfg { hw: 8, ..Default::default() }, 11);
+    let groups = build_groups(&g).unwrap();
+    let scores = l1(&g);
+    let base = score_groups(&g, &groups, &scores, Agg::Sum, Norm::None);
+    for norm in [Norm::Sum, Norm::Mean, Norm::Max] {
+        let normed = score_groups(&g, &groups, &scores, Agg::Sum, norm);
+        // group-wise order preserved
+        use std::collections::HashMap as Map;
+        let mut by_group: Map<usize, Vec<(usize, f32, f32)>> = Map::new();
+        for (a, b) in base.iter().zip(&normed) {
+            assert_eq!((a.group, a.cc), (b.group, b.cc));
+            by_group.entry(a.group).or_default().push((a.cc, a.score, b.score));
+        }
+        for (_, mut v) in by_group {
+            v.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+            for w in v.windows(2) {
+                assert!(
+                    w[0].2 <= w[1].2 + 1e-6,
+                    "norm {norm:?} reordered scores"
+                );
+            }
+        }
+    }
+}
