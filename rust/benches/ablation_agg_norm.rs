@@ -18,7 +18,7 @@ fn main() {
         "Ablation — Eq. 1 AGG × Norm (no-finetune acc at RF 1.5)",
         &["model", "AGG", "Norm", "acc.", "RF"],
     );
-    for (mname, seed) in [("resnet18", 3u64), ("densenet", 4u64)] {
+    for (mname, seed) in common::take_smoke(vec![("resnet18", 3u64), ("densenet", 4u64)]) {
         let base = common::train_base(
             zoo::by_name(mname, common::cifar_cfg(10), seed).unwrap(),
             &ds,
@@ -29,8 +29,8 @@ fn main() {
         for pid in base.param_ids() {
             l1.insert(pid, base.data(pid).param().unwrap().map(f32::abs));
         }
-        for agg in [Agg::Sum, Agg::Mean, Agg::Max, Agg::L2] {
-            for norm in [Norm::Sum, Norm::Mean, Norm::Max, Norm::None] {
+        for agg in common::take_smoke(vec![Agg::Sum, Agg::Mean, Agg::Max, Agg::L2]) {
+            for norm in common::take_smoke(vec![Norm::Sum, Norm::Mean, Norm::Max, Norm::None]) {
                 let ranked = score_groups(&base, &groups, &l1, agg, norm);
                 let sel =
                     prune::select_by_flops_target(&base, &groups, &ranked, 1.5, 1).unwrap();

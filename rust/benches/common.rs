@@ -17,6 +17,49 @@ use spa::prune::Scope;
 use spa::train::TrainCfg;
 use spa::zoo::ImageCfg;
 
+/// True when `SPA_BENCH_SMOKE=1`: every paper-table bench runs one tiny
+/// configuration (2 training steps, first experiment row only) so CI can
+/// *execute* each bench binary, not just compile it.
+pub fn smoke() -> bool {
+    std::env::var("SPA_BENCH_SMOKE").is_ok_and(|v| v == "1")
+}
+
+/// Scale a training-step count down to a smoke-sized run.
+pub fn steps(full: usize) -> usize {
+    if smoke() {
+        2
+    } else {
+        full
+    }
+}
+
+/// Keep only the first experiment configuration in smoke mode.
+pub fn take_smoke<T>(v: Vec<T>) -> Vec<T> {
+    if smoke() {
+        v.into_iter().take(1).collect()
+    } else {
+        v
+    }
+}
+
+/// Measured-iteration count for micro benches (1 in smoke mode).
+pub fn iters(full: usize) -> usize {
+    if smoke() {
+        1
+    } else {
+        full
+    }
+}
+
+/// Warmup-iteration count for micro benches (0 in smoke mode).
+pub fn warmup(full: usize) -> usize {
+    if smoke() {
+        0
+    } else {
+        full
+    }
+}
+
 /// Standard bench-scale image config (SynthCIFAR).
 pub fn cifar_cfg(classes: usize) -> ImageCfg {
     ImageCfg {
@@ -42,20 +85,20 @@ pub fn synth_imagenet(seed: u64) -> ImageDataset {
     ImageDataset::synth_cifar(20, 1536, 8, 3, seed)
 }
 
-/// Bench-scale pipeline config.
+/// Bench-scale pipeline config (smoke-aware step counts).
 pub fn bench_pipeline(criterion: Criterion, scope: Scope, target_rf: f64) -> PipelineCfg {
     PipelineCfg {
         criterion,
         scope,
         target_rf,
         train: TrainCfg {
-            steps: 120,
+            steps: steps(120),
             lr: 0.05,
             log_every: 0,
             ..Default::default()
         },
         finetune: TrainCfg {
-            steps: 60,
+            steps: steps(60),
             lr: 0.02,
             log_every: 0,
             ..Default::default()
@@ -95,12 +138,12 @@ pub fn no_finetune(
 }
 
 /// Train a base model once (for sharing across no-finetune methods).
-pub fn train_base(mut g: spa::ir::Graph, ds: &ImageDataset, steps: usize) -> spa::ir::Graph {
+pub fn train_base(mut g: spa::ir::Graph, ds: &ImageDataset, full_steps: usize) -> spa::ir::Graph {
     spa::train::train(
         &mut g,
         ds,
         &TrainCfg {
-            steps,
+            steps: steps(full_steps),
             lr: 0.05,
             log_every: 0,
             ..Default::default()

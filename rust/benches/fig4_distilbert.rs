@@ -21,7 +21,7 @@ fn main() {
     train::train(
         &mut base,
         &ds,
-        &TrainCfg { steps: 250, lr: 0.05, log_every: 0, ..Default::default() },
+        &TrainCfg { steps: common::steps(250), lr: 0.05, log_every: 0, ..Default::default() },
     )
     .unwrap();
     let base_acc = train::evaluate_text(&base, &ds, 256).unwrap();
@@ -29,7 +29,7 @@ fn main() {
         "Fig. 4 — distilbert-mini / SynthSST-2, prune without fine-tuning",
         &["method", "target RF", "RF", "RP", "acc.", "base acc."],
     );
-    for &rf in &[1.2f64, 1.4, 1.7, 2.0] {
+    for rf in common::take_smoke(vec![1.2f64, 1.4, 1.7, 2.0]) {
         // L1 one-shot
         let mut g = base.clone();
         let groups = build_groups(&g).unwrap();

@@ -13,7 +13,7 @@ use spa::zoo;
 
 fn main() {
     let ds = common::synth_cifar10(52);
-    let ratios = [1.6f64, 2.4];
+    let ratios = common::take_smoke(vec![1.6f64, 2.4]);
     let mut t = Table::new(
         "Fig. 9 — resnet18-mini / SynthCIFAR-10 trade-off curves",
         &["criterion", "variant", "target RF", "RF", "RP", "final acc."],
@@ -24,7 +24,7 @@ fn main() {
         (Criterion::Crop, "CroP"),
         (Criterion::Grasp, "GraSP"),
     ];
-    for (crit, name) in criteria {
+    for (crit, name) in common::take_smoke(criteria.to_vec()) {
         for (scope, variant) in [
             (Scope::SourceOnly, "structured"),
             (Scope::FullCc, "SPA-grouped"),
@@ -44,7 +44,7 @@ fn main() {
         }
     }
     // iterative vs one-shot (L1, SPA-grouped)
-    for &(iters, label) in &[(1usize, "one-shot"), (4, "iterative(4)")] {
+    for (iters, label) in common::take_smoke(vec![(1usize, "one-shot"), (4, "iterative(4)")]) {
         let g = zoo::resnet18(common::cifar_cfg(10), 4);
         let rep = common::tpf(g, &ds, Criterion::L1, Scope::FullCc, 2.0, iters);
         t.row(&[

@@ -15,14 +15,15 @@ fn main() {
         &["model", "fwd (ms)", "fwd+bwd (ms)", "params"],
     );
     let mut rng = Rng::new(1);
-    for name in ["mlp", "resnet18", "resnet50", "mobilenetv2", "vit"] {
+    let models = common::take_smoke(vec!["mlp", "resnet18", "resnet50", "mobilenetv2", "vit"]);
+    for name in models {
         let g = zoo::by_name(name, common::cifar_cfg(10), 3).unwrap();
         let x = Tensor::new(vec![32, 3, 8, 8], rng.uniform_vec(32 * 3 * 64, -1.0, 1.0));
         let labels: Vec<usize> = (0..32).map(|_| rng.below(10)).collect();
-        let f = bench(&format!("{name}/fwd"), 2, 8, || {
+        let f = bench(&format!("{name}/fwd"), common::warmup(2), common::iters(8), || {
             let _ = engine::forward(&g, &[(g.inputs[0], x.clone())], Mode::Eval).unwrap();
         });
-        let fb = bench(&format!("{name}/fwd+bwd"), 2, 8, || {
+        let fb = bench(&format!("{name}/fwd+bwd"), common::warmup(2), common::iters(8), || {
             let fwd = engine::forward(&g, &[(g.inputs[0], x.clone())], Mode::Train).unwrap();
             let (_, dl) = ops::cross_entropy(fwd.logits(&g), &labels);
             let _ = engine::backward(&g, &fwd, &[(g.outputs[0], dl)]).unwrap();

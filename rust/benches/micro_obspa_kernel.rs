@@ -3,11 +3,16 @@
 //! Hessian accumulation kernel. Run after `make artifacts` to get the
 //! PJRT rows.
 
+#[path = "common.rs"]
+mod common;
+
 use spa::runtime::{kernels as rk, Runtime};
 use spa::tensor::{ops, Tensor};
 use spa::util::{bench, Rng, Table};
 
 fn main() {
+    let smoke = common::smoke();
+    let (warm, iters) = (common::warmup(1), common::iters(5));
     let has_pjrt = Runtime::global().is_some();
     println!("PJRT artifacts: {}", if has_pjrt { "loaded" } else { "NOT FOUND (native only)" });
     let mut rng = Rng::new(1);
@@ -15,7 +20,8 @@ fn main() {
         "micro — obs_update / hessian kernels (rows = 128)",
         &["kernel", "C", "native (ms)", "pjrt (ms)"],
     );
-    for &c in &[32usize, 64, 128, 256] {
+    let obs_cols: &[usize] = if smoke { &[32] } else { &[32, 64, 128, 256] };
+    for &c in obs_cols {
         let w = Tensor::new(vec![128, c], rng.uniform_vec(128 * c, -1.0, 1.0));
         let xs = Tensor::new(vec![c, c + 8], rng.uniform_vec(c * (c + 8), -1.0, 1.0));
         let mut h = ops::matmul(&xs, &xs.t2());
@@ -24,11 +30,11 @@ fn main() {
         }
         let sweep = rk::sweep_matrix(&h).unwrap();
         let mask: Vec<f32> = (0..c).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
-        let n = bench(&format!("obs_update_native/c{c}"), 1, 5, || {
+        let n = bench(&format!("obs_update_native/c{c}"), warm, iters, || {
             let _ = rk::obs_update_native(&w, &sweep, &mask);
         });
         let p = if has_pjrt {
-            let s = bench(&format!("obs_update_pjrt/c{c}"), 1, 5, || {
+            let s = bench(&format!("obs_update_pjrt/c{c}"), warm, iters, || {
                 let _ = rk::obs_update(&w, &sweep, &mask).unwrap();
             });
             format!("{:.3}", s.mean_ms())
@@ -37,14 +43,15 @@ fn main() {
         };
         t.row(&["obs_update".into(), format!("{c}"), format!("{:.3}", n.mean_ms()), p]);
     }
-    for &c in &[64usize, 128, 256] {
+    let hess_cols: &[usize] = if smoke { &[64] } else { &[64, 128, 256] };
+    for &c in hess_cols {
         let h = Tensor::zeros(&[c, c]);
         let x = Tensor::new(vec![c, 128], rng.uniform_vec(c * 128, -1.0, 1.0));
-        let n = bench(&format!("hessian_native/c{c}"), 1, 5, || {
+        let n = bench(&format!("hessian_native/c{c}"), warm, iters, || {
             let _ = rk::hessian_accum_native(&h, &x);
         });
         let p = if has_pjrt {
-            let s = bench(&format!("hessian_pjrt/c{c}"), 1, 5, || {
+            let s = bench(&format!("hessian_pjrt/c{c}"), warm, iters, || {
                 let _ = rk::hessian_accum(&h, &x).unwrap();
             });
             format!("{:.3}", s.mean_ms())

@@ -1,0 +1,166 @@
+//! Microbench: the `util::par` worker pool on the three hot paths —
+//! GEMM/conv, the OBSPA native kernels, and per-group importance scoring
+//! — timed at 1 vs `SPA_THREADS` (default 4) workers, with a bitwise
+//! equality check on every pair of results.
+
+#[path = "common.rs"]
+mod common;
+
+use common::smoke;
+use spa::prune::{build_groups, score_groups, Agg, Norm};
+use spa::runtime::kernels as rk;
+use spa::tensor::{ops, Tensor};
+use spa::util::{bench, par, Rng, Table};
+use spa::zoo;
+use std::collections::HashMap;
+
+fn main() {
+    // Multi-thread column honors an SPA_THREADS pin; when the pool would
+    // be single-threaded anyway, measure at 4 workers so the comparison
+    // is meaningful.
+    let threads = match par::max_threads() {
+        t if t >= 2 => t,
+        _ => 4,
+    };
+    let iters = common::iters(5);
+    let warmup = common::warmup(1);
+    let title = format!("micro — worker pool speedup (1 vs {threads} threads)");
+    let multi_header = format!("{threads} threads (ms)");
+    let mut t = Table::new(
+        &title,
+        &["workload", "1 thread (ms)", multi_header.as_str(), "speedup", "bits"],
+    );
+    let mut rng = Rng::new(7);
+
+    let gemm_n = if smoke() { 96 } else { 384 };
+    let a = Tensor::new(vec![gemm_n, gemm_n], rng.uniform_vec(gemm_n * gemm_n, -1.0, 1.0));
+    let b = Tensor::new(vec![gemm_n, gemm_n], rng.uniform_vec(gemm_n * gemm_n, -1.0, 1.0));
+    let s1 = bench("gemm/1t", warmup, iters, || {
+        par::with_threads(1, || {
+            let _ = ops::matmul(&a, &b);
+        });
+    });
+    let sn = bench(&format!("gemm/{threads}t"), warmup, iters, || {
+        par::with_threads(threads, || {
+            let _ = ops::matmul(&a, &b);
+        });
+    });
+    let y1 = par::with_threads(1, || ops::matmul(&a, &b));
+    let yn = par::with_threads(threads, || ops::matmul(&a, &b));
+    push_row(&mut t, &format!("gemm {gemm_n}^3"), &s1, &sn, &y1, &yn);
+
+    let imgs = if smoke() { 4 } else { 32 };
+    let conv_label = format!("conv2d b{imgs}");
+    let x = Tensor::new(vec![imgs, 16, 16, 16], rng.uniform_vec(imgs * 16 * 256, -1.0, 1.0));
+    let w = Tensor::new(vec![32, 16, 3, 3], rng.uniform_vec(32 * 16 * 9, -0.3, 0.3));
+    let s1 = bench("conv2d/1t", warmup, iters, || {
+        par::with_threads(1, || {
+            let _ = ops::conv2d(&x, &w, None, 1, 1, 1);
+        });
+    });
+    let sn = bench(&format!("conv2d/{threads}t"), warmup, iters, || {
+        par::with_threads(threads, || {
+            let _ = ops::conv2d(&x, &w, None, 1, 1, 1);
+        });
+    });
+    let y1 = par::with_threads(1, || ops::conv2d(&x, &w, None, 1, 1, 1));
+    let yn = par::with_threads(threads, || ops::conv2d(&x, &w, None, 1, 1, 1));
+    push_row(&mut t, &conv_label, &s1, &sn, &y1, &yn);
+
+    let c = if smoke() { 48 } else { 128 };
+    let rows = if smoke() { 128 } else { 512 };
+    let wm = Tensor::new(vec![rows, c], rng.uniform_vec(rows * c, -1.0, 1.0));
+    let xs = Tensor::new(vec![c, c + 8], rng.uniform_vec(c * (c + 8), -1.0, 1.0));
+    let mut h = ops::matmul(&xs, &xs.t2());
+    for i in 0..c {
+        h.data[i * c + i] += 0.5;
+    }
+    let sweep = rk::sweep_matrix(&h).unwrap();
+    let mask: Vec<f32> = (0..c).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let s1 = bench("obs_update/1t", warmup, iters, || {
+        par::with_threads(1, || {
+            let _ = rk::obs_update_native(&wm, &sweep, &mask);
+        });
+    });
+    let sn = bench(&format!("obs_update/{threads}t"), warmup, iters, || {
+        par::with_threads(threads, || {
+            let _ = rk::obs_update_native(&wm, &sweep, &mask);
+        });
+    });
+    let y1 = par::with_threads(1, || rk::obs_update_native(&wm, &sweep, &mask));
+    let yn = par::with_threads(threads, || rk::obs_update_native(&wm, &sweep, &mask));
+    push_row(&mut t, &format!("obs_update r{rows} c{c}"), &s1, &sn, &y1, &yn);
+
+    let g = zoo::by_name(
+        if smoke() { "resnet18" } else { "resnet50" },
+        zoo::ImageCfg {
+            hw: 8,
+            ..Default::default()
+        },
+        3,
+    )
+    .unwrap();
+    let groups = build_groups(&g).unwrap();
+    let mut l1 = HashMap::new();
+    for pid in g.param_ids() {
+        l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
+    }
+    let s1 = bench("score/1t", warmup, iters, || {
+        par::with_threads(1, || {
+            let _ = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        });
+    });
+    let sn = bench(&format!("score/{threads}t"), warmup, iters, || {
+        par::with_threads(threads, || {
+            let _ = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        });
+    });
+    let r1 = par::with_threads(1, || score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean));
+    let rn = par::with_threads(threads, || score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean));
+    let mut bits = r1.len() == rn.len();
+    for (p, q) in r1.iter().zip(&rn) {
+        if (p.group, p.cc) != (q.group, q.cc) || p.score.to_bits() != q.score.to_bits() {
+            bits = false;
+        }
+    }
+    t.row(&[
+        "importance scoring".to_string(),
+        format!("{:.3}", s1.mean_ms()),
+        format!("{:.3}", sn.mean_ms()),
+        format!("{:.2}x", s1.mean_ns / sn.mean_ns.max(1.0)),
+        verdict(bits),
+    ]);
+
+    t.print();
+}
+
+fn verdict(bits_equal: bool) -> String {
+    if bits_equal {
+        "identical".to_string()
+    } else {
+        "MISMATCH".to_string()
+    }
+}
+
+fn push_row(
+    t: &mut spa::util::Table,
+    name: &str,
+    s1: &spa::util::BenchStats,
+    sn: &spa::util::BenchStats,
+    y1: &Tensor,
+    yn: &Tensor,
+) {
+    let mut bits = y1.shape == yn.shape;
+    for (a, b) in y1.data.iter().zip(&yn.data) {
+        if a.to_bits() != b.to_bits() {
+            bits = false;
+        }
+    }
+    t.row(&[
+        name.to_string(),
+        format!("{:.3}", s1.mean_ms()),
+        format!("{:.3}", sn.mean_ms()),
+        format!("{:.2}x", s1.mean_ns / sn.mean_ns.max(1.0)),
+        verdict(bits),
+    ]);
+}

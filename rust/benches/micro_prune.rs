@@ -14,9 +14,10 @@ fn main() {
         "micro — grouping & pruning throughput",
         &["model", "ops", "group (ms)", "score (ms)", "prune-apply (ms)"],
     );
-    for name in ["resnet18", "resnet50", "resnet101", "densenet", "vit"] {
+    let models = common::take_smoke(vec!["resnet18", "resnet50", "resnet101", "densenet", "vit"]);
+    for name in models {
         let g = zoo::by_name(name, common::cifar_cfg(10), 3).unwrap();
-        let gstats = bench(&format!("{name}/group"), 1, 5, || {
+        let gstats = bench(&format!("{name}/group"), common::warmup(1), common::iters(5), || {
             let _ = build_groups(&g).unwrap();
         });
         let groups = build_groups(&g).unwrap();
@@ -24,12 +25,12 @@ fn main() {
         for pid in g.param_ids() {
             l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
         }
-        let sstats = bench(&format!("{name}/score"), 1, 5, || {
+        let sstats = bench(&format!("{name}/score"), common::warmup(1), common::iters(5), || {
             let _ = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
         });
         let ranked = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
         let sel = prune::select_lowest(&groups, &ranked, 0.4, 1);
-        let pstats = bench(&format!("{name}/apply"), 1, 5, || {
+        let pstats = bench(&format!("{name}/apply"), common::warmup(1), common::iters(5), || {
             let mut gc = g.clone();
             prune::apply_pruning(&mut gc, &groups, &sel).unwrap();
         });

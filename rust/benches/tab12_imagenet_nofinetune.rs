@@ -17,14 +17,20 @@ fn main() {
         "Tab. 12 — resnet50-mini / SynthImageNet without fine-tuning",
         &["method", "accuracy", "RF", "RP", "paper acc / RF"],
     );
-    t.row(&["Base Model".into(), common::pct(base_acc), "1x".into(), "1x".into(), "76.15% / 1x".into()]);
+    t.row(&[
+        "Base Model".into(),
+        common::pct(base_acc),
+        "1x".into(),
+        "1x".into(),
+        "76.15% / 1x".into(),
+    ]);
     let runs = [
         ("OBSPA (ID) - Low", common::OBSPA_ID, 1.22, "74.27% / 1.22x"),
         ("OBSPA (ID) - High", common::OBSPA_ID, 1.43, "70.57% / 1.43x"),
         ("OBSPA (OOD) - Low", common::OBSPA_OOD, 1.25, "71.60% / 1.25x"),
         ("OBSPA (DataFree) - Low", common::OBSPA_DF, 1.21, "70.13% / 1.21x"),
     ];
-    for (name, algo, rf, paper) in runs {
+    for (name, algo, rf, paper) in common::take_smoke(runs.to_vec()) {
         let rep = common::no_finetune(base.clone(), &ds, Some(&ood), algo, rf);
         t.row(&[
             name.to_string(),

@@ -25,7 +25,7 @@ fn main() {
     let paper_dfpc = ["12 min", "-", "-"];
     let paper_obspa = ["1.5-2 min", "3-6 min", "3.5-4.5 min"];
     let mut ratio_r50 = (0.0f64, 0.0f64);
-    for (i, (name, builder)) in models.into_iter().enumerate() {
+    for (i, (name, builder)) in common::take_smoke(models.to_vec()).into_iter().enumerate() {
         let base = common::train_base(builder(common::cifar_cfg(10), 3), &ds, 60);
         // DFPC
         let mut g = base.clone();

@@ -34,7 +34,7 @@ fn main() {
         "Tab. 2 — SPA-L1 ~2x across architectures (SynthCIFAR-10 / SynthSST-2)",
         &["model", "ori acc.", "pruned acc.", "RF", "RP", "paper (acc / RF)"],
     );
-    for name in zoo::IMAGE_MODELS {
+    for name in common::take_smoke(zoo::IMAGE_MODELS.to_vec()) {
         let g = zoo::by_name(name, common::cifar_cfg(10), 7).expect("model");
         let rep = common::tpf(g, &ds, Criterion::L1, Scope::FullCc, 2.0, 1);
         t.row(&[
@@ -52,7 +52,7 @@ fn main() {
         let tds = TextDataset::synth_sst(2, 1024, tcfg.seq, tcfg.vocab, 5);
         let mut g = zoo::distilbert(tcfg, 5);
         let tr = TrainCfg {
-            steps: 150,
+            steps: common::steps(150),
             lr: 0.05,
             log_every: 0,
             ..Default::default()
@@ -69,7 +69,7 @@ fn main() {
         let sel = prune::select_by_flops_target(&g, &groups, &ranked, 2.0, 2).unwrap();
         prune::apply_pruning(&mut g, &groups, &sel).unwrap();
         let mut ft = tr.clone();
-        ft.steps = 80;
+        ft.steps = common::steps(80);
         ft.lr = 0.02;
         train::train(&mut g, &tds, &ft).unwrap();
         let fin = train::evaluate_text(&g, &tds, 256).unwrap();

@@ -18,7 +18,7 @@ fn finetune(g: &mut spa::ir::Graph, ds: &spa::data::ImageDataset) {
         g,
         ds,
         &TrainCfg {
-            steps: 80,
+            steps: common::steps(80),
             lr: 0.02,
             log_every: 0,
             ..Default::default()

@@ -41,8 +41,8 @@ fn main() {
             ("OBSPA (DataFree)", "-1.59% / 1.47x"),
         ]),
     ];
-    for (dsname, model, rows) in paper {
-        let (ds, ood) = if *dsname == "CIFAR-10" {
+    for (dsname, model, rows) in common::take_smoke(paper.to_vec()) {
+        let (ds, ood) = if dsname == "CIFAR-10" {
             (common::synth_cifar10(81), common::synth_cifar100(82))
         } else {
             (common::synth_cifar100(83), common::synth_cifar10(84))

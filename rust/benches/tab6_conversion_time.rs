@@ -23,8 +23,8 @@ fn main() {
         for (di, d) in Dialect::ALL.into_iter().enumerate() {
             let stats = bench(
                 &format!("{model}/{}", d.name()),
-                1,
-                10,
+                common::warmup(1),
+                common::iters(10),
                 || {
                     let s = export_to_string(&g, d);
                     let _ = import_from_string(&s).unwrap();

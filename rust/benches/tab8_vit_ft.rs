@@ -15,12 +15,18 @@ fn main() {
     let ds = common::synth_imagenet(72);
     let base = common::train_base(zoo::vit(common::cifar_cfg(20), 8), &ds, 200);
     let base_acc = train::evaluate(&base, &ds, 384).unwrap();
-    let ft = TrainCfg { steps: 80, lr: 0.02, log_every: 0, ..Default::default() };
+    let ft = TrainCfg { steps: common::steps(80), lr: 0.02, log_every: 0, ..Default::default() };
     let mut t = Table::new(
         "Tab. 8 — vit-mini / SynthImageNet with fine-tuning",
         &["method", "top1 acc.", "RF", "RP", "paper top1 / RF"],
     );
-    t.row(&["Base Model".into(), common::pct(base_acc), "1x".into(), "1x".into(), "81.43% / 1x".into()]);
+    t.row(&[
+        "Base Model".into(),
+        common::pct(base_acc),
+        "1x".into(),
+        "1x".into(),
+        "81.43% / 1x".into(),
+    ]);
     // DepGraph proxy: ungrouped structured L1
     {
         let mut g = base.clone();
@@ -34,30 +40,55 @@ fn main() {
         train::train(&mut g, &ds, &ft).unwrap();
         let acc = train::evaluate(&g, &ds, 384).unwrap();
         let r = spa::analysis::reduction(&base, &g);
-        t.row(&["ungrouped-L1 (DepGraph proxy)".into(), common::pct(acc), common::ratio(r.rf), common::ratio(r.rp), "79.17% / 1.69x (DepGraph)".into()]);
+        t.row(&[
+            "ungrouped-L1 (DepGraph proxy)".into(),
+            common::pct(acc),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            "79.17% / 1.69x (DepGraph)".into(),
+        ]);
     }
     // SPA-L1
     {
         let mut g = base.clone();
         let groups = spa::prune::build_groups(&g).unwrap();
         let scores = spa::coordinator::criterion_scores(&g, &ds, Criterion::L1, 1).unwrap();
-        let ranked = spa::prune::score_groups(&g, &groups, &scores, spa::prune::Agg::Sum, spa::prune::Norm::Mean);
+        let ranked = spa::prune::score_groups(
+            &g,
+            &groups,
+            &scores,
+            spa::prune::Agg::Sum,
+            spa::prune::Norm::Mean,
+        );
         let sel = spa::prune::select_by_flops_target(&g, &groups, &ranked, 2.0, 2).unwrap();
         spa::prune::apply_pruning(&mut g, &groups, &sel).unwrap();
         train::train(&mut g, &ds, &ft).unwrap();
         let acc = train::evaluate(&g, &ds, 384).unwrap();
         let r = spa::analysis::reduction(&base, &g);
-        t.row(&["SPA-L1".into(), common::pct(acc), common::ratio(r.rf), common::ratio(r.rp), "78.81% / 2.03x".into()]);
+        t.row(&[
+            "SPA-L1".into(),
+            common::pct(acc),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            "78.81% / 2.03x".into(),
+        ]);
     }
     // OBSPA + finetune
     {
         let mut g = base.clone();
         let (calib, _) = ds.train_batch_seeded(11, 128);
-        obspa::obspa_prune(&mut g, &calib, &ObspaCfg { target_rf: 1.95, ..Default::default() }).unwrap();
+        obspa::obspa_prune(&mut g, &calib, &ObspaCfg { target_rf: 1.95, ..Default::default() })
+            .unwrap();
         train::train(&mut g, &ds, &ft).unwrap();
         let acc = train::evaluate(&g, &ds, 384).unwrap();
         let r = spa::analysis::reduction(&base, &g);
-        t.row(&["OBSPA + finetune".into(), common::pct(acc), common::ratio(r.rf), common::ratio(r.rp), "78.90% / 1.95x".into()]);
+        t.row(&[
+            "OBSPA + finetune".into(),
+            common::pct(acc),
+            common::ratio(r.rf),
+            common::ratio(r.rp),
+            "78.90% / 1.95x".into(),
+        ]);
     }
     t.print();
     println!("shape to check: SPA-L1 ≈ base ≥ ungrouped proxy at ~2.1x; OBSPA ≥ base at 1.8x");

@@ -28,8 +28,8 @@ fn main() {
             ("OBSPA (DataFree)", "-9.95% / 1.61x"),
         ]),
     ];
-    for (dsname, rows) in paper {
-        let (ds, ood) = if *dsname == "CIFAR-10" {
+    for (dsname, rows) in common::take_smoke(paper.to_vec()) {
+        let (ds, ood) = if dsname == "CIFAR-10" {
             (common::synth_cifar10(91), common::synth_cifar100(92))
         } else {
             (common::synth_cifar100(93), common::synth_cifar10(94))

@@ -179,11 +179,25 @@ impl GraphBuilder {
         self.add_op(name, OpKind::Mul, vec![a, b])
     }
 
-    pub fn maxpool2d(&mut self, name: &str, x: DataId, k: usize, stride: usize, pad: usize) -> DataId {
+    pub fn maxpool2d(
+        &mut self,
+        name: &str,
+        x: DataId,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> DataId {
         self.add_op(name, OpKind::MaxPool2d { k, stride, pad }, vec![x])
     }
 
-    pub fn avgpool2d(&mut self, name: &str, x: DataId, k: usize, stride: usize, pad: usize) -> DataId {
+    pub fn avgpool2d(
+        &mut self,
+        name: &str,
+        x: DataId,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> DataId {
         self.add_op(name, OpKind::AvgPool2d { k, stride, pad }, vec![x])
     }
 

@@ -285,7 +285,8 @@ mod tests {
 
     #[test]
     fn split_merge_heads() {
-        let s = infer_op_output_shapes(&OpKind::SplitHeads { heads: 4 }, &[vec![2, 9, 32]]).unwrap();
+        let s =
+            infer_op_output_shapes(&OpKind::SplitHeads { heads: 4 }, &[vec![2, 9, 32]]).unwrap();
         assert_eq!(s, vec![vec![2, 4, 9, 8]]);
         let m = infer_op_output_shapes(&OpKind::MergeHeads, &[vec![2, 4, 9, 8]]).unwrap();
         assert_eq!(m, vec![vec![2, 9, 32]]);

@@ -8,10 +8,11 @@
 //! scalars within each group so scores are comparable *across* groups for
 //! global ranking (the paper's Alg. 3).
 
-use super::grouping::Groups;
+use super::grouping::{Group, Groups};
 use super::Loc;
 use crate::ir::{DataId, Graph};
 use crate::tensor::Tensor;
+use crate::util::par;
 use std::collections::HashMap;
 
 /// Aggregation operator over the scores of a coupled channel set.
@@ -146,6 +147,11 @@ pub fn score_groups(
 }
 
 /// [`score_groups`] with an explicit scoring [`Scope`].
+///
+/// Groups are scored independently (Eq. 1 normalizes within a group), so
+/// per-group aggregation fans out across the `util::par` worker pool;
+/// results are flattened back in group order, making the output — order
+/// and bits — identical at any `SPA_THREADS`.
 pub fn score_groups_scoped(
     g: &Graph,
     groups: &Groups,
@@ -154,20 +160,15 @@ pub fn score_groups_scoped(
     norm: Norm,
     scope: Scope,
 ) -> Vec<GroupScore> {
-    let mut out = Vec::new();
-    for group in &groups.groups {
-        if !group.prunable {
-            continue;
-        }
+    let prunable: Vec<&Group> = groups.groups.iter().filter(|gr| gr.prunable).collect();
+    let score_one = |group: &Group| -> Vec<GroupScore> {
         // For SourceOnly scoring, restrict to the source op's weight dim 0.
         let src_w = g.op(group.source_op).inputs.get(1).copied();
         let mut scores: Vec<f32> = Vec::with_capacity(group.ccs.len());
         for cc in &group.ccs {
             let mut vals = Vec::new();
             for loc in &cc.locs {
-                if scope == Scope::SourceOnly
-                    && (Some(loc.data) != src_w || loc.dim != 0)
-                {
+                if scope == Scope::SourceOnly && (Some(loc.data) != src_w || loc.dim != 0) {
                     continue;
                 }
                 if let Some(s) = param_scores.get(&loc.data) {
@@ -177,15 +178,25 @@ pub fn score_groups_scoped(
             scores.push(agg.apply(&vals));
         }
         norm.apply(&mut scores);
-        for (cc, &score) in scores.iter().enumerate() {
-            out.push(GroupScore {
+        scores
+            .iter()
+            .enumerate()
+            .map(|(cc, &score)| GroupScore {
                 group: group.id,
                 cc,
                 score,
-            });
-        }
-    }
-    out
+            })
+            .collect()
+    };
+    // Small graphs stay serial — a handful of tiny groups is cheaper
+    // than thread spawns (util::par design constraint).
+    let total_ccs: usize = prunable.iter().map(|gr| gr.ccs.len()).sum();
+    let scored: Vec<Vec<GroupScore>> = if par::max_threads() <= 1 || total_ccs < 64 {
+        prunable.iter().map(|group| score_one(group)).collect()
+    } else {
+        par::par_map(&prunable, |group| score_one(group))
+    };
+    scored.into_iter().flatten().collect()
 }
 
 #[cfg(test)]

@@ -10,6 +10,7 @@
 
 use super::{ladder_cols, Runtime, M_BLOCK, ROW_BLOCK};
 use crate::tensor::Tensor;
+use crate::util::par;
 
 /// Which executor ran a kernel (reported by benches).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,48 +19,100 @@ pub enum Backend {
     Native,
 }
 
+/// Below this many f32 ops the native kernels stay single-threaded.
+const PAR_KERNEL_MIN_OPS: usize = 64 * 1024;
+
 /// Structured OBS column sweep (native reference, mirrors
 /// `python/compile/kernels/ref.py::obs_update_ref`).
+///
+/// The column order is sequential (each pruned column's error term feeds
+/// later columns), but rows are fully independent: every row reads and
+/// writes only its own `out` slice plus the shared read-only sweep
+/// matrix. Rows therefore fan out across the `util::par` pool in fixed
+/// bands, each band running the identical column sweep — bit-identical
+/// to the serial path at any `SPA_THREADS`.
 pub fn obs_update_native(w: &Tensor, sweep: &Tensor, mask: &[f32]) -> Tensor {
     let (r, c) = (w.shape[0], w.shape[1]);
     assert_eq!(sweep.shape, vec![c, c]);
     assert_eq!(mask.len(), c);
     let mut out = w.clone();
+    if c == 0 {
+        return out;
+    }
+    let threads = par::max_threads();
+    if threads > 1 && r * c * c >= PAR_KERNEL_MIN_OPS {
+        // Band size affects scheduling only (rows are self-contained),
+        // so shrinking below ROW_BLOCK for small r keeps bit-identity.
+        let band = ROW_BLOCK.min(r.div_ceil(threads)).max(1);
+        par::par_chunks_mut(&mut out.data, band * c, |_, rows| {
+            obs_sweep_rows(rows, sweep, mask, c);
+        });
+    } else {
+        obs_sweep_rows(&mut out.data, sweep, mask, c);
+    }
+    out
+}
+
+/// The serial column sweep over one band of rows.
+fn obs_sweep_rows(rows: &mut [f32], sweep: &Tensor, mask: &[f32], c: usize) {
+    let r = rows.len() / c;
     for i in 0..c {
         if mask[i] <= 0.0 {
             continue;
         }
         let hii = sweep.data[i * c + i];
         for row in 0..r {
-            let err = out.data[row * c + i] / hii;
+            let err = rows[row * c + i] / hii;
             if err == 0.0 {
                 continue;
             }
             let base = row * c;
             for j in i..c {
-                out.data[base + j] -= err * sweep.data[i * c + j];
+                rows[base + j] -= err * sweep.data[i * c + j];
             }
         }
         for row in 0..r {
-            out.data[row * c + i] = 0.0;
+            rows[row * c + i] = 0.0;
         }
     }
-    out
 }
 
 /// Hessian accumulation H + X·Xᵀ (native reference).
+///
+/// The upper-triangle dot products `acc[i][j] = Σ_k x[i,k]·x[j,k]` are
+/// computed into a scratch matrix whose rows fan out across the pool
+/// (row `i` owns `acc[i][i..]`); a serial pass then adds each exact
+/// `acc` into both mirror positions — the same arithmetic as the fully
+/// serial kernel, so results are bit-identical at any `SPA_THREADS`.
 pub fn hessian_accum_native(h: &Tensor, x: &Tensor) -> Tensor {
     let c = h.shape[0];
     let m = x.shape[1];
     assert_eq!(x.shape[0], c);
     let mut out = h.clone();
-    for i in 0..c {
+    if c == 0 {
+        return out;
+    }
+    let mut accs = vec![0.0f32; c * c];
+    let accum_row = |i: usize, row: &mut [f32]| {
         for j in i..c {
             let mut acc = 0.0f32;
             let (ri, rj) = (&x.data[i * m..(i + 1) * m], &x.data[j * m..(j + 1) * m]);
             for k in 0..m {
                 acc += ri[k] * rj[k];
             }
+            row[j] = acc;
+        }
+    };
+    if c * c * m / 2 >= PAR_KERNEL_MIN_OPS && par::workers_for(c) > 1 {
+        par::par_chunks_mut(&mut accs, c, |i, row| accum_row(i, row));
+    } else {
+        for (i, row) in accs.chunks_mut(c).enumerate() {
+            accum_row(i, row);
+        }
+    }
+    for i in 0..c {
+        for j in i..c {
+            let acc = accs[i * c + j];
             out.data[i * c + j] += acc;
             if i != j {
                 out.data[j * c + i] += acc;

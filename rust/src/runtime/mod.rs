@@ -7,16 +7,13 @@
 //! artifact. Kernel entry points pad operands to the canonical-shape
 //! ladder the artifacts were lowered at (zero-pad `W`/`X`, identity-pad
 //! Cholesky factors), which the L1 test-suite proves exact.
+//!
+//! The PJRT path is gated behind the `pjrt` cargo feature: artifact
+//! execution needs the Python-side AOT step that hermetic CI does not
+//! run. Without the feature, [`Runtime::global`] is always `None` and
+//! every kernel entry point takes its bit-exact native fallback.
 
 pub mod kernels;
-
-use crate::tensor::Tensor;
-use crate::util::parse_json;
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::sync::Mutex;
 
 /// Column-ladder the artifacts are lowered at (mirrors aot.py COL_LADDER).
 pub const COL_LADDER: [usize; 5] = [32, 64, 128, 256, 512];
@@ -25,122 +22,170 @@ pub const ROW_BLOCK: usize = 128;
 /// Calibration block of the hessian kernel (mirrors hessian.M_BLOCK).
 pub const M_BLOCK: usize = 128;
 
-/// Artifact-backed PJRT executor.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_rt {
+    use crate::tensor::Tensor;
+    use crate::util::parse_json;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
+    use std::sync::Mutex;
 
-thread_local! {
-    // PJRT client handles are Rc-based (not Send/Sync); keep one runtime
-    // per thread. Compiled-executable caches are therefore per-thread too.
-    static RUNTIME: RefCell<Option<Option<Rc<Runtime>>>> = const { RefCell::new(None) };
-}
-
-impl Runtime {
-    /// Create a runtime reading artifacts from `dir`.
-    pub fn new(dir: &Path) -> anyhow::Result<Runtime> {
-        anyhow::ensure!(
-            dir.join("manifest.json").exists(),
-            "no artifact manifest in {} — run `make artifacts`",
-            dir.display()
-        );
-        let manifest = parse_json(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
-        anyhow::ensure!(
-            manifest.field("format")?.as_str() == Some("spa-artifacts-v1"),
-            "unknown artifact manifest format"
-        );
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e}"))?;
-        Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            cache: Mutex::new(HashMap::new()),
-        })
+    /// Artifact-backed PJRT executor.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
     }
 
-    /// The per-thread runtime, if artifacts are available. Looks in
-    /// `$SPA_ARTIFACTS` then `./artifacts`. Returns `None` when artifacts
-    /// were never built (callers fall back to native kernels).
-    pub fn global() -> Option<Rc<Runtime>> {
-        RUNTIME.with(|r| {
-            let mut slot = r.borrow_mut();
-            if slot.is_none() {
-                let dir = std::env::var("SPA_ARTIFACTS")
-                    .map(PathBuf::from)
-                    .unwrap_or_else(|_| PathBuf::from("artifacts"));
-                *slot = Some(Runtime::new(&dir).ok().map(Rc::new));
-            }
-            slot.as_ref().unwrap().clone()
-        })
+    thread_local! {
+        // PJRT client handles are Rc-based (not Send/Sync); keep one runtime
+        // per thread. Compiled-executable caches are therefore per-thread too.
+        static RUNTIME: RefCell<Option<Option<Rc<Runtime>>>> = const { RefCell::new(None) };
     }
 
-    /// Compile (or fetch the cached) executable for an artifact.
-    fn executable(&self, name: &str) -> anyhow::Result<&'static xla::PjRtLoadedExecutable> {
-        let mut cache = self.cache.lock().unwrap();
-        if let Some(e) = cache.get(name) {
-            return Ok(e);
-        }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        anyhow::ensure!(path.exists(), "missing artifact {}", path.display());
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("hlo parse {name}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
-        // Executables live for the process lifetime; leak to get 'static
-        // references the cache can hand out without lifetime gymnastics.
-        let leaked: &'static xla::PjRtLoadedExecutable = Box::leak(Box::new(exe));
-        cache.insert(name.to_string(), leaked);
-        Ok(leaked)
-    }
-
-    /// Execute an artifact on f32 tensors, returning the tuple elements.
-    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow::anyhow!("literal: {e}"))
+    impl Runtime {
+        /// Create a runtime reading artifacts from `dir`.
+        pub fn new(dir: &Path) -> anyhow::Result<Runtime> {
+            anyhow::ensure!(
+                dir.join("manifest.json").exists(),
+                "no artifact manifest in {} — run `make artifacts`",
+                dir.display()
+            );
+            let manifest = parse_json(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
+            anyhow::ensure!(
+                manifest.field("format")?.as_str() == Some("spa-artifacts-v1"),
+                "unknown artifact manifest format"
+            );
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e}"))?;
+            Ok(Runtime {
+                client,
+                dir: dir.to_path_buf(),
+                cache: Mutex::new(HashMap::new()),
             })
-            .collect::<anyhow::Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name}: {e}"))?;
-        // aot.py lowers with return_tuple=True → unwrap the tuple
-        let elems = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("tuple {name}: {e}"))?;
-        let mut outs = Vec::new();
-        for elem in elems {
-            let dims: Vec<usize> = elem
-                .array_shape()
-                .map_err(|e| anyhow::anyhow!("shape: {e}"))?
-                .dims()
-                .iter()
-                .map(|&d| d as usize)
-                .collect();
-            let data = elem
-                .to_vec::<f32>()
-                .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
-            outs.push(Tensor::new(dims, data));
         }
-        Ok(outs)
-    }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+        /// The per-thread runtime, if artifacts are available. Looks in
+        /// `$SPA_ARTIFACTS` then `./artifacts`. Returns `None` when artifacts
+        /// were never built (callers fall back to native kernels).
+        pub fn global() -> Option<Rc<Runtime>> {
+            RUNTIME.with(|r| {
+                let mut slot = r.borrow_mut();
+                if slot.is_none() {
+                    let dir = std::env::var("SPA_ARTIFACTS")
+                        .map(PathBuf::from)
+                        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+                    *slot = Some(Runtime::new(&dir).ok().map(Rc::new));
+                }
+                slot.as_ref().unwrap().clone()
+            })
+        }
+
+        /// Compile (or fetch the cached) executable for an artifact.
+        fn executable(&self, name: &str) -> anyhow::Result<&'static xla::PjRtLoadedExecutable> {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(e);
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            anyhow::ensure!(path.exists(), "missing artifact {}", path.display());
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("hlo parse {name}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+            // Executables live for the process lifetime; leak to get 'static
+            // references the cache can hand out without lifetime gymnastics.
+            let leaked: &'static xla::PjRtLoadedExecutable = Box::leak(Box::new(exe));
+            cache.insert(name.to_string(), leaked);
+            Ok(leaked)
+        }
+
+        /// Execute an artifact on f32 tensors, returning the tuple elements.
+        pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+            let exe = self.executable(name)?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("literal: {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch {name}: {e}"))?;
+            // aot.py lowers with return_tuple=True → unwrap the tuple
+            let elems = result
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("tuple {name}: {e}"))?;
+            let mut outs = Vec::new();
+            for elem in elems {
+                let dims: Vec<usize> = elem
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("shape: {e}"))?
+                    .dims()
+                    .iter()
+                    .map(|&d| d as usize)
+                    .collect();
+                let data = elem
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+                outs.push(Tensor::new(dims, data));
+            }
+            Ok(outs)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_rt {
+    use crate::tensor::Tensor;
+    use std::path::Path;
+    use std::rc::Rc;
+
+    /// Stub executor used when the `pjrt` feature is disabled: artifacts
+    /// are never available, so [`Runtime::global`] is always `None` and
+    /// kernels use their native fallbacks.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn new(_dir: &Path) -> anyhow::Result<Runtime> {
+            anyhow::bail!("PJRT runtime disabled (build with `--features pjrt`)")
+        }
+
+        pub fn global() -> Option<Rc<Runtime>> {
+            None
+        }
+
+        pub fn execute(&self, name: &str, _inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+            anyhow::bail!("PJRT runtime disabled, cannot execute artifact `{name}`")
+        }
+
+        pub fn platform(&self) -> String {
+            "disabled".to_string()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_rt::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub_rt::Runtime;
 
 /// Round a column count up to the canonical ladder.
 pub fn ladder_cols(c: usize) -> anyhow::Result<usize> {
@@ -164,11 +209,19 @@ mod tests {
         assert!(ladder_cols(513).is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn global_runtime_loads_when_artifacts_exist() {
         if std::path::Path::new("artifacts/manifest.json").exists() {
             let rt = Runtime::global().expect("artifacts exist but runtime failed");
-            assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+            assert!(rt.platform().to_lowercase().contains("cpu"));
         }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_is_absent() {
+        assert!(Runtime::global().is_none());
+        assert!(Runtime::new(std::path::Path::new("artifacts")).is_err());
     }
 }

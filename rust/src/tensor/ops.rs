@@ -8,10 +8,15 @@
 //! lowers onto it via im2col.
 
 use super::Tensor;
+use crate::util::par;
 
 // Cache-blocking parameters for the GEMM microkernel.
 const MC: usize = 128;
 const NC: usize = 256;
+
+/// Below this many multiply-accumulates a GEMM stays single-threaded —
+/// thread spawn costs dominate tiny kernels.
+const PAR_GEMM_MIN_MACS: usize = 64 * 1024;
 
 /// C[m,n] = A[m,k] · B[k,n]
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -26,7 +31,31 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// out[m,n] += A[m,k] · B[k,n] on raw slices (row-major).
+///
+/// Rows of `out` are independent, so large GEMMs split into row bands
+/// executed on the `util::par` worker pool. Each row's arithmetic is
+/// identical to the serial path (same loop order per row), so results are
+/// bit-identical at any `SPA_THREADS`.
 pub fn gemm_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let threads = par::max_threads();
+    if threads <= 1 || m * k * n < PAR_GEMM_MIN_MACS {
+        gemm_band(a, b, out, m, k, n);
+        return;
+    }
+    // Row bands: MC for cache friendliness, shrunk when m is small so
+    // wide-but-short GEMMs (FC layers at small batch) still fan out.
+    // Band size affects scheduling only — each row's arithmetic is
+    // self-contained — so any banding yields bit-identical results.
+    let band = MC.min(m.div_ceil(threads)).max(1);
+    par::par_chunks_mut(out, band * n, |bi, oband| {
+        let r0 = bi * band;
+        let rows = oband.len() / n;
+        gemm_band(&a[r0 * k..(r0 + rows) * k], b, oband, rows, k, n);
+    });
+}
+
+/// Serial blocked GEMM microkernel over one row band.
+fn gemm_band(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     // i-k-j loop order with j-blocking: streams B rows, accumulates into
     // the C row held in cache.
     for jc in (0..n).step_by(NC) {
@@ -69,15 +98,28 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
     shape.push(m);
     shape.push(n);
     let mut out = vec![0.0f32; batch * m * n];
-    for bi in 0..batch {
-        gemm_into(
-            &a.data[bi * m * k..(bi + 1) * m * k],
-            &b.data[bi * k * n..(bi + 1) * k * n],
-            &mut out[bi * m * n..(bi + 1) * m * n],
-            m,
-            k,
-            n,
-        );
+    if m * n > 0 && batch * m * k * n >= PAR_GEMM_MIN_MACS && par::workers_for(batch) > 1 {
+        par::par_chunks_mut(&mut out, m * n, |bi, obatch| {
+            gemm_band(
+                &a.data[bi * m * k..(bi + 1) * m * k],
+                &b.data[bi * k * n..(bi + 1) * k * n],
+                obatch,
+                m,
+                k,
+                n,
+            );
+        });
+    } else {
+        for bi in 0..batch {
+            gemm_into(
+                &a.data[bi * m * k..(bi + 1) * m * k],
+                &b.data[bi * k * n..(bi + 1) * k * n],
+                &mut out[bi * m * n..(bi + 1) * m * n],
+                m,
+                k,
+                n,
+            );
+        }
     }
     Tensor::new(shape, out)
 }
@@ -231,16 +273,34 @@ pub fn conv2d(
     let kdim = cig * kh * kw;
     let owh = ho * wo;
     let mut out = vec![0.0f32; n * co * owh];
-    let mut cols = vec![0.0f32; kdim * owh];
-    for img in 0..n {
-        for g in 0..groups {
-            let xs = &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
-            im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
-            // w_g [cog, kdim] · cols [kdim, owh] → y_g [cog, owh]
-            let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
-            let ys =
-                &mut out[(img * co + g * cog) * owh..(img * co + (g + 1) * cog) * owh];
-            gemm_into(wg, &cols, ys, cog, kdim, owh);
+    let macs = n * co * owh * kdim;
+    if co * owh > 0 && macs >= PAR_GEMM_MIN_MACS && par::workers_for(n) > 1 {
+        // One image per chunk: im2col + GEMM are fully image-local, so
+        // images fan out across the pool with bit-identical per-image
+        // arithmetic (each worker runs the same serial kernel).
+        par::par_chunks_mut(&mut out, co * owh, |img, oimg| {
+            let mut cols = vec![0.0f32; kdim * owh];
+            for g in 0..groups {
+                let xs =
+                    &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+                im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
+                let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
+                let ys = &mut oimg[g * cog * owh..(g + 1) * cog * owh];
+                gemm_band(wg, &cols, ys, cog, kdim, owh);
+            }
+        });
+    } else {
+        let mut cols = vec![0.0f32; kdim * owh];
+        for img in 0..n {
+            for g in 0..groups {
+                let xs =
+                    &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+                im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
+                // w_g [cog, kdim] · cols [kdim, owh] → y_g [cog, owh]
+                let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
+                let ys = &mut out[(img * co + g * cog) * owh..(img * co + (g + 1) * cog) * owh];
+                gemm_into(wg, &cols, ys, cog, kdim, owh);
+            }
         }
     }
     if let Some(b) = b {
@@ -258,7 +318,21 @@ pub fn conv2d(
     Tensor::new(vec![n, co, ho, wo], out)
 }
 
+/// Images per partial-gradient block in [`conv2d_backward`]. Fixed (not
+/// derived from the worker count) so the floating-point reduction order
+/// is identical at any `SPA_THREADS`; 4 gives 8-way parallelism at the
+/// typical batch 32 while capping partial-buffer memory at n/4 weights.
+const BWD_IMG_BLOCK: usize = 4;
+
 /// Gradients of conv2d: returns (dx, dw, db).
+///
+/// Images are independent: `dx` slices are disjoint per image, and the
+/// `dw`/`db` contributions are accumulated per fixed-size image block
+/// into partial buffers that are reduced in block order afterwards. Both
+/// the serial and parallel paths use the same block structure, so the
+/// element-wise addition sequence — and therefore every output bit — is
+/// identical at any `SPA_THREADS`, while peak memory scales with
+/// `n / BWD_IMG_BLOCK` partials rather than `n`.
 pub fn conv2d_backward(
     x: &Tensor,
     w: &Tensor,
@@ -273,54 +347,110 @@ pub fn conv2d_backward(
     let cog = co / groups;
     let kdim = cig * kh * kw;
     let owh = ho * wo;
+    let per_img = ci * h * wd;
     let mut dx = vec![0.0f32; x.numel()];
     let mut dw = vec![0.0f32; w.numel()];
     let mut db = vec![0.0f32; co];
-    let mut cols = vec![0.0f32; kdim * owh];
-    let mut dcols = vec![0.0f32; kdim * owh];
-    for img in 0..n {
-        for g in 0..groups {
-            let xs = &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
-            im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
-            let dys = &dy.data[(img * co + g * cog) * owh..(img * co + (g + 1) * cog) * owh];
-            // dw_g [cog, kdim] += dy_g [cog, owh] · cols^T [owh, kdim]
-            let dwg = &mut dw[g * cog * kdim..(g + 1) * cog * kdim];
-            for oc in 0..cog {
-                let dyr = &dys[oc * owh..(oc + 1) * owh];
-                let dwr = &mut dwg[oc * kdim..(oc + 1) * kdim];
-                for p in 0..kdim {
-                    let colr = &cols[p * owh..(p + 1) * owh];
-                    let mut acc = 0.0f32;
-                    for q in 0..owh {
-                        acc += dyr[q] * colr[q];
-                    }
-                    dwr[p] += acc;
-                }
-            }
-            // dcols [kdim, owh] = w_g^T [kdim, cog] · dy_g [cog, owh]
-            dcols.iter_mut().for_each(|v| *v = 0.0);
-            let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
-            for oc in 0..cog {
-                let dyr = &dys[oc * owh..(oc + 1) * owh];
-                let wr = &wg[oc * kdim..(oc + 1) * kdim];
-                for p in 0..kdim {
-                    let wv = wr[p];
-                    if wv == 0.0 {
-                        continue;
-                    }
-                    let dcr = &mut dcols[p * owh..(p + 1) * owh];
-                    for q in 0..owh {
-                        dcr[q] += wv * dyr[q];
+    // One image's backward, accumulating into the given dx slice and
+    // dw/db buffers. Shared by the serial and parallel paths so the
+    // per-element addition sequence (image-major) is identical.
+    let image_backward =
+        |img: usize, dxi: &mut [f32], dwi: &mut [f32], dbi: &mut [f32], scratch: &mut [f32]| {
+            let (cols, dcols) = scratch.split_at_mut(kdim * owh);
+            for g in 0..groups {
+                let xs =
+                    &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+                im2col_single(xs, cig, h, wd, kh, kw, stride, pad, cols);
+                let dys = &dy.data[(img * co + g * cog) * owh..(img * co + (g + 1) * cog) * owh];
+                // dw_g [cog, kdim] += dy_g [cog, owh] · cols^T [owh, kdim]
+                let dwg = &mut dwi[g * cog * kdim..(g + 1) * cog * kdim];
+                for oc in 0..cog {
+                    let dyr = &dys[oc * owh..(oc + 1) * owh];
+                    let dwr = &mut dwg[oc * kdim..(oc + 1) * kdim];
+                    for p in 0..kdim {
+                        let colr = &cols[p * owh..(p + 1) * owh];
+                        let mut acc = 0.0f32;
+                        for q in 0..owh {
+                            acc += dyr[q] * colr[q];
+                        }
+                        dwr[p] += acc;
                     }
                 }
+                // dcols [kdim, owh] = w_g^T [kdim, cog] · dy_g [cog, owh]
+                dcols.iter_mut().for_each(|v| *v = 0.0);
+                let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
+                for oc in 0..cog {
+                    let dyr = &dys[oc * owh..(oc + 1) * owh];
+                    let wr = &wg[oc * kdim..(oc + 1) * kdim];
+                    for p in 0..kdim {
+                        let wv = wr[p];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        let dcr = &mut dcols[p * owh..(p + 1) * owh];
+                        for q in 0..owh {
+                            dcr[q] += wv * dyr[q];
+                        }
+                    }
+                }
+                let dxs = &mut dxi[g * cig * h * wd..(g + 1) * cig * h * wd];
+                col2im_single(dcols, cig, h, wd, kh, kw, stride, pad, dxs);
             }
-            let dxs = &mut dx
-                [(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
-            col2im_single(&dcols, cig, h, wd, kh, kw, stride, pad, dxs);
+            for c in 0..co {
+                let base = (img * co + c) * owh;
+                dbi[c] += dy.data[base..base + owh].iter().sum::<f32>();
+            }
+        };
+    // One block = up to BWD_IMG_BLOCK consecutive images accumulated (in
+    // image order) into one dw/db partial and a contiguous dx range.
+    let n_blocks = n.div_ceil(BWD_IMG_BLOCK).max(1);
+    let block_backward = |blk: usize, dxb: &mut [f32], dwb: &mut [f32], dbb: &mut [f32]| {
+        let mut scratch = vec![0.0f32; 2 * kdim * owh];
+        let lo = blk * BWD_IMG_BLOCK;
+        let hi = (lo + BWD_IMG_BLOCK).min(n);
+        for img in lo..hi {
+            let off = (img - lo) * per_img;
+            image_backward(img, &mut dxb[off..off + per_img], dwb, dbb, &mut scratch);
         }
-        for c in 0..co {
-            let base = (img * co + c) * owh;
-            db[c] += dy.data[base..base + owh].iter().sum::<f32>();
+    };
+    let macs = n * co * owh * kdim;
+    if per_img > 0 && macs >= PAR_GEMM_MIN_MACS && par::workers_for(n_blocks) > 1 {
+        let blocks: Vec<usize> = (0..n_blocks).collect();
+        let partials: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = par::par_map(&blocks, |&blk| {
+            let imgs = ((blk + 1) * BWD_IMG_BLOCK).min(n) - blk * BWD_IMG_BLOCK;
+            let mut dxb = vec![0.0f32; imgs * per_img];
+            let mut dwb = vec![0.0f32; w.numel()];
+            let mut dbb = vec![0.0f32; co];
+            block_backward(blk, &mut dxb, &mut dwb, &mut dbb);
+            (dxb, dwb, dbb)
+        });
+        for (blk, (dxb, dwb, dbb)) in partials.into_iter().enumerate() {
+            let lo = blk * BWD_IMG_BLOCK * per_img;
+            dx[lo..lo + dxb.len()].copy_from_slice(&dxb);
+            for (acc, v) in dw.iter_mut().zip(&dwb) {
+                *acc += v;
+            }
+            for (acc, v) in db.iter_mut().zip(&dbb) {
+                *acc += v;
+            }
+        }
+    } else {
+        // Serial: identical block structure, one partial reused per block.
+        let mut dwb = vec![0.0f32; w.numel()];
+        let mut dbb = vec![0.0f32; co];
+        for blk in 0..n_blocks {
+            dwb.iter_mut().for_each(|v| *v = 0.0);
+            dbb.iter_mut().for_each(|v| *v = 0.0);
+            let lo = blk * BWD_IMG_BLOCK;
+            let hi = (lo + BWD_IMG_BLOCK).min(n);
+            let dxb = &mut dx[lo * per_img..hi * per_img];
+            block_backward(blk, dxb, &mut dwb, &mut dbb);
+            for (acc, v) in dw.iter_mut().zip(&dwb) {
+                *acc += v;
+            }
+            for (acc, v) in db.iter_mut().zip(&dbb) {
+                *acc += v;
+            }
         }
     }
     (

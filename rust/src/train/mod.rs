@@ -129,7 +129,12 @@ pub fn train<D: BatchSource>(g: &mut Graph, ds: &D, cfg: &TrainCfg) -> anyhow::R
 }
 
 /// Short-and-simple training used by tests and pipelines.
-pub fn quick_train(g: &mut Graph, ds: &ImageDataset, steps: usize, lr: f32) -> anyhow::Result<TrainReport> {
+pub fn quick_train(
+    g: &mut Graph,
+    ds: &ImageDataset,
+    steps: usize,
+    lr: f32,
+) -> anyhow::Result<TrainReport> {
     train(
         g,
         ds,

@@ -189,13 +189,6 @@ impl Json {
             .collect()
     }
 
-    /// Serialize to compact JSON text.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -234,9 +227,13 @@ impl Json {
     }
 }
 
+/// Serializes to compact JSON text (`Json::to_string` comes from this
+/// impl via [`ToString`]).
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.to_string())
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

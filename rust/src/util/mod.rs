@@ -1,10 +1,12 @@
-//! Self-contained utility substrate: JSON, RNG, benchmarking/tables, and a
-//! mini property-testing harness. The build environment is offline with a
-//! small crate cache (no serde/clap/criterion/proptest/rand), so these are
-//! implemented here and used across the whole library.
+//! Self-contained utility substrate: JSON, RNG, benchmarking/tables, a
+//! mini property-testing harness, and a deterministic std-thread worker
+//! pool. The build environment is offline with a small crate cache (no
+//! serde/clap/criterion/proptest/rand/rayon), so these are implemented
+//! here and used across the whole library.
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod proptest;
 pub mod rng;
 

@@ -1,0 +1,230 @@
+//! Deterministic std-thread worker pool.
+//!
+//! The offline sandbox has no `rayon`; this module gives the three hot
+//! paths (GEMM/conv in `tensor::ops`, the OBSPA kernels in
+//! `runtime::kernels`, per-group scoring in `prune::importance`) a data-
+//! parallel substrate built only on `std::thread::scope`.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bit-identical results at any thread count.** Work is split into
+//!    fixed chunks whose outputs are disjoint slices; each chunk performs
+//!    exactly the same arithmetic regardless of which worker runs it or
+//!    how many workers exist, so `SPA_THREADS=1` and `SPA_THREADS=N`
+//!    produce byte-equal tensors (CI relies on this, see
+//!    `tests/par_determinism.rs`).
+//! 2. **Cheap when the work is small.** Every entry point takes the
+//!    serial path when only one worker would be used; callers gate on a
+//!    work-size threshold so tiny kernels never pay thread spawn costs.
+//!
+//! The pool size comes from the `SPA_THREADS` environment variable when
+//! set (CI pins `SPA_THREADS=1` for reproducibility), otherwise from
+//! [`std::thread::available_parallelism`]. Tests can override it
+//! in-process with [`set_threads`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Process-wide override installed by [`set_threads`] (0 = no override).
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Cached `SPA_THREADS` / `available_parallelism` default.
+static DEFAULT: OnceLock<usize> = OnceLock::new();
+
+fn default_threads() -> usize {
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("SPA_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// The worker-pool width used for parallel regions.
+pub fn max_threads() -> usize {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => default_threads(),
+        n => n,
+    }
+}
+
+/// Override the pool width in-process (tests). `0` restores the
+/// `SPA_THREADS` / auto default. Results are bit-identical at any width,
+/// so concurrent use from other threads affects only scheduling.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with the pool pinned to `n` workers, then restore the previous
+/// override.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = OVERRIDE.swap(n, Ordering::Relaxed);
+    let out = f();
+    OVERRIDE.store(prev, Ordering::Relaxed);
+    out
+}
+
+/// Workers for a region with `work_items` independent items: at most one
+/// worker per item, never more than the pool width.
+pub fn workers_for(work_items: usize) -> usize {
+    max_threads().min(work_items.max(1))
+}
+
+/// Run `f(i)` for every `i in 0..n` across the pool.
+///
+/// `f` must keep iterations independent (no shared mutable state beyond
+/// what it synchronizes itself). Iterations are claimed from an atomic
+/// counter; since each `f(i)` computes the same result wherever it runs,
+/// scheduling order cannot change the output.
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let workers = workers_for(n);
+    if workers <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Split `out` into contiguous chunks of `chunk_len` elements and run
+/// `f(chunk_index, chunk)` for each, in parallel. The chunking is fixed
+/// by `chunk_len` alone, so outputs are identical at any thread count.
+pub fn par_chunks_mut<T, F>(out: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = out.len().div_ceil(chunk_len.max(1)).max(1);
+    let workers = workers_for(n_chunks);
+    if workers <= 1 {
+        for (i, chunk) in out.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let queue = Mutex::new(out.chunks_mut(chunk_len).enumerate());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let item = queue.lock().unwrap().next();
+                match item {
+                    Some((i, chunk)) => f(i, chunk),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over a slice, preserving order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = Vec::new();
+    out.resize_with(items.len(), || None);
+    par_chunks_mut(&mut out, 1, |i, slot| {
+        slot[0] = Some(f(&items[i]));
+    });
+    out.into_iter().map(|r| r.expect("par_map slot")).collect()
+}
+
+/// Serialize tests that mutate the process-global [`set_threads`]
+/// override — the test harness runs tests concurrently in one process,
+/// and an override installed by one test must not leak into another's
+/// assertions. Used by the unit tests below and
+/// `tests/par_determinism.rs`.
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_for_covers_every_index_once() {
+        let _serial = test_lock();
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        with_threads(4, || {
+            par_for(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint_regions() {
+        let _serial = test_lock();
+        for threads in [1usize, 2, 4, 7] {
+            let mut data = vec![0usize; 103];
+            with_threads(threads, || {
+                par_chunks_mut(&mut data, 10, |ci, chunk| {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = ci * 10 + j;
+                    }
+                });
+            });
+            let expect: Vec<usize> = (0..103).collect();
+            assert_eq!(data, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let _serial = test_lock();
+        let items: Vec<usize> = (0..57).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        let parallel = with_threads(4, || par_map(&items, |&x| x * x + 1));
+        assert_eq!(parallel, serial);
+    }
+
+    #[test]
+    fn with_threads_restores_override() {
+        let _serial = test_lock();
+        let before = max_threads();
+        with_threads(3, || assert_eq!(max_threads(), 3));
+        assert_eq!(max_threads(), before);
+    }
+
+    #[test]
+    fn zero_length_inputs_are_noops() {
+        par_for(0, |_| panic!("must not run"));
+        let mut empty: [f32; 0] = [];
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("must not run"));
+        let mapped: Vec<i32> = par_map::<i32, i32, _>(&[], |&x| x);
+        assert!(mapped.is_empty());
+    }
+
+    #[test]
+    fn workers_never_exceed_items() {
+        let _serial = test_lock();
+        with_threads(16, || {
+            assert_eq!(workers_for(3), 3);
+            assert_eq!(workers_for(0), 1);
+        });
+    }
+}

@@ -1,0 +1,212 @@
+//! Property-based determinism tests for the `util::par` worker pool: at
+//! any `SPA_THREADS`, parallel execution must produce results that are
+//! bit-identical to single-threaded execution — for the GEMM/conv hot
+//! path, the OBSPA native kernels, and per-group importance scoring.
+
+use spa::ir::Graph;
+use spa::prune::{build_groups, score_groups, Agg, Norm};
+use spa::runtime::kernels as rk;
+use spa::tensor::{ops, Tensor};
+use spa::util::par;
+use spa::util::proptest::check;
+use spa::util::Rng;
+use spa::zoo::{self, ImageCfg};
+use std::collections::HashMap;
+
+/// Bit-exact tensor equality (no tolerance: determinism, not accuracy).
+fn assert_bits_equal(a: &Tensor, b: &Tensor, what: &str) -> Result<(), String> {
+    if a.shape != b.shape {
+        return Err(format!("{what}: shape {:?} vs {:?}", a.shape, b.shape));
+    }
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{what}: bit mismatch at {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_matmul_parallel_matches_single_thread() {
+    let _serial = par::test_lock();
+    check(
+        "matmul-thread-determinism",
+        12,
+        0x9A55,
+        |rng| {
+            // shapes straddling the parallel threshold, including large
+            let m = 1 + rng.below(300);
+            let k = 1 + rng.below(64);
+            let n = 1 + rng.below(300);
+            let a = Tensor::new(vec![m, k], rng.uniform_vec(m * k, -1.0, 1.0));
+            let b = Tensor::new(vec![k, n], rng.uniform_vec(k * n, -1.0, 1.0));
+            (a, b)
+        },
+        |(a, b)| {
+            let serial = par::with_threads(1, || ops::matmul(a, b));
+            for threads in [2usize, 4, 8] {
+                let parallel = par::with_threads(threads, || ops::matmul(a, b));
+                assert_bits_equal(&parallel, &serial, &format!("matmul t={threads}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_conv2d_parallel_matches_single_thread() {
+    let _serial = par::test_lock();
+    check(
+        "conv2d-thread-determinism",
+        8,
+        0xC0117,
+        |rng| {
+            let n = 1 + rng.below(6);
+            let groups = [1usize, 2][rng.below(2)];
+            let ci = groups * (1 + rng.below(4));
+            let co = groups * (1 + rng.below(6));
+            let hw = 4 + rng.below(10);
+            let k = [1usize, 3][rng.below(2)];
+            let x = Tensor::new(
+                vec![n, ci, hw, hw],
+                rng.uniform_vec(n * ci * hw * hw, -1.0, 1.0),
+            );
+            let w = Tensor::new(
+                vec![co, ci / groups, k, k],
+                rng.uniform_vec(co * (ci / groups) * k * k, -0.5, 0.5),
+            );
+            (x, w, k / 2, groups)
+        },
+        |(x, w, pad, groups)| {
+            let serial = par::with_threads(1, || ops::conv2d(x, w, None, 1, *pad, *groups));
+            for threads in [2usize, 4] {
+                let parallel =
+                    par::with_threads(threads, || ops::conv2d(x, w, None, 1, *pad, *groups));
+                assert_bits_equal(&parallel, &serial, &format!("conv2d t={threads}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_obspa_kernels_parallel_match_single_thread() {
+    let _serial = par::test_lock();
+    check(
+        "obspa-kernel-thread-determinism",
+        8,
+        0x0B5,
+        |rng| {
+            let c = 8 + rng.below(56);
+            let r = 1 + rng.below(300);
+            let m = 16 + rng.below(128);
+            let w = Tensor::new(vec![r, c], rng.uniform_vec(r * c, -1.0, 1.0));
+            let x = Tensor::new(vec![c, m], rng.uniform_vec(c * m, -1.0, 1.0));
+            let h0 = Tensor::zeros(&[c, c]);
+            let mask: Vec<f32> = (0..c)
+                .map(|_| if rng.below(3) == 0 { 1.0 } else { 0.0 })
+                .collect();
+            (w, x, h0, mask)
+        },
+        |(w, x, h0, mask)| {
+            let c = h0.shape[0];
+            let sweep = par::with_threads(1, || {
+                let mut h = rk::hessian_accum_native(h0, x);
+                let damp = 0.01 * (0..c).map(|i| h.data[i * c + i]).sum::<f32>() / c as f32;
+                for i in 0..c {
+                    h.data[i * c + i] += damp.max(1e-6);
+                }
+                rk::sweep_matrix(&h).unwrap()
+            });
+            let h_serial = par::with_threads(1, || rk::hessian_accum_native(h0, x));
+            let obs_serial = par::with_threads(1, || rk::obs_update_native(w, &sweep, mask));
+            for threads in [2usize, 4] {
+                let h_par = par::with_threads(threads, || rk::hessian_accum_native(h0, x));
+                assert_bits_equal(&h_par, &h_serial, &format!("hessian t={threads}"))?;
+                let obs_par =
+                    par::with_threads(threads, || rk::obs_update_native(w, &sweep, mask));
+                assert_bits_equal(&obs_par, &obs_serial, &format!("obs_update t={threads}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn l1_scores(g: &Graph) -> HashMap<usize, Tensor> {
+    g.param_ids()
+        .into_iter()
+        .map(|id| (id, g.data(id).param().unwrap().map(f32::abs)))
+        .collect()
+}
+
+#[test]
+fn prop_importance_scoring_parallel_matches_single_thread() {
+    let _serial = par::test_lock();
+    check(
+        "importance-thread-determinism",
+        6,
+        0x15C0,
+        |rng| {
+            let names = ["resnet18", "densenet", "mobilenetv2", "vgg16"];
+            let name = names[rng.below(names.len())];
+            let cfg = ImageCfg {
+                hw: 8,
+                ..Default::default()
+            };
+            zoo::by_name(name, cfg, rng.next_u64()).unwrap()
+        },
+        |g| {
+            let groups = build_groups(g).map_err(|e| e.to_string())?;
+            let scores = l1_scores(g);
+            let serial =
+                par::with_threads(1, || score_groups(g, &groups, &scores, Agg::Sum, Norm::Mean));
+            for threads in [2usize, 4] {
+                let parallel = par::with_threads(threads, || {
+                    score_groups(g, &groups, &scores, Agg::Sum, Norm::Mean)
+                });
+                if parallel.len() != serial.len() {
+                    return Err(format!(
+                        "score count {} vs {} at t={threads}",
+                        parallel.len(),
+                        serial.len()
+                    ));
+                }
+                for (a, b) in parallel.iter().zip(&serial) {
+                    if (a.group, a.cc) != (b.group, b.cc) || a.score.to_bits() != b.score.to_bits()
+                    {
+                        return Err(format!(
+                            "score mismatch at t={threads}: ({},{}) {} vs ({},{}) {}",
+                            a.group, a.cc, a.score, b.group, b.cc, b.score
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_speedup_is_observable_on_large_gemm() {
+    let _serial = par::test_lock();
+    // Not a strict perf gate (CI machines vary) — but with 4 workers a
+    // 384^3 GEMM must not be slower than single-threaded by more than a
+    // generous margin, and the results must match bitwise. The margin is
+    // wide (2.5x) so noisy shared runners cannot flake an otherwise
+    // correct build; `cargo bench --bench micro_par` reports real ratios.
+    let mut rng = Rng::new(1);
+    let n = 384;
+    let a = Tensor::new(vec![n, n], rng.uniform_vec(n * n, -1.0, 1.0));
+    let b = Tensor::new(vec![n, n], rng.uniform_vec(n * n, -1.0, 1.0));
+    let t0 = std::time::Instant::now();
+    let serial = par::with_threads(1, || ops::matmul(&a, &b));
+    let serial_time = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let parallel = par::with_threads(4, || ops::matmul(&a, &b));
+    let parallel_time = t1.elapsed();
+    assert_bits_equal(&parallel, &serial, "speedup gemm").unwrap();
+    assert!(
+        parallel_time.as_secs_f64() < serial_time.as_secs_f64() * 2.5,
+        "parallel {parallel_time:?} much slower than serial {serial_time:?}"
+    );
+}

@@ -1,0 +1,117 @@
+//! Vendored, std-only subset of the `anyhow` error-handling API.
+//!
+//! The build environment is offline with no crates.io registry, so the
+//! workspace vendors the small slice of `anyhow` it actually uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Semantics match upstream for that slice: any `std::error::Error` value
+//! converts into [`Error`] via `?`, and `anyhow!` builds an error from a
+//! format string.
+
+use std::fmt;
+
+/// A dynamically-typed error with a human-readable message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like upstream anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let plain: Error = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let formatted: Error = anyhow!("x = {}", 7);
+        assert_eq!(formatted.to_string(), "x = 7");
+        let f = || -> Result<()> { bail!("bailed {}", 1) };
+        assert_eq!(f().unwrap_err().to_string(), "bailed 1");
+        let g = |ok: bool| -> Result<()> {
+            ensure!(ok, "must be ok");
+            Ok(())
+        };
+        assert!(g(true).is_ok());
+        assert_eq!(g(false).unwrap_err().to_string(), "must be ok");
+    }
+}
