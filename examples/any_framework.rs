@@ -8,14 +8,13 @@
 //! cargo run --release --example any_framework
 //! ```
 
-use spa::analysis;
+use spa::criteria::Criterion;
 use spa::engine;
 use spa::frontends::{export_model, import_model, Dialect};
-use spa::prune::{self, build_groups, score_groups, Agg, Norm};
 use spa::tensor::Tensor;
 use spa::util::{time_once, Rng, Table};
 use spa::zoo::{self, ImageCfg};
-use std::collections::HashMap;
+use spa::{Session, Target};
 
 fn main() -> anyhow::Result<()> {
     let cfg = ImageCfg {
@@ -46,21 +45,16 @@ fn main() -> anyhow::Result<()> {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         // identical pruning pipeline regardless of origin
-        let mut pruned = g.clone();
-        let groups = build_groups(&pruned)?;
-        let mut l1 = HashMap::new();
-        for pid in pruned.param_ids() {
-            l1.insert(pid, pruned.data(pid).param().unwrap().map(f32::abs));
-        }
-        let scores = score_groups(&pruned, &groups, &l1, Agg::Sum, Norm::Mean);
-        let sel = prune::select_by_flops_target(&pruned, &groups, &scores, 2.0, 1)?;
-        prune::apply_pruning(&mut pruned, &groups, &sel)?;
-        let r = analysis::reduction(&g, &pruned);
+        let pruned = Session::on(&g)
+            .criterion(Criterion::L1)
+            .target(Target::FlopsRf(2.0))
+            .plan()?
+            .apply()?;
         t.row(&[
             d.name().to_string(),
             format!("{:.1}", (secs + secs2) * 1e3),
             format!("{delta:.2e}"),
-            format!("{:.2}x", r.rf),
+            format!("{:.2}x", pruned.report.rf),
             "pruned + valid".to_string(),
         ]);
     }

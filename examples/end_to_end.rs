@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         model.num_params()
     );
     let cfg = PipelineCfg {
-        criterion: Criterion::L1,
+        criterion: Criterion::L1.into(),
         target_rf: 2.0,
         train: TrainCfg {
             steps: 300,

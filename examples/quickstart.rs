@@ -1,24 +1,25 @@
-//! Quickstart: build a model, discover its coupled-channel groups, prune
-//! it ~2× with grouped L1 (SPA-L1), and run the pruned model — the four
-//! steps of paper §3.2 in ~40 lines of user code.
+//! Quickstart: build a model, plan a ~2× grouped-L1 prune (SPA-L1)
+//! through the staged `Session` API, inspect the plan, apply it, and run
+//! the pruned model — the four steps of paper §3.2 in ~25 lines of user
+//! code.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use spa::analysis;
+use spa::criteria::Criterion;
 use spa::engine;
-use spa::prune::{self, build_groups, score_groups, Agg, Norm};
 use spa::tensor::Tensor;
 use spa::util::Rng;
 use spa::zoo::{self, ImageCfg};
-use std::collections::HashMap;
+use spa::{Session, Target};
 
 fn main() -> anyhow::Result<()> {
     // 1. Any architecture: a ResNet-18-mini from the zoo (swap for any
     //    other `zoo::by_name` model — the code below does not change).
     let cfg = ImageCfg::default();
-    let mut model = zoo::resnet18(cfg, 42);
+    let model = zoo::resnet18(cfg, 42);
     println!(
         "model {}: {} params, {} FLOPs",
         model.name,
@@ -26,35 +27,33 @@ fn main() -> anyhow::Result<()> {
         analysis::flops(&model)
     );
 
-    // 2. Coupling + grouping: mask propagation discovers every coupled
-    //    channel automatically (residuals, downsamples, BN params, ...).
-    let groups = build_groups(&model)?;
+    // 2+3. Coupling, grouping, and importance in one staged call:
+    //    grouped L1 (Eq. 1 with S = |θ|, AGG = Σ, Norm = mean — the
+    //    session defaults), selecting toward a 2× FLOPs reduction.
+    let plan = Session::on(&model)
+        .criterion(Criterion::L1)
+        .target(Target::FlopsRf(2.0))
+        .plan()?;
     println!(
         "discovered {} groups / {} prunable coupled-channel sets",
-        groups.groups.len(),
-        groups.num_prunable_ccs()
+        plan.num_groups(),
+        plan.num_prunable_ccs()
     );
 
-    // 3. Importance: grouped L1 (Eq. 1 with S = |θ|, AGG = Σ, Norm = mean).
-    let mut l1 = HashMap::new();
-    for pid in model.param_ids() {
-        l1.insert(pid, model.data(pid).param().unwrap().map(f32::abs));
-    }
-    let scores = score_groups(&model, &groups, &l1, Agg::Sum, Norm::Mean);
-
-    // 4. Prune to a 2× FLOPs reduction and verify the model still runs.
-    let dense = model.clone();
-    let sel = prune::select_by_flops_target(&model, &groups, &scores, 2.0, 1)?;
-    prune::apply_pruning(&mut model, &groups, &sel)?;
-    let r = analysis::reduction(&dense, &model);
-    println!("pruned {} coupled sets: RF {:.2}x RP {:.2}x", sel.len(), r.rf, r.rp);
+    // 4. The plan is inspectable (scores, selection, predicted RF/RP)
+    //    before anything is deleted; `apply` prunes a clone.
+    let pruned = plan.apply()?;
+    println!(
+        "pruned {} coupled sets: RF {:.2}x RP {:.2}x",
+        pruned.report.ccs_removed, pruned.report.rf, pruned.report.rp
+    );
 
     let mut rng = Rng::new(7);
     let x = Tensor::new(
         vec![2, cfg.channels, cfg.hw, cfg.hw],
         rng.uniform_vec(2 * cfg.channels * cfg.hw * cfg.hw, -1.0, 1.0),
     );
-    let logits = engine::predict(&model, x)?;
+    let logits = engine::predict(&pruned.graph, x)?;
     println!("pruned model logits shape {:?} — OK", logits.shape);
     Ok(())
 }

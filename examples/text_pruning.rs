@@ -7,13 +7,13 @@
 //! ```
 
 use spa::analysis;
+use spa::criteria::Criterion;
 use spa::data::TextDataset;
 use spa::obspa::{self, ObspaCfg};
-use spa::prune::{self, build_groups, score_groups, Agg, Norm};
 use spa::train::{self, TrainCfg};
 use spa::util::Table;
 use spa::zoo::{self, TextCfg};
-use std::collections::HashMap;
+use spa::{Session, Target};
 
 fn main() -> anyhow::Result<()> {
     let tcfg = TextCfg::default();
@@ -39,22 +39,18 @@ fn main() -> anyhow::Result<()> {
     );
     for &rf in &[1.2f64, 1.4, 1.7] {
         // L1 one-shot (no weight update)
-        let mut g = base.clone();
-        let groups = build_groups(&g)?;
-        let mut l1 = HashMap::new();
-        for pid in g.param_ids() {
-            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
-        }
-        let scores = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
-        let sel = prune::select_by_flops_target(&g, &groups, &scores, rf, 2)?;
-        prune::apply_pruning(&mut g, &groups, &sel)?;
-        let r = analysis::reduction(&base, &g);
-        let acc = train::evaluate_text(&g, &ds, 256)?;
+        let pruned = Session::on(&base)
+            .criterion(Criterion::L1)
+            .min_keep(2)
+            .target(Target::FlopsRf(rf))
+            .plan()?
+            .apply()?;
+        let acc = train::evaluate_text(&pruned.graph, &ds, 256)?;
         t.row(&[
             "L1 one-shot".into(),
             format!("{rf:.1}"),
-            format!("{:.2}x", r.rf),
-            format!("{:.2}x", r.rp),
+            format!("{:.2}x", pruned.report.rf),
+            format!("{:.2}x", pruned.report.rp),
             format!("{:.2}%", acc * 100.0),
         ]);
         // OBSPA (OOD text calibration: a different token distribution)

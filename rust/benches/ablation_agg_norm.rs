@@ -6,11 +6,12 @@
 #[path = "common.rs"]
 mod common;
 
-use spa::prune::{self, build_groups, score_groups, Agg, Norm};
+use spa::criteria::Criterion;
+use spa::prune::{Agg, Norm};
 use spa::train;
 use spa::util::Table;
 use spa::zoo;
-use std::collections::HashMap;
+use spa::{Session, Target};
 
 fn main() {
     let ds = common::synth_cifar10(99);
@@ -24,26 +25,24 @@ fn main() {
             &ds,
             180,
         );
-        let groups = build_groups(&base).unwrap();
-        let mut l1 = HashMap::new();
-        for pid in base.param_ids() {
-            l1.insert(pid, base.data(pid).param().unwrap().map(f32::abs));
-        }
         for agg in common::take_smoke(vec![Agg::Sum, Agg::Mean, Agg::Max, Agg::L2]) {
             for norm in common::take_smoke(vec![Norm::Sum, Norm::Mean, Norm::Max, Norm::None]) {
-                let ranked = score_groups(&base, &groups, &l1, agg, norm);
-                let sel =
-                    prune::select_by_flops_target(&base, &groups, &ranked, 1.5, 1).unwrap();
-                let mut g = base.clone();
-                prune::apply_pruning(&mut g, &groups, &sel).unwrap();
-                let acc = train::evaluate(&g, &ds, 256).unwrap();
-                let r = spa::analysis::reduction(&base, &g);
+                let pruned = Session::on(&base)
+                    .criterion(Criterion::L1)
+                    .agg(agg)
+                    .norm(norm)
+                    .target(Target::FlopsRf(1.5))
+                    .plan()
+                    .unwrap()
+                    .apply()
+                    .unwrap();
+                let acc = train::evaluate(&pruned.graph, &ds, 256).unwrap();
                 t.row(&[
                     mname.to_string(),
                     format!("{agg:?}"),
                     format!("{norm:?}"),
                     common::pct(acc),
-                    common::ratio(r.rf),
+                    common::ratio(pruned.report.rf),
                 ]);
             }
         }

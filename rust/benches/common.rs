@@ -88,7 +88,7 @@ pub fn synth_imagenet(seed: u64) -> ImageDataset {
 /// Bench-scale pipeline config (smoke-aware step counts).
 pub fn bench_pipeline(criterion: Criterion, scope: Scope, target_rf: f64) -> PipelineCfg {
     PipelineCfg {
-        criterion,
+        criterion: criterion.into(),
         scope,
         target_rf,
         train: TrainCfg {

@@ -5,13 +5,13 @@
 mod common;
 
 use spa::analysis;
+use spa::criteria::Criterion;
 use spa::data::TextDataset;
 use spa::obspa::{self, ObspaCfg};
-use spa::prune::{self, build_groups, score_groups, Agg, Norm};
 use spa::train::{self, TrainCfg};
 use spa::util::Table;
 use spa::zoo::{self, TextCfg};
-use std::collections::HashMap;
+use spa::{Session, Target};
 
 fn main() {
     let tcfg = TextCfg::default();
@@ -31,22 +31,20 @@ fn main() {
     );
     for rf in common::take_smoke(vec![1.2f64, 1.4, 1.7, 2.0]) {
         // L1 one-shot
-        let mut g = base.clone();
-        let groups = build_groups(&g).unwrap();
-        let mut l1 = HashMap::new();
-        for pid in g.param_ids() {
-            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
-        }
-        let scores = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
-        let sel = prune::select_by_flops_target(&g, &groups, &scores, rf, 2).unwrap();
-        prune::apply_pruning(&mut g, &groups, &sel).unwrap();
-        let r = analysis::reduction(&base, &g);
+        let pruned = Session::on(&base)
+            .criterion(Criterion::L1)
+            .min_keep(2)
+            .target(Target::FlopsRf(rf))
+            .plan()
+            .unwrap()
+            .apply()
+            .unwrap();
         t.row(&[
             "L1 one-shot".into(),
             format!("{rf:.1}"),
-            common::ratio(r.rf),
-            common::ratio(r.rp),
-            common::pct(train::evaluate_text(&g, &ds, 256).unwrap()),
+            common::ratio(pruned.report.rf),
+            common::ratio(pruned.report.rp),
+            common::pct(train::evaluate_text(&pruned.graph, &ds, 256).unwrap()),
             common::pct(base_acc),
         ]);
         // OBSPA with OOD text calibration

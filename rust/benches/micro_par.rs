@@ -7,12 +7,13 @@
 mod common;
 
 use common::smoke;
-use spa::prune::{build_groups, score_groups, Agg, Norm};
+use spa::criteria::{Criterion, Saliency};
+use spa::prune::{score_groups, Agg, Norm};
 use spa::runtime::kernels as rk;
 use spa::tensor::{ops, Tensor};
 use spa::util::{bench, par, Rng, Table};
 use spa::zoo;
-use std::collections::HashMap;
+use spa::{Session, Target};
 
 fn main() {
     // Multi-thread column honors an SPA_THREADS pin; when the pool would
@@ -100,23 +101,28 @@ fn main() {
         3,
     )
     .unwrap();
-    let groups = build_groups(&g).unwrap();
-    let mut l1 = HashMap::new();
-    for pid in g.param_ids() {
-        l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
-    }
+    // grouping comes from a zero-sparsity session plan; the timed section
+    // is the parallel Eq. 1 scoring alone, so the speedup ratio stays a
+    // clean signal for the worker pool
+    let plan = Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(Target::Sparsity(0.0))
+        .plan()
+        .unwrap();
+    let groups = plan.groups();
+    let l1 = Criterion::L1.score(&g, None).unwrap();
     let s1 = bench("score/1t", warmup, iters, || {
         par::with_threads(1, || {
-            let _ = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+            let _ = score_groups(&g, groups, &l1, Agg::Sum, Norm::Mean);
         });
     });
     let sn = bench(&format!("score/{threads}t"), warmup, iters, || {
         par::with_threads(threads, || {
-            let _ = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+            let _ = score_groups(&g, groups, &l1, Agg::Sum, Norm::Mean);
         });
     });
-    let r1 = par::with_threads(1, || score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean));
-    let rn = par::with_threads(threads, || score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean));
+    let r1 = par::with_threads(1, || score_groups(&g, groups, &l1, Agg::Sum, Norm::Mean));
+    let rn = par::with_threads(threads, || score_groups(&g, groups, &l1, Agg::Sum, Norm::Mean));
     let mut bits = r1.len() == rn.len();
     for (p, q) in r1.iter().zip(&rn) {
         if (p.group, p.cc) != (q.group, q.cc) || p.score.to_bits() != q.score.to_bits() {

@@ -1,45 +1,40 @@
-//! Microbench: mask propagation + grouping throughput (the O(|E|)
-//! analysis of paper §3.2), and structural pruning application.
+//! Microbench: session planning throughput (mask propagation + grouping
+//! — the O(|E|) analysis of paper §3.2 — plus Eq. 1 scoring, selection,
+//! and the one physical pruning pass) and `Plan::apply` materialization.
 
 #[path = "common.rs"]
 mod common;
 
-use spa::prune::{self, build_groups, score_groups, Agg, Norm};
+use spa::criteria::Criterion;
 use spa::util::{bench, Table};
 use spa::zoo;
-use std::collections::HashMap;
+use spa::{Session, Target};
 
 fn main() {
     let mut t = Table::new(
-        "micro — grouping & pruning throughput",
-        &["model", "ops", "group (ms)", "score (ms)", "prune-apply (ms)"],
+        "micro — session plan & prune-apply throughput",
+        &["model", "ops", "plan+prune (ms)", "apply (ms)"],
     );
     let models = common::take_smoke(vec!["resnet18", "resnet50", "resnet101", "densenet", "vit"]);
     for name in models {
         let g = zoo::by_name(name, common::cifar_cfg(10), 3).unwrap();
-        let gstats = bench(&format!("{name}/group"), common::warmup(1), common::iters(5), || {
-            let _ = build_groups(&g).unwrap();
+        let session = || {
+            Session::on(&g)
+                .criterion(Criterion::L1)
+                .target(Target::Sparsity(0.4))
+        };
+        let pstats = bench(&format!("{name}/plan"), common::warmup(1), common::iters(5), || {
+            let _ = session().plan().unwrap();
         });
-        let groups = build_groups(&g).unwrap();
-        let mut l1 = HashMap::new();
-        for pid in g.param_ids() {
-            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
-        }
-        let sstats = bench(&format!("{name}/score"), common::warmup(1), common::iters(5), || {
-            let _ = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
-        });
-        let ranked = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
-        let sel = prune::select_lowest(&groups, &ranked, 0.4, 1);
-        let pstats = bench(&format!("{name}/apply"), common::warmup(1), common::iters(5), || {
-            let mut gc = g.clone();
-            prune::apply_pruning(&mut gc, &groups, &sel).unwrap();
+        let plan = session().plan().unwrap();
+        let astats = bench(&format!("{name}/apply"), common::warmup(1), common::iters(5), || {
+            let _ = plan.apply().unwrap();
         });
         t.row(&[
             name.to_string(),
             format!("{}", g.ops.len()),
-            format!("{:.2}", gstats.mean_ms()),
-            format!("{:.2}", sstats.mean_ms()),
             format!("{:.2}", pstats.mean_ms()),
+            format!("{:.2}", astats.mean_ms()),
         ]);
     }
     t.print();

@@ -4,13 +4,13 @@
 #[path = "common.rs"]
 mod common;
 
-use spa::analysis;
 use spa::criteria::Criterion;
 use spa::data::TextDataset;
-use spa::prune::{self, build_groups, score_groups, Agg, Norm, Scope};
+use spa::prune::Scope;
 use spa::train::{self, TrainCfg};
 use spa::util::Table;
 use spa::zoo::{self, TextCfg};
+use spa::{Session, Target};
 use std::collections::HashMap;
 
 fn main() {
@@ -59,27 +59,26 @@ fn main() {
         };
         train::train(&mut g, &tds, &tr).unwrap();
         let ori = train::evaluate_text(&g, &tds, 256).unwrap();
-        let dense = g.clone();
-        let groups = build_groups(&g).unwrap();
-        let mut l1 = HashMap::new();
-        for pid in g.param_ids() {
-            l1.insert(pid, g.data(pid).param().unwrap().map(f32::abs));
-        }
-        let ranked = score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
-        let sel = prune::select_by_flops_target(&g, &groups, &ranked, 2.0, 2).unwrap();
-        prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        let pruned = Session::on(&g)
+            .criterion(Criterion::L1)
+            .min_keep(2)
+            .target(Target::FlopsRf(2.0))
+            .plan()
+            .unwrap()
+            .apply()
+            .unwrap();
+        let mut g = pruned.graph;
         let mut ft = tr.clone();
         ft.steps = common::steps(80);
         ft.lr = 0.02;
         train::train(&mut g, &tds, &ft).unwrap();
         let fin = train::evaluate_text(&g, &tds, 256).unwrap();
-        let r = analysis::reduction(&dense, &g);
         t.row(&[
             "distilbert".into(),
             common::pct(ori),
             common::pct(fin),
-            common::ratio(r.rf),
-            common::ratio(r.rp),
+            common::ratio(pruned.report.rf),
+            common::ratio(pruned.report.rp),
             paper["distilbert"].to_string(),
         ]);
     }

@@ -5,13 +5,13 @@
 #[path = "common.rs"]
 mod common;
 
-use spa::coordinator::PipelineCfg;
 use spa::criteria::Criterion;
 use spa::obspa::{self, ObspaCfg};
 use spa::prune::Scope;
 use spa::train::{self, TrainCfg};
 use spa::util::Table;
 use spa::zoo;
+use spa::{Session, Target};
 
 fn finetune(g: &mut spa::ir::Graph, ds: &spa::data::ImageDataset) {
     train::train(
@@ -66,48 +66,44 @@ fn main() {
     }
     // ungrouped structured L1 (DepGraph/OTO-v2 proxy)
     {
-        let cfg = common::bench_pipeline(Criterion::L1, Scope::SourceOnly, 2.1);
-        let mut g = base.clone();
-        let groups = spa::prune::build_groups(&g).unwrap();
-        let scores =
-            spa::coordinator::criterion_scores(&g, &ds, cfg.criterion, 1).unwrap();
-        let ranked = spa::prune::score_groups_scoped(
-            &g, &groups, &scores, cfg.agg, cfg.norm, cfg.scope,
-        );
-        let sel = spa::prune::select_by_flops_target(&g, &groups, &ranked, 2.1, 1).unwrap();
-        spa::prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        let pruned = Session::on(&base)
+            .criterion(Criterion::L1)
+            .scope(Scope::SourceOnly)
+            .target(Target::FlopsRf(2.1))
+            .plan()
+            .unwrap()
+            .apply()
+            .unwrap();
+        let mut g = pruned.graph;
         finetune(&mut g, &ds);
         let acc = train::evaluate(&g, &ds, 384).unwrap();
-        let r = spa::analysis::reduction(&base, &g);
         t.row(&[
             "ungrouped-L1 (DepGraph proxy)".into(),
             common::pct(acc),
             common::pct(top5(&g)),
-            common::ratio(r.rf),
-            common::ratio(r.rp),
+            common::ratio(pruned.report.rf),
+            common::ratio(pruned.report.rp),
             "75.83% / 2.07x (DepGraph)".into(),
         ]);
     }
     // SPA-L1 at two compression points
     for (rf, paper) in [(2.8f64, "74.83% / 2.84x"), (2.2, "76.39% / 2.18x")] {
-        let cfg = common::bench_pipeline(Criterion::L1, Scope::FullCc, rf);
-        let mut g = base.clone();
-        let groups = spa::prune::build_groups(&g).unwrap();
-        let scores =
-            spa::coordinator::criterion_scores(&g, &ds, cfg.criterion, 1).unwrap();
-        let ranked =
-            spa::prune::score_groups(&g, &groups, &scores, cfg.agg, cfg.norm);
-        let sel = spa::prune::select_by_flops_target(&g, &groups, &ranked, rf, 1).unwrap();
-        spa::prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        let pruned = Session::on(&base)
+            .criterion(Criterion::L1)
+            .target(Target::FlopsRf(rf))
+            .plan()
+            .unwrap()
+            .apply()
+            .unwrap();
+        let mut g = pruned.graph;
         finetune(&mut g, &ds);
         let acc = train::evaluate(&g, &ds, 384).unwrap();
-        let r = spa::analysis::reduction(&base, &g);
         t.row(&[
             format!("SPA-L1 (RF {rf:.1})"),
             common::pct(acc),
             common::pct(top5(&g)),
-            common::ratio(r.rf),
-            common::ratio(r.rp),
+            common::ratio(pruned.report.rf),
+            common::ratio(pruned.report.rp),
             paper.to_string(),
         ]);
     }
@@ -136,7 +132,6 @@ fn main() {
             "76.59% / 2.22x".into(),
         ]);
     }
-    let _ = PipelineCfg::default();
     t.print();
     println!("shape to check: SPA-L1/OBSPA ≥ DFPC & ungrouped proxy at matched RF");
 }

@@ -10,6 +10,7 @@ use spa::prune::Scope;
 use spa::train::{self, TrainCfg};
 use spa::util::Table;
 use spa::zoo;
+use spa::{Session, Target};
 
 fn main() {
     let ds = common::synth_imagenet(72);
@@ -29,47 +30,44 @@ fn main() {
     ]);
     // DepGraph proxy: ungrouped structured L1
     {
-        let mut g = base.clone();
-        let groups = spa::prune::build_groups(&g).unwrap();
-        let scores = spa::coordinator::criterion_scores(&g, &ds, Criterion::L1, 1).unwrap();
-        let ranked = spa::prune::score_groups_scoped(
-            &g, &groups, &scores, spa::prune::Agg::Sum, spa::prune::Norm::Mean, Scope::SourceOnly,
-        );
-        let sel = spa::prune::select_by_flops_target(&g, &groups, &ranked, 2.0, 2).unwrap();
-        spa::prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        let pruned = Session::on(&base)
+            .criterion(Criterion::L1)
+            .scope(Scope::SourceOnly)
+            .min_keep(2)
+            .target(Target::FlopsRf(2.0))
+            .plan()
+            .unwrap()
+            .apply()
+            .unwrap();
+        let mut g = pruned.graph;
         train::train(&mut g, &ds, &ft).unwrap();
         let acc = train::evaluate(&g, &ds, 384).unwrap();
-        let r = spa::analysis::reduction(&base, &g);
         t.row(&[
             "ungrouped-L1 (DepGraph proxy)".into(),
             common::pct(acc),
-            common::ratio(r.rf),
-            common::ratio(r.rp),
+            common::ratio(pruned.report.rf),
+            common::ratio(pruned.report.rp),
             "79.17% / 1.69x (DepGraph)".into(),
         ]);
     }
     // SPA-L1
     {
-        let mut g = base.clone();
-        let groups = spa::prune::build_groups(&g).unwrap();
-        let scores = spa::coordinator::criterion_scores(&g, &ds, Criterion::L1, 1).unwrap();
-        let ranked = spa::prune::score_groups(
-            &g,
-            &groups,
-            &scores,
-            spa::prune::Agg::Sum,
-            spa::prune::Norm::Mean,
-        );
-        let sel = spa::prune::select_by_flops_target(&g, &groups, &ranked, 2.0, 2).unwrap();
-        spa::prune::apply_pruning(&mut g, &groups, &sel).unwrap();
+        let pruned = Session::on(&base)
+            .criterion(Criterion::L1)
+            .min_keep(2)
+            .target(Target::FlopsRf(2.0))
+            .plan()
+            .unwrap()
+            .apply()
+            .unwrap();
+        let mut g = pruned.graph;
         train::train(&mut g, &ds, &ft).unwrap();
         let acc = train::evaluate(&g, &ds, 384).unwrap();
-        let r = spa::analysis::reduction(&base, &g);
         t.row(&[
             "SPA-L1".into(),
             common::pct(acc),
-            common::ratio(r.rf),
-            common::ratio(r.rp),
+            common::ratio(pruned.report.rf),
+            common::ratio(pruned.report.rp),
             "78.81% / 2.03x".into(),
         ]);
     }

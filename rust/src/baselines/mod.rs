@@ -11,10 +11,10 @@
 //!   column of Figs. 3 and 9, sharing SPA's coupling machinery but not
 //!   its grouped score aggregation.
 
+use crate::criteria;
 use crate::ir::{DataId, Graph, OpKind};
-use crate::prune::{
-    self, build_groups, score_groups_scoped, Agg, GroupScore, Groups, Norm, Scope,
-};
+use crate::prune::{score_groups_scoped, Agg, GroupScore, Groups, Norm, Scope};
+use crate::session::{Session, Target};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
@@ -68,13 +68,15 @@ pub struct DfpcReport {
 /// One-shot data-free coupled-channel pruning to a FLOPs target.
 pub fn dfpc_prune(g: &mut Graph, target_rf: f64, min_keep: usize) -> anyhow::Result<DfpcReport> {
     let t0 = std::time::Instant::now();
-    let groups = build_groups(g)?;
-    let scores = dfpc_scores(g);
-    let ranked = score_groups_scoped(g, &groups, &scores, Agg::Sum, Norm::Mean, Scope::FullCc);
-    let sel = prune::select_by_flops_target(g, &groups, &ranked, target_rf, min_keep)?;
-    let outcome = prune::apply_pruning(g, &groups, &sel)?;
+    let pruned = Session::on(&*g)
+        .criterion(criteria::precomputed("dfpc", dfpc_scores(g)))
+        .min_keep(min_keep)
+        .target(Target::FlopsRf(target_rf))
+        .plan()?
+        .apply()?;
+    *g = pruned.graph;
     Ok(DfpcReport {
-        ccs_removed: outcome.ccs_removed,
+        ccs_removed: pruned.report.ccs_removed,
         seconds: t0.elapsed().as_secs_f64(),
     })
 }
@@ -95,6 +97,7 @@ pub fn ungrouped_select(
 mod tests {
     use super::*;
     use crate::analysis;
+    use crate::prune::build_groups;
     use crate::zoo::{self, ImageCfg};
 
     #[test]

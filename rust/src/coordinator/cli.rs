@@ -97,6 +97,7 @@ pub fn run(args: Vec<String>) -> anyhow::Result<()> {
         }
         "info" => {
             let g = zoo::by_name(&flags.get("model", "resnet18"), icfg, seed)?;
+            // read-only inspection: grouping alone, no saliency pass
             let groups = crate::prune::build_groups(&g)?;
             println!("model   : {}", g.name);
             println!("ops     : {}", g.ops.len());

@@ -8,22 +8,24 @@
 //! * **train-prune**: train dense, prune with OBSPA (ID/OOD/DataFree) or
 //!   the DFPC baseline, **no** fine-tuning.
 //!
-//! Every pipeline returns a [`PipelineReport`] with the paper's metrics
-//! (ori/pruned acc, RF, RP, wallclock) so benches print tables directly.
+//! All structural pruning inside the pipelines goes through the one
+//! [`crate::session::Session`] entry point; this module adds the
+//! training/evaluation choreography around it. Every pipeline returns a
+//! [`PipelineReport`] with the paper's metrics (ori/pruned acc, RF, RP,
+//! wallclock) so benches print tables directly.
 
 pub mod cli;
 
 use crate::analysis;
 use crate::baselines;
-use crate::criteria::{self, Batch, Criterion};
+use crate::criteria::{Criterion, Saliency, SaliencyRef};
 use crate::data::ImageDataset;
-use crate::ir::{DataId, Graph};
+use crate::ir::Graph;
 use crate::obspa::{self, CalibSource, ObspaCfg};
-use crate::prune::{self, build_groups, score_groups_scoped, Agg, Norm, Scope};
-use crate::tensor::Tensor;
+use crate::prune::{Agg, Norm, Scope};
+use crate::session::{Session, Target};
 use crate::train::{self, TrainCfg};
 use crate::util::Rng;
-use std::collections::HashMap;
 
 /// When pruning happens relative to training.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,7 +38,10 @@ pub enum PruneTime {
 /// Full pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct PipelineCfg {
-    pub criterion: Criterion,
+    /// Saliency criterion — a built-in `Criterion` converts via
+    /// `.into()`, and `Criterion::parse` / user-registered criteria
+    /// resolve to the same handle type.
+    pub criterion: SaliencyRef,
     pub scope: Scope,
     pub agg: Agg,
     pub norm: Norm,
@@ -52,7 +57,7 @@ pub struct PipelineCfg {
 impl Default for PipelineCfg {
     fn default() -> Self {
         PipelineCfg {
-            criterion: Criterion::L1,
+            criterion: Criterion::L1.into(),
             scope: Scope::FullCc,
             agg: Agg::Sum,
             norm: Norm::Mean,
@@ -86,33 +91,27 @@ pub struct PipelineReport {
     pub loss_history: Vec<train::LogEntry>,
 }
 
-/// Per-parameter scores for a criterion, drawing a batch if needed.
-pub fn criterion_scores(
-    g: &Graph,
-    ds: &ImageDataset,
-    criterion: Criterion,
-    seed: u64,
-) -> anyhow::Result<HashMap<DataId, Tensor>> {
-    if criterion.needs_data() {
-        let (x, labels) = ds.train_batch_seeded(seed, 32);
-        criteria::param_scores(g, criterion, Some(&Batch { x: &x, labels: &labels }))
-    } else {
-        criteria::param_scores(g, criterion, None)
-    }
-}
-
-/// One structural pruning round to an RF target (relative to `base`).
+/// One structural pruning round to an RF target, through the session
+/// API (drawing a calibration batch when the criterion needs one).
 fn prune_round(
     g: &mut Graph,
     ds: &ImageDataset,
     cfg: &PipelineCfg,
     round_rf: f64,
 ) -> anyhow::Result<()> {
-    let groups = build_groups(g)?;
-    let scores = criterion_scores(g, ds, cfg.criterion, cfg.seed)?;
-    let ranked = score_groups_scoped(g, &groups, &scores, cfg.agg, cfg.norm, cfg.scope);
-    let sel = prune::select_by_flops_target(g, &groups, &ranked, round_rf, cfg.min_keep)?;
-    prune::apply_pruning(g, &groups, &sel)?;
+    let mut session = Session::on(&*g)
+        .criterion(cfg.criterion.clone())
+        .scope(cfg.scope)
+        .agg(cfg.agg)
+        .norm(cfg.norm)
+        .min_keep(cfg.min_keep)
+        .target(Target::FlopsRf(round_rf));
+    if cfg.criterion.needs_data() {
+        let (x, labels) = ds.train_batch_seeded(cfg.seed, 32);
+        session = session.batch(x, labels);
+    }
+    let pruned = session.plan()?.apply()?;
+    *g = pruned.graph;
     Ok(())
 }
 
@@ -343,7 +342,7 @@ mod tests {
         let ds = ImageDataset::synth_cifar(4, 384, 8, 3, 22);
         let g = zoo::vgg16(icfg, 2);
         let mut cfg = tiny_cfg();
-        cfg.criterion = Criterion::Snip;
+        cfg.criterion = Criterion::Snip.into();
         let (pruned, rep) = prune_train(g, &ds, &cfg).unwrap();
         pruned.validate().unwrap();
         assert!(rep.rf >= 1.4);
@@ -359,7 +358,7 @@ mod tests {
         };
         let ds = ImageDataset::synth_cifar(4, 384, 8, 3, 24);
         let mut cfg = tiny_cfg();
-        cfg.criterion = Criterion::Crop; // the early-pruning criterion
+        cfg.criterion = Criterion::Crop.into(); // the early-pruning criterion
         let (pruned, rep) = early_prune(zoo::resnet18(icfg, 4), &ds, &cfg, 20).unwrap();
         pruned.validate().unwrap();
         assert!(rep.rf >= 1.4);

@@ -4,7 +4,13 @@
 //! group-level machinery (`crate::prune::importance`) then aggregates and
 //! normalizes them into coupled-channel scores. SPA's claim (§3.3) is
 //! that *any* of these transfers to grouped structured pruning through
-//! that machinery:
+//! that machinery.
+//!
+//! The open interface is the [`Saliency`] trait: anything that can map a
+//! graph (plus an optional labelled batch) to per-parameter score tensors
+//! can drive [`crate::session::Session`]. User-defined criteria are
+//! installed with [`register`] and resolved by name through
+//! [`Criterion::parse`], exactly like the built-ins:
 //!
 //! * [`Criterion::L1`] / [`Criterion::L2`] — magnitude (train-prune-finetune),
 //! * [`Criterion::Random`] — control baseline,
@@ -12,7 +18,8 @@
 //! * [`Criterion::Snip`] — SNIP (Lee et al. 2019), Eq. 4: |g(θ)⊙θ| at init,
 //! * [`Criterion::Grasp`] — GraSP (Wang et al. 2020), Eq. 6: −θᵀH g
 //!   (gradient-flow preservation; *signed*, lower = keep),
-//! * [`Criterion::Crop`] — CroP (Rachwan et al. 2022), Eq. 7: |θᵀH g|.
+//! * [`Criterion::Crop`] — CroP (Rachwan et al. 2022), Eq. 7: |θᵀH g|,
+//! * [`Criterion::Fisher`] — diagonal-Fisher OBD approximation.
 //!
 //! GraSP/CroP need a Hessian-vector product; with an interpreter-level
 //! autodiff we compute `H·g` by central finite differences of the
@@ -23,8 +30,166 @@ use crate::ir::{DataId, Graph};
 use crate::tensor::{ops, Tensor};
 use crate::util::Rng;
 use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex, OnceLock};
 
-/// A per-parameter saliency criterion.
+/// A saliency criterion: per-parameter importance scores `S(θ)`.
+///
+/// Implementations return one score tensor per parameter data node, of
+/// the parameter's shape (parameters they do not score — e.g. BN running
+/// stats — may simply be omitted from the map). Gradient-based criteria
+/// report `needs_data() == true` and receive a labelled [`Batch`].
+///
+/// The trait is object-safe; wrap implementations in a [`SaliencyRef`]
+/// (any `impl Saliency` converts via `.into()`) to hand them to
+/// [`crate::session::Session::criterion`] or [`register`] them for
+/// lookup by name through [`Criterion::parse`].
+pub trait Saliency: Send + Sync {
+    /// Stable identifier (used by the registry and reports).
+    fn name(&self) -> &str;
+
+    /// Does this criterion need a data batch (gradients)?
+    fn needs_data(&self) -> bool {
+        false
+    }
+
+    /// Compute per-parameter scores on `g`. `batch` is `Some` whenever
+    /// the caller supplied calibration data; criteria with
+    /// `needs_data() == false` may ignore it.
+    fn score(
+        &self,
+        g: &Graph,
+        batch: Option<&Batch>,
+    ) -> anyhow::Result<HashMap<DataId, Tensor>>;
+}
+
+/// A shared, clonable handle to a [`Saliency`] implementation — the
+/// currency of [`crate::session::Session`], [`Criterion::parse`], and
+/// pipeline configs.
+#[derive(Clone)]
+pub struct SaliencyRef(Arc<dyn Saliency>);
+
+impl SaliencyRef {
+    pub fn new<S: Saliency + 'static>(s: S) -> SaliencyRef {
+        SaliencyRef(Arc::new(s))
+    }
+}
+
+impl std::ops::Deref for SaliencyRef {
+    type Target = dyn Saliency;
+    fn deref(&self) -> &(dyn Saliency + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Debug for SaliencyRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SaliencyRef({})", self.0.name())
+    }
+}
+
+// Like `anyhow::Error`, `SaliencyRef` itself does NOT implement
+// `Saliency`, which is what keeps this blanket conversion coherent.
+impl<S: Saliency + 'static> From<S> for SaliencyRef {
+    fn from(s: S) -> SaliencyRef {
+        SaliencyRef::new(s)
+    }
+}
+
+/// A saliency built from precomputed per-parameter scores — the bridge
+/// for algorithms that derive scores outside the criterion interface
+/// (OBSPA's layer-OBS scores, DFPC's BN-gain magnitudes, ...). Each
+/// `score()` call hands out a clone of the stored map.
+pub struct Precomputed {
+    name: String,
+    scores: HashMap<DataId, Tensor>,
+}
+
+impl Saliency for Precomputed {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn score(
+        &self,
+        _g: &Graph,
+        _batch: Option<&Batch>,
+    ) -> anyhow::Result<HashMap<DataId, Tensor>> {
+        Ok(self.scores.clone())
+    }
+}
+
+/// Wrap an already-computed score map as a [`SaliencyRef`].
+pub fn precomputed(
+    name: impl Into<String>,
+    scores: HashMap<DataId, Tensor>,
+) -> SaliencyRef {
+    SaliencyRef::new(Precomputed {
+        name: name.into(),
+        scores,
+    })
+}
+
+/// The criterion registry: name → saliency. Seeded with the eight
+/// built-in [`Criterion`] variants; extended by [`register`].
+fn registry() -> &'static Mutex<HashMap<String, SaliencyRef>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, SaliencyRef>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut m = HashMap::new();
+        for c in [
+            Criterion::L1,
+            Criterion::L2,
+            Criterion::Random { seed: 0 },
+            Criterion::Taylor,
+            Criterion::Snip,
+            Criterion::Grasp,
+            Criterion::Crop,
+            Criterion::Fisher,
+        ] {
+            m.insert(Criterion::name(&c).to_string(), SaliencyRef::new(c));
+        }
+        Mutex::new(m)
+    })
+}
+
+/// Register a user-defined criterion for name-based lookup through
+/// [`Criterion::parse`]. Names are process-global; registering a name
+/// twice (including shadowing a built-in) is an error.
+pub fn register(s: SaliencyRef) -> anyhow::Result<()> {
+    let name = s.name().to_string();
+    anyhow::ensure!(!name.is_empty(), "criterion name must be non-empty");
+    let mut m = registry().lock().unwrap();
+    anyhow::ensure!(
+        !m.contains_key(&name),
+        "criterion `{name}` is already registered"
+    );
+    m.insert(name, s);
+    Ok(())
+}
+
+/// Resolve a criterion by registry name (built-in or user-registered).
+pub fn resolve(name: &str) -> anyhow::Result<SaliencyRef> {
+    let m = registry().lock().unwrap();
+    if let Some(s) = m.get(name) {
+        return Ok(s.clone());
+    }
+    let mut known: Vec<&str> = m.keys().map(|k| k.as_str()).collect();
+    known.sort_unstable();
+    anyhow::bail!("unknown criterion `{name}` (known: {})", known.join(", "))
+}
+
+/// Names of every registered criterion, sorted.
+pub fn registered_names() -> Vec<String> {
+    let m = registry().lock().unwrap();
+    let mut v: Vec<String> = m.keys().cloned().collect();
+    v.sort_unstable();
+    v
+}
+
+/// The eight built-in criteria, kept as a plain enum for ergonomic
+/// construction (`Criterion::L1`) and as the compatibility shim over the
+/// registry ([`Criterion::parse`]). Implements [`Saliency`], so any
+/// variant passes directly to [`crate::session::Session::criterion`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Criterion {
     L1,
@@ -53,18 +218,11 @@ impl Criterion {
         }
     }
 
-    pub fn parse(s: &str) -> anyhow::Result<Criterion> {
-        Ok(match s {
-            "l1" => Criterion::L1,
-            "l2" => Criterion::L2,
-            "random" => Criterion::Random { seed: 0 },
-            "taylor" => Criterion::Taylor,
-            "snip" => Criterion::Snip,
-            "grasp" => Criterion::Grasp,
-            "crop" => Criterion::Crop,
-            "fisher" => Criterion::Fisher,
-            _ => anyhow::bail!("unknown criterion `{s}`"),
-        })
+    /// Resolve a criterion by name through the registry — the thin
+    /// compatibility shim over [`resolve`]. Returns built-ins as well as
+    /// any user-[`register`]ed saliency.
+    pub fn parse(s: &str) -> anyhow::Result<SaliencyRef> {
+        resolve(s)
     }
 
     /// Does this criterion need a data batch (gradients)?
@@ -77,6 +235,24 @@ impl Criterion {
                 | Criterion::Crop
                 | Criterion::Fisher
         )
+    }
+}
+
+impl Saliency for Criterion {
+    fn name(&self) -> &str {
+        Criterion::name(self)
+    }
+
+    fn needs_data(&self) -> bool {
+        Criterion::needs_data(self)
+    }
+
+    fn score(
+        &self,
+        g: &Graph,
+        batch: Option<&Batch>,
+    ) -> anyhow::Result<HashMap<DataId, Tensor>> {
+        param_scores(g, *self, batch)
     }
 }
 
@@ -299,6 +475,49 @@ mod tests {
             .values()
             .any(|t| t.data.iter().any(|v| *v < 0.0));
         assert!(has_neg, "grasp scores should be signed");
+    }
+
+    #[test]
+    fn parse_resolves_builtins_through_registry() {
+        for name in ["l1", "l2", "random", "taylor", "snip", "grasp", "crop", "fisher"] {
+            let s = Criterion::parse(name).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        let err = Criterion::parse("no-such-criterion").unwrap_err();
+        assert!(err.to_string().contains("unknown criterion"));
+        assert!(registered_names().contains(&"l1".to_string()));
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        struct Dup;
+        impl Saliency for Dup {
+            fn name(&self) -> &str {
+                "criteria-test-dup"
+            }
+            fn score(
+                &self,
+                g: &Graph,
+                _batch: Option<&Batch>,
+            ) -> anyhow::Result<HashMap<DataId, Tensor>> {
+                param_scores(g, Criterion::L1, None)
+            }
+        }
+        register(SaliencyRef::new(Dup)).unwrap();
+        assert!(register(SaliencyRef::new(Dup)).is_err());
+        assert!(register(SaliencyRef::new(Criterion::L1)).is_err());
+    }
+
+    #[test]
+    fn precomputed_ignores_graph_and_batch() {
+        let g = toy();
+        let map = param_scores(&g, Criterion::L2, None).unwrap();
+        let s = precomputed("l2-snapshot", map.clone());
+        assert_eq!(s.name(), "l2-snapshot");
+        assert!(!s.needs_data());
+        let out = s.score(&g, None).unwrap();
+        let cid = g.data_by_name("c.w").unwrap().id;
+        assert_eq!(out[&cid].data, map[&cid].data);
     }
 
     #[test]

@@ -11,12 +11,14 @@
 //! * **Any framework** — [`frontends`] normalizes heterogeneous framework
 //!   dialect exports (torch-like NCHW, tf-like NHWC-fused, jax-like,
 //!   mxnet-like) into SPA-IR, mirroring the paper's ONNX funnel.
-//! * **Any time** — [`coordinator`] drives prune-train,
-//!   train-prune-finetune, and train-prune pipelines; [`criteria`]
-//!   transfers magnitude / SNIP / GraSP / CroP scores into grouped
-//!   structured form (Eq. 1); [`obspa`] implements the paper's OBSPA
-//!   data-free reconstruction, whose hot kernels are AOT-compiled Pallas
-//!   programs executed through [`runtime`] (PJRT).
+//! * **Any time** — [`session`] is the single user-facing entry point:
+//!   a staged builder over the four-step algorithm, with pluggable
+//!   [`criteria::Saliency`] scores; [`coordinator`] drives prune-train,
+//!   train-prune-finetune, and train-prune pipelines through it;
+//!   [`criteria`] transfers magnitude / SNIP / GraSP / CroP scores into
+//!   grouped structured form (Eq. 1); [`obspa`] implements the paper's
+//!   OBSPA data-free reconstruction, whose hot kernels are AOT-compiled
+//!   Pallas programs executed through [`runtime`] (PJRT).
 
 pub mod analysis;
 pub mod baselines;
@@ -29,7 +31,10 @@ pub mod ir;
 pub mod obspa;
 pub mod prune;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod train;
 pub mod util;
 pub mod zoo;
+
+pub use session::{Plan, PruneReport, PrunedModel, Session, Target};

@@ -12,10 +12,12 @@
 //! The column sweep and Hessian accumulation execute through the PJRT
 //! Pallas artifacts (`crate::runtime::kernels`), with native fallback.
 
+use crate::criteria;
 use crate::engine::{self, Mode};
 use crate::ir::{DataId, Graph, OpId, OpKind};
-use crate::prune::{self, build_groups, score_groups, Agg, Groups, Norm};
+use crate::prune::{self, Agg, Groups, Norm};
 use crate::runtime::kernels as rk;
+use crate::session::{Session, Target};
 use crate::tensor::{ops, Tensor};
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -259,11 +261,16 @@ pub fn obspa_prune(
 ) -> anyhow::Result<ObspaReport> {
     let t0 = std::time::Instant::now();
     let (states, backend) = capture_hessians(g, calib, cfg.damp)?;
-    let groups = build_groups(g)?;
-    let scores = obs_param_scores(g, &states);
-    let ranked = score_groups(g, &groups, &scores, cfg.agg, cfg.norm);
-    let selected =
-        prune::select_by_flops_target(g, &groups, &ranked, cfg.target_rf, cfg.min_keep)?;
+    let plan = Session::on(&*g)
+        .criterion(criteria::precomputed("obs", obs_param_scores(g, &states)))
+        .agg(cfg.agg)
+        .norm(cfg.norm)
+        .min_keep(cfg.min_keep)
+        .target(Target::FlopsRf(cfg.target_rf))
+        .plan()?;
+    // Reconstruction edits weights in place before the deletion, so the
+    // plan is dismantled instead of applied.
+    let (groups, selected) = plan.into_parts();
     // Reconstruct each affected layer before deletion.
     let masks = column_masks(g, &groups, &selected, &states);
     let mut layers_updated = 0usize;
@@ -367,16 +374,14 @@ mod tests {
         assert!(r.rf >= 1.3, "rf {}", r.rf);
         let obs_acc = acc_of(&g_obs, &ds);
         // naive baseline: same selection machinery via magnitude, no update
-        let mut g_naive = g.clone();
-        let groups = build_groups(&g_naive).unwrap();
-        let mut l1 = HashMap::new();
-        for pid in g_naive.param_ids() {
-            l1.insert(pid, g_naive.data(pid).param().unwrap().map(f32::abs));
-        }
-        let ranked = score_groups(&g_naive, &groups, &l1, Agg::Sum, Norm::Mean);
-        let sel =
-            prune::select_by_flops_target(&g_naive, &groups, &ranked, 1.3, 1).unwrap();
-        prune::apply_pruning(&mut g_naive, &groups, &sel).unwrap();
+        let g_naive = Session::on(&g)
+            .criterion(crate::criteria::Criterion::L1)
+            .target(Target::FlopsRf(1.3))
+            .plan()
+            .unwrap()
+            .apply()
+            .unwrap()
+            .graph;
         let naive_acc = acc_of(&g_naive, &ds);
         // The paper's Tab. 4 shape: OBSPA's acc drop ≪ data-free magnitude
         // drop. Allow slack for the tiny regime but require clear ordering.

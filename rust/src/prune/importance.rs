@@ -78,7 +78,7 @@ impl Norm {
             Norm::Mean => scores.iter().sum::<f32>() / scores.len() as f32,
             Norm::Median => {
                 let mut s = scores.to_vec();
-                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                s.sort_by(|a, b| a.total_cmp(b));
                 s[s.len() / 2]
             }
             Norm::None => 1.0,

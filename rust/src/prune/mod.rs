@@ -19,7 +19,10 @@ pub mod rules;
 
 pub use grouping::{build_groups, CoupledChannels, Group, Groups};
 pub use importance::{score_groups, score_groups_scoped, Agg, GroupScore, Norm, Scope};
-pub use pruner::{apply_pruning, select_by_flops_target, select_lowest, PruneOutcome};
+pub use pruner::{
+    apply_pruning, select_by_flops_target, select_by_metric_target, select_lowest,
+    select_lowest_n, PruneOutcome, TargetedSelection,
+};
 pub use rules::{propagate, Mask};
 
 use crate::ir::DataId;

@@ -30,16 +30,34 @@ pub fn select_lowest(
     frac: f64,
     min_keep: usize,
 ) -> Vec<(usize, usize)> {
-    let mut ranked: Vec<&GroupScore> = scores.iter().collect();
-    ranked.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
     let target = ((scores.len() as f64) * frac).round() as usize;
+    select_lowest_n(groups, scores, target, min_keep)
+}
+
+/// Select (up to) the `n` lowest-scoring CCs globally, never dropping a
+/// group below `min_keep` surviving CCs. NaN saliencies of either sign
+/// rank last (pruned last) instead of panicking the comparator — note
+/// plain [`f32::total_cmp`] would rank a negative NaN *first*.
+pub fn select_lowest_n(
+    groups: &Groups,
+    scores: &[GroupScore],
+    n: usize,
+    min_keep: usize,
+) -> Vec<(usize, usize)> {
+    let mut ranked: Vec<&GroupScore> = scores.iter().collect();
+    ranked.sort_by(|a, b| {
+        a.score
+            .is_nan()
+            .cmp(&b.score.is_nan())
+            .then(a.score.total_cmp(&b.score))
+    });
     let mut kept_per_group: HashMap<usize, usize> = HashMap::new();
     for gr in &groups.groups {
         kept_per_group.insert(gr.id, gr.ccs.len());
     }
     let mut selected = Vec::new();
     for s in ranked {
-        if selected.len() >= target {
+        if selected.len() >= n {
             break;
         }
         let kept = kept_per_group.get_mut(&s.group).unwrap();
@@ -52,9 +70,95 @@ pub fn select_lowest(
     selected
 }
 
+/// A selection produced by bisecting toward a reduction-ratio target.
+#[derive(Debug, Clone)]
+pub struct TargetedSelection {
+    /// Selected CCs, in ascending-score order.
+    pub selected: Vec<(usize, usize)>,
+    /// The reduction ratio this selection actually achieves (trial-apply
+    /// measured). Equals/exceeds the requested target unless `clamped`.
+    pub achieved: f64,
+    /// True when the target was unreachable under `min_keep` and the
+    /// selection was clamped to the feasible maximum.
+    pub clamped: bool,
+}
+
+/// Bisect the global pruning fraction until a cost metric (FLOPs,
+/// params, ...) drops by `target` (ratio before/after). When the target
+/// is unreachable under `min_keep`, the selection is **clamped** to the
+/// feasible maximum — trimmed of its flat tail, i.e. the highest-score
+/// CCs whose removal no longer improves the metric — and the result is
+/// flagged `clamped` with the `achieved` ratio, instead of silently
+/// returning a maximal selection that pretends to meet the target.
+pub fn select_by_metric_target(
+    g: &Graph,
+    groups: &Groups,
+    scores: &[GroupScore],
+    target: f64,
+    min_keep: usize,
+    metric: impl Fn(&Graph) -> f64,
+) -> anyhow::Result<TargetedSelection> {
+    let base = metric(g);
+    let ratio_of = |sel: &[(usize, usize)]| -> anyhow::Result<f64> {
+        let mut trial = g.clone();
+        apply_pruning(&mut trial, groups, sel)?;
+        Ok(base / metric(&trial).max(1.0))
+    };
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    let mut best = Vec::new();
+    let mut best_ratio = 1.0f64;
+    for _ in 0..12 {
+        let mid = 0.5 * (lo + hi);
+        let sel = select_lowest(groups, scores, mid, min_keep);
+        let ratio = ratio_of(&sel)?;
+        if ratio < target {
+            lo = mid;
+        } else {
+            hi = mid;
+            best = sel;
+            best_ratio = ratio;
+        }
+    }
+    if best.is_empty() {
+        let all = select_lowest(groups, scores, 1.0, min_keep);
+        let max_ratio = ratio_of(&all)?;
+        if max_ratio < target {
+            // Unreachable: keep the shortest ascending-score prefix that
+            // still achieves the feasible maximum (ratio is monotone in
+            // prefix length, so bisection over the length is exact).
+            let (mut plo, mut phi) = (0usize, all.len());
+            while plo < phi {
+                let mid = (plo + phi) / 2;
+                if ratio_of(&all[..mid])? >= max_ratio {
+                    phi = mid;
+                } else {
+                    plo = mid + 1;
+                }
+            }
+            return Ok(TargetedSelection {
+                selected: all[..plo].to_vec(),
+                achieved: max_ratio,
+                clamped: true,
+            });
+        }
+        // Target met only by (near-)empty selections: mirror the
+        // bisection's final `hi` fraction.
+        best = select_lowest(groups, scores, hi, min_keep);
+        best_ratio = ratio_of(&best)?;
+    }
+    Ok(TargetedSelection {
+        selected: best,
+        achieved: best_ratio,
+        clamped: false,
+    })
+}
+
 /// Iteratively grow the selection until the pruned model's FLOPs drop by
-/// `target_rf` (e.g. 2.0 for the paper's ~2× settings). Uses a bisection
-/// over the global fraction; returns the selected CCs.
+/// `target_rf` (e.g. 2.0 for the paper's ~2× settings). Bisects the
+/// global fraction via [`select_by_metric_target`]; returns the selected
+/// CCs (clamped to the feasible maximum when the target is unreachable —
+/// use [`crate::session::Session`] to also observe the achieved ratio).
 pub fn select_by_flops_target(
     g: &Graph,
     groups: &Groups,
@@ -62,27 +166,10 @@ pub fn select_by_flops_target(
     target_rf: f64,
     min_keep: usize,
 ) -> anyhow::Result<Vec<(usize, usize)>> {
-    let base = analysis::flops(g) as f64;
-    let mut lo = 0.0f64;
-    let mut hi = 1.0f64;
-    let mut best = Vec::new();
-    for _ in 0..12 {
-        let mid = 0.5 * (lo + hi);
-        let sel = select_lowest(groups, scores, mid, min_keep);
-        let mut trial = g.clone();
-        apply_pruning(&mut trial, groups, &sel)?;
-        let rf = base / analysis::flops(&trial).max(1) as f64;
-        if rf < target_rf {
-            lo = mid;
-        } else {
-            hi = mid;
-            best = sel;
-        }
-    }
-    if best.is_empty() {
-        best = select_lowest(groups, scores, hi, min_keep);
-    }
-    Ok(best)
+    let t = select_by_metric_target(g, groups, scores, target_rf, min_keep, |m| {
+        analysis::flops(m) as f64
+    })?;
+    Ok(t.selected)
 }
 
 /// Apply the selected CC deletions to the graph in place.
@@ -320,6 +407,45 @@ mod tests {
         let r = analysis::reduction(&g, &pruned);
         assert!(r.rf >= 1.7, "rf {} below target", r.rf);
         assert!(r.rf < 3.5, "rf {} wildly above target", r.rf);
+    }
+
+    #[test]
+    fn select_tolerates_nan_scores() {
+        // regression: the ranking sort used partial_cmp().unwrap() and
+        // panicked on NaN saliency; NaN of either sign must rank last
+        // (signed criteria like GraSP can produce negative NaN)
+        let g = resnet_like(10);
+        let groups = build_groups(&g).unwrap();
+        let mut scores = score_groups(&g, &groups, &l1_scores(&g), Agg::Sum, Norm::Mean);
+        let pos_nan_cc = (scores[0].group, scores[0].cc);
+        let neg_nan_cc = (scores[1].group, scores[1].cc);
+        scores[0].score = f32::NAN;
+        scores[1].score = -f32::NAN;
+        let sel = select_lowest(&groups, &scores, 0.3, 1);
+        assert!(!sel.is_empty());
+        assert!(!sel.contains(&pos_nan_cc), "NaN-scored CC must rank last");
+        assert!(!sel.contains(&neg_nan_cc), "-NaN-scored CC must rank last");
+    }
+
+    #[test]
+    fn unreachable_target_clamps_to_feasible_max() {
+        let g = resnet_like(11);
+        let groups = build_groups(&g).unwrap();
+        let scores = score_groups(&g, &groups, &l1_scores(&g), Agg::Sum, Norm::Mean);
+        let t = select_by_metric_target(&g, &groups, &scores, 1000.0, 2, |m| {
+            analysis::flops(m) as f64
+        })
+        .unwrap();
+        assert!(t.clamped, "RF 1000x must be reported as clamped");
+        assert!(t.achieved > 1.0 && t.achieved < 1000.0);
+        // the trimmed selection still achieves the feasible-max ratio
+        let mut pruned = g.clone();
+        apply_pruning(&mut pruned, &groups, &t.selected).unwrap();
+        let r = analysis::reduction(&g, &pruned);
+        assert!((r.rf - t.achieved).abs() < 1e-9, "rf {} vs {}", r.rf, t.achieved);
+        // and never exceeds the maximal feasible selection
+        let all = select_lowest(&groups, &scores, 1.0, 2);
+        assert!(t.selected.len() <= all.len());
     }
 
     #[test]

@@ -1,0 +1,381 @@
+//! `spa::session` — one entry point for structured pruning at any time.
+//!
+//! The paper's four-step procedure (§3.2: couple → group → estimate →
+//! prune) used to be threaded by hand through free functions
+//! (`build_groups` → `score_groups` → `select_*` → `apply_pruning`) at
+//! every call site. [`Session`] packages it as a staged builder, shared
+//! by all three prune-time pipelines (§3.3) and open to user-defined
+//! criteria through the [`crate::criteria::Saliency`] trait:
+//!
+//! ```no_run
+//! use spa::criteria::Criterion;
+//! use spa::{Session, Target};
+//! # fn main() -> anyhow::Result<()> {
+//! let model = spa::zoo::resnet18(spa::zoo::ImageCfg::default(), 42);
+//! let plan = Session::on(&model)          // 1-2. couple + group
+//!     .criterion(Criterion::L1)           // 3. importance: S of Eq. 1
+//!     .target(Target::FlopsRf(2.0))       //    select toward ~2x FLOPs
+//!     .plan()?;                           //    (inspectable, not applied)
+//! println!("{} CCs selected, predicted RF {:.2}x", plan.num_selected(), plan.achieved_rf);
+//! let pruned = plan.apply()?;             // 4. physical pruning
+//! pruned.graph.validate()?;
+//! # Ok(()) }
+//! ```
+//!
+//! Staging is enforced at runtime: [`Session::plan`] fails with a clear
+//! error when no criterion was set, or when a gradient-based criterion
+//! was given no [`Session::batch`]. The intermediate [`Plan`] exposes
+//! per-CC scores, the selected coupled-channel sets, and the achieved
+//! reduction ratios ([`Plan::achieved_rf`] / [`Plan::achieved_rp`]) —
+//! including whether an unreachable target was clamped to the feasible
+//! maximum — while the session's own graph stays untouched.
+
+use crate::analysis;
+use crate::criteria::{Batch, Saliency, SaliencyRef};
+use crate::ir::Graph;
+use crate::prune::{
+    self, build_groups, score_groups_scoped, select_by_metric_target, select_lowest,
+    select_lowest_n, Agg, GroupScore, Groups, Norm, Scope,
+};
+use crate::tensor::Tensor;
+
+/// What the selection bisects toward.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Target {
+    /// FLOPs reduction ratio `RF = FLOPs_before / FLOPs_after` (paper
+    /// App. B.2, Eq. 15). The paper's "~2× settings" are `FlopsRf(2.0)`.
+    FlopsRf(f64),
+    /// Parameter reduction ratio `RP = params_before / params_after`
+    /// (Eq. 16).
+    ParamsRp(f64),
+    /// Remove this fraction of all prunable coupled-channel sets.
+    Sparsity(f64),
+    /// Remove exactly this many coupled-channel sets (fewer when
+    /// `min_keep` makes the budget infeasible).
+    ChannelBudget(usize),
+}
+
+/// Staged pruning-session builder — see the [module docs](self).
+///
+/// Defaults: `Target::FlopsRf(2.0)`, `Scope::FullCc`, `Agg::Sum`,
+/// `Norm::Mean`, `min_keep = 1`. The criterion has no default; `plan()`
+/// without one is a staging error.
+pub struct Session<'g> {
+    graph: &'g Graph,
+    criterion: Option<SaliencyRef>,
+    batch: Option<(Tensor, Vec<usize>)>,
+    target: Target,
+    scope: Scope,
+    agg: Agg,
+    norm: Norm,
+    min_keep: usize,
+}
+
+impl<'g> Session<'g> {
+    /// Start a session on `graph`. The graph is only borrowed and never
+    /// modified; [`Plan::apply`] returns a pruned clone.
+    pub fn on(graph: &'g Graph) -> Session<'g> {
+        Session {
+            graph,
+            criterion: None,
+            batch: None,
+            target: Target::FlopsRf(2.0),
+            scope: Scope::FullCc,
+            agg: Agg::Sum,
+            norm: Norm::Mean,
+            min_keep: 1,
+        }
+    }
+
+    /// Set the saliency criterion (required). Accepts any built-in
+    /// [`crate::criteria::Criterion`], a [`SaliencyRef`] from
+    /// `Criterion::parse`, or a user [`crate::criteria::Saliency`] impl.
+    pub fn criterion(mut self, criterion: impl Into<SaliencyRef>) -> Self {
+        self.criterion = Some(criterion.into());
+        self
+    }
+
+    /// Supply a labelled batch for gradient-based criteria (SNIP, GraSP,
+    /// CroP, Taylor, Fisher, ...).
+    pub fn batch(mut self, x: Tensor, labels: Vec<usize>) -> Self {
+        self.batch = Some((x, labels));
+        self
+    }
+
+    /// Set the selection target (default `Target::FlopsRf(2.0)`).
+    pub fn target(mut self, target: Target) -> Self {
+        self.target = target;
+        self
+    }
+
+    /// Score over the full coupled set (SPA-grouped, the default) or the
+    /// source filter only (the classic "structured" baselines).
+    pub fn scope(mut self, scope: Scope) -> Self {
+        self.scope = scope;
+        self
+    }
+
+    /// Eq. 1 aggregation over a coupled set (default `Agg::Sum`).
+    pub fn agg(mut self, agg: Agg) -> Self {
+        self.agg = agg;
+        self
+    }
+
+    /// Eq. 1 within-group normalization (default `Norm::Mean`).
+    pub fn norm(mut self, norm: Norm) -> Self {
+        self.norm = norm;
+        self
+    }
+
+    /// Minimum surviving CCs per group (default 1).
+    pub fn min_keep(mut self, min_keep: usize) -> Self {
+        self.min_keep = min_keep;
+        self
+    }
+
+    /// Run steps 1-3 (couple, group, estimate) and the selection toward
+    /// the target, producing an inspectable [`Plan`]. The session graph
+    /// is never modified; the plan pre-computes the pruned clone that
+    /// [`Plan::apply`] hands out.
+    pub fn plan(self) -> anyhow::Result<Plan> {
+        let criterion = self.criterion.ok_or_else(|| {
+            anyhow::anyhow!(
+                "Session::plan called before .criterion(..): set a saliency \
+                 criterion first (e.g. .criterion(Criterion::L1))"
+            )
+        })?;
+        let batch = self
+            .batch
+            .as_ref()
+            .map(|(x, labels)| Batch { x, labels: labels.as_slice() });
+        anyhow::ensure!(
+            !(criterion.needs_data() && batch.is_none()),
+            "criterion `{}` needs a data batch: call .batch(x, labels) before .plan()",
+            criterion.name()
+        );
+        let param_scores = criterion.score(self.graph, batch.as_ref())?;
+        let groups = build_groups(self.graph)?;
+        let scores = score_groups_scoped(
+            self.graph,
+            &groups,
+            &param_scores,
+            self.agg,
+            self.norm,
+            self.scope,
+        );
+        let (selected, clamped) = match self.target {
+            Target::FlopsRf(rf) => {
+                anyhow::ensure!(rf >= 1.0, "FLOPs target RF must be >= 1.0 (got {rf})");
+                let flops = |m: &Graph| analysis::flops(m) as f64;
+                let keep = self.min_keep;
+                let t = select_by_metric_target(self.graph, &groups, &scores, rf, keep, flops)?;
+                (t.selected, t.clamped)
+            }
+            Target::ParamsRp(rp) => {
+                anyhow::ensure!(rp >= 1.0, "params target RP must be >= 1.0 (got {rp})");
+                let params = |m: &Graph| analysis::params(m) as f64;
+                let keep = self.min_keep;
+                let t = select_by_metric_target(self.graph, &groups, &scores, rp, keep, params)?;
+                (t.selected, t.clamped)
+            }
+            Target::Sparsity(frac) => {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&frac),
+                    "sparsity must be in [0, 1] (got {frac})"
+                );
+                let want = ((scores.len() as f64) * frac).round() as usize;
+                let sel = select_lowest(&groups, &scores, frac, self.min_keep);
+                let clamped = sel.len() < want;
+                (sel, clamped)
+            }
+            Target::ChannelBudget(n) => {
+                let sel = select_lowest_n(&groups, &scores, n, self.min_keep);
+                let clamped = sel.len() < n;
+                (sel, clamped)
+            }
+        };
+        // Materialize the pruned clone once; `apply` hands out copies.
+        let t0 = std::time::Instant::now();
+        let mut pruned = self.graph.clone();
+        let outcome = prune::apply_pruning(&mut pruned, &groups, &selected)?;
+        let prune_seconds = t0.elapsed().as_secs_f64();
+        let r = analysis::reduction(self.graph, &pruned);
+        Ok(Plan {
+            criterion: criterion.name().to_string(),
+            target: self.target,
+            groups,
+            scores,
+            selected,
+            pruned,
+            ccs_removed: outcome.ccs_removed,
+            prune_seconds,
+            achieved_rf: r.rf,
+            achieved_rp: r.rp,
+            clamped,
+        })
+    }
+}
+
+/// An inspectable pruning plan: scores, selection, and the achieved
+/// reductions — produced by [`Session::plan`], consumed by
+/// [`Plan::apply`]. Owns its data (including the pre-computed pruned
+/// graph), so it does not borrow the session graph.
+pub struct Plan {
+    criterion: String,
+    target: Target,
+    groups: Groups,
+    scores: Vec<GroupScore>,
+    selected: Vec<(usize, usize)>,
+    pruned: Graph,
+    ccs_removed: usize,
+    prune_seconds: f64,
+    /// FLOPs reduction this plan achieves when applied.
+    pub achieved_rf: f64,
+    /// Parameter reduction this plan achieves when applied.
+    pub achieved_rp: f64,
+    /// True when the requested target was unreachable under `min_keep`
+    /// and the selection was clamped to the feasible maximum (for
+    /// `Sparsity`/`ChannelBudget`: fewer CCs selected than requested).
+    pub clamped: bool,
+}
+
+impl Plan {
+    /// Name of the criterion that scored this plan.
+    pub fn criterion(&self) -> &str {
+        &self.criterion
+    }
+
+    /// The target the selection was bisected toward.
+    pub fn target(&self) -> Target {
+        self.target
+    }
+
+    /// The discovered coupled-channel groups (paper Alg. 2).
+    pub fn groups(&self) -> &Groups {
+        &self.groups
+    }
+
+    /// Per-CC importance scores (Eq. 1), one entry per prunable CC.
+    pub fn scores(&self) -> &[GroupScore] {
+        &self.scores
+    }
+
+    /// The `(group, cc)` pairs selected for removal, ascending by score.
+    pub fn selected(&self) -> &[(usize, usize)] {
+        &self.selected
+    }
+
+    pub fn num_selected(&self) -> usize {
+        self.selected.len()
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.groups.len()
+    }
+
+    pub fn num_prunable_ccs(&self) -> usize {
+        self.groups.num_prunable_ccs()
+    }
+
+    /// Step 4: hand out the pruned model (the physical pruning ran once
+    /// at [`Session::plan`] time; this copies the stored result, so it
+    /// cannot fail and may be called repeatedly).
+    pub fn apply(&self) -> anyhow::Result<PrunedModel> {
+        Ok(PrunedModel {
+            graph: self.pruned.clone(),
+            report: PruneReport {
+                criterion: self.criterion.clone(),
+                ccs_removed: self.ccs_removed,
+                rf: self.achieved_rf,
+                rp: self.achieved_rp,
+                seconds: self.prune_seconds,
+            },
+        })
+    }
+
+    /// Dismantle the plan into its groups and selection, for algorithms
+    /// that edit weights between planning and deletion (OBSPA's OBS
+    /// reconstruction) and then call `prune::apply_pruning` themselves.
+    pub fn into_parts(self) -> (Groups, Vec<(usize, usize)>) {
+        (self.groups, self.selected)
+    }
+}
+
+/// The output of [`Plan::apply`]: the pruned graph plus its report.
+pub struct PrunedModel {
+    pub graph: Graph,
+    pub report: PruneReport,
+}
+
+/// What a [`Plan::apply`] did, in the paper's metrics.
+#[derive(Debug, Clone)]
+pub struct PruneReport {
+    /// Criterion name the selection was scored with.
+    pub criterion: String,
+    /// Coupled-channel sets physically removed.
+    pub ccs_removed: usize,
+    /// FLOPs reduction ratio (Eq. 15).
+    pub rf: f64,
+    /// Parameter reduction ratio (Eq. 16).
+    pub rp: f64,
+    /// Wallclock of the physical pruning (measured when the plan was
+    /// built).
+    pub seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::criteria::Criterion;
+    use crate::zoo::{self, ImageCfg};
+
+    fn mini() -> Graph {
+        zoo::resnet18(
+            ImageCfg {
+                hw: 8,
+                ..Default::default()
+            },
+            3,
+        )
+    }
+
+    #[test]
+    fn plan_matches_free_function_pipeline() {
+        // the session must be a pure repackaging: identical scores and
+        // selection to the hand-threaded four-step calls
+        let g = mini();
+        let plan = Session::on(&g)
+            .criterion(Criterion::L1)
+            .target(Target::FlopsRf(1.7))
+            .plan()
+            .unwrap();
+        let groups = build_groups(&g).unwrap();
+        let l1 = Criterion::L1.score(&g, None).unwrap();
+        let scores =
+            prune::score_groups(&g, &groups, &l1, Agg::Sum, Norm::Mean);
+        let sel =
+            prune::select_by_flops_target(&g, &groups, &scores, 1.7, 1).unwrap();
+        assert_eq!(plan.selected(), sel.as_slice());
+        assert_eq!(plan.scores().len(), scores.len());
+        for (a, b) in plan.scores().iter().zip(&scores) {
+            assert_eq!((a.group, a.cc), (b.group, b.cc));
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+    }
+
+    #[test]
+    fn apply_reports_match_prediction() {
+        let g = mini();
+        let plan = Session::on(&g)
+            .criterion(Criterion::L1)
+            .target(Target::FlopsRf(1.5))
+            .plan()
+            .unwrap();
+        let pruned = plan.apply().unwrap();
+        pruned.graph.validate().unwrap();
+        assert_eq!(pruned.report.ccs_removed, plan.num_selected());
+        assert!((pruned.report.rf - plan.achieved_rf).abs() < 1e-9);
+        assert!((pruned.report.rp - plan.achieved_rp).abs() < 1e-9);
+        assert_eq!(pruned.report.criterion, "l1");
+    }
+}

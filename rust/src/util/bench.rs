@@ -4,7 +4,14 @@
 //! targets use this: warmup + timed iterations with mean/stddev/min, and
 //! an ASCII table printer that renders each paper table/figure in the
 //! same rows/columns layout the paper reports.
+//!
+//! When the `SPA_BENCH_JSON` environment variable names a file, every
+//! [`bench`] result is additionally appended to it as a JSON array of
+//! `{name, ns_per_iter, iters}` objects — the machine-readable feed CI's
+//! bench-smoke lane writes to `BENCH_SMOKE.json` so successive PRs leave
+//! a comparable performance trajectory.
 
+use super::json::{self, Json, JsonObj};
 use std::time::Instant;
 
 /// Timing statistics for one benchmark case (nanoseconds).
@@ -62,7 +69,37 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         min_ns: min,
     };
     println!("{stats}");
+    record_json(&stats);
     stats
+}
+
+/// Append one result to the `SPA_BENCH_JSON` report file (no-op when the
+/// variable is unset). Bench binaries run sequentially under
+/// `cargo bench`, so read-modify-write of the shared array is safe.
+fn record_json(stats: &BenchStats) {
+    let Ok(path) = std::env::var("SPA_BENCH_JSON") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    record_json_to(&path, stats);
+}
+
+fn record_json_to(path: &str, stats: &BenchStats) {
+    let mut entries = match std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| json::parse(&s).ok())
+    {
+        Some(Json::Arr(v)) => v,
+        _ => Vec::new(),
+    };
+    let mut obj = JsonObj::new();
+    obj.insert("name", stats.name.as_str());
+    obj.insert("ns_per_iter", stats.mean_ns);
+    obj.insert("iters", stats.iters as f64);
+    entries.push(Json::Obj(obj));
+    let _ = std::fs::write(path, Json::Arr(entries).to_string());
 }
 
 /// Time a single invocation, returning (result, seconds).
@@ -155,6 +192,41 @@ mod tests {
         });
         assert!(stats.mean_ns > 0.0);
         assert_eq!(stats.iters, 5);
+    }
+
+    #[test]
+    fn json_report_appends_entries() {
+        // drive the writer directly — mutating SPA_BENCH_JSON via
+        // set_var would race other threads' getenv under the parallel
+        // test harness
+        let path = std::env::temp_dir().join(format!("spa_bench_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        for (name, ns) in [("json-probe-a", 10.0), ("json-probe-b", 20.0)] {
+            let stats = BenchStats {
+                name: name.to_string(),
+                iters: 2,
+                mean_ns: ns,
+                std_ns: 0.0,
+                min_ns: ns,
+            };
+            record_json_to(path.to_str().unwrap(), &stats);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let entries = match json::parse(&text).unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(entries.len(), 2);
+        for (entry, name) in entries.iter().zip(["json-probe-a", "json-probe-b"]) {
+            let Json::Obj(o) = entry else { panic!("expected object") };
+            assert_eq!(o.get("name"), Some(&Json::Str(name.to_string())));
+            match o.get("ns_per_iter") {
+                Some(Json::Num(ns)) => assert!(*ns >= 0.0),
+                other => panic!("missing ns_per_iter: {other:?}"),
+            }
+            assert_eq!(o.get("iters"), Some(&Json::Num(2.0)));
+        }
     }
 
     #[test]

@@ -72,7 +72,7 @@ fn snip_prune_train_on_mobilenet() {
     let ds = ImageDataset::synth_cifar(4, 256, 8, 3, 88);
     let g = zoo::mobilenetv2(icfg, 6);
     let cfg = PipelineCfg {
-        criterion: Criterion::Snip,
+        criterion: Criterion::Snip.into(),
         target_rf: 1.3,
         train: TrainCfg {
             steps: 60,

@@ -1,0 +1,222 @@
+//! Tests for the `spa::Session` staged pruning API: staging misuse,
+//! every `Target` variant on a resnet-mini, clamped unreachable targets,
+//! and a user-registered `Saliency` impl round-tripping through
+//! `Criterion::parse`.
+
+use spa::criteria::{self, Batch, Criterion, Saliency, SaliencyRef};
+use spa::ir::{DataId, Graph};
+use spa::tensor::Tensor;
+use spa::zoo::{self, ImageCfg};
+use spa::{Session, Target};
+use std::collections::HashMap;
+
+fn mini(seed: u64) -> Graph {
+    zoo::resnet18(
+        ImageCfg {
+            hw: 8,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+#[test]
+fn plan_before_criterion_is_a_staging_error() {
+    let g = mini(1);
+    let err = Session::on(&g)
+        .target(Target::FlopsRf(2.0))
+        .plan()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("criterion"),
+        "error should name the missing stage: {err}"
+    );
+}
+
+#[test]
+fn gradient_criterion_without_batch_is_a_staging_error() {
+    let g = mini(2);
+    let err = Session::on(&g).criterion(Criterion::Snip).plan().unwrap_err();
+    assert!(
+        err.to_string().contains("batch"),
+        "error should ask for a batch: {err}"
+    );
+}
+
+#[test]
+fn target_flops_rf_hits_ratio() {
+    let g = mini(3);
+    let plan = Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(Target::FlopsRf(1.7))
+        .plan()
+        .unwrap();
+    assert!(!plan.clamped);
+    assert!(plan.achieved_rf >= 1.7, "rf {}", plan.achieved_rf);
+    assert!(plan.achieved_rf < 3.5, "rf {} wildly above target", plan.achieved_rf);
+    let pruned = plan.apply().unwrap();
+    pruned.graph.validate().unwrap();
+    assert!((pruned.report.rf - plan.achieved_rf).abs() < 1e-9);
+}
+
+#[test]
+fn target_params_rp_hits_ratio() {
+    let g = mini(4);
+    let plan = Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(Target::ParamsRp(1.3))
+        .plan()
+        .unwrap();
+    assert!(!plan.clamped);
+    assert!(plan.achieved_rp >= 1.3, "rp {}", plan.achieved_rp);
+    plan.apply().unwrap().graph.validate().unwrap();
+}
+
+#[test]
+fn target_sparsity_selects_the_requested_fraction() {
+    let g = mini(5);
+    let plan = Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(Target::Sparsity(0.3))
+        .plan()
+        .unwrap();
+    let expect = ((plan.num_prunable_ccs() as f64) * 0.3).round() as usize;
+    assert_eq!(plan.num_selected(), expect);
+    assert!(!plan.clamped);
+    plan.apply().unwrap().graph.validate().unwrap();
+}
+
+#[test]
+fn target_channel_budget_is_exact() {
+    let g = mini(6);
+    let plan = Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(Target::ChannelBudget(7))
+        .plan()
+        .unwrap();
+    assert_eq!(plan.num_selected(), 7);
+    assert!(!plan.clamped);
+    let pruned = plan.apply().unwrap();
+    assert_eq!(pruned.report.ccs_removed, 7);
+    pruned.graph.validate().unwrap();
+    // an infeasible budget is clamped and flagged
+    let greedy = Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(Target::ChannelBudget(1_000_000))
+        .plan()
+        .unwrap();
+    assert!(greedy.clamped);
+    assert!(greedy.num_selected() < 1_000_000);
+}
+
+#[test]
+fn unreachable_flops_target_is_clamped_and_surfaced() {
+    let g = mini(7);
+    let plan = Session::on(&g)
+        .criterion(Criterion::L1)
+        .min_keep(2)
+        .target(Target::FlopsRf(1000.0))
+        .plan()
+        .unwrap();
+    assert!(plan.clamped, "RF 1000x is infeasible under min_keep");
+    assert!(plan.achieved_rf > 1.0 && plan.achieved_rf < 1000.0);
+    let pruned = plan.apply().unwrap();
+    pruned.graph.validate().unwrap();
+    // min_keep floors survive
+    for d in &pruned.graph.datas {
+        if d.name.ends_with(".w") && d.shape.len() == 4 {
+            assert!(d.shape[0] >= 2, "{} over-pruned: {:?}", d.name, d.shape);
+        }
+    }
+}
+
+#[test]
+fn plan_is_inspectable_before_apply() {
+    let g = mini(8);
+    let plan = Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(Target::Sparsity(0.2))
+        .plan()
+        .unwrap();
+    assert_eq!(plan.criterion(), "l1");
+    assert_eq!(plan.target(), Target::Sparsity(0.2));
+    assert!(plan.num_groups() > 0);
+    assert_eq!(plan.scores().len(), plan.num_prunable_ccs());
+    // every selected CC refers to a real group/cc pair
+    for &(gid, cc) in plan.selected() {
+        let group = &plan.groups().groups[gid];
+        assert!(group.prunable);
+        assert!(cc < group.ccs.len());
+    }
+}
+
+/// A user criterion: saliency = channel index (prunes low-index channels
+/// first). Deliberately trivial so selection order is predictable.
+struct ChannelIndex;
+
+impl Saliency for ChannelIndex {
+    fn name(&self) -> &str {
+        "channel-index"
+    }
+
+    fn score(
+        &self,
+        g: &Graph,
+        _batch: Option<&Batch>,
+    ) -> anyhow::Result<HashMap<DataId, Tensor>> {
+        Ok(g.param_ids()
+            .into_iter()
+            .map(|id| {
+                let shape = g.data(id).shape.clone();
+                let mut s = Tensor::zeros(&shape);
+                for (i, v) in s.data.iter_mut().enumerate() {
+                    *v = i as f32;
+                }
+                (id, s)
+            })
+            .collect())
+    }
+}
+
+#[test]
+fn custom_saliency_roundtrips_through_parse() {
+    criteria::register(SaliencyRef::new(ChannelIndex)).unwrap();
+    let resolved = Criterion::parse("channel-index").unwrap();
+    assert_eq!(resolved.name(), "channel-index");
+    assert!(!resolved.needs_data());
+    let g = mini(9);
+    let plan = Session::on(&g)
+        .criterion(resolved)
+        .target(Target::Sparsity(0.2))
+        .plan()
+        .unwrap();
+    assert_eq!(plan.criterion(), "channel-index");
+    assert!(plan.num_selected() > 0);
+    let pruned = plan.apply().unwrap();
+    pruned.graph.validate().unwrap();
+    assert_eq!(pruned.report.criterion, "channel-index");
+    // and the registry still rejects shadowing
+    assert!(criteria::register(SaliencyRef::new(ChannelIndex)).is_err());
+}
+
+#[test]
+fn session_batch_feeds_gradient_criteria() {
+    let g = zoo::resnet18(
+        ImageCfg {
+            hw: 8,
+            classes: 4,
+            ..Default::default()
+        },
+        10,
+    );
+    let ds = spa::data::ImageDataset::synth_cifar(4, 128, 8, 3, 11);
+    let (x, labels) = ds.train_batch_seeded(1, 16);
+    let plan = Session::on(&g)
+        .criterion(Criterion::Snip)
+        .batch(x, labels)
+        .target(Target::FlopsRf(1.4))
+        .plan()
+        .unwrap();
+    assert!(plan.achieved_rf >= 1.4);
+    plan.apply().unwrap().graph.validate().unwrap();
+}
