@@ -1,7 +1,7 @@
 //! Quickstart: build a model, plan a ~2× grouped-L1 prune (SPA-L1)
-//! through the staged `Session` API, inspect the plan, apply it, and run
-//! the pruned model — the four steps of paper §3.2 in ~25 lines of user
-//! code.
+//! through the staged `Session` API, inspect the plan, apply it, and
+//! serve the pruned model through a compiled execution plan — the four
+//! steps of paper §3.2 plus deployment in ~30 lines of user code.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -48,12 +48,24 @@ fn main() -> anyhow::Result<()> {
         pruned.report.ccs_removed, pruned.report.rf, pruned.report.rp
     );
 
+    // 5. Serving: compile the pruned graph once into an execution plan
+    //    (buffer arena + fused kernels, bit-identical to the
+    //    interpreter), then run it as many times as traffic demands.
+    let compiled = pruned.compile()?;
+    let rep = compiled.report();
+    println!(
+        "compiled plan: {} steps ({} fused), {} arena bytes vs {} interpreted",
+        rep.steps, rep.fused_ops, rep.peak_arena_bytes, rep.interp_intermediate_bytes
+    );
+    let mut ws = compiled.workspace();
     let mut rng = Rng::new(7);
     let x = Tensor::new(
         vec![2, cfg.channels, cfg.hw, cfg.hw],
         rng.uniform_vec(2 * cfg.channels * cfg.hw * cfg.hw, -1.0, 1.0),
     );
-    let logits = engine::predict(&pruned.graph, x)?;
-    println!("pruned model logits shape {:?} — OK", logits.shape);
+    let logits = compiled.run(&mut ws, &[(compiled.inputs()[0], &x)])?;
+    let reference = engine::predict(&pruned.graph, x)?;
+    assert_eq!(logits.data, reference.data, "plan must match the interpreter");
+    println!("pruned model logits shape {:?} — OK (plan == interpreter)", logits.shape);
     Ok(())
 }

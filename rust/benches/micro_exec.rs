@@ -1,0 +1,82 @@
+//! Microbench: interpreter (`engine::forward`) vs compiled plan
+//! (`exec::Plan`) on eval inference — the ISSUE-5 acceptance case.
+//!
+//! The plan must be bit-identical (asserted before timing) while winning
+//! on wall-clock through batched-GEMM convolution, fused Conv→BN→Act
+//! chains, and the zero-allocation buffer arena. Both paths are emitted
+//! to `BENCH_SMOKE.json` in the CI smoke lane so the speedup is tracked
+//! PR-over-PR.
+
+#[path = "common.rs"]
+mod common;
+
+use spa::engine::{self, Mode};
+use spa::exec::{Plan, PlanOpts};
+use spa::ir::Graph;
+use spa::tensor::Tensor;
+use spa::util::{bench, Rng, Table};
+use spa::zoo::{self, TextCfg};
+
+fn compare(t: &mut Table, label: &str, g: &Graph, x: &Tensor, iters: usize) {
+    let plan = Plan::compile(g, PlanOpts::default()).unwrap();
+    let mut ws = plan.workspace();
+    // parity gate before timing: identical bits or the comparison is void
+    let want = engine::forward(g, &[(g.inputs[0], x.clone())], Mode::Eval)
+        .unwrap()
+        .logits(g)
+        .clone();
+    let got = plan.run(&mut ws, &[(g.inputs[0], x)]).unwrap();
+    assert_eq!(want.shape, got.shape, "{label}: shape drift");
+    for (a, b) in want.data.iter().zip(&got.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: plan must be bit-identical");
+    }
+    let fi = bench(
+        &format!("exec/{label}/interp"),
+        common::warmup(2),
+        common::iters(iters),
+        || {
+            let _ = engine::forward(g, &[(g.inputs[0], x.clone())], Mode::Eval).unwrap();
+        },
+    );
+    let fp = bench(
+        &format!("exec/{label}/plan"),
+        common::warmup(2),
+        common::iters(iters),
+        || {
+            let _ = plan.run(&mut ws, &[(g.inputs[0], x)]).unwrap();
+        },
+    );
+    let r = plan.report();
+    t.row(&[
+        label.to_string(),
+        format!("{}", x.shape[0]),
+        format!("{:.3}", fi.mean_ms()),
+        format!("{:.3}", fp.mean_ms()),
+        format!("{:.2}x", fi.mean_ns / fp.mean_ns),
+        format!("{}/{}", r.peak_arena_bytes, r.interp_intermediate_bytes),
+    ]);
+}
+
+fn main() {
+    let mut t = Table::new(
+        "micro — exec: interpreter vs compiled plan (eval, bit-identical)",
+        &["model", "batch", "interp (ms)", "plan (ms)", "speedup", "arena/interp bytes"],
+    );
+    let mut rng = Rng::new(3);
+
+    let g = zoo::by_name("resnet18", common::cifar_cfg(10), 3).unwrap();
+    let x = Tensor::new(vec![32, 3, 8, 8], rng.uniform_vec(32 * 3 * 64, -1.0, 1.0));
+    compare(&mut t, "resnet18", &g, &x, 10);
+
+    let tcfg = TextCfg::default();
+    let gt = zoo::distilbert(tcfg, 4);
+    let ids = Tensor::new(
+        vec![16, tcfg.seq],
+        (0..16 * tcfg.seq)
+            .map(|_| rng.below(tcfg.vocab) as f32)
+            .collect(),
+    );
+    compare(&mut t, "distilbert", &gt, &ids, 10);
+
+    t.print();
+}

@@ -70,6 +70,9 @@ COMMANDS:
   prune    --model <name> [--time tpf|pt] [--criterion l1|snip|grasp|crop]
            [--target-rf F] [--iterations N]    full pipeline + report row
   obspa    --model <name> [--source id|ood|datafree] [--target-rf F]
+  optimize --model <name> [--out <file>]       run the inference-time
+           graph passes (dead nodes, identities, BN fold, const fold)
+           and report the compiled-plan arena footprint
   convert  --model <name> --dialect <torch|tf|jax|mxnet> --out <file>
   import   --file <dialect json> [--out <spa-ir json>]
   models                                       list zoo models
@@ -93,7 +96,7 @@ pub fn run(args: Vec<String>) -> anyhow::Result<()> {
             for m in zoo::IMAGE_MODELS {
                 println!("{m}");
             }
-            println!("mlp resnet18 resnet101 vgg19 (also available)");
+            println!("{} (also available)", zoo::EXTRA_MODELS.join(" "));
         }
         "info" => {
             let g = zoo::by_name(&flags.get("model", "resnet18"), icfg, seed)?;
@@ -211,6 +214,35 @@ pub fn run(args: Vec<String>) -> anyhow::Result<()> {
                 rep.rp
             );
         }
+        "optimize" => {
+            let model = flags.get("model", "resnet18");
+            let mut g = zoo::by_name(&model, icfg, seed)?;
+            let ops_before = g.ops.len();
+            let params_before = g.num_params();
+            let rep = crate::ir::passes::optimize(&mut g)?;
+            println!("model      : {model}");
+            println!("ops        : {} -> {}", ops_before, g.ops.len());
+            println!("params     : {} -> {}", params_before, g.num_params());
+            println!(
+                "passes     : {} dead ops, {} identities, {} BN folded, {} const folded",
+                rep.dead_ops, rep.identities_removed, rep.bn_folded, rep.constants_folded
+            );
+            let plan = crate::exec::Plan::compile(&g, crate::exec::PlanOpts::default())?;
+            let pr = plan.report();
+            println!(
+                "exec plan  : {} steps ({} fused, {} aliased), {} arena slots",
+                pr.steps, pr.fused_ops, pr.aliased_ops, pr.arena_slots
+            );
+            println!(
+                "activations: {} arena bytes vs {} interpreted bytes (+{} wt cache)",
+                pr.peak_arena_bytes, pr.interp_intermediate_bytes, pr.gemm_wt_bytes
+            );
+            let out = flags.get("out", "");
+            if !out.is_empty() {
+                ir_serde::save_graph(&g, &out, true)?;
+                println!("wrote {out}");
+            }
+        }
         "convert" => {
             let model = flags.get("model", "resnet18");
             let dialect = Dialect::parse(&flags.get("dialect", "tf"))?;
@@ -283,6 +315,18 @@ mod tests {
     #[test]
     fn usage_on_no_args() {
         run(vec![]).unwrap();
+    }
+
+    #[test]
+    fn optimize_command_runs() {
+        run(vec![
+            "optimize".into(),
+            "--model".into(),
+            "vgg16".into(),
+            "--hw".into(),
+            "8".into(),
+        ])
+        .unwrap();
     }
 
     #[test]

@@ -34,19 +34,26 @@ enum Aux {
     Act { x: Tensor },
 }
 
-/// Result of a forward pass: every data-node value plus backward state.
+/// Result of a forward pass: every computed data-node value plus backward
+/// state.
 pub struct Forward {
-    /// Value per data id (params included for convenience).
+    /// Value per data id for graph inputs and activations. Parameters are
+    /// *not* copied here — they are read from the graph on demand (see
+    /// [`value_or_param`]); cloning every parameter tensor per call made
+    /// the interpreter's fixed cost proportional to model size.
     pub values: Vec<Option<Tensor>>,
     aux: HashMap<OpId, Aux>,
     mode: Mode,
 }
 
 impl Forward {
+    /// The computed value of an input or activation node. Panics for
+    /// parameter nodes (read those from the graph, or use
+    /// [`value_or_param`]).
     pub fn value(&self, id: DataId) -> &Tensor {
         self.values[id]
             .as_ref()
-            .unwrap_or_else(|| panic!("data {id} not computed"))
+            .unwrap_or_else(|| panic!("data {id} not computed (params live on the graph)"))
     }
 
     /// The first graph output (logits for classifiers).
@@ -67,18 +74,15 @@ impl Grads {
     }
 }
 
-fn gelu(x: f32) -> f32 {
-    // tanh approximation (matches jax.nn.gelu default closely)
-    const C: f32 = 0.7978845608; // sqrt(2/pi)
-    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
-}
+use crate::tensor::ops::{gelu, gelu_grad};
 
-fn gelu_grad(x: f32) -> f32 {
-    const C: f32 = 0.7978845608;
-    let u = C * (x + 0.044715 * x * x * x);
-    let t = u.tanh();
-    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
-    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+/// Resolve a data id to its value: computed activations/inputs come from
+/// the forward pass, parameters from the graph (never copied).
+pub fn value_or_param<'a>(g: &'a Graph, fwd: &'a Forward, id: DataId) -> &'a Tensor {
+    fwd.values[id]
+        .as_ref()
+        .or_else(|| g.datas[id].param())
+        .unwrap_or_else(|| panic!("data `{}` has no value", g.datas[id].name))
 }
 
 /// Broadcast-expand `b` to shape `a_shape` (channel/row semantics of
@@ -205,11 +209,6 @@ fn reduce_to(b_shape: &[usize], g: &Tensor) -> Tensor {
 /// dependent ops re-derive from actual tensors).
 pub fn forward(g: &Graph, feeds: &[(DataId, Tensor)], mode: Mode) -> anyhow::Result<Forward> {
     let mut values: Vec<Option<Tensor>> = vec![None; g.datas.len()];
-    for d in &g.datas {
-        if let DataKind::Param(t) = &d.kind {
-            values[d.id] = Some(t.clone());
-        }
-    }
     for (id, t) in feeds {
         anyhow::ensure!(
             matches!(g.datas[*id].kind, DataKind::Input),
@@ -221,12 +220,15 @@ pub fn forward(g: &Graph, feeds: &[(DataId, Tensor)], mode: Mode) -> anyhow::Res
     let mut aux: HashMap<OpId, Aux> = HashMap::new();
     for op_id in g.topo_order()? {
         let op = &g.ops[op_id];
+        // Params are borrowed straight from the graph; only activations
+        // and feeds live in `values`.
         let ins: Vec<&Tensor> = op
             .inputs
             .iter()
             .map(|&i| {
                 values[i]
                     .as_ref()
+                    .or_else(|| g.datas[i].param())
                     .ok_or_else(|| anyhow::anyhow!("missing input to `{}`", op.name))
             })
             .collect::<anyhow::Result<_>>()?;
@@ -237,6 +239,12 @@ pub fn forward(g: &Graph, feeds: &[(DataId, Tensor)], mode: Mode) -> anyhow::Res
         }
     }
     Ok(Forward { values, aux, mode })
+}
+
+/// Evaluate one operator on already-resolved inputs, discarding backward
+/// state — used by the constant-folding pass in `crate::ir::passes`.
+pub(crate) fn eval_op_value(kind: &OpKind, ins: &[&Tensor], mode: Mode) -> anyhow::Result<Tensor> {
+    Ok(eval_op(kind, ins, mode)?.0)
 }
 
 fn eval_op(kind: &OpKind, ins: &[&Tensor], mode: Mode) -> anyhow::Result<(Tensor, Aux)> {
@@ -387,7 +395,11 @@ pub fn backward(g: &Graph, fwd: &Forward, out_grads: &[(DataId, Tensor)]) -> any
             Some(t) => t.clone(),
             None => continue, // output unused by the loss
         };
-        let ins: Vec<&Tensor> = op.inputs.iter().map(|&i| fwd.value(i)).collect();
+        let ins: Vec<&Tensor> = op
+            .inputs
+            .iter()
+            .map(|&i| value_or_param(g, fwd, i))
+            .collect();
         let aux = fwd.aux.get(&op_id).unwrap_or(&Aux::None);
         let din = backprop_op(&op.kind, &ins, &dy, aux, fwd.mode)?;
         for (slot, grad) in din.into_iter().enumerate() {

@@ -1,0 +1,1254 @@
+//! `spa::exec` — compiled execution plans for inference.
+//!
+//! The interpreter (`crate::engine`) re-walks the graph, re-allocates
+//! every intermediate, and re-derives every decision on each call — the
+//! right trade-off for autodiff and shape-shifting training, and the
+//! wrong one for the paper's "any time" serving story, where a pruned
+//! graph is evaluated thousands of times (BN recalibration, OBSPA
+//! calibration sweeps, fine-tune eval loops, benchmark tables). This
+//! module compiles a graph **once** into an immutable [`Plan`] and then
+//! executes it many times against a reusable [`Workspace`]:
+//!
+//! * **Topological schedule** — op dispatch order, input/output
+//!   locations, and fusion decisions are resolved at compile time;
+//! * **Buffer arena** — a liveness analysis maps intermediates onto a
+//!   small set of reusable slots, so steady-state inference allocates
+//!   nothing and peak activation memory drops well below the
+//!   interpreter's keep-everything strategy ([`PlanReport`] quantifies
+//!   both);
+//! * **Op fusion** — eval-mode BatchNorm collapses into its producer as
+//!   an in-place per-channel affine, and unary activations collapse into
+//!   an in-place map, so Conv→BN→ReLU / Gemm→Act chains run as single
+//!   kernels with **bit-identical** results (the fused arithmetic is the
+//!   same per-element expressions the interpreter evaluates);
+//! * **Batched inference** — [`Batcher`] fans independent requests out
+//!   over the `crate::util::par` worker pool, deterministically: outputs
+//!   are byte-equal at any `SPA_THREADS` width.
+//!
+//! [`OptLevel::Exact`] (the default) performs no graph rewriting, which
+//! makes plan outputs bit-identical to `engine::forward` in
+//! [`crate::engine::Mode::Eval`] — `tests/exec_parity.rs` enforces this
+//! across randomly pruned zoo models. [`OptLevel::Fast`] additionally
+//! runs the [`crate::ir::passes::optimize`] pipeline (dead nodes →
+//! identities → BN fold → constant fold) on the plan's private graph
+//! copy; numerics then agree up to the float reassociation of BN weight
+//! folding.
+//!
+//! ```no_run
+//! use spa::criteria::Criterion;
+//! use spa::{Session, Target};
+//! # fn main() -> anyhow::Result<()> {
+//! let model = spa::zoo::resnet18(spa::zoo::ImageCfg::default(), 42);
+//! let pruned = Session::on(&model)
+//!     .criterion(Criterion::L1)
+//!     .target(Target::FlopsRf(2.0))
+//!     .plan()?
+//!     .apply()?;
+//! let plan = pruned.compile()?;             // compile once
+//! let mut ws = plan.workspace();
+//! # let x = spa::tensor::Tensor::zeros(&[8, 3, 32, 32]);
+//! let logits = plan.run(&mut ws, &[(plan.inputs()[0], &x)])?; // run many
+//! println!("peak arena: {} bytes", plan.report().peak_arena_bytes);
+//! # Ok(()) }
+//! ```
+
+use crate::ir::passes::{self, OptReport};
+use crate::ir::shape::infer_op_output_shapes;
+use crate::ir::{DataId, DataKind, Graph, OpId, OpKind, OpNode};
+use crate::tensor::{ops, Tensor};
+use crate::util::par;
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+/// How aggressively [`Plan::compile`] may transform the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptLevel {
+    /// Schedule + arena only; no fusion. The debugging baseline.
+    None,
+    /// Schedule + arena + in-place BN/activation fusion. No graph
+    /// rewriting, so data ids stay valid and outputs are bit-identical
+    /// to the interpreter in eval mode. The default.
+    #[default]
+    Exact,
+    /// `Exact` plus the [`crate::ir::passes::optimize`] rewrite pipeline
+    /// on the plan's private graph copy. Fastest; numerics agree with
+    /// the interpreter up to BN-fold float reassociation, and data ids
+    /// are remapped (use [`Plan::inputs`] / [`Plan::outputs`]).
+    Fast,
+}
+
+/// Options for [`Plan::compile`].
+#[derive(Debug, Clone, Default)]
+pub struct PlanOpts {
+    /// Optimization level (default [`OptLevel::Exact`]).
+    pub level: OptLevel,
+    /// Data ids whose values must remain readable from the [`Workspace`]
+    /// after a run ([`Plan::value`]) — the activation-collection hook
+    /// OBSPA uses for its layer-wise Hessians. Retained ids are pinned
+    /// out of arena reuse and block fusion across themselves. Only valid
+    /// with id-stable levels (`None` / `Exact`).
+    pub retain: Vec<DataId>,
+}
+
+/// What [`Plan::compile`] produced, in numbers.
+#[derive(Debug, Clone, Default)]
+pub struct PlanReport {
+    /// Executable steps (fused chains count once).
+    pub steps: usize,
+    /// Operators folded into a predecessor step as in-place post-ops.
+    pub fused_ops: usize,
+    /// Reshape-only operators (Identity / Flatten) resolved to aliases.
+    pub aliased_ops: usize,
+    /// Distinct arena slots backing all intermediates.
+    pub arena_slots: usize,
+    /// Total arena bytes at the graph's nominal shapes.
+    pub peak_arena_bytes: usize,
+    /// Bytes the interpreter materializes for the same graph (every
+    /// activation simultaneously, nominal shapes).
+    pub interp_intermediate_bytes: usize,
+    /// Bytes of precomputed Gemm weight transposes the plan carries on
+    /// top of its graph copy (a compile-time space-for-time trade the
+    /// arena numbers above do not include).
+    pub gemm_wt_bytes: usize,
+    /// Rewrite-pass report when compiled at [`OptLevel::Fast`].
+    pub opt: Option<OptReport>,
+}
+
+/// Where a data node's value lives at run time.
+#[derive(Debug, Clone, Copy)]
+enum Loc {
+    /// `k`-th graph input, bound per run.
+    Feed(usize),
+    /// Parameter on the plan's graph.
+    Param(DataId),
+    /// Arena slot.
+    Slot(usize),
+}
+
+/// Fused in-place epilogue applied to a step's output buffer.
+#[derive(Debug, Clone)]
+enum PostOp {
+    /// Eval-mode BatchNorm as a per-channel affine (`v·scale + shift`,
+    /// exactly [`ops::batchnorm_infer`]'s arithmetic).
+    Bn {
+        gamma: DataId,
+        beta: DataId,
+        mean: DataId,
+        var: DataId,
+        eps: f32,
+    },
+    Act(Act),
+}
+
+/// Unary activations that fuse (same per-element expressions as the
+/// interpreter's eval path).
+#[derive(Debug, Clone, Copy)]
+enum Act {
+    Relu,
+    Gelu,
+    Silu,
+    Sigmoid,
+    Tanh,
+}
+
+fn apply_act(a: Act, buf: &mut [f32]) {
+    match a {
+        Act::Relu => {
+            for v in buf {
+                *v = v.max(0.0);
+            }
+        }
+        Act::Gelu => {
+            for v in buf {
+                *v = ops::gelu(*v);
+            }
+        }
+        Act::Silu => {
+            for v in buf {
+                *v = *v / (1.0 + (-*v).exp());
+            }
+        }
+        Act::Sigmoid => {
+            for v in buf {
+                *v = 1.0 / (1.0 + (-*v).exp());
+            }
+        }
+        Act::Tanh => {
+            for v in buf {
+                *v = v.tanh();
+            }
+        }
+    }
+}
+
+fn act_of(kind: &OpKind) -> Option<Act> {
+    match kind {
+        OpKind::Relu => Some(Act::Relu),
+        OpKind::Gelu => Some(Act::Gelu),
+        OpKind::Silu => Some(Act::Silu),
+        OpKind::Sigmoid => Some(Act::Sigmoid),
+        OpKind::Tanh => Some(Act::Tanh),
+        _ => None,
+    }
+}
+
+/// One schedule entry.
+#[derive(Debug, Clone)]
+enum Item {
+    /// Reshape-only op: the output aliases the input's location; only
+    /// the shape changes.
+    Alias { op: OpId },
+    /// A real kernel dispatch writing `out_slot`, then applying `post`
+    /// in place. `out_data` is the data id whose value the slot holds
+    /// afterwards (the end of the fused chain).
+    Step {
+        op: OpId,
+        out_data: DataId,
+        out_slot: usize,
+        post: Vec<PostOp>,
+    },
+}
+
+/// An immutable, reusable execution plan — see the [module docs](self).
+pub struct Plan {
+    graph: Graph,
+    schedule: Vec<Item>,
+    loc: Vec<Option<Loc>>,
+    slot_count: usize,
+    readable: HashSet<DataId>,
+    /// Per graph-input: whether a readable id resolves to this feed, so
+    /// its tensor must be copied into the workspace at run time.
+    keep_feeds: Vec<bool>,
+    /// Pre-transposed `[K, N]` weights per Gemm op, so the multi-row
+    /// GEMM path skips the interpreter's per-call `w.t2()`.
+    gemm_wt: HashMap<OpId, Tensor>,
+    report: PlanReport,
+}
+
+/// Conv im2col / GEMM scratch, reused across runs (the interpreter
+/// re-allocates the equivalent buffers on every call).
+#[derive(Default)]
+struct Scratch {
+    cols: Vec<f32>,
+    yb: Vec<f32>,
+}
+
+/// Reusable per-thread run state for a [`Plan`]: the arena buffers plus
+/// per-run shapes and feed copies. Create with [`Plan::workspace`]; reuse
+/// across calls to avoid all steady-state allocation.
+pub struct Workspace {
+    slots: Vec<Vec<f32>>,
+    shapes: Vec<Vec<usize>>,
+    feeds: Vec<Option<Tensor>>,
+    scratch: Scratch,
+}
+
+impl Plan {
+    /// Compile `graph` into an execution plan. The graph is cloned (the
+    /// plan is self-contained and immutable); at [`OptLevel::Fast`] the
+    /// private copy is additionally rewritten by
+    /// [`crate::ir::passes::optimize`].
+    pub fn compile(g: &Graph, opts: PlanOpts) -> anyhow::Result<Plan> {
+        anyhow::ensure!(
+            !(opts.level == OptLevel::Fast && !opts.retain.is_empty()),
+            "PlanOpts::retain requires an id-stable level (None/Exact), not Fast"
+        );
+        let mut graph = g.clone();
+        let opt = match opts.level {
+            OptLevel::Fast => Some(passes::optimize(&mut graph)?),
+            _ => None,
+        };
+        for &id in &opts.retain {
+            anyhow::ensure!(
+                id < graph.datas.len(),
+                "retain id {id} out of range ({} data nodes)",
+                graph.datas.len()
+            );
+        }
+        let order = graph.topo_order()?;
+        let nd = graph.datas.len();
+        let mut loc: Vec<Option<Loc>> = vec![None; nd];
+        for (k, &i) in graph.inputs.iter().enumerate() {
+            loc[i] = Some(Loc::Feed(k));
+        }
+        for d in &graph.datas {
+            if d.is_param() {
+                loc[d.id] = Some(Loc::Param(d.id));
+            }
+        }
+        let retain: HashSet<DataId> = opts.retain.iter().copied().collect();
+        let outputs: HashSet<DataId> = graph.outputs.iter().copied().collect();
+
+        // ---- Phase A: emit the schedule skeleton (fusion + aliases) ----
+        struct Proto {
+            op: OpId,
+            out_data: DataId,
+            post: Vec<PostOp>,
+        }
+        enum ProtoItem {
+            Alias(OpId),
+            Step(Proto),
+        }
+        let mut alias_src: HashMap<DataId, DataId> = HashMap::new();
+        let mut fused: HashSet<OpId> = HashSet::new();
+        let mut proto: Vec<ProtoItem> = Vec::new();
+        let mut fused_ops = 0usize;
+        let mut aliased_ops = 0usize;
+        for &op_id in &order {
+            if fused.contains(&op_id) {
+                continue;
+            }
+            let op = &graph.ops[op_id];
+            if op.outputs.is_empty() {
+                continue; // neutralized leftover
+            }
+            if matches!(op.kind, OpKind::Identity | OpKind::Flatten) {
+                alias_src.insert(op.outputs[0], op.inputs[0]);
+                proto.push(ProtoItem::Alias(op_id));
+                aliased_ops += 1;
+                continue;
+            }
+            let mut out_data = op.outputs[0];
+            let mut post: Vec<PostOp> = Vec::new();
+            if opts.level != OptLevel::None {
+                loop {
+                    let d = &graph.datas[out_data];
+                    if d.consumers.len() != 1
+                        || outputs.contains(&out_data)
+                        || retain.contains(&out_data)
+                    {
+                        break;
+                    }
+                    let c = d.consumers[0];
+                    let cop = &graph.ops[c];
+                    match cop.kind {
+                        OpKind::BatchNorm { eps } if cop.inputs[0] == out_data => {
+                            post.push(PostOp::Bn {
+                                gamma: cop.inputs[1],
+                                beta: cop.inputs[2],
+                                mean: cop.inputs[3],
+                                var: cop.inputs[4],
+                                eps,
+                            });
+                            fused.insert(c);
+                            out_data = cop.outputs[0];
+                        }
+                        _ => {
+                            if let Some(a) = act_of(&cop.kind) {
+                                post.push(PostOp::Act(a));
+                                fused.insert(c);
+                                out_data = cop.outputs[0];
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            fused_ops += post.len();
+            proto.push(ProtoItem::Step(Proto {
+                op: op_id,
+                out_data,
+                post,
+            }));
+        }
+
+        // Resolve a read of `d` to the data id whose slot (if any) backs
+        // it, following reshape aliases.
+        let resolve = |mut d: DataId| -> DataId {
+            while let Some(&s) = alias_src.get(&d) {
+                d = s;
+            }
+            d
+        };
+
+        // ---- Phase B: liveness (last schedule index reading each slot-
+        // backed data id; usize::MAX pins outputs/retained) ----
+        let mut write_at: HashMap<DataId, usize> = HashMap::new();
+        let mut last_read: HashMap<DataId, usize> = HashMap::new();
+        for (pi, item) in proto.iter().enumerate() {
+            if let ProtoItem::Step(p) = item {
+                for &i in &graph.ops[p.op].inputs {
+                    let r = resolve(i);
+                    if write_at.contains_key(&r) {
+                        last_read.insert(r, pi);
+                    }
+                }
+                write_at.insert(p.out_data, pi);
+            }
+        }
+        for &d in outputs.iter().chain(retain.iter()) {
+            let r = resolve(d);
+            if write_at.contains_key(&r) {
+                last_read.insert(r, usize::MAX);
+            }
+        }
+
+        // ---- Phase C: greedy arena slot assignment ----
+        let mut schedule: Vec<Item> = Vec::with_capacity(proto.len());
+        let mut free: Vec<usize> = Vec::new();
+        let mut active: Vec<(usize, usize)> = Vec::new(); // (end, slot)
+        let mut slot_nominal: Vec<usize> = Vec::new();
+        let mut steps = 0usize;
+        for (pi, item) in proto.into_iter().enumerate() {
+            match item {
+                ProtoItem::Alias(op_id) => {
+                    let (inp, out) = {
+                        let op = &graph.ops[op_id];
+                        (op.inputs[0], op.outputs[0])
+                    };
+                    loc[out] = loc[inp];
+                    schedule.push(Item::Alias { op: op_id });
+                }
+                ProtoItem::Step(p) => {
+                    let mut i = 0;
+                    while i < active.len() {
+                        if active[i].0 < pi {
+                            free.push(active[i].1);
+                            active.swap_remove(i);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    let slot = free.pop().unwrap_or_else(|| {
+                        slot_nominal.push(0);
+                        slot_nominal.len() - 1
+                    });
+                    let end = last_read.get(&p.out_data).copied().unwrap_or(pi);
+                    active.push((end, slot));
+                    let numel: usize = graph.datas[p.out_data].shape.iter().product();
+                    slot_nominal[slot] = slot_nominal[slot].max(numel);
+                    loc[p.out_data] = Some(Loc::Slot(slot));
+                    steps += 1;
+                    schedule.push(Item::Step {
+                        op: p.op,
+                        out_data: p.out_data,
+                        out_slot: slot,
+                        post: p.post,
+                    });
+                }
+            }
+        }
+
+        let interp_intermediate_bytes: usize = graph
+            .datas
+            .iter()
+            .filter(|d| matches!(d.kind, DataKind::Activation))
+            .map(|d| d.shape.iter().product::<usize>() * std::mem::size_of::<f32>())
+            .sum();
+        let peak_arena_bytes: usize =
+            slot_nominal.iter().sum::<usize>() * std::mem::size_of::<f32>();
+        let mut readable: HashSet<DataId> = retain;
+        readable.extend(graph.outputs.iter().copied());
+        // Feed indices that must be copied into the workspace so reads
+        // after the run can see them — a readable id may be the input
+        // itself or a reshape alias of it (e.g. OBSPA retaining the
+        // Flatten of the graph input that feeds mlp's first Gemm).
+        let mut keep_feeds = vec![false; graph.inputs.len()];
+        for &id in &readable {
+            if let Some(Loc::Feed(k)) = loc.get(id).copied().flatten() {
+                keep_feeds[k] = true;
+            }
+        }
+        let mut gemm_wt: HashMap<OpId, Tensor> = HashMap::new();
+        for op in &graph.ops {
+            if matches!(op.kind, OpKind::Gemm) {
+                if let Some(w) = op.inputs.get(1).and_then(|&i| graph.datas[i].param()) {
+                    gemm_wt.insert(op.id, w.t2());
+                }
+            }
+        }
+        let gemm_wt_bytes: usize = gemm_wt
+            .values()
+            .map(|t| t.numel() * std::mem::size_of::<f32>())
+            .sum();
+        let report = PlanReport {
+            steps,
+            fused_ops,
+            aliased_ops,
+            arena_slots: slot_nominal.len(),
+            peak_arena_bytes,
+            interp_intermediate_bytes,
+            gemm_wt_bytes,
+            opt,
+        };
+        Ok(Plan {
+            graph,
+            schedule,
+            loc,
+            slot_count: slot_nominal.len(),
+            readable,
+            keep_feeds,
+            gemm_wt,
+            report,
+        })
+    }
+
+    /// Compile stats: step/fusion/alias counts and the arena-vs-
+    /// interpreter memory comparison.
+    pub fn report(&self) -> &PlanReport {
+        &self.report
+    }
+
+    /// The plan's own (possibly rewritten) graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Input data ids to feed ([`OptLevel::Fast`] remaps ids, so always
+    /// address feeds through this).
+    pub fn inputs(&self) -> &[DataId] {
+        &self.graph.inputs
+    }
+
+    /// Output data ids.
+    pub fn outputs(&self) -> &[DataId] {
+        &self.graph.outputs
+    }
+
+    /// A fresh workspace sized for this plan.
+    pub fn workspace(&self) -> Workspace {
+        let mut shapes = vec![Vec::new(); self.graph.datas.len()];
+        for d in &self.graph.datas {
+            if let Some(p) = d.param() {
+                shapes[d.id] = p.shape.clone();
+            }
+        }
+        Workspace {
+            slots: vec![Vec::new(); self.slot_count],
+            shapes,
+            feeds: vec![None; self.graph.inputs.len()],
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Execute the plan and return the first graph output (logits for
+    /// classifiers). Feeds bind input data ids to tensors; the batch dim
+    /// may differ from the nominal compile-time shape.
+    pub fn run(&self, ws: &mut Workspace, feeds: &[(DataId, &Tensor)]) -> anyhow::Result<Tensor> {
+        self.execute(ws, feeds)?;
+        self.value(ws, self.graph.outputs[0])
+    }
+
+    /// One-shot convenience: fresh workspace, single-input graph.
+    pub fn predict(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(
+            self.graph.inputs.len() == 1,
+            "predict requires a single-input graph"
+        );
+        let mut ws = self.workspace();
+        self.run(&mut ws, &[(self.graph.inputs[0], x)])
+    }
+
+    /// Read a value from the workspace after [`Plan::run`]: graph
+    /// outputs, parameters, and every id listed in
+    /// [`PlanOpts::retain`] (inputs included — list an input there to
+    /// read it back). Anything else is rejected: intermediates because
+    /// their arena slots may have been reused, non-retained inputs
+    /// because the plan does not copy feeds it was not asked to keep.
+    pub fn value(&self, ws: &Workspace, id: DataId) -> anyhow::Result<Tensor> {
+        match self.loc.get(id).copied().flatten() {
+            Some(Loc::Param(p)) => Ok(self.graph.datas[p].param().expect("param loc").clone()),
+            Some(Loc::Feed(k)) => {
+                let t = ws.feeds[k].clone().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "input `{}` is not retained by this plan (add it to PlanOpts::retain)",
+                        self.graph.datas[id].name
+                    )
+                })?;
+                // a reshape alias of an input (e.g. Flatten) shares the
+                // feed's data under its own shape
+                if !ws.shapes[id].is_empty() && ws.shapes[id] != t.shape {
+                    Ok(t.reshaped(ws.shapes[id].clone()))
+                } else {
+                    Ok(t)
+                }
+            }
+            Some(Loc::Slot(s)) => {
+                anyhow::ensure!(
+                    self.readable.contains(&id),
+                    "data `{}` is not retained by this plan (add it to PlanOpts::retain)",
+                    self.graph.datas[id].name
+                );
+                anyhow::ensure!(
+                    !ws.shapes[id].is_empty(),
+                    "data `{}` has no value (run the plan first)",
+                    self.graph.datas[id].name
+                );
+                Ok(Tensor::new(ws.shapes[id].clone(), ws.slots[s].clone()))
+            }
+            None => anyhow::bail!(
+                "data `{}` is fused away in this plan",
+                self.graph.datas[id].name
+            ),
+        }
+    }
+
+    /// Execute all steps, leaving results in the workspace.
+    pub fn execute(&self, ws: &mut Workspace, feeds: &[(DataId, &Tensor)]) -> anyhow::Result<()> {
+        // Param shapes are static (pre-filled by `workspace`); only
+        // feed/activation shapes reset per run.
+        for (id, l) in self.loc.iter().enumerate() {
+            if !matches!(l, Some(Loc::Param(_))) {
+                ws.shapes[id].clear();
+            }
+        }
+        for f in ws.feeds.iter_mut() {
+            *f = None;
+        }
+        // Kernels read feeds through these borrows; a copy is kept in the
+        // workspace only for inputs the plan must expose after the run
+        // (retained ids — e.g. OBSPA capturing a first layer's input).
+        let mut feed_refs: Vec<Option<&Tensor>> = vec![None; self.graph.inputs.len()];
+        for (id, t) in feeds {
+            let k = self
+                .graph
+                .inputs
+                .iter()
+                .position(|&i| i == *id)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("feed target `{}` is not an input", self.graph.datas[*id].name)
+                })?;
+            feed_refs[k] = Some(*t);
+            if self.keep_feeds[k] {
+                ws.feeds[k] = Some((*t).clone());
+            }
+            ws.shapes[*id] = t.shape.clone();
+        }
+        for item in &self.schedule {
+            match item {
+                Item::Alias { op } => {
+                    let o = &self.graph.ops[*op];
+                    anyhow::ensure!(
+                        !ws.shapes[o.inputs[0]].is_empty(),
+                        "missing input to `{}`",
+                        o.name
+                    );
+                    let ins = vec![ws.shapes[o.inputs[0]].clone()];
+                    let out = infer_op_output_shapes(&o.kind, &ins)
+                        .map_err(|e| anyhow::anyhow!("op `{}`: {e}", o.name))?
+                        .swap_remove(0);
+                    ws.shapes[o.outputs[0]] = out;
+                }
+                Item::Step {
+                    op,
+                    out_data,
+                    out_slot,
+                    post,
+                } => {
+                    let o = &self.graph.ops[*op];
+                    let mut in_shapes: Vec<Vec<usize>> = Vec::with_capacity(o.inputs.len());
+                    for &i in &o.inputs {
+                        anyhow::ensure!(
+                            !ws.shapes[i].is_empty(),
+                            "missing input to `{}`",
+                            o.name
+                        );
+                        in_shapes.push(ws.shapes[i].clone());
+                    }
+                    let out_shape = infer_op_output_shapes(&o.kind, &in_shapes)
+                        .map_err(|e| anyhow::anyhow!("op `{}`: {e}", o.name))?
+                        .swap_remove(0);
+                    let numel: usize = out_shape.iter().product();
+                    let mut buf = std::mem::take(&mut ws.slots[*out_slot]);
+                    buf.resize(numel, 0.0);
+                    let mut scratch = std::mem::take(&mut ws.scratch);
+                    let r = self.run_step(
+                        ws,
+                        &feed_refs,
+                        o,
+                        &in_shapes,
+                        &out_shape,
+                        &mut scratch,
+                        &mut buf,
+                    );
+                    ws.scratch = scratch;
+                    r?;
+                    for p in post {
+                        match p {
+                            PostOp::Bn {
+                                gamma,
+                                beta,
+                                mean,
+                                var,
+                                eps,
+                            } => ops::batchnorm_affine_inplace(
+                                &mut buf,
+                                &out_shape,
+                                self.param(*gamma)?,
+                                self.param(*beta)?,
+                                self.param(*mean)?,
+                                self.param(*var)?,
+                                *eps,
+                            ),
+                            PostOp::Act(a) => apply_act(*a, &mut buf),
+                        }
+                    }
+                    ws.slots[*out_slot] = buf;
+                    ws.shapes[*out_data] = out_shape;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn param(&self, id: DataId) -> anyhow::Result<&Tensor> {
+        self.graph.datas[id].param().ok_or_else(|| {
+            anyhow::anyhow!(
+                "compiled plans require `{}` to be a parameter",
+                self.graph.datas[id].name
+            )
+        })
+    }
+
+    fn data_slice<'a>(
+        &'a self,
+        ws: &'a Workspace,
+        feeds: &[Option<&'a Tensor>],
+        id: DataId,
+    ) -> anyhow::Result<&'a [f32]> {
+        match self.loc.get(id).copied().flatten() {
+            Some(Loc::Feed(k)) => feeds[k].map(|t| t.data.as_slice()).ok_or_else(|| {
+                anyhow::anyhow!("input `{}` was not fed", self.graph.datas[id].name)
+            }),
+            Some(Loc::Param(p)) => {
+                Ok(self.graph.datas[p].param().expect("param loc").data.as_slice())
+            }
+            Some(Loc::Slot(s)) => Ok(ws.slots[s].as_slice()),
+            None => anyhow::bail!(
+                "internal: data `{}` has no location",
+                self.graph.datas[id].name
+            ),
+        }
+    }
+
+    /// Dispatch one base kernel into `out`. Every branch reproduces the
+    /// interpreter's arithmetic exactly (most delegate to the shared
+    /// `tensor::ops` `_into` kernels), which is what makes Exact-level
+    /// plans bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn run_step(
+        &self,
+        ws: &Workspace,
+        feeds: &[Option<&Tensor>],
+        op: &OpNode,
+        in_shapes: &[Vec<usize>],
+        out_shape: &[usize],
+        scratch: &mut Scratch,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let x = self.data_slice(ws, feeds, op.inputs[0])?;
+        let xs = &in_shapes[0];
+        match &op.kind {
+            OpKind::Conv2d { stride, pad, groups } => {
+                let w = self.param(op.inputs[1])?;
+                let b = match op.inputs.get(2) {
+                    Some(&bid) => Some(self.param(bid)?),
+                    None => None,
+                };
+                if xs[0] > 1 {
+                    // one GEMM per group over all images — bit-identical
+                    // MAC order, far better inner-loop amortization
+                    ops::conv2d_batched_into(
+                        x,
+                        xs,
+                        w,
+                        b,
+                        *stride,
+                        *pad,
+                        *groups,
+                        &mut scratch.cols,
+                        &mut scratch.yb,
+                        out,
+                    );
+                } else {
+                    ops::conv2d_into(x, xs, w, b, *stride, *pad, *groups, out);
+                }
+            }
+            OpKind::Gemm => {
+                let w = self.param(op.inputs[1])?;
+                let b = match op.inputs.get(2) {
+                    Some(&bid) => Some(self.param(bid)?),
+                    None => None,
+                };
+                let kin = *xs.last().unwrap();
+                // same kernel as the interpreter, with the per-call
+                // w.t2() replaced by the plan's precomputed transpose
+                ops::linear_into(x, kin, w, b, self.gemm_wt.get(&op.id), out);
+            }
+            OpKind::BatchNorm { eps } => ops::batchnorm_infer_into(
+                x,
+                xs,
+                self.param(op.inputs[1])?,
+                self.param(op.inputs[2])?,
+                self.param(op.inputs[3])?,
+                self.param(op.inputs[4])?,
+                *eps,
+                out,
+            ),
+            OpKind::LayerNorm { eps } => {
+                let d = *xs.last().unwrap();
+                ops::layernorm_eval_into(
+                    x,
+                    d,
+                    self.param(op.inputs[1])?,
+                    self.param(op.inputs[2])?,
+                    *eps,
+                    out,
+                );
+            }
+            OpKind::Relu | OpKind::Gelu | OpKind::Silu | OpKind::Sigmoid | OpKind::Tanh => {
+                out.copy_from_slice(x);
+                apply_act(act_of(&op.kind).expect("activation kind"), out);
+            }
+            OpKind::Add | OpKind::Mul => {
+                let b = self.data_slice(ws, feeds, op.inputs[1])?;
+                bcast_binary(
+                    x,
+                    xs,
+                    b,
+                    &in_shapes[1],
+                    out,
+                    matches!(op.kind, OpKind::Mul),
+                )?;
+            }
+            OpKind::MaxPool2d { k, stride, pad } => {
+                ops::maxpool2d_eval_into(x, xs, *k, *stride, *pad, out)
+            }
+            OpKind::AvgPool2d { k, stride, pad } => {
+                ops::avgpool2d_into(x, xs, *k, *stride, *pad, out)
+            }
+            OpKind::GlobalAvgPool => ops::global_avgpool_into(x, xs, out),
+            OpKind::Concat { axis } => {
+                let outer: usize = out_shape[..*axis].iter().product();
+                let inner: usize = out_shape[*axis + 1..].iter().product();
+                let mut w = 0usize;
+                for o in 0..outer {
+                    for (slot, s) in op.inputs.iter().zip(in_shapes) {
+                        let t = self.data_slice(ws, feeds, *slot)?;
+                        let d = s[*axis];
+                        let base = o * d * inner;
+                        out[w..w + d * inner].copy_from_slice(&t[base..base + d * inner]);
+                        w += d * inner;
+                    }
+                }
+            }
+            OpKind::Softmax => {
+                let d = *xs.last().unwrap();
+                ops::softmax_lastdim_into(x, d, out);
+            }
+            OpKind::MatMul => {
+                let b = self.data_slice(ws, feeds, op.inputs[1])?;
+                ops::batch_matmul_into(x, xs, b, &in_shapes[1], out);
+            }
+            OpKind::Transpose { perm } => ops::transpose_into(x, xs, perm, out),
+            OpKind::SplitHeads { heads } => {
+                // [N,T,D] reshaped to [N,T,h,D/h], then transposed —
+                // the reshape shares the row-major data.
+                let (n, t, d) = (xs[0], xs[1], xs[2]);
+                let rs = [n, t, *heads, d / *heads];
+                ops::transpose_into(x, &rs, &[0, 2, 1, 3], out);
+            }
+            OpKind::MergeHeads => {
+                // transpose [N,h,T,d] → [N,T,h,d]; reshape is free
+                ops::transpose_into(x, xs, &[0, 2, 1, 3], out);
+            }
+            OpKind::Scale { c } => {
+                for (o, &v) in out.iter_mut().zip(x) {
+                    *o = v * c;
+                }
+            }
+            OpKind::Embedding => {
+                let table = self.param(op.inputs[1])?;
+                ops::embedding_into(x, table, out);
+            }
+            OpKind::ReduceMean { axis } => {
+                let outer: usize = xs[..*axis].iter().product();
+                let d = xs[*axis];
+                let inner: usize = xs[*axis + 1..].iter().product();
+                let inv = 1.0 / d as f32;
+                out.iter_mut().for_each(|v| *v = 0.0);
+                for o in 0..outer {
+                    for k in 0..d {
+                        for i in 0..inner {
+                            out[o * inner + i] += x[(o * d + k) * inner + i] * inv;
+                        }
+                    }
+                }
+            }
+            OpKind::NchwToTokens => {
+                // [N,C,H,W] → transpose to [N,H,W,C]; reshape to
+                // [N,HW,C] is free
+                ops::transpose_into(x, xs, &[0, 2, 3, 1], out);
+            }
+            OpKind::Identity | OpKind::Flatten => {
+                unreachable!("reshape-only ops are aliased at compile time")
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Elementwise `a + b` / `a * b` with the interpreter's channel/row
+/// broadcast semantics — the value pairing matches
+/// `engine::broadcast_to` case-for-case, so results are bit-identical
+/// without materializing the broadcast.
+fn bcast_binary(
+    a: &[f32],
+    ashape: &[usize],
+    b: &[f32],
+    bshape: &[usize],
+    out: &mut [f32],
+    mul: bool,
+) -> anyhow::Result<()> {
+    let op = |x: f32, y: f32| if mul { x * y } else { x + y };
+    if ashape == bshape {
+        for (o, (&x, &y)) in out.iter_mut().zip(a.iter().zip(b)) {
+            *o = op(x, y);
+        }
+    } else if bshape.len() == 1 {
+        let c = b.len();
+        match ashape.len() {
+            2 | 3 => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = op(a[i], b[i % c]);
+                }
+            }
+            4 => {
+                let inner = ashape[2] * ashape[3];
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = op(a[i], b[(i / inner) % c]);
+                }
+            }
+            _ => anyhow::bail!("unsupported broadcast {bshape:?} -> {ashape:?}"),
+        }
+    } else if bshape.len() == 4 && bshape[2] == 1 && bshape[3] == 1 {
+        let inner = ashape[2] * ashape[3];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = op(a[i], b[i / inner]);
+        }
+    } else if bshape.len() == 2 && ashape.len() == 4 {
+        let inner = ashape[2] * ashape[3];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = op(a[i], b[i / inner]);
+        }
+    } else if bshape.len() == 3 && bshape[0] == 1 {
+        let block = b.len();
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = op(a[i], b[i % block]);
+        }
+    } else {
+        anyhow::bail!("unsupported broadcast {bshape:?} -> {ashape:?}");
+    }
+    Ok(())
+}
+
+/// Deterministic concurrent inference over one [`Plan`]: requests fan
+/// out across the `crate::util::par` pool, each executed in a pooled
+/// [`Workspace`]. Outputs are bit-identical at any `SPA_THREADS` width
+/// and independent of which worker served which request.
+pub struct Batcher<'p> {
+    plan: &'p Plan,
+    pool: Mutex<Vec<Workspace>>,
+}
+
+impl<'p> Batcher<'p> {
+    pub fn new(plan: &'p Plan) -> Batcher<'p> {
+        Batcher {
+            plan,
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Run one tensor per request through the plan (single-input
+    /// graphs), preserving request order in the results.
+    pub fn run_batch(&self, requests: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            self.plan.graph.inputs.len() == 1,
+            "Batcher requires a single-input graph"
+        );
+        let input = self.plan.graph.inputs[0];
+        let results: Vec<anyhow::Result<Tensor>> = par::par_map(requests, |x| {
+            let mut ws = {
+                let mut pool = self.pool.lock().unwrap();
+                pool.pop()
+            }
+            .unwrap_or_else(|| self.plan.workspace());
+            let r = self.plan.run(&mut ws, &[(input, x)]);
+            self.pool.lock().unwrap().push(ws);
+            r
+        });
+        results.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, Mode};
+    use crate::util::Rng;
+    use crate::zoo::{self, ImageCfg, TextCfg};
+
+    fn cfg() -> ImageCfg {
+        ImageCfg {
+            hw: 8,
+            ..Default::default()
+        }
+    }
+
+    fn assert_bits_eq(a: &Tensor, b: &Tensor) {
+        assert_eq!(a.shape, b.shape);
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "bit mismatch at {i}: {x} vs {y}");
+        }
+    }
+
+    fn rand_input(g: &Graph, batch: usize, rng: &mut Rng) -> Tensor {
+        let mut shape = g.data(g.inputs[0]).shape.clone();
+        shape[0] = batch;
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0))
+    }
+
+    #[test]
+    fn exact_plan_bit_identical_on_resnet18() {
+        let g = zoo::resnet18(cfg(), 3);
+        let mut rng = Rng::new(1);
+        let x = rand_input(&g, 4, &mut rng);
+        let want = engine::forward(&g, &[(g.inputs[0], x.clone())], Mode::Eval)
+            .unwrap()
+            .logits(&g)
+            .clone();
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        assert!(plan.report().fused_ops > 0, "resnet must fuse BN/ReLU");
+        let mut ws = plan.workspace();
+        let got = plan.run(&mut ws, &[(g.inputs[0], &x)]).unwrap();
+        assert_bits_eq(&got, &want);
+        // a second run through the same workspace reuses buffers and
+        // must reproduce the result
+        let again = plan.run(&mut ws, &[(g.inputs[0], &x)]).unwrap();
+        assert_bits_eq(&again, &want);
+    }
+
+    #[test]
+    fn exact_plan_bit_identical_on_transformers() {
+        let tcfg = TextCfg::default();
+        let g = zoo::distilbert(tcfg, 5);
+        let mut rng = Rng::new(2);
+        let ids = Tensor::new(
+            vec![2, tcfg.seq],
+            (0..2 * tcfg.seq)
+                .map(|_| rng.below(tcfg.vocab) as f32)
+                .collect(),
+        );
+        let want = engine::predict(&g, ids.clone()).unwrap();
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let got = plan.predict(&ids).unwrap();
+        assert_bits_eq(&got, &want);
+        // ViT covers NchwToTokens / concat-free attention over images
+        let v = zoo::vit(cfg(), 6);
+        let xv = rand_input(&v, 2, &mut rng);
+        let want_v = engine::predict(&v, xv.clone()).unwrap();
+        let got_v = Plan::compile(&v, PlanOpts::default())
+            .unwrap()
+            .predict(&xv)
+            .unwrap();
+        assert_bits_eq(&got_v, &want_v);
+    }
+
+    #[test]
+    fn arena_is_smaller_than_interpreter_intermediates() {
+        for name in ["resnet18", "vgg16", "mobilenetv2", "densenet"] {
+            let g = zoo::by_name(name, cfg(), 2).unwrap();
+            let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+            let r = plan.report();
+            assert!(
+                r.peak_arena_bytes < r.interp_intermediate_bytes,
+                "{name}: arena {} !< interp {}",
+                r.peak_arena_bytes,
+                r.interp_intermediate_bytes
+            );
+            assert!(r.arena_slots < r.steps, "{name}: no slot reuse");
+        }
+    }
+
+    #[test]
+    fn plan_runs_at_other_batch_sizes() {
+        let g = zoo::resnet18(cfg(), 4);
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let mut ws = plan.workspace();
+        let mut rng = Rng::new(3);
+        for batch in [1usize, 3, 9] {
+            let x = rand_input(&g, batch, &mut rng);
+            let want = engine::predict(&g, x.clone()).unwrap();
+            let got = plan.run(&mut ws, &[(g.inputs[0], &x)]).unwrap();
+            assert_bits_eq(&got, &want);
+        }
+    }
+
+    #[test]
+    fn retained_values_match_interpreter_activations() {
+        let g = zoo::resnet18(cfg(), 7);
+        // retain the inputs of every conv/gemm — the OBSPA hook
+        let retain: Vec<DataId> = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Conv2d { .. } | OpKind::Gemm))
+            .map(|o| o.inputs[0])
+            .collect();
+        let plan = Plan::compile(
+            &g,
+            PlanOpts {
+                retain: retain.clone(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(4);
+        let x = rand_input(&g, 2, &mut rng);
+        let fwd = engine::forward(&g, &[(g.inputs[0], x.clone())], Mode::Eval).unwrap();
+        let mut ws = plan.workspace();
+        plan.run(&mut ws, &[(g.inputs[0], &x)]).unwrap();
+        for &id in &retain {
+            let got = plan.value(&ws, id).unwrap();
+            assert_bits_eq(&got, fwd.value(id));
+        }
+    }
+
+    #[test]
+    fn retained_alias_of_input_is_readable() {
+        // mlp is input → Flatten → Gemm: OBSPA retains the Flatten
+        // output, which aliases the graph input under a new shape
+        let g = zoo::mlp(cfg(), &[16], 3);
+        let retain: Vec<DataId> = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Gemm))
+            .map(|o| o.inputs[0])
+            .collect();
+        let plan = Plan::compile(
+            &g,
+            PlanOpts {
+                retain: retain.clone(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(12);
+        let x = rand_input(&g, 2, &mut rng);
+        let fwd = engine::forward(&g, &[(g.inputs[0], x.clone())], Mode::Eval).unwrap();
+        let mut ws = plan.workspace();
+        plan.run(&mut ws, &[(g.inputs[0], &x)]).unwrap();
+        for &id in &retain {
+            let got = plan.value(&ws, id).unwrap();
+            assert_bits_eq(&got, fwd.value(id));
+        }
+    }
+
+    #[test]
+    fn unretained_intermediates_are_rejected() {
+        let g = zoo::resnet18(cfg(), 8);
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let mut rng = Rng::new(5);
+        let x = rand_input(&g, 2, &mut rng);
+        let mut ws = plan.workspace();
+        plan.run(&mut ws, &[(g.inputs[0], &x)]).unwrap();
+        // some activation that is neither input, output, nor retained
+        let mid = g
+            .datas
+            .iter()
+            .find(|d| {
+                matches!(d.kind, DataKind::Activation) && !g.outputs.contains(&d.id)
+            })
+            .unwrap()
+            .id;
+        assert!(plan.value(&ws, mid).is_err());
+    }
+
+    #[test]
+    fn fast_plan_matches_interpreter_closely() {
+        use crate::tensor::assert_allclose;
+        let mut g = zoo::vgg16(cfg(), 9);
+        // non-trivial BN stats so folding changes the arithmetic path
+        let mut rng = Rng::new(6);
+        for d in &mut g.datas {
+            let name = d.name.clone();
+            if let Some(t) = d.param_mut() {
+                if name.ends_with(".mean") {
+                    t.data = rng.uniform_vec(t.numel(), -0.5, 0.5);
+                } else if name.ends_with(".var") {
+                    t.data = rng.uniform_vec(t.numel(), 0.5, 2.0);
+                }
+            }
+        }
+        let x = rand_input(&g, 2, &mut rng);
+        let want = engine::predict(&g, x.clone()).unwrap();
+        let plan = Plan::compile(
+            &g,
+            PlanOpts {
+                level: OptLevel::Fast,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r = plan.report();
+        assert!(r.opt.is_some_and(|o| o.bn_folded > 0));
+        let got = plan
+            .run(&mut plan.workspace(), &[(plan.inputs()[0], &x)])
+            .unwrap();
+        assert_allclose(&got, &want, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn fast_plus_retain_is_a_compile_error() {
+        let g = zoo::resnet18(cfg(), 1);
+        let err = Plan::compile(
+            &g,
+            PlanOpts {
+                level: OptLevel::Fast,
+                retain: vec![0],
+            },
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn batcher_is_deterministic_across_widths() {
+        let _serial = par::test_lock();
+        let g = zoo::resnet18(cfg(), 11);
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let mut rng = Rng::new(7);
+        let requests: Vec<Tensor> = (0..6).map(|_| rand_input(&g, 1, &mut rng)).collect();
+        let serial = par::with_threads(1, || {
+            Batcher::new(&plan).run_batch(&requests).unwrap()
+        });
+        for width in [2usize, 4, 8] {
+            let outs = par::with_threads(width, || {
+                Batcher::new(&plan).run_batch(&requests).unwrap()
+            });
+            assert_eq!(outs.len(), requests.len());
+            for (a, b) in outs.iter().zip(&serial) {
+                assert_bits_eq(a, b);
+            }
+        }
+        // and each matches the interpreter
+        for (req, out) in requests.iter().zip(&serial) {
+            let want = engine::predict(&g, req.clone()).unwrap();
+            assert_bits_eq(out, &want);
+        }
+    }
+
+    #[test]
+    fn every_zoo_model_compiles_and_matches() {
+        let mut rng = Rng::new(8);
+        for name in zoo::IMAGE_MODELS {
+            let g = zoo::by_name(name, cfg(), 2).unwrap();
+            let x = rand_input(&g, 2, &mut rng);
+            let want = engine::predict(&g, x.clone()).unwrap();
+            let plan = Plan::compile(&g, PlanOpts::default())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            let got = plan.predict(&x).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_bits_eq(&got, &want);
+        }
+    }
+}

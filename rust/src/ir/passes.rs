@@ -9,7 +9,12 @@
 //!   the preceding conv/gemm weights (exact at inference);
 //! * [`eliminate_identity`] — drop Identity ops;
 //! * [`prune_dead_nodes`] — drop data nodes (incl. orphaned params) that
-//!   no longer feed the outputs.
+//!   no longer feed the outputs;
+//! * [`fold_constants`] — evaluate operators fed only by parameters and
+//!   materialize their outputs as parameters;
+//! * [`optimize`] — the one-call pipeline over all of the above, used by
+//!   the compiled-plan executor (`crate::exec`, `OptLevel::Fast`) and the
+//!   `spa optimize` CLI command.
 //!
 //! Passes preserve numerics exactly (see tests) and re-validate.
 
@@ -243,6 +248,92 @@ pub fn fold_batchnorm(g: &mut Graph) -> anyhow::Result<usize> {
     Ok(folded)
 }
 
+/// Constant folding: evaluate (in eval-mode semantics) every operator
+/// whose inputs are all parameters, and turn its output into a
+/// materialized `Param` node. Chains fold transitively in one call —
+/// each folded output is itself a parameter for downstream candidates.
+/// Returns the number of operators folded.
+pub fn fold_constants(g: &mut Graph) -> anyhow::Result<usize> {
+    let mut folded = 0usize;
+    for op_id in g.topo_order()? {
+        let foldable = {
+            let op = &g.ops[op_id];
+            !op.inputs.is_empty()
+                && op.outputs.len() == 1
+                && !g.outputs.contains(&op.outputs[0])
+                && op.inputs.iter().all(|&i| g.datas[i].is_param())
+        };
+        if !foldable {
+            continue;
+        }
+        let (kind, inputs, out_id) = {
+            let op = &g.ops[op_id];
+            (op.kind.clone(), op.inputs.clone(), op.outputs[0])
+        };
+        let out = {
+            let ins: Vec<&crate::tensor::Tensor> = inputs
+                .iter()
+                .map(|&i| g.datas[i].param().unwrap())
+                .collect();
+            crate::engine::eval_op_value(&kind, &ins, crate::engine::Mode::Eval)?
+        };
+        g.datas[out_id].shape = out.shape.clone();
+        g.datas[out_id].kind = DataKind::Param(out);
+        g.datas[out_id].producer = None;
+        for &i in &inputs {
+            g.datas[i].consumers.retain(|&c| c != op_id);
+        }
+        g.ops[op_id].inputs.clear();
+        g.ops[op_id].outputs.clear();
+        folded += 1;
+    }
+    if folded > 0 {
+        prune_dead_nodes(g)?;
+    }
+    Ok(folded)
+}
+
+/// What [`optimize`] did, pass by pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptReport {
+    /// Operators removed by the initial dead-node sweep.
+    pub dead_ops: usize,
+    /// Data nodes removed by the initial dead-node sweep.
+    pub dead_datas: usize,
+    /// Identity operators spliced out.
+    pub identities_removed: usize,
+    /// BatchNorms folded into the preceding conv/gemm.
+    pub bn_folded: usize,
+    /// Operators constant-folded into parameters.
+    pub constants_folded: usize,
+}
+
+impl OptReport {
+    /// Total graph rewrites applied.
+    pub fn total(&self) -> usize {
+        self.dead_ops + self.identities_removed + self.bn_folded + self.constants_folded
+    }
+}
+
+/// The standard inference-time simplification pipeline, in fixed order:
+/// dead-node sweep → identity elimination → BatchNorm folding → constant
+/// folding. Numerics are preserved up to the float reassociation of
+/// [`fold_batchnorm`] (the other passes are exact); the graph re-validates
+/// after every pass.
+pub fn optimize(g: &mut Graph) -> anyhow::Result<OptReport> {
+    let (dead_ops, dead_datas) = prune_dead_nodes(g)?;
+    let identities_removed = eliminate_identity(g)?;
+    let bn_folded = fold_batchnorm(g)?;
+    let constants_folded = fold_constants(g)?;
+    Ok(OptReport {
+        dead_ops,
+        dead_datas,
+        identities_removed,
+        bn_folded,
+        constants_folded,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +425,145 @@ mod tests {
         assert!(datas >= 2);
         assert!(g.num_params() < before);
         g.validate().unwrap();
+    }
+
+    /// x[2,4] → Gemm(w[3,4], bias = Add(b1[3], b2[3])) → out[2,3]: the
+    /// Add is fed only by params and must constant-fold away.
+    fn graph_with_const_subexpr() -> Graph {
+        use crate::ir::{DataNode, OpNode};
+        let mut rng = Rng::new(31);
+        let p = |id: usize, name: &str, shape: Vec<usize>, consumers: Vec<OpId>, rng: &mut Rng| {
+            let n: usize = shape.iter().product();
+            DataNode {
+                id,
+                name: name.to_string(),
+                shape: shape.clone(),
+                kind: DataKind::Param(Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0))),
+                producer: None,
+                consumers,
+            }
+        };
+        let datas = vec![
+            DataNode {
+                id: 0,
+                name: "x".into(),
+                shape: vec![2, 4],
+                kind: DataKind::Input,
+                producer: None,
+                consumers: vec![1],
+            },
+            p(1, "b1", vec![3], vec![0], &mut rng),
+            p(2, "b2", vec![3], vec![0], &mut rng),
+            DataNode {
+                id: 3,
+                name: "bsum".into(),
+                shape: vec![3],
+                kind: DataKind::Activation,
+                producer: Some(0),
+                consumers: vec![1],
+            },
+            p(4, "w", vec![3, 4], vec![1], &mut rng),
+            DataNode {
+                id: 5,
+                name: "out".into(),
+                shape: vec![2, 3],
+                kind: DataKind::Activation,
+                producer: Some(1),
+                consumers: vec![],
+            },
+        ];
+        let ops = vec![
+            OpNode {
+                id: 0,
+                name: "bias_add".into(),
+                kind: OpKind::Add,
+                inputs: vec![1, 2],
+                outputs: vec![3],
+            },
+            OpNode {
+                id: 1,
+                name: "fc".into(),
+                kind: OpKind::Gemm,
+                inputs: vec![0, 4, 3],
+                outputs: vec![5],
+            },
+        ];
+        let g = Graph {
+            name: "constfold".into(),
+            ops,
+            datas,
+            inputs: vec![0],
+            outputs: vec![5],
+        };
+        g.validate().unwrap();
+        g
+    }
+
+    #[test]
+    fn constant_folding_materializes_param_subexprs() {
+        let mut g = graph_with_const_subexpr();
+        let mut rng = Rng::new(32);
+        let x = Tensor::new(vec![2, 4], rng.uniform_vec(8, -1.0, 1.0));
+        let before = engine::predict(&g, x.clone()).unwrap();
+        let params_before = g.num_params();
+        let folded = fold_constants(&mut g).unwrap();
+        assert_eq!(folded, 1);
+        assert_eq!(g.ops.len(), 1, "only the Gemm survives");
+        assert!(
+            g.num_params() < params_before,
+            "b1+b2 collapse into one bsum param"
+        );
+        g.validate().unwrap();
+        // folding an Add of params is exact: bit-identical logits
+        let after = engine::predict(&g, x).unwrap();
+        assert_eq!(before.shape, after.shape);
+        for (a, b) in before.data.iter().zip(&after.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fold_constants_skips_data_dependent_ops() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::resnet18(cfg, 5);
+        let ops_before = g.ops.len();
+        let folded = fold_constants(&mut g).unwrap();
+        assert_eq!(folded, 0, "every resnet op depends on the input");
+        assert_eq!(g.ops.len(), ops_before);
+    }
+
+    #[test]
+    fn optimize_pipeline_runs_all_passes() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::vgg16(cfg, 6);
+        let mut rng = Rng::new(7);
+        // randomize BN stats so folding actually changes weights
+        for d in &mut g.datas {
+            let name = d.name.clone();
+            if let Some(t) = d.param_mut() {
+                if name.ends_with(".mean") {
+                    t.data = rng.uniform_vec(t.numel(), -0.5, 0.5);
+                } else if name.ends_with(".var") {
+                    t.data = rng.uniform_vec(t.numel(), 0.5, 2.0);
+                }
+            }
+        }
+        let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 192, -1.0, 1.0));
+        let before = engine::predict(&g, x.clone()).unwrap();
+        let ops_before = g.ops.len();
+        let rep = optimize(&mut g).unwrap();
+        assert!(rep.bn_folded >= 10, "report {rep:?}");
+        assert!(rep.total() >= rep.bn_folded);
+        assert!(g.ops.len() < ops_before);
+        g.validate().unwrap();
+        let after = engine::predict(&g, x).unwrap();
+        assert_allclose(&after, &before, 1e-3, 1e-3);
     }
 
     #[test]

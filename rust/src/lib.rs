@@ -11,6 +11,11 @@
 //! * **Any framework** — [`frontends`] normalizes heterogeneous framework
 //!   dialect exports (torch-like NCHW, tf-like NHWC-fused, jax-like,
 //!   mxnet-like) into SPA-IR, mirroring the paper's ONNX funnel.
+//! * **Any speed** — [`exec`] compiles a (pruned) graph once into a
+//!   reusable execution plan: topologically scheduled kernels over a
+//!   liveness-managed buffer arena, fused Conv→BN→Act chains, and
+//!   deterministic batched inference — bit-identical to the [`engine`]
+//!   interpreter, which remains the autodiff/training substrate.
 //! * **Any time** — [`session`] is the single user-facing entry point:
 //!   a staged builder over the four-step algorithm, with pluggable
 //!   [`criteria::Saliency`] scores; [`coordinator`] drives prune-train,
@@ -26,6 +31,7 @@ pub mod coordinator;
 pub mod criteria;
 pub mod data;
 pub mod engine;
+pub mod exec;
 pub mod frontends;
 pub mod ir;
 pub mod obspa;

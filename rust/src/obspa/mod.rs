@@ -14,6 +14,7 @@
 
 use crate::criteria;
 use crate::engine::{self, Mode};
+use crate::exec;
 use crate::ir::{DataId, Graph, OpId, OpKind};
 use crate::prune::{self, Agg, Groups, Norm};
 use crate::runtime::kernels as rk;
@@ -110,20 +111,37 @@ fn is_obs_layer(kind: &OpKind) -> bool {
 }
 
 /// Capture per-layer input matrices (GEMM view) from calibration data and
-/// accumulate Hessians through the runtime kernel.
+/// accumulate Hessians through the runtime kernel. The calibration
+/// forward runs on a compiled [`crate::exec::Plan`] with every OBS
+/// layer's input retained — bit-identical activations to the
+/// interpreter, without materializing the whole forward.
 fn capture_hessians(
     g: &Graph,
     calib: &Tensor,
     damp: f32,
 ) -> anyhow::Result<(HashMap<OpId, LayerState>, rk::Backend)> {
-    let fwd = engine::forward(g, &[(g.inputs[0], calib.clone())], Mode::Eval)?;
+    let retain: Vec<DataId> = g
+        .ops
+        .iter()
+        .filter(|op| is_obs_layer(&op.kind))
+        .map(|op| op.inputs[0])
+        .collect();
+    let plan = exec::Plan::compile(
+        g,
+        exec::PlanOpts {
+            retain,
+            ..Default::default()
+        },
+    )?;
+    let mut ws = plan.workspace();
+    plan.execute(&mut ws, &[(g.inputs[0], calib)])?;
     let mut states = HashMap::new();
     let mut backend = rk::Backend::Native;
     for op in &g.ops {
         if !is_obs_layer(&op.kind) {
             continue;
         }
-        let x = fwd.value(op.inputs[0]);
+        let x = &plan.value(&ws, op.inputs[0])?;
         let w_shape = &g.data(op.inputs[1]).shape;
         let (xs, kblock): (Vec<Tensor>, usize) = match &op.kind {
             OpKind::Conv2d { stride, pad, groups } => (
@@ -410,6 +428,32 @@ mod tests {
             &ObspaCfg {
                 target_rf: 1.3,
                 bn_recalibrate: false, // paper: never recalibrate on noise
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(rep.ccs_removed > 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn obspa_handles_flattened_input_models() {
+        // mlp's first Gemm reads a Flatten of the graph input — the
+        // calibration capture must read that aliased activation back
+        // from the compiled plan
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut g = zoo::mlp(cfg, &[32, 16], 2);
+        let mut rng = Rng::new(8);
+        let calib = datafree_calib(&g, 32, &mut rng);
+        let rep = obspa_prune(
+            &mut g,
+            &calib,
+            &ObspaCfg {
+                target_rf: 1.2,
+                bn_recalibrate: false,
                 ..Default::default()
             },
         )

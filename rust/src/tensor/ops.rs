@@ -83,26 +83,44 @@ fn gemm_band(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize
 /// Batched matmul on the last two dims: a[..., M, K] · b[..., K, N].
 /// Leading dims must match exactly.
 pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    assert!(a.rank() >= 2 && b.rank() >= 2);
-    assert_eq!(a.rank(), b.rank(), "batch_matmul rank mismatch");
-    assert_eq!(
-        a.shape[..a.rank() - 2],
-        b.shape[..b.rank() - 2],
-        "batch dims mismatch"
-    );
-    let (m, k) = (a.dim(-2), a.dim(-1));
-    let (k2, n) = (b.dim(-2), b.dim(-1));
-    assert_eq!(k, k2, "batch_matmul inner dim mismatch");
+    assert!(a.rank() >= 2 && b.rank() >= 2, "batch_matmul ranks");
+    let (m, n) = (a.dim(-2), b.dim(-1));
     let batch: usize = a.shape[..a.rank() - 2].iter().product();
     let mut shape = a.shape[..a.rank() - 2].to_vec();
     shape.push(m);
     shape.push(n);
     let mut out = vec![0.0f32; batch * m * n];
+    batch_matmul_into(&a.data, &a.shape, &b.data, &b.shape, &mut out);
+    Tensor::new(shape, out)
+}
+
+/// [`batch_matmul`] into a caller-provided buffer (overwritten);
+/// bit-identical to [`batch_matmul`] at any `SPA_THREADS`.
+pub fn batch_matmul_into(
+    a: &[f32],
+    ashape: &[usize],
+    b: &[f32],
+    bshape: &[usize],
+    out: &mut [f32],
+) {
+    assert!(ashape.len() >= 2 && bshape.len() >= 2);
+    assert_eq!(ashape.len(), bshape.len(), "batch_matmul rank mismatch");
+    assert_eq!(
+        ashape[..ashape.len() - 2],
+        bshape[..bshape.len() - 2],
+        "batch dims mismatch"
+    );
+    let (m, k) = (ashape[ashape.len() - 2], ashape[ashape.len() - 1]);
+    let (k2, n) = (bshape[bshape.len() - 2], bshape[bshape.len() - 1]);
+    assert_eq!(k, k2, "batch_matmul inner dim mismatch");
+    let batch: usize = ashape[..ashape.len() - 2].iter().product();
+    assert_eq!(out.len(), batch * m * n, "batch_matmul_into output size");
+    out.iter_mut().for_each(|v| *v = 0.0);
     if m * n > 0 && batch * m * k * n >= PAR_GEMM_MIN_MACS && par::workers_for(batch) > 1 {
-        par::par_chunks_mut(&mut out, m * n, |bi, obatch| {
+        par::par_chunks_mut(out, m * n, |bi, obatch| {
             gemm_band(
-                &a.data[bi * m * k..(bi + 1) * m * k],
-                &b.data[bi * k * n..(bi + 1) * k * n],
+                &a[bi * m * k..(bi + 1) * m * k],
+                &b[bi * k * n..(bi + 1) * k * n],
                 obatch,
                 m,
                 k,
@@ -112,8 +130,8 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
     } else {
         for bi in 0..batch {
             gemm_into(
-                &a.data[bi * m * k..(bi + 1) * m * k],
-                &b.data[bi * k * n..(bi + 1) * k * n],
+                &a[bi * m * k..(bi + 1) * m * k],
+                &b[bi * k * n..(bi + 1) * k * n],
                 &mut out[bi * m * n..(bi + 1) * m * n],
                 m,
                 k,
@@ -121,7 +139,6 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
             );
         }
     }
-    Tensor::new(shape, out)
 }
 
 /// Linear layer: x[..., K] · wᵀ where w is [N, K]; bias optional [N].
@@ -134,22 +151,55 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
 pub fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
     assert_eq!(w.rank(), 2, "linear weight must be [out, in]");
     let kin = x.dim(-1);
-    assert_eq!(kin, w.shape[1], "linear in-dim mismatch");
     let rows: usize = x.numel() / kin;
     let n = w.shape[0];
     let mut out = vec![0.0f32; rows * n];
+    linear_into(&x.data, kin, w, b, None, &mut out);
+    let mut shape = x.shape[..x.rank() - 1].to_vec();
+    shape.push(n);
+    Tensor::new(shape, out)
+}
+
+/// [`linear`] into a caller-provided buffer (overwritten); `kin` is the
+/// input feature dim (`x.len()` must be a multiple). Bit-identical to
+/// [`linear`], including its `rows == 1` dot-product special case. `wt`
+/// may supply a precomputed `[K, N]` transpose of `w` (the compiled-plan
+/// executor caches one per Gemm) — values must equal `w.t2()`, which
+/// keeps the arithmetic identical while skipping the per-call transpose.
+pub fn linear_into(
+    x: &[f32],
+    kin: usize,
+    w: &Tensor,
+    b: Option<&Tensor>,
+    wt: Option<&Tensor>,
+    out: &mut [f32],
+) {
+    assert_eq!(w.rank(), 2, "linear weight must be [out, in]");
+    assert_eq!(kin, w.shape[1], "linear in-dim mismatch");
+    let rows: usize = x.len() / kin;
+    let n = w.shape[0];
+    assert_eq!(out.len(), rows * n, "linear_into output size");
     if rows == 1 {
         for j in 0..n {
             let wr = &w.data[j * kin..(j + 1) * kin];
             let mut acc = 0.0f32;
             for p in 0..kin {
-                acc += x.data[p] * wr[p];
+                acc += x[p] * wr[p];
             }
             out[j] = acc;
         }
     } else {
-        let wt = w.t2(); // [kin, n]
-        gemm_into(&x.data, &wt.data, &mut out, rows, kin, n);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        match wt {
+            Some(wt) => {
+                assert_eq!(wt.shape, [kin, n], "wt must be the [K, N] transpose of w");
+                gemm_into(x, &wt.data, out, rows, kin, n);
+            }
+            None => {
+                let wt = w.t2(); // [kin, n]
+                gemm_into(x, &wt.data, out, rows, kin, n);
+            }
+        }
     }
     if let Some(b) = b {
         assert_eq!(b.numel(), n, "bias dim mismatch");
@@ -159,9 +209,6 @@ pub fn linear(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
             }
         }
     }
-    let mut shape = x.shape[..x.rank() - 1].to_vec();
-    shape.push(n);
-    Tensor::new(shape, out)
 }
 
 /// Spatial conv output size for one dimension.
@@ -262,7 +309,32 @@ pub fn conv2d(
 ) -> Tensor {
     assert_eq!(x.rank(), 4, "conv2d input must be NCHW");
     assert_eq!(w.rank(), 4, "conv2d weight must be [Co,Ci/g,kh,kw]");
-    let (n, ci, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (n, co) = (x.shape[0], w.shape[0]);
+    let ho = conv_out_dim(x.shape[2], w.shape[2], stride, pad);
+    let wo = conv_out_dim(x.shape[3], w.shape[3], stride, pad);
+    let mut out = vec![0.0f32; n * co * ho * wo];
+    conv2d_into(&x.data, &x.shape, w, b, stride, pad, groups, &mut out);
+    Tensor::new(vec![n, co, ho, wo], out)
+}
+
+/// [`conv2d`] into a caller-provided buffer of exactly the output numel
+/// (overwritten) — the allocation-free form the compiled-plan executor
+/// (`crate::exec`) runs on. Same arithmetic as [`conv2d`], so results are
+/// bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into(
+    x: &[f32],
+    xshape: &[usize],
+    w: &Tensor,
+    b: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(xshape.len(), 4, "conv2d input must be NCHW");
+    assert_eq!(w.rank(), 4, "conv2d weight must be [Co,Ci/g,kh,kw]");
+    let (n, ci, h, wd) = (xshape[0], xshape[1], xshape[2], xshape[3]);
     let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
     assert_eq!(ci % groups, 0, "Ci {ci} not divisible by groups {groups}");
     assert_eq!(co % groups, 0, "Co {co} not divisible by groups {groups}");
@@ -272,17 +344,17 @@ pub fn conv2d(
     let cog = co / groups;
     let kdim = cig * kh * kw;
     let owh = ho * wo;
-    let mut out = vec![0.0f32; n * co * owh];
+    assert_eq!(out.len(), n * co * owh, "conv2d_into output size");
+    out.iter_mut().for_each(|v| *v = 0.0);
     let macs = n * co * owh * kdim;
     if co * owh > 0 && macs >= PAR_GEMM_MIN_MACS && par::workers_for(n) > 1 {
         // One image per chunk: im2col + GEMM are fully image-local, so
         // images fan out across the pool with bit-identical per-image
         // arithmetic (each worker runs the same serial kernel).
-        par::par_chunks_mut(&mut out, co * owh, |img, oimg| {
+        par::par_chunks_mut(out, co * owh, |img, oimg| {
             let mut cols = vec![0.0f32; kdim * owh];
             for g in 0..groups {
-                let xs =
-                    &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+                let xs = &x[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
                 im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
                 let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
                 let ys = &mut oimg[g * cog * owh..(g + 1) * cog * owh];
@@ -293,8 +365,7 @@ pub fn conv2d(
         let mut cols = vec![0.0f32; kdim * owh];
         for img in 0..n {
             for g in 0..groups {
-                let xs =
-                    &x.data[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
+                let xs = &x[(img * ci + g * cig) * h * wd..(img * ci + (g + 1) * cig) * h * wd];
                 im2col_single(xs, cig, h, wd, kh, kw, stride, pad, &mut cols);
                 // w_g [cog, kdim] · cols [kdim, owh] → y_g [cog, owh]
                 let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
@@ -315,7 +386,6 @@ pub fn conv2d(
             }
         }
     }
-    Tensor::new(vec![n, co, ho, wo], out)
 }
 
 /// Images per partial-gradient block in [`conv2d_backward`]. Fixed (not
@@ -323,6 +393,99 @@ pub fn conv2d(
 /// is identical at any `SPA_THREADS`; 4 gives 8-way parallelism at the
 /// typical batch 32 while capping partial-buffer memory at n/4 weights.
 const BWD_IMG_BLOCK: usize = 4;
+
+/// Batched-image convolution for the compiled-plan executor
+/// (`crate::exec`): one im2col matrix `[kdim, N·Ho·Wo]` per group and a
+/// single GEMM per group, instead of N small per-image GEMMs. Per output
+/// element the multiply-accumulate order is unchanged (ascending kdim),
+/// so results are **bit-identical** to [`conv2d`]; wall-clock improves
+/// because the microkernel's inner loops amortize over `N·Ho·Wo`-wide
+/// rows instead of `Ho·Wo`. `cols`/`yb` are caller-owned scratch buffers
+/// (resized as needed) so steady-state runs allocate nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_batched_into(
+    x: &[f32],
+    xshape: &[usize],
+    w: &Tensor,
+    b: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    cols: &mut Vec<f32>,
+    yb: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(xshape.len(), 4, "conv2d input must be NCHW");
+    assert_eq!(w.rank(), 4, "conv2d weight must be [Co,Ci/g,kh,kw]");
+    let (n, ci, h, wd) = (xshape[0], xshape[1], xshape[2], xshape[3]);
+    let (co, cig, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(ci % groups, 0, "Ci {ci} not divisible by groups {groups}");
+    assert_eq!(co % groups, 0, "Co {co} not divisible by groups {groups}");
+    assert_eq!(cig, ci / groups, "weight in-channels mismatch");
+    let ho = conv_out_dim(h, kh, stride, pad);
+    let wo = conv_out_dim(wd, kw, stride, pad);
+    let cog = co / groups;
+    let kdim = cig * kh * kw;
+    let owh = ho * wo;
+    let ncol = n * owh;
+    assert_eq!(out.len(), n * co * owh, "conv2d_batched_into output size");
+    cols.resize(kdim * ncol, 0.0);
+    yb.resize(cog * ncol, 0.0);
+    for g in 0..groups {
+        // batched im2col: image `img` occupies columns [img·owh, (img+1)·owh)
+        for c in 0..cig {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let row = (c * kh + ky) * kw + kx;
+                    for img in 0..n {
+                        let xi = &x[(img * ci + g * cig + c) * h * wd..][..h * wd];
+                        let dst = &mut cols[row * ncol + img * owh..][..owh];
+                        for oy in 0..ho {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                for v in &mut dst[oy * wo..(oy + 1) * wo] {
+                                    *v = 0.0;
+                                }
+                                continue;
+                            }
+                            let src = &xi[iy as usize * wd..][..wd];
+                            for ox in 0..wo {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                dst[oy * wo + ox] = if ix < 0 || ix >= wd as isize {
+                                    0.0
+                                } else {
+                                    src[ix as usize]
+                                };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        yb.iter_mut().for_each(|v| *v = 0.0);
+        let wg = &w.data[g * cog * kdim..(g + 1) * cog * kdim];
+        gemm_into(wg, cols, yb, cog, kdim, ncol);
+        // scatter [cog, N·owh] back to NCHW
+        for img in 0..n {
+            for c in 0..cog {
+                let src = &yb[c * ncol + img * owh..][..owh];
+                out[(img * co + g * cog + c) * owh..][..owh].copy_from_slice(src);
+            }
+        }
+    }
+    if let Some(b) = b {
+        assert_eq!(b.numel(), co);
+        for img in 0..n {
+            for c in 0..co {
+                let base = (img * co + c) * owh;
+                let bv = b.data[c];
+                for v in &mut out[base..base + owh] {
+                    *v += bv;
+                }
+            }
+        }
+    }
+}
 
 /// Gradients of conv2d: returns (dx, dw, db).
 ///
@@ -533,6 +696,50 @@ pub fn maxpool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, Ve
     (Tensor::new(vec![n, c, ho, wo], out), arg)
 }
 
+/// Eval-only [`maxpool2d`] into a caller-provided buffer: same window
+/// iteration and comparisons, no argmax bookkeeping — bit-identical
+/// pooled values.
+pub fn maxpool2d_eval_into(
+    x: &[f32],
+    xshape: &[usize],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [f32],
+) {
+    let (n, c, h, w) = (xshape[0], xshape[1], xshape[2], xshape[3]);
+    let ho = conv_out_dim(h, k, stride, pad);
+    let wo = conv_out_dim(w, k, stride, pad);
+    assert_eq!(out.len(), n * c * ho * wo, "maxpool2d_eval_into output size");
+    out.iter_mut().for_each(|v| *v = f32::NEG_INFINITY);
+    for img in 0..n {
+        for ch in 0..c {
+            let xbase = (img * c + ch) * h * w;
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let oidx = ((img * c + ch) * ho + oy) * wo + ox;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xi = xbase + iy as usize * w + ix as usize;
+                            if x[xi] > out[oidx] {
+                                out[oidx] = x[xi];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Scatter pooled gradients back to the argmax positions; returns a flat
 /// tensor the caller reshapes to the input shape.
 pub fn maxpool2d_backward(dy: &Tensor, argmax: &[usize], x_numel: usize) -> Tensor {
@@ -545,11 +752,28 @@ pub fn maxpool2d_backward(dy: &Tensor, argmax: &[usize], x_numel: usize) -> Tens
 
 /// Average pooling.
 pub fn avgpool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
-    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (n, c) = (x.shape[0], x.shape[1]);
+    let ho = conv_out_dim(x.shape[2], k, stride, pad);
+    let wo = conv_out_dim(x.shape[3], k, stride, pad);
+    let mut out = vec![0.0f32; n * c * ho * wo];
+    avgpool2d_into(&x.data, &x.shape, k, stride, pad, &mut out);
+    Tensor::new(vec![n, c, ho, wo], out)
+}
+
+/// [`avgpool2d`] into a caller-provided buffer (overwritten).
+pub fn avgpool2d_into(
+    x: &[f32],
+    xshape: &[usize],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [f32],
+) {
+    let (n, c, h, w) = (xshape[0], xshape[1], xshape[2], xshape[3]);
     let ho = conv_out_dim(h, k, stride, pad);
     let wo = conv_out_dim(w, k, stride, pad);
+    assert_eq!(out.len(), n * c * ho * wo, "avgpool2d_into output size");
     let inv = 1.0 / (k * k) as f32;
-    let mut out = vec![0.0f32; n * c * ho * wo];
     for img in 0..n {
         for ch in 0..c {
             let xbase = (img * c + ch) * h * w;
@@ -564,7 +788,7 @@ pub fn avgpool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
                         for kx in 0..k {
                             let ix = (ox * stride + kx) as isize - pad as isize;
                             if ix >= 0 && ix < w as isize {
-                                acc += x.data[xbase + iy as usize * w + ix as usize];
+                                acc += x[xbase + iy as usize * w + ix as usize];
                             }
                         }
                     }
@@ -573,7 +797,6 @@ pub fn avgpool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
             }
         }
     }
-    Tensor::new(vec![n, c, ho, wo], out)
 }
 
 pub fn avgpool2d_backward(
@@ -614,13 +837,20 @@ pub fn avgpool2d_backward(
 
 /// Global average pool [N,C,H,W] → [N,C].
 pub fn global_avgpool(x: &Tensor) -> Tensor {
-    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let inv = 1.0 / (h * w) as f32;
+    let (n, c) = (x.shape[0], x.shape[1]);
     let mut out = vec![0.0f32; n * c];
-    for i in 0..n * c {
-        out[i] = x.data[i * h * w..(i + 1) * h * w].iter().sum::<f32>() * inv;
-    }
+    global_avgpool_into(&x.data, &x.shape, &mut out);
     Tensor::new(vec![n, c], out)
+}
+
+/// [`global_avgpool`] into a caller-provided buffer (overwritten).
+pub fn global_avgpool_into(x: &[f32], xshape: &[usize], out: &mut [f32]) {
+    let (n, c, h, w) = (xshape[0], xshape[1], xshape[2], xshape[3]);
+    assert_eq!(out.len(), n * c, "global_avgpool_into output size");
+    let inv = 1.0 / (h * w) as f32;
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = x[i * h * w..(i + 1) * h * w].iter().sum::<f32>() * inv;
+    }
 }
 
 pub fn global_avgpool_backward(dy: &Tensor, x_shape: &[usize]) -> Tensor {
@@ -646,22 +876,68 @@ pub fn batchnorm_infer(
     var: &Tensor,
     eps: f32,
 ) -> Tensor {
-    let c = x.shape[1];
-    assert_eq!(gamma.numel(), c);
-    let inner: usize = x.shape[2..].iter().product();
-    let n = x.shape[0];
     let mut out = vec![0.0f32; x.numel()];
+    batchnorm_infer_into(&x.data, &x.shape, gamma, beta, mean, var, eps, &mut out);
+    Tensor::new(x.shape.clone(), out)
+}
+
+/// [`batchnorm_infer`] into a caller-provided buffer (overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn batchnorm_infer_into(
+    x: &[f32],
+    xshape: &[usize],
+    gamma: &Tensor,
+    beta: &Tensor,
+    mean: &Tensor,
+    var: &Tensor,
+    eps: f32,
+    out: &mut [f32],
+) {
+    let c = xshape[1];
+    assert_eq!(gamma.numel(), c);
+    let inner: usize = xshape[2..].iter().product();
+    let n = xshape[0];
+    assert_eq!(out.len(), x.len(), "batchnorm_infer_into output size");
     for img in 0..n {
         for ch in 0..c {
             let scale = gamma.data[ch] / (var.data[ch] + eps).sqrt();
             let shift = beta.data[ch] - mean.data[ch] * scale;
             let base = (img * c + ch) * inner;
             for i in 0..inner {
-                out[base + i] = x.data[base + i] * scale + shift;
+                out[base + i] = x[base + i] * scale + shift;
             }
         }
     }
-    Tensor::new(x.shape.clone(), out)
+}
+
+/// Apply the eval-mode BatchNorm affine map *in place* — the fused
+/// Conv→BN / Gemm→BN post-op of the compiled-plan executor. Per element
+/// it computes exactly `v·scale + shift` like [`batchnorm_infer`], so a
+/// fused step is bit-identical to the unfused op pair.
+#[allow(clippy::too_many_arguments)]
+pub fn batchnorm_affine_inplace(
+    y: &mut [f32],
+    yshape: &[usize],
+    gamma: &Tensor,
+    beta: &Tensor,
+    mean: &Tensor,
+    var: &Tensor,
+    eps: f32,
+) {
+    let c = yshape[1];
+    assert_eq!(gamma.numel(), c);
+    let inner: usize = yshape[2..].iter().product();
+    let n = yshape[0];
+    for img in 0..n {
+        for ch in 0..c {
+            let scale = gamma.data[ch] / (var.data[ch] + eps).sqrt();
+            let shift = beta.data[ch] - mean.data[ch] * scale;
+            let base = (img * c + ch) * inner;
+            for v in &mut y[base..base + inner] {
+                *v = *v * scale + shift;
+            }
+        }
+    }
 }
 
 /// BatchNorm training forward: returns (y, batch_mean, batch_var, x_hat).
@@ -799,6 +1075,32 @@ pub fn layernorm(
     )
 }
 
+/// Forward-only [`layernorm`] into a caller-provided buffer: identical
+/// per-row mean/var/normalize arithmetic, none of the backward state —
+/// the compiled-plan executor's inference path.
+pub fn layernorm_eval_into(
+    x: &[f32],
+    d: usize,
+    gamma: &Tensor,
+    beta: &Tensor,
+    eps: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(gamma.numel(), d);
+    assert_eq!(out.len(), x.len(), "layernorm_eval_into output size");
+    let rows = x.len() / d;
+    for r in 0..rows {
+        let xs = &x[r * d..(r + 1) * d];
+        let mean = xs.iter().sum::<f32>() / d as f32;
+        let var = xs.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv_std = 1.0 / (var + eps).sqrt();
+        for i in 0..d {
+            let xh = (xs[i] - mean) * inv_std;
+            out[r * d + i] = gamma.data[i] * xh + beta.data[i];
+        }
+    }
+}
+
 /// LayerNorm backward: (dx, dgamma, dbeta).
 pub fn layernorm_backward(
     dy: &Tensor,
@@ -839,11 +1141,17 @@ pub fn layernorm_backward(
 
 /// Softmax along the last dim.
 pub fn softmax_lastdim(x: &Tensor) -> Tensor {
-    let d = x.dim(-1);
-    let rows = x.numel() / d;
     let mut out = vec![0.0f32; x.numel()];
+    softmax_lastdim_into(&x.data, x.dim(-1), &mut out);
+    Tensor::new(x.shape.clone(), out)
+}
+
+/// [`softmax_lastdim`] into a caller-provided buffer (overwritten).
+pub fn softmax_lastdim_into(x: &[f32], d: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), x.len(), "softmax_lastdim_into output size");
+    let rows = x.len() / d;
     for r in 0..rows {
-        let xs = &x.data[r * d..(r + 1) * d];
+        let xs = &x[r * d..(r + 1) * d];
         let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0.0f32;
         for i in 0..d {
@@ -852,11 +1160,10 @@ pub fn softmax_lastdim(x: &Tensor) -> Tensor {
             sum += e;
         }
         let inv = 1.0 / sum;
-        for i in 0..d {
-            out[r * d + i] *= inv;
+        for v in &mut out[r * d..(r + 1) * d] {
+            *v *= inv;
         }
     }
-    Tensor::new(x.shape.clone(), out)
 }
 
 /// Softmax backward given y = softmax(x): dx = y ⊙ (dy − Σ dy·y).
@@ -932,18 +1239,24 @@ pub fn topk_accuracy(logits: &Tensor, labels: &[usize], kk: usize) -> f32 {
 
 /// Embedding lookup: ids [N,T] (stored as f32 indices), table [V,D] → [N,T,D].
 pub fn embedding(ids: &Tensor, table: &Tensor) -> Tensor {
+    let d = table.shape[1];
+    let mut out = vec![0.0f32; ids.numel() * d];
+    embedding_into(&ids.data, table, &mut out);
+    let mut shape = ids.shape.clone();
+    shape.push(d);
+    Tensor::new(shape, out)
+}
+
+/// [`embedding`] into a caller-provided buffer (overwritten).
+pub fn embedding_into(ids: &[f32], table: &Tensor, out: &mut [f32]) {
     assert_eq!(table.rank(), 2);
     let (v, d) = (table.shape[0], table.shape[1]);
-    let n = ids.numel();
-    let mut out = vec![0.0f32; n * d];
-    for (i, &id) in ids.data.iter().enumerate() {
+    assert_eq!(out.len(), ids.len() * d, "embedding_into output size");
+    for (i, &id) in ids.iter().enumerate() {
         let id = id as usize;
         assert!(id < v, "embedding id {id} out of range {v}");
         out[i * d..(i + 1) * d].copy_from_slice(&table.data[id * d..(id + 1) * d]);
     }
-    let mut shape = ids.shape.clone();
-    shape.push(d);
-    Tensor::new(shape, out)
 }
 
 /// Embedding backward: accumulate dy rows into dtable.
@@ -961,10 +1274,23 @@ pub fn embedding_backward(ids: &Tensor, dy: &Tensor, table_shape: &[usize]) -> T
 
 /// Transpose arbitrary-rank tensor by `perm`.
 pub fn transpose(x: &Tensor, perm: &[usize]) -> Tensor {
-    assert_eq!(perm.len(), x.rank());
-    let in_strides = x.strides();
     let out_shape: Vec<usize> = perm.iter().map(|&p| x.shape[p]).collect();
     let mut out = vec![0.0f32; x.numel()];
+    transpose_into(&x.data, &x.shape, perm, &mut out);
+    Tensor::new(out_shape, out)
+}
+
+/// [`transpose`] into a caller-provided buffer (overwritten). Also serves
+/// reshape-then-transpose ops (SplitHeads / NchwToTokens): pass the
+/// reshaped `xshape` — the data is shared row-major either way.
+pub fn transpose_into(x: &[f32], xshape: &[usize], perm: &[usize], out: &mut [f32]) {
+    assert_eq!(perm.len(), xshape.len());
+    assert_eq!(out.len(), x.len(), "transpose_into output size");
+    let mut in_strides = vec![1usize; xshape.len()];
+    for i in (0..xshape.len().saturating_sub(1)).rev() {
+        in_strides[i] = in_strides[i + 1] * xshape[i + 1];
+    }
+    let out_shape: Vec<usize> = perm.iter().map(|&p| xshape[p]).collect();
     let mut out_strides = vec![1usize; perm.len()];
     for i in (0..perm.len().saturating_sub(1)).rev() {
         out_strides[i] = out_strides[i + 1] * out_shape[i + 1];
@@ -972,7 +1298,7 @@ pub fn transpose(x: &Tensor, perm: &[usize]) -> Tensor {
     // Walk output in order, gather from input.
     let rank = perm.len();
     let mut idx = vec![0usize; rank];
-    for o in 0..x.numel() {
+    for (o, ov) in out.iter_mut().enumerate() {
         let mut rem = o;
         for i in 0..rank {
             idx[i] = rem / out_strides[i];
@@ -982,9 +1308,25 @@ pub fn transpose(x: &Tensor, perm: &[usize]) -> Tensor {
         for i in 0..rank {
             src += idx[i] * in_strides[perm[i]];
         }
-        out[o] = x.data[src];
+        *ov = x[src];
     }
-    Tensor::new(out_shape, out)
+}
+
+/// GELU activation, tanh approximation (matches jax.nn.gelu default
+/// closely). Shared by the interpreter and the compiled-plan executor so
+/// fused and unfused activations are bit-identical.
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d gelu / dx of the tanh approximation.
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
 }
 
 /// Inverse permutation.
@@ -1004,6 +1346,93 @@ mod tests {
 
     fn t(shape: &[usize], data: &[f32]) -> Tensor {
         Tensor::new(shape.to_vec(), data.to_vec())
+    }
+
+    /// Assert exact bit-equality (the `_into` contract vs the allocating
+    /// originals).
+    fn assert_bits_eq(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "bit mismatch at {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn into_variants_bit_identical_to_originals() {
+        let mut rng = Rng::new(77);
+        // conv2d (grouped, biased)
+        let x = t(&[2, 4, 6, 6], &rng.uniform_vec(2 * 4 * 36, -1.0, 1.0));
+        let w = t(&[8, 2, 3, 3], &rng.uniform_vec(8 * 2 * 9, -1.0, 1.0));
+        let b = t(&[8], &rng.uniform_vec(8, -1.0, 1.0));
+        let y = conv2d(&x, &w, Some(&b), 1, 1, 2);
+        let mut out = vec![1.0f32; y.numel()];
+        conv2d_into(&x.data, &x.shape, &w, Some(&b), 1, 1, 2, &mut out);
+        assert_bits_eq(&out, &y.data);
+        // batched-image conv: same bits through the one-GEMM-per-group path
+        let (mut cols, mut yb) = (Vec::new(), Vec::new());
+        let mut bout = vec![1.0f32; y.numel()];
+        conv2d_batched_into(
+            &x.data, &x.shape, &w, Some(&b), 1, 1, 2, &mut cols, &mut yb, &mut bout,
+        );
+        assert_bits_eq(&bout, &y.data);
+        let ys = conv2d(&x, &w, None, 2, 1, 2);
+        let mut sout = vec![1.0f32; ys.numel()];
+        conv2d_batched_into(
+            &x.data, &x.shape, &w, None, 2, 1, 2, &mut cols, &mut yb, &mut sout,
+        );
+        assert_bits_eq(&sout, &ys.data);
+        // linear (multi-row and single-row paths)
+        let lw = t(&[5, 7], &rng.uniform_vec(35, -1.0, 1.0));
+        for rows in [1usize, 3] {
+            let lx = t(&[rows, 7], &rng.uniform_vec(rows * 7, -1.0, 1.0));
+            let ly = linear(&lx, &lw, None);
+            let mut lout = vec![1.0f32; rows * 5];
+            linear_into(&lx.data, 7, &lw, None, None, &mut lout);
+            assert_bits_eq(&lout, &ly.data);
+            // precomputed-transpose path is the same arithmetic
+            let wt = lw.t2();
+            let mut lout2 = vec![1.0f32; rows * 5];
+            linear_into(&lx.data, 7, &lw, None, Some(&wt), &mut lout2);
+            assert_bits_eq(&lout2, &ly.data);
+        }
+        // batchnorm infer + in-place affine
+        let gamma = t(&[4], &rng.uniform_vec(4, 0.5, 1.5));
+        let beta = t(&[4], &rng.uniform_vec(4, -0.5, 0.5));
+        let mean = t(&[4], &rng.uniform_vec(4, -0.5, 0.5));
+        let var = t(&[4], &rng.uniform_vec(4, 0.5, 2.0));
+        let bn = batchnorm_infer(&x, &gamma, &beta, &mean, &var, 1e-5);
+        let mut inplace = x.data.clone();
+        batchnorm_affine_inplace(&mut inplace, &x.shape, &gamma, &beta, &mean, &var, 1e-5);
+        assert_bits_eq(&inplace, &bn.data);
+        // maxpool eval
+        let (mp, _) = maxpool2d(&x, 2, 2, 0);
+        let mut mout = vec![0.0f32; mp.numel()];
+        maxpool2d_eval_into(&x.data, &x.shape, 2, 2, 0, &mut mout);
+        assert_bits_eq(&mout, &mp.data);
+        // layernorm eval
+        let lx = t(&[3, 8], &rng.uniform_vec(24, -1.0, 1.0));
+        let lg = t(&[8], &rng.uniform_vec(8, 0.5, 1.5));
+        let lb = t(&[8], &rng.uniform_vec(8, -0.5, 0.5));
+        let (ln, _, _, _) = layernorm(&lx, &lg, &lb, 1e-5);
+        let mut lnout = vec![0.0f32; 24];
+        layernorm_eval_into(&lx.data, 8, &lg, &lb, 1e-5, &mut lnout);
+        assert_bits_eq(&lnout, &ln.data);
+        // batch_matmul
+        let a = t(&[2, 3, 4], &rng.uniform_vec(24, -1.0, 1.0));
+        let bb = t(&[2, 4, 5], &rng.uniform_vec(40, -1.0, 1.0));
+        let mm = batch_matmul(&a, &bb);
+        let mut mmout = vec![1.0f32; mm.numel()];
+        batch_matmul_into(&a.data, &a.shape, &bb.data, &bb.shape, &mut mmout);
+        assert_bits_eq(&mmout, &mm.data);
+        // softmax + transpose
+        let sm = softmax_lastdim(&a);
+        let mut smout = vec![0.0f32; 24];
+        softmax_lastdim_into(&a.data, 4, &mut smout);
+        assert_bits_eq(&smout, &sm.data);
+        let tr = transpose(&a, &[2, 0, 1]);
+        let mut trout = vec![0.0f32; 24];
+        transpose_into(&a.data, &a.shape, &[2, 0, 1], &mut trout);
+        assert_bits_eq(&trout, &tr.data);
     }
 
     #[test]

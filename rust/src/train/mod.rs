@@ -5,6 +5,7 @@
 
 use crate::data::{ImageDataset, TextDataset};
 use crate::engine::{self, Mode};
+use crate::exec;
 use crate::ir::{DataId, Graph};
 use crate::tensor::{ops, Tensor};
 use crate::util::Rng;
@@ -148,7 +149,14 @@ pub fn quick_train(
 }
 
 /// Test-set accuracy over up to `max_samples` samples.
+///
+/// Evaluation is a many-batches / one-graph workload, so it runs on a
+/// compiled [`crate::exec::Plan`] (one compile, zero steady-state
+/// allocation) — bit-identical to interpreting each batch.
 pub fn evaluate(g: &Graph, ds: &ImageDataset, max_samples: usize) -> anyhow::Result<f32> {
+    let plan = exec::Plan::compile(g, exec::PlanOpts::default())?;
+    let mut ws = plan.workspace();
+    let input = plan.inputs()[0];
     let mut correct = 0.0f32;
     let mut total = 0usize;
     let bs = 64;
@@ -156,7 +164,7 @@ pub fn evaluate(g: &Graph, ds: &ImageDataset, max_samples: usize) -> anyhow::Res
     while offset < ds.test_len().min(max_samples) {
         let (x, y) = ds.test_batch(offset, bs);
         let n = y.len();
-        let logits = engine::predict(g, x)?;
+        let logits = plan.run(&mut ws, &[(input, &x)])?;
         correct += ops::accuracy(&logits, &y) * n as f32;
         total += n;
         offset += n;
@@ -167,8 +175,12 @@ pub fn evaluate(g: &Graph, ds: &ImageDataset, max_samples: usize) -> anyhow::Res
     Ok(correct / total.max(1) as f32)
 }
 
-/// Test-set accuracy for text datasets.
+/// Test-set accuracy for text datasets (compiled-plan path, like
+/// [`evaluate`]).
 pub fn evaluate_text(g: &Graph, ds: &TextDataset, max_samples: usize) -> anyhow::Result<f32> {
+    let plan = exec::Plan::compile(g, exec::PlanOpts::default())?;
+    let mut ws = plan.workspace();
+    let input = plan.inputs()[0];
     let mut correct = 0.0f32;
     let mut total = 0usize;
     let bs = 64;
@@ -176,7 +188,7 @@ pub fn evaluate_text(g: &Graph, ds: &TextDataset, max_samples: usize) -> anyhow:
     while offset < ds.test_len().min(max_samples) {
         let (x, y) = ds.test_batch(offset, bs);
         let n = y.len();
-        let logits = engine::predict(g, x)?;
+        let logits = plan.run(&mut ws, &[(input, &x)])?;
         correct += ops::accuracy(&logits, &y) * n as f32;
         total += n;
         offset += n;

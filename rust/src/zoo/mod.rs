@@ -472,6 +472,10 @@ pub const IMAGE_MODELS: &[&str] = &[
     "vit",
 ];
 
+/// Additional model names [`by_name`] accepts beyond [`IMAGE_MODELS`]
+/// (kept in sync with the match arms below).
+pub const EXTRA_MODELS: &[&str] = &["mlp", "vgg19", "resnet18", "resnet101"];
+
 /// Build an image model by name.
 pub fn by_name(name: &str, cfg: ImageCfg, seed: u64) -> anyhow::Result<Graph> {
     Ok(match name {
@@ -489,7 +493,11 @@ pub fn by_name(name: &str, cfg: ImageCfg, seed: u64) -> anyhow::Result<Graph> {
         "mobilenetv2" => mobilenetv2(cfg, seed),
         "efficientnet" => efficientnet(cfg, seed),
         "vit" => vit(cfg, seed),
-        other => anyhow::bail!("unknown model `{other}`"),
+        other => anyhow::bail!(
+            "unknown model `{other}` — valid names: {}, {}",
+            IMAGE_MODELS.join(", "),
+            EXTRA_MODELS.join(", ")
+        ),
     })
 }
 
@@ -514,6 +522,17 @@ mod tests {
         v.push(by_name("vgg19", cfg, 1).unwrap());
         v.push(distilbert(TextCfg::default(), 1));
         v
+    }
+
+    #[test]
+    fn by_name_error_lists_valid_models() {
+        let err = by_name("resnet9000", ImageCfg::default(), 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("resnet9000"), "{err}");
+        for name in ["resnet50", "mobilenetv2", "mlp", "vgg19"] {
+            assert!(err.contains(name), "`{name}` missing from: {err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Proptest parity suite for the compiled-plan executor (`spa::exec`).
+//!
+//! Property: for a random zoo model, pruned to a random sparsity through
+//! the `Session` API, a compiled `Plan` produces **bit-identical** logits
+//! to `engine::forward` in `Mode::Eval` — at every worker-pool width
+//! (`SPA_THREADS` ∈ {1, 4, 8}) and at a random batch size that differs
+//! from the nominal compile-time shape.
+
+use spa::criteria::Criterion;
+use spa::engine::{self, Mode};
+use spa::tensor::Tensor;
+use spa::util::par;
+use spa::util::proptest::check;
+use spa::util::Rng;
+use spa::zoo::{self, ImageCfg, TextCfg};
+use spa::{Session, Target};
+
+const MODELS: &[&str] = &["mlp", "resnet18", "vgg16", "mobilenetv2", "densenet", "vit"];
+
+fn bits_eq(a: &Tensor, b: &Tensor) -> Result<(), String> {
+    if a.shape != b.shape {
+        return Err(format!("shape {:?} vs {:?}", a.shape, b.shape));
+    }
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("bit mismatch at {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn plan_parity_on_randomly_pruned_models() {
+    let _serial = par::test_lock();
+    let cfg = ImageCfg {
+        hw: 8,
+        ..Default::default()
+    };
+    check(
+        "exec-parity",
+        6,
+        0xEC5E,
+        |rng| {
+            let name = MODELS[rng.below(MODELS.len())];
+            let sparsity = 0.1 + 0.08 * rng.below(6) as f64;
+            let batch = 1 + rng.below(5);
+            (name.to_string(), sparsity, batch, rng.below(1 << 30) as u64)
+        },
+        |(name, sparsity, batch, seed)| {
+            let g = zoo::by_name(name, cfg, *seed).map_err(|e| e.to_string())?;
+            let pruned = Session::on(&g)
+                .criterion(Criterion::L1)
+                .target(Target::Sparsity(*sparsity))
+                .plan()
+                .map_err(|e| e.to_string())?
+                .apply()
+                .map_err(|e| e.to_string())?;
+            pruned.graph.validate().map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(seed ^ 0x5A5A);
+            let mut shape = pruned.graph.data(pruned.graph.inputs[0]).shape.clone();
+            shape[0] = *batch;
+            let n: usize = shape.iter().product();
+            let x = Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0));
+            let plan = pruned.compile().map_err(|e| e.to_string())?;
+            let mut outs: Vec<Tensor> = Vec::new();
+            for threads in [1usize, 4, 8] {
+                let (want, got) = par::with_threads(threads, || {
+                    let fwd = engine::forward(
+                        &pruned.graph,
+                        &[(pruned.graph.inputs[0], x.clone())],
+                        Mode::Eval,
+                    )
+                    .unwrap();
+                    let want = fwd.logits(&pruned.graph).clone();
+                    let got = plan.predict(&x).unwrap();
+                    (want, got)
+                });
+                bits_eq(&got, &want).map_err(|e| format!("{name} @ {threads} threads: {e}"))?;
+                outs.push(got);
+            }
+            for o in &outs[1..] {
+                bits_eq(o, &outs[0]).map_err(|e| format!("{name} across widths: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn plan_parity_on_pruned_distilbert() {
+    let _serial = par::test_lock();
+    let tcfg = TextCfg::default();
+    let g = zoo::distilbert(tcfg, 17);
+    let pruned = Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(Target::Sparsity(0.3))
+        .plan()
+        .unwrap()
+        .apply()
+        .unwrap();
+    pruned.graph.validate().unwrap();
+    let mut rng = Rng::new(99);
+    let ids = Tensor::new(
+        vec![4, tcfg.seq],
+        (0..4 * tcfg.seq)
+            .map(|_| rng.below(tcfg.vocab) as f32)
+            .collect(),
+    );
+    let plan = pruned.compile().unwrap();
+    let mut reference: Option<Tensor> = None;
+    for threads in [1usize, 4, 8] {
+        let (want, got) = par::with_threads(threads, || {
+            let fwd = engine::forward(
+                &pruned.graph,
+                &[(pruned.graph.inputs[0], ids.clone())],
+                Mode::Eval,
+            )
+            .unwrap();
+            (fwd.logits(&pruned.graph).clone(), plan.predict(&ids).unwrap())
+        });
+        bits_eq(&got, &want).unwrap_or_else(|e| panic!("distilbert @ {threads}: {e}"));
+        match &reference {
+            None => reference = Some(got),
+            Some(r) => bits_eq(&got, r).unwrap_or_else(|e| panic!("across widths: {e}")),
+        }
+    }
+}
