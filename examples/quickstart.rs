@@ -57,15 +57,23 @@ fn main() -> anyhow::Result<()> {
         "compiled plan: {} steps ({} fused), {} arena bytes vs {} interpreted",
         rep.steps, rep.fused_ops, rep.peak_arena_bytes, rep.interp_intermediate_bytes
     );
-    let mut ws = compiled.workspace();
+    let mut runner = compiled.runner();
     let mut rng = Rng::new(7);
     let x = Tensor::new(
         vec![2, cfg.channels, cfg.hw, cfg.hw],
         rng.uniform_vec(2 * cfg.channels * cfg.hw * cfg.hw, -1.0, 1.0),
     );
-    let logits = compiled.run(&mut ws, &[(compiled.inputs()[0], &x)])?;
-    let reference = engine::predict(&pruned.graph, x)?;
+    let logits = runner.predict(&x)?;
+    let reference = engine::predict(&pruned.graph, x.clone())?;
     assert_eq!(logits.data, reference.data, "plan must match the interpreter");
     println!("pruned model logits shape {:?} — OK (plan == interpreter)", logits.shape);
+
+    // 6. Any traffic: the same plans serve over TCP with dynamic
+    //    batching (`spa serve` on the CLI). Five lines of client code:
+    let server = spa::serve::Server::spawn(spa::serve::ServeCfg::default())?;
+    let mut client = spa::serve::Client::connect(server.local_addr())?;
+    let (served, latency_us) = client.predict("resnet18", &x)?;
+    println!("served logits {:?} in {latency_us}us (batched over TCP)", served.shape);
+    server.shutdown();
     Ok(())
 }

@@ -19,13 +19,13 @@ use spa::zoo::{self, TextCfg};
 
 fn compare(t: &mut Table, label: &str, g: &Graph, x: &Tensor, iters: usize) {
     let plan = Plan::compile(g, PlanOpts::default()).unwrap();
-    let mut ws = plan.workspace();
+    let mut runner = plan.runner();
     // parity gate before timing: identical bits or the comparison is void
     let want = engine::forward(g, &[(g.inputs[0], x.clone())], Mode::Eval)
         .unwrap()
         .logits(g)
         .clone();
-    let got = plan.run(&mut ws, &[(g.inputs[0], x)]).unwrap();
+    let got = runner.run(&[(g.inputs[0], x)]).unwrap();
     assert_eq!(want.shape, got.shape, "{label}: shape drift");
     for (a, b) in want.data.iter().zip(&got.data) {
         assert_eq!(a.to_bits(), b.to_bits(), "{label}: plan must be bit-identical");
@@ -43,7 +43,7 @@ fn compare(t: &mut Table, label: &str, g: &Graph, x: &Tensor, iters: usize) {
         common::warmup(2),
         common::iters(iters),
         || {
-            let _ = plan.run(&mut ws, &[(g.inputs[0], x)]).unwrap();
+            let _ = runner.run(&[(g.inputs[0], x)]).unwrap();
         },
     );
     let r = plan.report();

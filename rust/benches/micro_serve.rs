@@ -1,0 +1,129 @@
+//! Microbench: `spa::serve` load generator — p50/p99 latency and
+//! throughput at 1/8/64 concurrent clients against an in-process server.
+//!
+//! The 1-client run is the sequential baseline: every request pays a
+//! full batcher tick alone. Concurrent clients coalesce into shared
+//! batches, so 8 clients must clear ≥ 2x the sequential request rate
+//! (asserted — this is the ISSUE-6 acceptance case). Responses are
+//! gated bit-identical against a local `Plan::predict` before timing.
+
+#[path = "common.rs"]
+mod common;
+
+use spa::exec::{Plan, PlanOpts};
+use spa::serve::{Client, ServeCfg, Server};
+use spa::tensor::Tensor;
+use spa::util::{bench, Rng, Table};
+use spa::zoo;
+use std::net::SocketAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+const MODEL: &str = "mlp";
+
+struct LoadResult {
+    p50_us: u64,
+    p99_us: u64,
+    req_per_sec: f64,
+}
+
+/// Drive `clients` connections of `per_client` sequential requests each;
+/// percentiles are client-observed round-trip times.
+fn run_load(addr: SocketAddr, clients: usize, per_client: usize, x: &Tensor) -> LoadResult {
+    let lats: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            s.spawn(|| {
+                let mut c = Client::connect(addr).expect("connect");
+                let mut local = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let q0 = Instant::now();
+                    let (_y, _server_us) = c.predict(MODEL, x).expect("predict");
+                    local.push(q0.elapsed().as_micros() as u64);
+                }
+                lats.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let mut v = lats.into_inner().unwrap();
+    v.sort_unstable();
+    let pick = |p: f64| v[((p / 100.0) * (v.len() - 1) as f64).round() as usize];
+    LoadResult {
+        p50_us: pick(50.0),
+        p99_us: pick(99.0),
+        req_per_sec: (clients * per_client) as f64 / wall,
+    }
+}
+
+fn main() {
+    let image = common::cifar_cfg(10);
+    let seed = 1;
+    let server = Server::spawn(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        tick: Duration::from_millis(2),
+        max_batch: 64,
+        cache_cap: 2,
+        image,
+        seed,
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let addr = server.local_addr();
+
+    let mut rng = Rng::new(7);
+    let numel = image.channels * image.hw * image.hw;
+    let x = Tensor::new(
+        vec![1, image.channels, image.hw, image.hw],
+        rng.uniform_vec(numel, -1.0, 1.0),
+    );
+
+    // parity gate before timing: the served bits must equal a local plan
+    let g = zoo::by_name(MODEL, image, seed).unwrap();
+    let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+    let want = plan.predict(&x).unwrap();
+    let mut probe = Client::connect(addr).expect("probe connect");
+    let (got, _us) = probe.predict(MODEL, &x).expect("probe predict");
+    assert_eq!(want.shape, got.shape, "served shape drift");
+    for (a, b) in want.data.iter().zip(&got.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "served bits must match Plan::predict");
+    }
+    drop(probe);
+
+    let per_client = if common::smoke() { 16 } else { 128 };
+    let mut t = Table::new(
+        "micro — serve: dynamic batching under concurrent clients (mlp, 2ms tick)",
+        &["clients", "requests", "p50 (us)", "p99 (us)", "req/s"],
+    );
+    let mut rates: Vec<(usize, f64)> = Vec::new();
+    for &clients in &[1usize, 8, 64] {
+        let mut last = None;
+        bench(&format!("serve/clients{clients}"), 0, 1, || {
+            last = Some(run_load(addr, clients, per_client, &x));
+        });
+        let r = last.expect("one load run");
+        t.row(&[
+            clients.to_string(),
+            (clients * per_client).to_string(),
+            r.p50_us.to_string(),
+            r.p99_us.to_string(),
+            format!("{:.0}", r.req_per_sec),
+        ]);
+        rates.push((clients, r.req_per_sec));
+    }
+    t.print();
+
+    let rps = |n: usize| rates.iter().find(|(c, _)| *c == n).unwrap().1;
+    assert!(
+        rps(8) >= 2.0 * rps(1),
+        "batching must beat sequential 2x: 8 clients {:.0} req/s vs 1 client {:.0} req/s",
+        rps(8),
+        rps(1)
+    );
+    println!(
+        "batching speedup at 8 clients: {:.2}x over sequential",
+        rps(8) / rps(1)
+    );
+    server.shutdown();
+}

@@ -5,22 +5,32 @@
 //! spa train   --model resnet18 --steps 200           # train on SynthCIFAR
 //! spa prune   --model resnet18 --time tpf --criterion l1 --target-rf 2.0
 //! spa obspa   --model resnet50 --source datafree --target-rf 1.5
+//! spa serve   --addr 127.0.0.1:7878 --tick-ms 2      # batching inference server
 //! spa convert --model resnet18 --dialect tf --out model.tf.json
 //! spa import  --file model.tf.json --out model.spa.json
 //! ```
+//!
+//! Flag handling is two-layered: [`Flags`] tokenizes `--key value`
+//! pairs, and each subcommand owns a typed args struct
+//! ([`PruneArgs`], [`ServeArgs`], ...) that pulls its flags out of the
+//! shared pool — so new subcommands add a struct, not a fourth copy of
+//! string matching.
 
 use super::{train_prune, train_prune_finetune, prune_train, NoFinetuneAlgo, PipelineCfg};
 use crate::analysis;
 use crate::criteria::Criterion;
 use crate::data::ImageDataset;
+use crate::exec::OptLevel;
 use crate::frontends::{self, Dialect};
 use crate::ir::serde as ir_serde;
 use crate::obspa::CalibSource;
 use crate::prune::Scope;
+use crate::serve::{self, ServeCfg};
 use crate::train::TrainCfg;
-use crate::util::Table;
+use crate::util::{Json, Table};
 use crate::zoo::{self, ImageCfg};
 use std::collections::HashMap;
+use std::time::Duration;
 
 /// Parsed `--key value` flags.
 struct Flags(HashMap<String, String>);
@@ -45,6 +55,10 @@ impl Flags {
         self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(String::as_str)
+    }
+
     fn usize(&self, key: &str, default: usize) -> usize {
         self.0
             .get(key)
@@ -57,6 +71,235 @@ impl Flags {
             .get(key)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
+    }
+}
+
+/// Flags shared by every model-centric subcommand.
+struct CommonArgs {
+    model: String,
+    icfg: ImageCfg,
+    seed: u64,
+}
+
+impl CommonArgs {
+    fn parse(f: &Flags, default_model: &str) -> CommonArgs {
+        CommonArgs {
+            model: f.get("model", default_model),
+            icfg: ImageCfg {
+                hw: f.usize("hw", 16),
+                classes: f.usize("classes", 10),
+                ..Default::default()
+            },
+            seed: f.usize("seed", 1) as u64,
+        }
+    }
+
+    fn graph(&self) -> anyhow::Result<crate::ir::Graph> {
+        zoo::by_name(&self.model, self.icfg, self.seed)
+    }
+
+    fn dataset(&self) -> ImageDataset {
+        ImageDataset::synth_cifar(
+            self.icfg.classes,
+            1024,
+            self.icfg.hw,
+            self.icfg.channels,
+            self.seed,
+        )
+    }
+}
+
+struct TrainArgs {
+    common: CommonArgs,
+    cfg: TrainCfg,
+}
+
+impl TrainArgs {
+    fn parse(f: &Flags) -> TrainArgs {
+        TrainArgs {
+            common: CommonArgs::parse(f, "resnet18"),
+            cfg: TrainCfg {
+                steps: f.usize("steps", 200),
+                lr: f.f64("lr", 0.05) as f32,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+enum PruneTime {
+    TrainPruneFinetune,
+    PruneTrain,
+}
+
+struct PruneArgs {
+    common: CommonArgs,
+    time: PruneTime,
+    cfg: PipelineCfg,
+}
+
+impl PruneArgs {
+    fn parse(f: &Flags) -> anyhow::Result<PruneArgs> {
+        let time = match f.get("time", "tpf").as_str() {
+            "tpf" | "train-prune-finetune" => PruneTime::TrainPruneFinetune,
+            "pt" | "prune-train" => PruneTime::PruneTrain,
+            other => anyhow::bail!("unknown --time `{other}` (tpf|pt)"),
+        };
+        Ok(PruneArgs {
+            common: CommonArgs::parse(f, "resnet18"),
+            time,
+            cfg: PipelineCfg {
+                criterion: Criterion::parse(&f.get("criterion", "l1"))?,
+                scope: if f.get("scope", "grouped") == "grouped" {
+                    Scope::FullCc
+                } else {
+                    Scope::SourceOnly
+                },
+                target_rf: f.f64("target-rf", 2.0),
+                iterations: f.usize("iterations", 1),
+                train: TrainCfg {
+                    steps: f.usize("train-steps", 150),
+                    ..Default::default()
+                },
+                finetune: TrainCfg {
+                    steps: f.usize("finetune-steps", 80),
+                    lr: 0.02,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        })
+    }
+}
+
+struct ObspaArgs {
+    common: CommonArgs,
+    source: CalibSource,
+    target_rf: f64,
+    cfg: PipelineCfg,
+}
+
+impl ObspaArgs {
+    fn parse(f: &Flags) -> anyhow::Result<ObspaArgs> {
+        let source = match f.get("source", "id").as_str() {
+            "id" => CalibSource::InDistribution,
+            "ood" => CalibSource::OutOfDistribution,
+            "datafree" => CalibSource::DataFree,
+            other => anyhow::bail!("unknown --source `{other}`"),
+        };
+        Ok(ObspaArgs {
+            common: CommonArgs::parse(f, "resnet50"),
+            source,
+            target_rf: f.f64("target-rf", 1.5),
+            cfg: PipelineCfg {
+                train: TrainCfg {
+                    steps: f.usize("train-steps", 150),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        })
+    }
+}
+
+struct OptimizeArgs {
+    common: CommonArgs,
+    out: Option<String>,
+}
+
+impl OptimizeArgs {
+    fn parse(f: &Flags) -> OptimizeArgs {
+        OptimizeArgs {
+            common: CommonArgs::parse(f, "resnet18"),
+            out: f.opt("out").map(str::to_string),
+        }
+    }
+}
+
+struct ConvertArgs {
+    common: CommonArgs,
+    dialect: Dialect,
+    out: Option<String>,
+}
+
+impl ConvertArgs {
+    fn parse(f: &Flags) -> anyhow::Result<ConvertArgs> {
+        Ok(ConvertArgs {
+            common: CommonArgs::parse(f, "resnet18"),
+            dialect: Dialect::parse(&f.get("dialect", "tf"))?,
+            out: f.opt("out").map(str::to_string),
+        })
+    }
+}
+
+struct ImportArgs {
+    file: String,
+    out: Option<String>,
+}
+
+impl ImportArgs {
+    fn parse(f: &Flags) -> anyhow::Result<ImportArgs> {
+        let file = f.get("file", "");
+        anyhow::ensure!(!file.is_empty(), "import needs --file");
+        Ok(ImportArgs {
+            file,
+            out: f.opt("out").map(str::to_string),
+        })
+    }
+}
+
+fn parse_opt_level(s: &str) -> anyhow::Result<OptLevel> {
+    match s {
+        "none" => Ok(OptLevel::None),
+        "exact" => Ok(OptLevel::Exact),
+        "fast" => Ok(OptLevel::Fast),
+        other => anyhow::bail!("unknown --opt `{other}` (none|exact|fast)"),
+    }
+}
+
+/// `spa serve` flags, resolved into a [`ServeCfg`].
+struct ServeArgs {
+    cfg: ServeCfg,
+}
+
+impl ServeArgs {
+    fn parse(f: &Flags) -> anyhow::Result<ServeArgs> {
+        let common = CommonArgs::parse(f, "resnet18");
+        Ok(ServeArgs {
+            cfg: ServeCfg {
+                addr: f.get("addr", "127.0.0.1:7878"),
+                tick: Duration::from_millis(f.usize("tick-ms", 2) as u64),
+                max_batch: f.usize("max-batch", 64),
+                cache_cap: f.usize("cache-cap", 0),
+                level: parse_opt_level(&f.get("opt", "exact"))?,
+                image: common.icfg,
+                seed: common.seed,
+                prune_rf: f.opt("prune-rf").and_then(|v| v.parse().ok()),
+                criterion: f.get("criterion", "l1"),
+            },
+        })
+    }
+}
+
+struct BenchDiffArgs {
+    base: String,
+    fresh: String,
+    warn_pct: f64,
+}
+
+impl BenchDiffArgs {
+    fn parse(f: &Flags) -> anyhow::Result<BenchDiffArgs> {
+        let base = f.get("base", "");
+        let fresh = f.get("new", "");
+        anyhow::ensure!(
+            !base.is_empty() && !fresh.is_empty(),
+            "bench-diff needs --base and --new"
+        );
+        Ok(BenchDiffArgs {
+            base,
+            fresh,
+            warn_pct: f.f64("warn-pct", 25.0),
+        })
     }
 }
 
@@ -73,10 +316,253 @@ COMMANDS:
   optimize --model <name> [--out <file>]       run the inference-time
            graph passes (dead nodes, identities, BN fold, const fold)
            and report the compiled-plan arena footprint
+  serve    [--addr H:P --tick-ms N --max-batch N --cache-cap N]
+           [--opt none|exact|fast --prune-rf F --criterion l1]
+           batching inference server over compiled plans (spa::serve)
+  bench-diff --base <json> --new <json> [--warn-pct F]
+           compare two SPA_BENCH_JSON snapshots, warn on regressions
   convert  --model <name> --dialect <torch|tf|jax|mxnet> --out <file>
   import   --file <dialect json> [--out <spa-ir json>]
   models                                       list zoo models
 ";
+
+fn cmd_info(a: &CommonArgs) -> anyhow::Result<()> {
+    let g = a.graph()?;
+    // read-only inspection: grouping alone, no saliency pass
+    let groups = crate::prune::build_groups(&g)?;
+    println!("model   : {}", g.name);
+    println!("ops     : {}", g.ops.len());
+    println!("params  : {}", g.num_params());
+    println!("flops   : {}", analysis::flops(&g));
+    println!(
+        "groups  : {} ({} prunable CCs)",
+        groups.groups.len(),
+        groups.num_prunable_ccs()
+    );
+    Ok(())
+}
+
+fn cmd_train(a: &TrainArgs) -> anyhow::Result<()> {
+    let mut g = a.common.graph()?;
+    let ds = a.common.dataset();
+    let rep = crate::train::train(&mut g, &ds, &a.cfg)?;
+    for e in &rep.history {
+        println!("step {:>5}  loss {:.4}  lr {:.4}", e.step, e.loss, e.lr);
+    }
+    let acc = crate::train::evaluate(&g, &ds, 256)?;
+    println!("test accuracy: {:.2}%", acc * 100.0);
+    Ok(())
+}
+
+fn cmd_prune(a: PruneArgs) -> anyhow::Result<()> {
+    let g = a.common.graph()?;
+    let ds = a.common.dataset();
+    let rep = match a.time {
+        PruneTime::TrainPruneFinetune => train_prune_finetune(g, &ds, &a.cfg)?.1,
+        PruneTime::PruneTrain => prune_train(g, &ds, &a.cfg)?.1,
+    };
+    let mut t = Table::new(
+        "pipeline result",
+        &["model", "ori acc.", "pruned acc.", "final acc.", "RF", "RP", "secs"],
+    );
+    t.row(&[
+        a.common.model,
+        format!("{:.2}%", rep.ori_acc * 100.0),
+        format!("{:.2}%", rep.pruned_acc * 100.0),
+        format!("{:.2}%", rep.final_acc * 100.0),
+        format!("{:.2}x", rep.rf),
+        format!("{:.2}x", rep.rp),
+        format!("{:.1}", rep.seconds),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_obspa(a: &ObspaArgs) -> anyhow::Result<()> {
+    let g = a.common.graph()?;
+    let ds = a.common.dataset();
+    let ood = ImageDataset::synth_cifar(
+        a.common.icfg.classes * 2,
+        256,
+        a.common.icfg.hw,
+        a.common.icfg.channels,
+        a.common.seed ^ 0xF00D,
+    );
+    let (_, rep) = train_prune(
+        g,
+        &ds,
+        Some(&ood),
+        NoFinetuneAlgo::Obspa(a.source),
+        a.target_rf,
+        &a.cfg,
+    )?;
+    println!(
+        "OBSPA({}) {}: acc {:.2}% -> {:.2}% (drop {:.2}%), RF {:.2}x RP {:.2}x",
+        a.source.name(),
+        a.common.model,
+        rep.ori_acc * 100.0,
+        rep.final_acc * 100.0,
+        (rep.ori_acc - rep.final_acc) * 100.0,
+        rep.rf,
+        rep.rp
+    );
+    Ok(())
+}
+
+fn cmd_optimize(a: &OptimizeArgs) -> anyhow::Result<()> {
+    let mut g = a.common.graph()?;
+    let ops_before = g.ops.len();
+    let params_before = g.num_params();
+    let rep = crate::ir::passes::optimize(&mut g)?;
+    println!("model      : {}", a.common.model);
+    println!("ops        : {} -> {}", ops_before, g.ops.len());
+    println!("params     : {} -> {}", params_before, g.num_params());
+    println!(
+        "passes     : {} dead ops, {} identities, {} BN folded, {} const folded",
+        rep.dead_ops, rep.identities_removed, rep.bn_folded, rep.constants_folded
+    );
+    let plan = crate::exec::Plan::compile(&g, crate::exec::PlanOpts::default())?;
+    let pr = plan.report();
+    println!(
+        "exec plan  : {} steps ({} fused, {} aliased), {} arena slots",
+        pr.steps, pr.fused_ops, pr.aliased_ops, pr.arena_slots
+    );
+    println!(
+        "activations: {} arena bytes vs {} interpreted bytes (+{} wt cache)",
+        pr.peak_arena_bytes, pr.interp_intermediate_bytes, pr.gemm_wt_bytes
+    );
+    if let Some(out) = &a.out {
+        ir_serde::save_graph(&g, out, true)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: ServeArgs) -> anyhow::Result<()> {
+    let tick = a.cfg.tick;
+    let server = serve::Server::spawn(a.cfg)?;
+    println!(
+        "serving on {} (tick {:?}; length-prefixed TCP, see README \"Serving\")",
+        server.local_addr(),
+        tick
+    );
+    let stats = server.stats();
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        println!(
+            "served {:>8} ({} errors, {} batches)  p50 {:>7}us  p99 {:>7}us",
+            stats.served(),
+            stats.errors(),
+            stats.batches(),
+            stats.latency_percentile_us(50.0).unwrap_or(0),
+            stats.latency_percentile_us(99.0).unwrap_or(0),
+        );
+    }
+}
+
+fn cmd_convert(a: &ConvertArgs) -> anyhow::Result<()> {
+    let g = a.common.graph()?;
+    let out = a
+        .out
+        .clone()
+        .unwrap_or_else(|| format!("{}.{}.json", a.common.model, a.dialect.name()));
+    std::fs::write(&out, frontends::export_to_string(&g, a.dialect))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_import(a: &ImportArgs) -> anyhow::Result<()> {
+    let g = frontends::import_from_string(&std::fs::read_to_string(&a.file)?)?;
+    println!(
+        "imported `{}`: {} ops, {} params, {} flops",
+        g.name,
+        g.ops.len(),
+        g.num_params(),
+        analysis::flops(&g)
+    );
+    if let Some(out) = &a.out {
+        ir_serde::save_graph(&g, out, true)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Load a `SPA_BENCH_JSON` array as `(name, ns_per_iter)` pairs; later
+/// entries for the same name win (the recorder appends).
+fn load_bench(path: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+    let Json::Arr(entries) = crate::util::parse_json(&text)? else {
+        anyhow::bail!("{path}: expected a JSON array of bench entries");
+    };
+    let mut out: Vec<(String, f64)> = Vec::new();
+    for e in &entries {
+        let Json::Obj(o) = e else { continue };
+        let (Some(Json::Str(name)), Some(Json::Num(ns))) =
+            (o.get("name"), o.get("ns_per_iter"))
+        else {
+            continue;
+        };
+        match out.iter_mut().find(|(n, _)| n == name) {
+            Some(slot) => slot.1 = *ns,
+            None => out.push((name.clone(), *ns)),
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
+    let base = match load_bench(&a.base) {
+        Ok(v) if !v.is_empty() => v,
+        // tolerate a missing/empty baseline: the diff is advisory, and
+        // the first PR that commits a snapshot bootstraps it
+        _ => {
+            println!(
+                "bench-diff: no baseline entries at {} — commit the smoke-lane \
+                 SPA_BENCH_JSON output to enable regression diffs",
+                a.base
+            );
+            return Ok(());
+        }
+    };
+    let fresh = load_bench(&a.fresh)?;
+    anyhow::ensure!(!fresh.is_empty(), "{}: no bench entries", a.fresh);
+    let mut t = Table::new("bench-diff (ns/iter)", &["bench", "base", "new", "delta"]);
+    let mut regressions = 0usize;
+    for (name, new_ns) in &fresh {
+        match base.iter().find(|(n, _)| n == name) {
+            Some((_, base_ns)) if *base_ns > 0.0 => {
+                let pct = (new_ns - base_ns) / base_ns * 100.0;
+                t.row(&[
+                    name.clone(),
+                    format!("{base_ns:.0}"),
+                    format!("{new_ns:.0}"),
+                    format!("{pct:+.1}%"),
+                ]);
+                if pct > a.warn_pct {
+                    regressions += 1;
+                    println!(
+                        "::warning::bench `{name}` regressed {pct:+.1}% \
+                         ({base_ns:.0} -> {new_ns:.0} ns/iter)"
+                    );
+                }
+            }
+            _ => t.row(&[
+                name.clone(),
+                "-".to_string(),
+                format!("{new_ns:.0}"),
+                "new".to_string(),
+            ]),
+        }
+    }
+    t.print();
+    println!(
+        "bench-diff: {} benches compared, {} regression(s) beyond {:.0}%",
+        fresh.len(),
+        regressions,
+        a.warn_pct
+    );
+    Ok(())
+}
 
 /// CLI entrypoint (used by `rust/src/main.rs`).
 pub fn run(args: Vec<String>) -> anyhow::Result<()> {
@@ -85,200 +571,44 @@ pub fn run(args: Vec<String>) -> anyhow::Result<()> {
         return Ok(());
     };
     let flags = Flags::parse(&args[1..])?;
-    let icfg = ImageCfg {
-        hw: flags.usize("hw", 16),
-        classes: flags.usize("classes", 10),
-        ..Default::default()
-    };
-    let seed = flags.usize("seed", 1) as u64;
     match cmd.as_str() {
         "models" => {
             for m in zoo::IMAGE_MODELS {
                 println!("{m}");
             }
             println!("{} (also available)", zoo::EXTRA_MODELS.join(" "));
+            Ok(())
         }
-        "info" => {
-            let g = zoo::by_name(&flags.get("model", "resnet18"), icfg, seed)?;
-            // read-only inspection: grouping alone, no saliency pass
-            let groups = crate::prune::build_groups(&g)?;
-            println!("model   : {}", g.name);
-            println!("ops     : {}", g.ops.len());
-            println!("params  : {}", g.num_params());
-            println!("flops   : {}", analysis::flops(&g));
-            println!(
-                "groups  : {} ({} prunable CCs)",
-                groups.groups.len(),
-                groups.num_prunable_ccs()
-            );
+        "info" => cmd_info(&CommonArgs::parse(&flags, "resnet18")),
+        "train" => cmd_train(&TrainArgs::parse(&flags)),
+        "prune" => cmd_prune(PruneArgs::parse(&flags)?),
+        "obspa" => cmd_obspa(&ObspaArgs::parse(&flags)?),
+        "optimize" => cmd_optimize(&OptimizeArgs::parse(&flags)),
+        "serve" => cmd_serve(ServeArgs::parse(&flags)?),
+        "bench-diff" => cmd_bench_diff(&BenchDiffArgs::parse(&flags)?),
+        "convert" => cmd_convert(&ConvertArgs::parse(&flags)?),
+        "import" => cmd_import(&ImportArgs::parse(&flags)?),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
         }
-        "train" => {
-            let mut g = zoo::by_name(&flags.get("model", "resnet18"), icfg, seed)?;
-            let ds = ImageDataset::synth_cifar(icfg.classes, 1024, icfg.hw, icfg.channels, seed);
-            let cfg = TrainCfg {
-                steps: flags.usize("steps", 200),
-                lr: flags.f64("lr", 0.05) as f32,
-                ..Default::default()
-            };
-            let rep = crate::train::train(&mut g, &ds, &cfg)?;
-            for e in &rep.history {
-                println!("step {:>5}  loss {:.4}  lr {:.4}", e.step, e.loss, e.lr);
-            }
-            let acc = crate::train::evaluate(&g, &ds, 256)?;
-            println!("test accuracy: {:.2}%", acc * 100.0);
-        }
-        "prune" => {
-            let model = flags.get("model", "resnet18");
-            let g = zoo::by_name(&model, icfg, seed)?;
-            let ds = ImageDataset::synth_cifar(icfg.classes, 1024, icfg.hw, icfg.channels, seed);
-            let cfg = PipelineCfg {
-                criterion: Criterion::parse(&flags.get("criterion", "l1"))?,
-                scope: if flags.get("scope", "grouped") == "grouped" {
-                    Scope::FullCc
-                } else {
-                    Scope::SourceOnly
-                },
-                target_rf: flags.f64("target-rf", 2.0),
-                iterations: flags.usize("iterations", 1),
-                train: TrainCfg {
-                    steps: flags.usize("train-steps", 150),
-                    ..Default::default()
-                },
-                finetune: TrainCfg {
-                    steps: flags.usize("finetune-steps", 80),
-                    lr: 0.02,
-                    ..Default::default()
-                },
-                ..Default::default()
-            };
-            let rep = match flags.get("time", "tpf").as_str() {
-                "tpf" | "train-prune-finetune" => train_prune_finetune(g, &ds, &cfg)?.1,
-                "pt" | "prune-train" => prune_train(g, &ds, &cfg)?.1,
-                other => anyhow::bail!("unknown --time `{other}` (tpf|pt)"),
-            };
-            let mut t = Table::new(
-                "pipeline result",
-                &["model", "ori acc.", "pruned acc.", "final acc.", "RF", "RP", "secs"],
-            );
-            t.row(&[
-                model,
-                format!("{:.2}%", rep.ori_acc * 100.0),
-                format!("{:.2}%", rep.pruned_acc * 100.0),
-                format!("{:.2}%", rep.final_acc * 100.0),
-                format!("{:.2}x", rep.rf),
-                format!("{:.2}x", rep.rp),
-                format!("{:.1}", rep.seconds),
-            ]);
-            t.print();
-        }
-        "obspa" => {
-            let model = flags.get("model", "resnet50");
-            let g = zoo::by_name(&model, icfg, seed)?;
-            let ds = ImageDataset::synth_cifar(icfg.classes, 1024, icfg.hw, icfg.channels, seed);
-            let ood = ImageDataset::synth_cifar(
-                icfg.classes * 2,
-                256,
-                icfg.hw,
-                icfg.channels,
-                seed ^ 0xF00D,
-            );
-            let source = match flags.get("source", "id").as_str() {
-                "id" => CalibSource::InDistribution,
-                "ood" => CalibSource::OutOfDistribution,
-                "datafree" => CalibSource::DataFree,
-                other => anyhow::bail!("unknown --source `{other}`"),
-            };
-            let cfg = PipelineCfg {
-                train: TrainCfg {
-                    steps: flags.usize("train-steps", 150),
-                    ..Default::default()
-                },
-                ..Default::default()
-            };
-            let (_, rep) = train_prune(
-                g,
-                &ds,
-                Some(&ood),
-                NoFinetuneAlgo::Obspa(source),
-                flags.f64("target-rf", 1.5),
-                &cfg,
-            )?;
-            println!(
-                "OBSPA({}) {}: acc {:.2}% -> {:.2}% (drop {:.2}%), RF {:.2}x RP {:.2}x",
-                source.name(),
-                model,
-                rep.ori_acc * 100.0,
-                rep.final_acc * 100.0,
-                (rep.ori_acc - rep.final_acc) * 100.0,
-                rep.rf,
-                rep.rp
-            );
-        }
-        "optimize" => {
-            let model = flags.get("model", "resnet18");
-            let mut g = zoo::by_name(&model, icfg, seed)?;
-            let ops_before = g.ops.len();
-            let params_before = g.num_params();
-            let rep = crate::ir::passes::optimize(&mut g)?;
-            println!("model      : {model}");
-            println!("ops        : {} -> {}", ops_before, g.ops.len());
-            println!("params     : {} -> {}", params_before, g.num_params());
-            println!(
-                "passes     : {} dead ops, {} identities, {} BN folded, {} const folded",
-                rep.dead_ops, rep.identities_removed, rep.bn_folded, rep.constants_folded
-            );
-            let plan = crate::exec::Plan::compile(&g, crate::exec::PlanOpts::default())?;
-            let pr = plan.report();
-            println!(
-                "exec plan  : {} steps ({} fused, {} aliased), {} arena slots",
-                pr.steps, pr.fused_ops, pr.aliased_ops, pr.arena_slots
-            );
-            println!(
-                "activations: {} arena bytes vs {} interpreted bytes (+{} wt cache)",
-                pr.peak_arena_bytes, pr.interp_intermediate_bytes, pr.gemm_wt_bytes
-            );
-            let out = flags.get("out", "");
-            if !out.is_empty() {
-                ir_serde::save_graph(&g, &out, true)?;
-                println!("wrote {out}");
-            }
-        }
-        "convert" => {
-            let model = flags.get("model", "resnet18");
-            let dialect = Dialect::parse(&flags.get("dialect", "tf"))?;
-            let g = zoo::by_name(&model, icfg, seed)?;
-            let out = flags.get("out", &format!("{model}.{}.json", dialect.name()));
-            std::fs::write(&out, frontends::export_to_string(&g, dialect))?;
-            println!("wrote {out}");
-        }
-        "import" => {
-            let file = flags.get("file", "");
-            anyhow::ensure!(!file.is_empty(), "import needs --file");
-            let g = frontends::import_from_string(&std::fs::read_to_string(&file)?)?;
-            println!(
-                "imported `{}`: {} ops, {} params, {} flops",
-                g.name,
-                g.ops.len(),
-                g.num_params(),
-                analysis::flops(&g)
-            );
-            let out = flags.get("out", "");
-            if !out.is_empty() {
-                ir_serde::save_graph(&g, &out, true)?;
-                println!("wrote {out}");
-            }
-        }
-        "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             anyhow::bail!("unknown command `{other}`\n{USAGE}");
         }
     }
-    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn flags(pairs: &[(&str, &str)]) -> Flags {
+        let args: Vec<String> = pairs
+            .iter()
+            .flat_map(|(k, v)| [format!("--{k}"), v.to_string()])
+            .collect();
+        Flags::parse(&args).unwrap()
+    }
 
     #[test]
     fn flags_parse() {
@@ -332,5 +662,81 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn common_args_share_flag_defaults() {
+        let f = flags(&[("hw", "8"), ("seed", "9")]);
+        let a = CommonArgs::parse(&f, "resnet18");
+        assert_eq!(a.model, "resnet18");
+        assert_eq!(a.icfg.hw, 8);
+        assert_eq!(a.seed, 9);
+        let b = CommonArgs::parse(&f, "resnet50");
+        assert_eq!(b.model, "resnet50");
+    }
+
+    #[test]
+    fn prune_args_reject_unknown_time() {
+        let f = flags(&[("time", "sideways")]);
+        let err = PruneArgs::parse(&f).unwrap_err();
+        assert_eq!(err.to_string(), "unknown --time `sideways` (tpf|pt)");
+    }
+
+    #[test]
+    fn serve_args_resolve_typed_config() {
+        let f = flags(&[
+            ("addr", "127.0.0.1:0"),
+            ("tick-ms", "5"),
+            ("max-batch", "16"),
+            ("opt", "fast"),
+            ("prune-rf", "1.5"),
+        ]);
+        let a = ServeArgs::parse(&f).unwrap();
+        assert_eq!(a.cfg.addr, "127.0.0.1:0");
+        assert_eq!(a.cfg.tick, Duration::from_millis(5));
+        assert_eq!(a.cfg.max_batch, 16);
+        assert_eq!(a.cfg.level, OptLevel::Fast);
+        assert_eq!(a.cfg.prune_rf, Some(1.5));
+        let bad = flags(&[("opt", "warp")]);
+        let err = ServeArgs::parse(&bad).unwrap_err();
+        assert_eq!(err.to_string(), "unknown --opt `warp` (none|exact|fast)");
+    }
+
+    #[test]
+    fn bench_diff_tolerates_missing_baseline_and_warns_on_regression() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let base = dir.join(format!("spa_cli_bd_base_{pid}.json"));
+        let fresh = dir.join(format!("spa_cli_bd_new_{pid}.json"));
+        std::fs::write(&fresh, r#"[{"name":"a","ns_per_iter":130.0,"iters":3}]"#).unwrap();
+        // missing baseline: advisory notice, still Ok
+        run(vec![
+            "bench-diff".into(),
+            "--base".into(),
+            base.to_str().unwrap().into(),
+            "--new".into(),
+            fresh.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        // present baseline: diff runs (warn path is print-only, still Ok)
+        std::fs::write(&base, r#"[{"name":"a","ns_per_iter":100.0,"iters":3}]"#).unwrap();
+        run(vec![
+            "bench-diff".into(),
+            "--base".into(),
+            base.to_str().unwrap().into(),
+            "--new".into(),
+            fresh.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let loaded = load_bench(base.to_str().unwrap()).unwrap();
+        assert_eq!(loaded, vec![("a".to_string(), 100.0)]);
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+    }
+
+    #[test]
+    fn bench_diff_requires_both_paths() {
+        let f = flags(&[("base", "x.json")]);
+        assert!(BenchDiffArgs::parse(&f).is_err());
     }
 }

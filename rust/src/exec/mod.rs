@@ -45,12 +45,18 @@
 //!     .plan()?
 //!     .apply()?;
 //! let plan = pruned.compile()?;             // compile once
-//! let mut ws = plan.workspace();
+//! let mut runner = plan.runner();           // owns a reusable Workspace
 //! # let x = spa::tensor::Tensor::zeros(&[8, 3, 32, 32]);
-//! let logits = plan.run(&mut ws, &[(plan.inputs()[0], &x)])?; // run many
+//! let logits = runner.predict(&x)?;         // run many
 //! println!("peak arena: {} bytes", plan.report().peak_arena_bytes);
 //! # Ok(()) }
 //! ```
+//!
+//! [`Runner`] is the single entry point for repeated inference: it pairs
+//! a plan with an owned, reusable [`Workspace`] so callers (the serve
+//! batch loop, [`Batcher`], `train::evaluate`, OBSPA capture) stop
+//! hand-rolling workspace management. [`Plan::predict`] remains as a
+//! one-shot convenience shim over a throwaway runner.
 
 use crate::ir::passes::{self, OptReport};
 use crate::ir::shape::infer_op_output_shapes;
@@ -61,7 +67,7 @@ use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 
 /// How aggressively [`Plan::compile`] may transform the graph.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum OptLevel {
     /// Schedule + arena only; no fusion. The debugging baseline.
     None,
@@ -522,6 +528,12 @@ impl Plan {
         }
     }
 
+    /// A [`Runner`] over this plan with a fresh owned workspace — the
+    /// preferred entry point for repeated inference.
+    pub fn runner(&self) -> Runner<'_> {
+        Runner::new(self)
+    }
+
     /// Execute the plan and return the first graph output (logits for
     /// classifiers). Feeds bind input data ids to tensors; the batch dim
     /// may differ from the nominal compile-time shape.
@@ -530,14 +542,11 @@ impl Plan {
         self.value(ws, self.graph.outputs[0])
     }
 
-    /// One-shot convenience: fresh workspace, single-input graph.
+    /// One-shot convenience: fresh workspace, single-input graph. A thin
+    /// shim over [`Plan::runner`]; repeated callers should hold a
+    /// [`Runner`] instead to reuse its workspace.
     pub fn predict(&self, x: &Tensor) -> anyhow::Result<Tensor> {
-        anyhow::ensure!(
-            self.graph.inputs.len() == 1,
-            "predict requires a single-input graph"
-        );
-        let mut ws = self.workspace();
-        self.run(&mut ws, &[(self.graph.inputs[0], x)])
+        self.runner().predict(x)
     }
 
     /// Read a value from the workspace after [`Plan::run`]: graph
@@ -943,10 +952,73 @@ fn bcast_binary(
     Ok(())
 }
 
+/// A [`Plan`] paired with an owned, reusable [`Workspace`] — the unified
+/// entry point for repeated inference. Every in-repo execution path
+/// (serve batch loop, [`Batcher`] workers, `train::evaluate`, OBSPA
+/// capture) drives a plan through one of these instead of hand-rolling
+/// `workspace()` / `run()` pairs; steady-state calls allocate nothing.
+pub struct Runner<'p> {
+    plan: &'p Plan,
+    ws: Workspace,
+}
+
+impl<'p> Runner<'p> {
+    /// A runner with a fresh workspace sized for `plan`.
+    pub fn new(plan: &'p Plan) -> Runner<'p> {
+        Runner {
+            plan,
+            ws: plan.workspace(),
+        }
+    }
+
+    /// A runner over an existing workspace (e.g. one recycled from a
+    /// [`Batcher`] pool). The workspace must have been created by
+    /// [`Plan::workspace`] on this same plan.
+    pub fn from_parts(plan: &'p Plan, ws: Workspace) -> Runner<'p> {
+        Runner { plan, ws }
+    }
+
+    /// The plan this runner executes.
+    pub fn plan(&self) -> &'p Plan {
+        self.plan
+    }
+
+    /// Tear down into the owned workspace (for returning it to a pool).
+    pub fn into_workspace(self) -> Workspace {
+        self.ws
+    }
+
+    /// Execute and return the first graph output (logits).
+    pub fn run(&mut self, feeds: &[(DataId, &Tensor)]) -> anyhow::Result<Tensor> {
+        self.plan.run(&mut self.ws, feeds)
+    }
+
+    /// Single-input convenience: feed `x` to the graph's one input.
+    pub fn predict(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(
+            self.plan.graph.inputs.len() == 1,
+            "predict requires a single-input graph"
+        );
+        let input = self.plan.graph.inputs[0];
+        self.run(&[(input, x)])
+    }
+
+    /// Execute all steps, leaving results readable via [`Runner::value`].
+    pub fn execute(&mut self, feeds: &[(DataId, &Tensor)]) -> anyhow::Result<()> {
+        self.plan.execute(&mut self.ws, feeds)
+    }
+
+    /// Read a retained/output value after a run (see [`Plan::value`]).
+    pub fn value(&self, id: DataId) -> anyhow::Result<Tensor> {
+        self.plan.value(&self.ws, id)
+    }
+}
+
 /// Deterministic concurrent inference over one [`Plan`]: requests fan
-/// out across the `crate::util::par` pool, each executed in a pooled
-/// [`Workspace`]. Outputs are bit-identical at any `SPA_THREADS` width
-/// and independent of which worker served which request.
+/// out across the `crate::util::par` pool, each executed by a [`Runner`]
+/// over a pooled [`Workspace`]. Outputs are bit-identical at any
+/// `SPA_THREADS` width and independent of which worker served which
+/// request.
 pub struct Batcher<'p> {
     plan: &'p Plan,
     pool: Mutex<Vec<Workspace>>,
@@ -954,28 +1026,43 @@ pub struct Batcher<'p> {
 
 impl<'p> Batcher<'p> {
     pub fn new(plan: &'p Plan) -> Batcher<'p> {
+        Batcher::with_pool(plan, Vec::new())
+    }
+
+    /// A batcher seeded with previously warmed workspaces (the serve
+    /// loop persists pools across ticks this way). Workspaces must come
+    /// from [`Plan::workspace`] on this same plan.
+    pub fn with_pool(plan: &'p Plan, pool: Vec<Workspace>) -> Batcher<'p> {
         Batcher {
             plan,
-            pool: Mutex::new(Vec::new()),
+            pool: Mutex::new(pool),
         }
+    }
+
+    /// Tear down into the warmed workspace pool (for reuse next tick).
+    pub fn into_pool(self) -> Vec<Workspace> {
+        self.pool.into_inner().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Run one tensor per request through the plan (single-input
     /// graphs), preserving request order in the results.
     pub fn run_batch(&self, requests: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
         anyhow::ensure!(
             self.plan.graph.inputs.len() == 1,
             "Batcher requires a single-input graph"
         );
-        let input = self.plan.graph.inputs[0];
         let results: Vec<anyhow::Result<Tensor>> = par::par_map(requests, |x| {
-            let mut ws = {
+            let ws = {
                 let mut pool = self.pool.lock().unwrap();
                 pool.pop()
             }
             .unwrap_or_else(|| self.plan.workspace());
-            let r = self.plan.run(&mut ws, &[(input, x)]);
-            self.pool.lock().unwrap().push(ws);
+            let mut runner = Runner::from_parts(self.plan, ws);
+            let r = runner.predict(x);
+            self.pool.lock().unwrap().push(runner.into_workspace());
             r
         });
         results.into_iter().collect()
@@ -1236,6 +1323,34 @@ mod tests {
             let want = engine::predict(&g, req.clone()).unwrap();
             assert_bits_eq(out, &want);
         }
+    }
+
+    #[test]
+    fn batcher_empty_input_is_a_noop() {
+        let g = zoo::mlp(cfg(), &[8], 13);
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let batcher = Batcher::new(&plan);
+        let outs = batcher.run_batch(&[]).unwrap();
+        assert!(outs.is_empty());
+        assert!(batcher.into_pool().is_empty());
+    }
+
+    #[test]
+    fn runner_reuses_workspace_and_matches_predict() {
+        let g = zoo::resnet18(cfg(), 14);
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let mut rng = Rng::new(9);
+        let mut runner = plan.runner();
+        for batch in [1usize, 2, 5] {
+            let x = rand_input(&g, batch, &mut rng);
+            let got = runner.predict(&x).unwrap();
+            assert_bits_eq(&got, &plan.predict(&x).unwrap());
+        }
+        // round-trip the workspace through a pool, as Batcher does
+        let ws = runner.into_workspace();
+        let mut again = Runner::from_parts(&plan, ws);
+        let x = rand_input(&g, 2, &mut rng);
+        assert_bits_eq(&again.predict(&x).unwrap(), &plan.predict(&x).unwrap());
     }
 
     #[test]

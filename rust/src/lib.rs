@@ -16,6 +16,11 @@
 //!   liveness-managed buffer arena, fused Conv→BN→Act chains, and
 //!   deterministic batched inference — bit-identical to the [`engine`]
 //!   interpreter, which remains the autodiff/training substrate.
+//! * **Any traffic** — [`serve`] is a batching inference server over
+//!   compiled plans: length-prefixed TCP, a deadline-aware dynamic
+//!   batcher that coalesces concurrent requests into one dispatch per
+//!   tick, and a process-global plan cache keyed by
+//!   `(model, prune config, OptLevel)`.
 //! * **Any time** — [`session`] is the single user-facing entry point:
 //!   a staged builder over the four-step algorithm, with pluggable
 //!   [`criteria::Saliency`] scores; [`coordinator`] drives prune-train,
@@ -37,10 +42,11 @@ pub mod ir;
 pub mod obspa;
 pub mod prune;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod tensor;
 pub mod train;
 pub mod util;
 pub mod zoo;
 
-pub use session::{Plan, PruneReport, PrunedModel, Session, Target};
+pub use session::{Plan, PlanKey, PruneReport, PrunedModel, Session, Target};

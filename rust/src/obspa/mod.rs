@@ -133,15 +133,15 @@ fn capture_hessians(
             ..Default::default()
         },
     )?;
-    let mut ws = plan.workspace();
-    plan.execute(&mut ws, &[(g.inputs[0], calib)])?;
+    let mut runner = plan.runner();
+    runner.execute(&[(g.inputs[0], calib)])?;
     let mut states = HashMap::new();
     let mut backend = rk::Backend::Native;
     for op in &g.ops {
         if !is_obs_layer(&op.kind) {
             continue;
         }
-        let x = &plan.value(&ws, op.inputs[0])?;
+        let x = &runner.value(op.inputs[0])?;
         let w_shape = &g.data(op.inputs[1]).shape;
         let (xs, kblock): (Vec<Tensor>, usize) = match &op.kind {
             OpKind::Conv2d { stride, pad, groups } => (

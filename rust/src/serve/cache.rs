@@ -1,0 +1,209 @@
+//! Process-global plan cache keyed by `(model, prune config, OptLevel)`.
+//!
+//! Compiling a [`crate::exec::Plan`] is the expensive step of serving a
+//! model; the cache makes it a once-per-key cost. Keys are
+//! [`crate::session::PlanKey`]s — the prune component derives from
+//! [`crate::session::PruneReport::cache_tag`], so two identically
+//! configured prunes of the same model share one compiled plan while
+//! different targets, criteria, or [`crate::exec::OptLevel`]s do not.
+//!
+//! Eviction is warm/cold: every access stamps the entry with a logical
+//! clock tick, and when the cache exceeds capacity the coldest entry
+//! (smallest stamp) is dropped. Each entry also carries the warmed
+//! [`Workspace`] pool the serve batch loop persists across ticks, so an
+//! eviction sheds the arena memory along with the plan.
+
+use crate::exec::{Plan, Workspace};
+use crate::session::PlanKey;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A compiled plan plus the warmed workspace pool that serves it.
+pub struct CachedPlan {
+    pub plan: Plan,
+    /// Workspaces recycled across batch-loop ticks ([`crate::exec::Batcher::with_pool`]).
+    pub pool: Mutex<Vec<Workspace>>,
+}
+
+struct Entry {
+    plan: Arc<CachedPlan>,
+    last_use: u64,
+}
+
+struct Inner {
+    clock: u64,
+    map: HashMap<PlanKey, Entry>,
+}
+
+/// Bounded plan cache with warm/cold eviction — see the module docs.
+pub struct PlanCache {
+    cap: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+impl PlanCache {
+    /// A cache holding at most `cap` compiled plans (min 1).
+    pub fn with_capacity(cap: usize) -> PlanCache {
+        PlanCache {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner {
+                clock: 0,
+                map: HashMap::new(),
+            }),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+        }
+    }
+
+    /// The process-global cache every [`crate::serve::Server`] shares by
+    /// default. Capacity comes from `SPA_PLAN_CACHE_CAP` (default 8),
+    /// read once on first use.
+    pub fn global() -> Arc<PlanCache> {
+        static GLOBAL: OnceLock<Arc<PlanCache>> = OnceLock::new();
+        GLOBAL
+            .get_or_init(|| {
+                let cap = std::env::var("SPA_PLAN_CACHE_CAP")
+                    .ok()
+                    .and_then(|v| v.trim().parse().ok())
+                    .unwrap_or(8);
+                Arc::new(PlanCache::with_capacity(cap))
+            })
+            .clone()
+    }
+
+    /// Look up `key`, compiling via `build` on a miss. The returned
+    /// entry is shared: concurrent holders keep an evicted plan alive
+    /// until they drop it.
+    pub fn get_or_compile(
+        &self,
+        key: &PlanKey,
+        build: impl FnOnce() -> anyhow::Result<Plan>,
+    ) -> anyhow::Result<Arc<CachedPlan>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let now = inner.clock;
+        if let Some(e) = inner.map.get_mut(key) {
+            e.last_use = now;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(&e.plan));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(CachedPlan {
+            plan: build()?,
+            pool: Mutex::new(Vec::new()),
+        });
+        inner.map.insert(
+            key.clone(),
+            Entry {
+                plan: Arc::clone(&plan),
+                last_use: now,
+            },
+        );
+        while inner.map.len() > self.cap {
+            let coldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| k.clone())
+                .expect("nonempty over-capacity cache");
+            inner.map.remove(&coldest);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(plan)
+    }
+
+    /// Cached plans currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> usize {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{OptLevel, PlanOpts};
+    use crate::zoo::{self, ImageCfg};
+
+    fn key(model: &str) -> PlanKey {
+        PlanKey::baseline(model, OptLevel::Exact)
+    }
+
+    fn compile(model: &str) -> anyhow::Result<Plan> {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let g = zoo::by_name(model, cfg, 1)?;
+        Plan::compile(&g, PlanOpts::default())
+    }
+
+    #[test]
+    fn hit_returns_the_same_plan() {
+        let cache = PlanCache::with_capacity(4);
+        let a = cache.get_or_compile(&key("mlp"), || compile("mlp")).unwrap();
+        let b = cache
+            .get_or_compile(&key("mlp"), || panic!("must not rebuild on a hit"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn cold_entries_are_evicted_first() {
+        let cache = PlanCache::with_capacity(2);
+        cache.get_or_compile(&key("mlp"), || compile("mlp")).unwrap();
+        cache
+            .get_or_compile(&key("alexnet"), || compile("alexnet"))
+            .unwrap();
+        // warm mlp so alexnet is the cold one
+        cache
+            .get_or_compile(&key("mlp"), || panic!("hit expected"))
+            .unwrap();
+        cache
+            .get_or_compile(&key("resnet18"), || compile("resnet18"))
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        // mlp survived; alexnet was evicted and recompiles
+        cache
+            .get_or_compile(&key("mlp"), || panic!("mlp must be warm"))
+            .unwrap();
+        let mut rebuilt = false;
+        cache
+            .get_or_compile(&key("alexnet"), || {
+                rebuilt = true;
+                compile("alexnet")
+            })
+            .unwrap();
+        assert!(rebuilt, "cold alexnet must have been evicted");
+    }
+
+    #[test]
+    fn build_errors_do_not_poison_the_cache() {
+        let cache = PlanCache::with_capacity(2);
+        let err = cache.get_or_compile(&key("nope"), || compile("nope"));
+        assert!(err.is_err());
+        assert_eq!(cache.len(), 0);
+    }
+}

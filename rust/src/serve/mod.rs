@@ -1,0 +1,624 @@
+//! `spa::serve` — a batching inference server over compiled plans.
+//!
+//! The paper's "any time" pruning story only pays off when the pruned
+//! model's smaller FLOPs become user-visible throughput; this module is
+//! the front-end that cashes that in. It is hermetic (std-net,
+//! length-prefixed TCP — see [`protocol`]) and long-running, exposed as
+//! the `spa serve` CLI subcommand:
+//!
+//! * **Admission**: each connection gets a handler thread that decodes
+//!   requests and parks them on a [`queue::Queue`], blocking per
+//!   request until the batch loop responds.
+//! * **Dynamic batching**: a single batch-loop thread drains the queue
+//!   once per tick, stacks same-shape requests into batched tensors,
+//!   and dispatches one [`crate::exec::Batcher`] call per tick per
+//!   plan. Per-sample kernels are bit-identical at any batch size, so
+//!   responses match [`crate::exec::Plan::predict`] exactly.
+//! * **Deadlines**: a request's soft deadline can only *accelerate* its
+//!   batch's dispatch (the batch leaves at
+//!   `min(oldest admission + tick, earliest deadline)`); requests are
+//!   never dropped.
+//! * **Plan cache**: compiled plans live in a process-global
+//!   [`cache::PlanCache`] keyed by [`crate::session::PlanKey`] —
+//!   `(model, prune config, OptLevel)` — with warm/cold eviction, so
+//!   heterogeneous traffic shares compilations.
+//! * **Latency**: every response carries the server-measured
+//!   admission→response latency; [`Stats`] aggregates p50/p99 for the
+//!   CLI and the `micro_serve` bench.
+//!
+//! ```no_run
+//! use spa::serve::{Client, ServeCfg, Server};
+//! # fn main() -> anyhow::Result<()> {
+//! let server = Server::spawn(ServeCfg::default())?;
+//! let mut client = Client::connect(server.local_addr())?;
+//! let x = spa::tensor::Tensor::zeros(&[1, 3, 16, 16]);
+//! let (logits, latency_us) = client.predict("resnet18", &x)?;
+//! println!("{:?} in {latency_us}us", logits.shape);
+//! # Ok(()) }
+//! ```
+
+pub mod cache;
+pub mod protocol;
+pub mod queue;
+
+pub use cache::{CachedPlan, PlanCache};
+pub use protocol::{Client, Request, Response};
+pub use queue::{Pending, Queue};
+
+use crate::criteria::Criterion;
+use crate::exec::{Batcher, OptLevel, Plan, PlanOpts};
+use crate::ir::Graph;
+use crate::session::{PlanKey, Session, Target};
+use crate::tensor::Tensor;
+use crate::zoo::{self, ImageCfg};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration for [`Server::spawn`].
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Bind address; port 0 picks a free port (see
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// Batching tick: a batch dispatches once its oldest request has
+    /// waited this long (deadlines can only shorten the wait).
+    pub tick: Duration,
+    /// Maximum stacked rows per dispatched chunk, and maximum requests
+    /// drained per tick.
+    pub max_batch: usize,
+    /// Plan-cache capacity; 0 uses the process-global
+    /// [`PlanCache::global`] (capacity `SPA_PLAN_CACHE_CAP`, default 8).
+    pub cache_cap: usize,
+    /// Optimization level plans are compiled at.
+    pub level: OptLevel,
+    /// Zoo instantiation config for requested models.
+    pub image: ImageCfg,
+    /// Zoo weight seed.
+    pub seed: u64,
+    /// When set, serve every model pruned toward this FLOPs RF.
+    pub prune_rf: Option<f64>,
+    /// Saliency criterion for `prune_rf` (data-free criteria only).
+    pub criterion: String,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            tick: Duration::from_millis(2),
+            max_batch: 64,
+            cache_cap: 0,
+            level: OptLevel::Exact,
+            image: ImageCfg::default(),
+            seed: 1,
+            prune_rf: None,
+            criterion: "l1".to_string(),
+        }
+    }
+}
+
+/// Serving counters plus a latency ring for percentile reporting.
+pub struct Stats {
+    served: AtomicUsize,
+    errors: AtomicUsize,
+    batches: AtomicUsize,
+    lat_us: Mutex<Vec<u32>>,
+}
+
+/// Latency samples kept for percentiles (oldest dropped first).
+const LAT_RING: usize = 8192;
+
+impl Stats {
+    fn new() -> Stats {
+        Stats {
+            served: AtomicUsize::new(0),
+            errors: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            lat_us: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Requests answered (ok or error).
+    pub fn served(&self) -> usize {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered with an error response.
+    pub fn errors(&self) -> usize {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Non-empty batch-loop ticks dispatched.
+    pub fn batches(&self) -> usize {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// The `p`-th latency percentile (0-100) over the recent ring, in
+    /// microseconds. `None` before any request completed.
+    pub fn latency_percentile_us(&self, p: f64) -> Option<u32> {
+        let lat = self.lat_us.lock().unwrap();
+        if lat.is_empty() {
+            return None;
+        }
+        let mut v = lat.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        Some(v[idx.min(v.len() - 1)])
+    }
+
+    fn record(&self, latency_us: u32, ok: bool) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut lat = self.lat_us.lock().unwrap();
+        if lat.len() >= LAT_RING {
+            lat.remove(0);
+        }
+        lat.push(latency_us);
+    }
+}
+
+/// Resolves model names to cached compiled plans. Lives on the batch-
+/// loop thread; `keys` memoizes the model → [`PlanKey`] derivation
+/// (pruning must run once before the prune tag is known).
+struct Resolver {
+    image: ImageCfg,
+    seed: u64,
+    level: OptLevel,
+    prune_rf: Option<f64>,
+    criterion: String,
+    cache: Arc<PlanCache>,
+    keys: HashMap<String, PlanKey>,
+}
+
+impl Resolver {
+    /// Build the (optionally pruned) graph and derive its cache key.
+    fn build_model(&self, model: &str) -> anyhow::Result<(Graph, PlanKey)> {
+        let g = zoo::by_name(model, self.image, self.seed)?;
+        match self.prune_rf {
+            Some(rf) => {
+                let pruned = Session::on(&g)
+                    .criterion(Criterion::parse(&self.criterion)?)
+                    .target(Target::FlopsRf(rf))
+                    .plan()?
+                    .apply()?;
+                let key = PlanKey::pruned(model, &pruned.report, self.level);
+                Ok((pruned.graph, key))
+            }
+            None => Ok((g, PlanKey::baseline(model, self.level))),
+        }
+    }
+
+    fn plan_for(&mut self, model: &str) -> anyhow::Result<Arc<CachedPlan>> {
+        let (key, prebuilt) = match self.keys.get(model) {
+            Some(k) => (k.clone(), None),
+            None => {
+                let (g, key) = self.build_model(model)?;
+                self.keys.insert(model.to_string(), key.clone());
+                (key, Some(g))
+            }
+        };
+        let cache = Arc::clone(&self.cache);
+        let level = self.level;
+        cache.get_or_compile(&key, || {
+            let g = match prebuilt {
+                Some(g) => g,
+                // evicted since the key was derived: rebuild from source
+                None => self.build_model(model)?.0,
+            };
+            Plan::compile(
+                &g,
+                PlanOpts {
+                    level,
+                    ..Default::default()
+                },
+            )
+        })
+    }
+}
+
+/// Pack request tensors into stacked chunks: consecutive tensors with
+/// equal tail shapes concatenate along dim 0, up to `max_rows` rows per
+/// chunk. Returns `(chunks, members)` where `members[c]` lists the
+/// indices stacked into `chunks[c]`, in order.
+fn pack_chunks(tensors: &[&Tensor], max_rows: usize) -> (Vec<Tensor>, Vec<Vec<usize>>) {
+    let mut chunks: Vec<Tensor> = Vec::new();
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    for (i, t) in tensors.iter().enumerate() {
+        let rows = t.shape[0];
+        let fits = chunks
+            .last()
+            .is_some_and(|c| c.shape[1..] == t.shape[1..] && c.shape[0] + rows <= max_rows.max(1));
+        if fits {
+            let c = chunks.last_mut().expect("fits implies a chunk");
+            c.shape[0] += rows;
+            c.data.extend_from_slice(&t.data);
+            members.last_mut().expect("fits implies members").push(i);
+        } else {
+            chunks.push((*t).clone());
+            members.push(vec![i]);
+        }
+    }
+    (chunks, members)
+}
+
+/// Split a stacked chunk's output back into per-request tensors by each
+/// member's leading dim, and respond.
+fn send_split(reqs: &[Pending], valid: &[usize], mem: &[usize], out: &Tensor) {
+    let rows_total: usize = mem.iter().map(|&m| reqs[valid[m]].tensor.shape[0]).sum();
+    if rows_total == 0 || out.shape.first().copied().unwrap_or(0) != rows_total {
+        for &m in mem {
+            let _ = reqs[valid[m]].resp.send(Err(anyhow::anyhow!(
+                "model output rows {:?} do not match the {rows_total} stacked request rows",
+                out.shape.first()
+            )));
+        }
+        return;
+    }
+    let per_row = out.numel() / rows_total;
+    let mut off = 0usize;
+    for &m in mem {
+        let rows = reqs[valid[m]].tensor.shape[0];
+        let mut shape = out.shape.clone();
+        shape[0] = rows;
+        let data = out.data[off * per_row..(off + rows) * per_row].to_vec();
+        off += rows;
+        let _ = reqs[valid[m]].resp.send(Ok(Tensor::new(shape, data)));
+    }
+}
+
+/// Serve one model's share of a tick: stack, dispatch through a
+/// [`Batcher`] whose workspace pool persists on the cache entry, split,
+/// respond. A failed combined dispatch falls back to per-chunk
+/// dispatch so one malformed request cannot poison co-batched ones.
+fn process_group(cached: &CachedPlan, reqs: &[Pending], max_rows: usize) {
+    let mut valid: Vec<usize> = Vec::new();
+    for (i, p) in reqs.iter().enumerate() {
+        if p.tensor.shape.first().copied().unwrap_or(0) == 0 {
+            let _ = p.resp.send(Err(anyhow::anyhow!(
+                "request tensor needs a leading batch dim of at least 1"
+            )));
+        } else {
+            valid.push(i);
+        }
+    }
+    let tensors: Vec<&Tensor> = valid.iter().map(|&i| &reqs[i].tensor).collect();
+    let (chunks, members) = pack_chunks(&tensors, max_rows);
+    let pool = std::mem::take(&mut *cached.pool.lock().unwrap());
+    let batcher = Batcher::with_pool(&cached.plan, pool);
+    match batcher.run_batch(&chunks) {
+        Ok(outs) => {
+            for (out, mem) in outs.iter().zip(&members) {
+                send_split(reqs, &valid, mem, out);
+            }
+        }
+        Err(_) => {
+            for (chunk, mem) in chunks.iter().zip(&members) {
+                match batcher.run_batch(std::slice::from_ref(chunk)) {
+                    Ok(outs) => send_split(reqs, &valid, mem, &outs[0]),
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for &m in mem {
+                            let _ = reqs[valid[m]].resp.send(Err(anyhow::anyhow!("{msg}")));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    *cached.pool.lock().unwrap() = batcher.into_pool();
+}
+
+fn process_batch(resolver: &mut Resolver, batch: Vec<Pending>, max_rows: usize) {
+    // group by model, preserving admission order within each group
+    let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
+    for p in batch {
+        match groups.iter_mut().find(|(m, _)| *m == p.model) {
+            Some((_, v)) => v.push(p),
+            None => {
+                let m = p.model.clone();
+                groups.push((m, vec![p]));
+            }
+        }
+    }
+    for (model, reqs) in &groups {
+        match resolver.plan_for(model) {
+            Ok(cached) => process_group(&cached, reqs, max_rows),
+            Err(e) => {
+                let msg = e.to_string();
+                for p in reqs {
+                    let _ = p.resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+fn batch_loop(
+    queue: Arc<Queue>,
+    shutdown: Arc<AtomicBool>,
+    mut resolver: Resolver,
+    tick: Duration,
+    max_batch: usize,
+    stats: Arc<Stats>,
+) {
+    loop {
+        let batch = queue.drain_tick(tick, max_batch);
+        if batch.is_empty() {
+            // flush-then-exit: handlers stop enqueuing once shutdown is
+            // set, so an empty queue here means we are done
+            if shutdown.load(Ordering::SeqCst) && queue.is_empty() {
+                break;
+            }
+            continue;
+        }
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        process_batch(&mut resolver, batch, max_batch);
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    queue: Arc<Queue>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<Stats>,
+) {
+    let _ = stream.set_nodelay(true);
+    // short read timeout so idle handlers observe shutdown
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    loop {
+        match protocol::read_frame(&mut stream) {
+            Ok(protocol::FrameRead::Idle) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Ok(protocol::FrameRead::Eof) | Err(_) => break,
+            Ok(protocol::FrameRead::Frame(body)) => {
+                let t0 = Instant::now();
+                let reply = match protocol::decode_request(&body) {
+                    Ok(req) => {
+                        let (tx, rx) = mpsc::channel();
+                        queue.push(Pending {
+                            model: req.model,
+                            tensor: req.tensor,
+                            admitted: t0,
+                            deadline: (req.deadline_ms > 0)
+                                .then(|| t0 + Duration::from_millis(u64::from(req.deadline_ms))),
+                            resp: tx,
+                        });
+                        match rx.recv() {
+                            Ok(Ok(t)) => Ok(t),
+                            Ok(Err(e)) => Err(e.to_string()),
+                            Err(_) => Err("server shut down before responding".to_string()),
+                        }
+                    }
+                    Err(e) => Err(e.to_string()),
+                };
+                let latency_us = t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32;
+                stats.record(latency_us, reply.is_ok());
+                let resp = match reply {
+                    Ok(tensor) => Response::Ok { latency_us, tensor },
+                    Err(message) => Response::Err {
+                        latency_us,
+                        message,
+                    },
+                };
+                let body = match protocol::encode_response(&resp) {
+                    Ok(b) => b,
+                    Err(_) => break,
+                };
+                if protocol::write_frame(&mut stream, &body).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    queue: Arc<Queue>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<Stats>,
+) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let q = Arc::clone(&queue);
+                let f = Arc::clone(&shutdown);
+                let s = Arc::clone(&stats);
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("spa-serve-conn".to_string())
+                    .spawn(move || handle_conn(stream, q, f, s))
+                {
+                    handlers.push(h);
+                }
+            }
+            Err(_) => continue,
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// A running serve instance: an accept thread (one handler thread per
+/// connection) plus the batch-loop thread. Shuts down cleanly on
+/// [`Server::shutdown`] or drop, flushing queued requests first.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    batch: Option<JoinHandle<()>>,
+    stats: Arc<Stats>,
+    cache: Arc<PlanCache>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads.
+    pub fn spawn(cfg: ServeCfg) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(cfg.addr.as_str())?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(Queue::new());
+        let stats = Arc::new(Stats::new());
+        let cache = match cfg.cache_cap {
+            0 => PlanCache::global(),
+            n => Arc::new(PlanCache::with_capacity(n)),
+        };
+        let resolver = Resolver {
+            image: cfg.image,
+            seed: cfg.seed,
+            level: cfg.level,
+            prune_rf: cfg.prune_rf,
+            criterion: cfg.criterion.clone(),
+            cache: Arc::clone(&cache),
+            keys: HashMap::new(),
+        };
+        let batch = {
+            let queue = Arc::clone(&queue);
+            let shutdown = Arc::clone(&shutdown);
+            let stats = Arc::clone(&stats);
+            let (tick, max_batch) = (cfg.tick, cfg.max_batch.max(1));
+            std::thread::Builder::new()
+                .name("spa-serve-batch".to_string())
+                .spawn(move || batch_loop(queue, shutdown, resolver, tick, max_batch, stats))?
+        };
+        let accept = {
+            let queue = Arc::clone(&queue);
+            let shutdown = Arc::clone(&shutdown);
+            let stats = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name("spa-serve-accept".to_string())
+                .spawn(move || accept_loop(listener, queue, shutdown, stats))?
+        };
+        Ok(Server {
+            addr,
+            shutdown,
+            accept: Some(accept),
+            batch: Some(batch),
+            stats,
+            cache,
+        })
+    }
+
+    /// The bound address (resolves port 0 binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live serving counters and latency percentiles.
+    pub fn stats(&self) -> Arc<Stats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// The plan cache this server compiles into.
+    pub fn cache(&self) -> Arc<PlanCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// Stop accepting, flush queued requests, and join all threads.
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.batch.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_chunks_stacks_same_tail_shapes() {
+        let a = Tensor::zeros(&[1, 3, 4, 4]);
+        let b = Tensor::zeros(&[2, 3, 4, 4]);
+        let c = Tensor::zeros(&[1, 8]);
+        let d = Tensor::zeros(&[1, 3, 4, 4]);
+        let tensors = vec![&a, &b, &c, &d];
+        let (chunks, members) = pack_chunks(&tensors, 64);
+        // a+b stack; c breaks the run; d starts a new image chunk
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].shape, vec![3, 3, 4, 4]);
+        assert_eq!(members[0], vec![0, 1]);
+        assert_eq!(chunks[1].shape, vec![1, 8]);
+        assert_eq!(chunks[2].shape, vec![1, 3, 4, 4]);
+    }
+
+    #[test]
+    fn pack_chunks_respects_max_rows() {
+        let ts: Vec<Tensor> = (0..5).map(|_| Tensor::zeros(&[1, 4])).collect();
+        let refs: Vec<&Tensor> = ts.iter().collect();
+        let (chunks, members) = pack_chunks(&refs, 2);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].shape, vec![2, 4]);
+        assert_eq!(chunks[2].shape, vec![1, 4]);
+        assert_eq!(members.concat(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn server_round_trips_one_request() {
+        let cfg = ServeCfg {
+            tick: Duration::from_millis(1),
+            cache_cap: 2,
+            image: ImageCfg {
+                hw: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (image, seed, level) = (cfg.image, cfg.seed, cfg.level);
+        let server = Server::spawn(cfg).unwrap();
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        let x = Tensor::zeros(&[1, image.channels, image.hw, image.hw]);
+        let (logits, _lat) = client.predict("mlp", &x).unwrap();
+        // bit-identical to a local Plan::predict on the same zoo build
+        let g = zoo::by_name("mlp", image, seed).unwrap();
+        let plan = Plan::compile(
+            &g,
+            PlanOpts {
+                level,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let want = plan.predict(&x).unwrap();
+        assert_eq!(logits.shape, want.shape);
+        for (a, b) in logits.data.iter().zip(&want.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // unknown models error without killing the connection
+        assert!(client.predict("definitely-not-a-model", &x).is_err());
+        let (again, _) = client.predict("mlp", &x).unwrap();
+        assert_eq!(again.shape, want.shape);
+        assert_eq!(server.stats().served(), 3);
+        assert_eq!(server.stats().errors(), 1);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,400 @@
+//! Length-prefixed wire protocol for `spa serve` (std-net only).
+//!
+//! Every message is one frame: a little-endian `u32` body length
+//! followed by the body. Request bodies are
+//!
+//! ```text
+//! u8  version (= 1)
+//! u16 model-name length, then that many UTF-8 bytes
+//! u32 deadline in milliseconds (0 = no deadline)
+//! u8  ndim, then ndim × u32 dims
+//! numel × f32 tensor data (row-major, little-endian)
+//! ```
+//!
+//! and response bodies are
+//!
+//! ```text
+//! u8  status (0 = ok, 1 = error)
+//! u32 server-measured latency in microseconds (admission → response)
+//! ok:    u8 ndim, ndim × u32 dims, numel × f32 data
+//! error: u16 message length, then that many UTF-8 bytes
+//! ```
+//!
+//! Frames are capped at 1 GiB; oversized lengths are rejected before
+//! any allocation. Deadlines travel with the request so the server's
+//! dynamic batcher can dispatch a batch early — see the deadline
+//! semantics on [`crate::serve`].
+
+use crate::tensor::Tensor;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Protocol version carried in every request.
+pub const VERSION: u8 = 1;
+
+/// Hard cap on one frame's body (1 GiB).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// A decoded inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Zoo model name the request targets.
+    pub model: String,
+    /// Soft deadline in milliseconds from admission (0 = none).
+    pub deadline_ms: u32,
+    /// Input tensor; the leading dim is the request's own batch.
+    pub tensor: Tensor,
+}
+
+/// A decoded inference response.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Ok { latency_us: u32, tensor: Tensor },
+    Err { latency_us: u32, message: String },
+}
+
+/// Outcome of reading one frame from a stream that may carry a read
+/// timeout (the server sets one so handler threads can observe
+/// shutdown between requests).
+pub enum FrameRead {
+    /// A complete frame body.
+    Frame(Vec<u8>),
+    /// Clean EOF at a frame boundary — the peer is done.
+    Eof,
+    /// Read timeout with no bytes consumed — still at a frame boundary.
+    Idle,
+}
+
+/// Read one length-prefixed frame. Timeouts that land *between* frames
+/// surface as [`FrameRead::Idle`]; a timeout inside a frame keeps
+/// reading (the rest of the frame is assumed to be in flight).
+pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<FrameRead> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut len4[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(FrameRead::Eof)
+                } else {
+                    Err(std::io::Error::new(
+                        ErrorKind::UnexpectedEof,
+                        "eof inside frame header",
+                    ))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if got == 0 {
+                    return Ok(FrameRead::Idle);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(len4);
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    let mut off = 0usize;
+    while off < body.len() {
+        match stream.read(&mut body[off..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "eof inside frame body",
+                ));
+            }
+            Ok(n) => off += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(FrameRead::Frame(body))
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Byte cursor over a frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.off + n <= self.b.len(),
+            "truncated frame: need {n} bytes at offset {}, have {}",
+            self.off,
+            self.b.len()
+        );
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.off == self.b.len(),
+            "{} trailing bytes after frame payload",
+            self.b.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        t.shape.len() <= u8::MAX as usize,
+        "tensor rank {} exceeds the wire limit",
+        t.shape.len()
+    );
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        anyhow::ensure!(d <= u32::MAX as usize, "dim {d} exceeds the wire limit");
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for &v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(())
+}
+
+fn get_tensor(c: &mut Cur<'_>) -> anyhow::Result<Tensor> {
+    let ndim = c.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    let mut numel = 1usize;
+    for _ in 0..ndim {
+        let d = c.u32()? as usize;
+        numel = numel
+            .checked_mul(d)
+            .ok_or_else(|| anyhow::anyhow!("tensor dims overflow"))?;
+        shape.push(d);
+    }
+    let raw = c.take(numel * 4)?;
+    let data = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Tensor::new(shape, data))
+}
+
+/// Encode a request body (frame it with [`write_frame`]).
+pub fn encode_request(model: &str, deadline_ms: u32, t: &Tensor) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(
+        model.len() <= u16::MAX as usize,
+        "model name of {} bytes exceeds the wire limit",
+        model.len()
+    );
+    let mut out = Vec::with_capacity(16 + model.len() + t.numel() * 4);
+    out.push(VERSION);
+    out.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    out.extend_from_slice(model.as_bytes());
+    out.extend_from_slice(&deadline_ms.to_le_bytes());
+    put_tensor(&mut out, t)?;
+    Ok(out)
+}
+
+/// Decode a request body.
+pub fn decode_request(body: &[u8]) -> anyhow::Result<Request> {
+    let mut c = Cur::new(body);
+    let v = c.u8()?;
+    anyhow::ensure!(v == VERSION, "unsupported protocol version {v} (want {VERSION})");
+    let mlen = c.u16()? as usize;
+    let model = std::str::from_utf8(c.take(mlen)?)
+        .map_err(|e| anyhow::anyhow!("model name is not UTF-8: {e}"))?
+        .to_string();
+    let deadline_ms = c.u32()?;
+    let tensor = get_tensor(&mut c)?;
+    c.done()?;
+    Ok(Request {
+        model,
+        deadline_ms,
+        tensor,
+    })
+}
+
+/// Encode a response body (frame it with [`write_frame`]).
+pub fn encode_response(resp: &Response) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::new();
+    match resp {
+        Response::Ok { latency_us, tensor } => {
+            out.push(0u8);
+            out.extend_from_slice(&latency_us.to_le_bytes());
+            put_tensor(&mut out, tensor)?;
+        }
+        Response::Err { latency_us, message } => {
+            out.push(1u8);
+            out.extend_from_slice(&latency_us.to_le_bytes());
+            let msg = message.as_bytes();
+            let take = msg.len().min(u16::MAX as usize);
+            out.extend_from_slice(&(take as u16).to_le_bytes());
+            out.extend_from_slice(&msg[..take]);
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a response body.
+pub fn decode_response(body: &[u8]) -> anyhow::Result<Response> {
+    let mut c = Cur::new(body);
+    let status = c.u8()?;
+    let latency_us = c.u32()?;
+    let resp = match status {
+        0 => Response::Ok {
+            latency_us,
+            tensor: get_tensor(&mut c)?,
+        },
+        1 => {
+            let mlen = c.u16()? as usize;
+            let message = String::from_utf8_lossy(c.take(mlen)?).into_owned();
+            Response::Err {
+                latency_us,
+                message,
+            }
+        }
+        other => anyhow::bail!("unknown response status {other}"),
+    };
+    c.done()?;
+    Ok(resp)
+}
+
+/// A blocking client for the serve protocol. One request in flight per
+/// connection; open several clients for concurrency.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a running `spa serve` instance.
+    pub fn connect(addr: impl ToSocketAddrs) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    /// Infer `x` on `model` with no deadline. Returns the output tensor
+    /// and the server-measured latency in microseconds.
+    pub fn predict(&mut self, model: &str, x: &Tensor) -> anyhow::Result<(Tensor, u32)> {
+        self.predict_deadline(model, x, Duration::ZERO)
+    }
+
+    /// Infer with a soft deadline: the server dispatches the batch
+    /// containing this request no later than admission + `deadline`
+    /// (requests are never dropped; `Duration::ZERO` means none).
+    pub fn predict_deadline(
+        &mut self,
+        model: &str,
+        x: &Tensor,
+        deadline: Duration,
+    ) -> anyhow::Result<(Tensor, u32)> {
+        let deadline_ms = deadline.as_millis().min(u32::MAX as u128) as u32;
+        let body = encode_request(model, deadline_ms, x)?;
+        write_frame(&mut self.stream, &body)?;
+        match read_frame(&mut self.stream)? {
+            FrameRead::Frame(body) => match decode_response(&body)? {
+                Response::Ok { latency_us, tensor } => Ok((tensor, latency_us)),
+                Response::Err { message, .. } => anyhow::bail!("server error: {message}"),
+            },
+            FrameRead::Eof | FrameRead::Idle => {
+                anyhow::bail!("server closed the connection")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX]);
+        let body = encode_request("resnet18", 7, &t).unwrap();
+        let req = decode_request(&body).unwrap();
+        assert_eq!(req.model, "resnet18");
+        assert_eq!(req.deadline_ms, 7);
+        assert_eq!(req.tensor.shape, t.shape);
+        for (a, b) in req.tensor.data.iter().zip(&t.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let t = Tensor::new(vec![4], vec![0.5; 4]);
+        let ok = Response::Ok {
+            latency_us: 123,
+            tensor: t.clone(),
+        };
+        match decode_response(&encode_response(&ok).unwrap()).unwrap() {
+            Response::Ok { latency_us, tensor } => {
+                assert_eq!(latency_us, 123);
+                assert_eq!(tensor.shape, t.shape);
+            }
+            Response::Err { .. } => panic!("expected ok"),
+        }
+        let err = Response::Err {
+            latency_us: 9,
+            message: "no such model".into(),
+        };
+        match decode_response(&encode_response(&err).unwrap()).unwrap() {
+            Response::Err { latency_us, message } => {
+                assert_eq!(latency_us, 9);
+                assert_eq!(message, "no such model");
+            }
+            Response::Ok { .. } => panic!("expected err"),
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected() {
+        assert!(decode_request(&[]).is_err());
+        // bad version
+        let t = Tensor::new(vec![1], vec![1.0]);
+        let mut body = encode_request("mlp", 0, &t).unwrap();
+        body[0] = 99;
+        assert!(decode_request(&body).is_err());
+        // trailing garbage
+        let mut body = encode_request("mlp", 0, &t).unwrap();
+        body.push(0);
+        assert!(decode_request(&body).is_err());
+        // truncated tensor data
+        let body = encode_request("mlp", 0, &t).unwrap();
+        assert!(decode_request(&body[..body.len() - 1]).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Deadline-aware admission queue feeding the serve batch loop.
+//!
+//! Connection handlers [`Queue::push`] one [`Pending`] per request and
+//! block on its response channel; the single batch-loop thread calls
+//! [`Queue::drain_tick`] to collect one batch per tick. Coalescing is
+//! bounded two ways:
+//!
+//! * the **tick**: a batch dispatches once its oldest request has
+//!   waited one tick (letting concurrent requests pile in behind it);
+//! * the **earliest deadline**: a pending request's soft deadline can
+//!   only *accelerate* dispatch — requests are never dropped, a missed
+//!   deadline just means the batch left as fast as the queue allowed.
+
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted request, waiting for the batch loop.
+pub struct Pending {
+    /// Zoo model name the request targets.
+    pub model: String,
+    /// The request input (leading dim = the request's own batch).
+    pub tensor: Tensor,
+    /// When the connection handler admitted the request.
+    pub admitted: Instant,
+    /// Absolute soft deadline, if the request carried one.
+    pub deadline: Option<Instant>,
+    /// Where the batch loop sends the result; the handler blocks on the
+    /// receiving end.
+    pub resp: mpsc::Sender<anyhow::Result<Tensor>>,
+}
+
+/// MPSC admission queue with condvar wakeups (multiple handler
+/// producers, one batch-loop consumer).
+pub struct Queue {
+    inner: Mutex<VecDeque<Pending>>,
+    ready: Condvar,
+}
+
+impl Default for Queue {
+    fn default() -> Queue {
+        Queue::new()
+    }
+}
+
+impl Queue {
+    pub fn new() -> Queue {
+        Queue {
+            inner: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Admit one request and wake the batch loop.
+    pub fn push(&self, p: Pending) {
+        self.inner.lock().unwrap().push_back(p);
+        self.ready.notify_one();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// Collect the next batch: block up to `tick` for a first request
+    /// (returning empty on timeout so the caller can check shutdown),
+    /// then coalesce until the oldest request has aged one tick or the
+    /// earliest pending deadline arrives — whichever is sooner — and
+    /// drain up to `max` requests in admission order.
+    pub fn drain_tick(&self, tick: Duration, max: usize) -> Vec<Pending> {
+        let mut q = self.inner.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _) = self.ready.wait_timeout(q, tick).unwrap();
+            q = guard;
+            if q.is_empty() {
+                return Vec::new();
+            }
+        }
+        loop {
+            let now = Instant::now();
+            // front() is the oldest: pushes append and only this
+            // consumer pops.
+            let mut dispatch = q.front().expect("nonempty queue").admitted + tick;
+            for p in q.iter() {
+                if let Some(d) = p.deadline {
+                    dispatch = dispatch.min(d);
+                }
+            }
+            if dispatch <= now || q.len() >= max {
+                break;
+            }
+            // woken early by a push: loop to recompute the dispatch
+            // time (a new request may carry an earlier deadline)
+            let (guard, _) = self.ready.wait_timeout(q, dispatch - now).unwrap();
+            q = guard;
+        }
+        let take = q.len().min(max.max(1));
+        q.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn pending(
+        model: &str,
+        deadline: Option<Duration>,
+    ) -> (Pending, mpsc::Receiver<anyhow::Result<Tensor>>) {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        (
+            Pending {
+                model: model.to_string(),
+                tensor: Tensor::zeros(&[1]),
+                admitted: now,
+                deadline: deadline.map(|d| now + d),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn empty_queue_times_out_with_no_batch() {
+        let q = Queue::new();
+        let batch = q.drain_tick(Duration::from_millis(5), 8);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn coalesces_requests_within_one_tick() {
+        let q = Arc::new(Queue::new());
+        let (p1, _r1) = pending("mlp", None);
+        let (p2, _r2) = pending("mlp", None);
+        q.push(p1);
+        let q2 = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            q2.push(p2);
+        });
+        let batch = q.drain_tick(Duration::from_millis(100), 8);
+        pusher.join().unwrap();
+        assert_eq!(batch.len(), 2, "second request must join the first batch");
+    }
+
+    #[test]
+    fn deadline_accelerates_dispatch_without_drops() {
+        let q = Queue::new();
+        let (p1, _r1) = pending("mlp", None);
+        let (p2, _r2) = pending("mlp", Some(Duration::from_millis(2)));
+        q.push(p1);
+        q.push(p2);
+        let t0 = Instant::now();
+        // tick is a full second; the 2 ms deadline must cut the wait
+        let batch = q.drain_tick(Duration::from_secs(1), 8);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        assert_eq!(batch.len(), 2, "deadlines never drop requests");
+    }
+
+    #[test]
+    fn max_batch_caps_one_drain() {
+        let q = Queue::new();
+        let mut rxs = Vec::new();
+        for _ in 0..5 {
+            let (p, r) = pending("mlp", Some(Duration::ZERO));
+            q.push(p);
+            rxs.push(r);
+        }
+        let batch = q.drain_tick(Duration::from_millis(50), 3);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(q.len(), 2);
+    }
+}

@@ -339,6 +339,53 @@ pub struct PruneReport {
     pub seconds: f64,
 }
 
+impl PruneReport {
+    /// A stable string identifying the prune configuration this report
+    /// describes, for use in a [`PlanKey`]. Two identically-configured
+    /// prunes of the same model produce the same tag; the unpruned
+    /// baseline uses the empty tag.
+    pub fn cache_tag(&self) -> String {
+        format!(
+            "{}:cc{}:rf{:.4}:rp{:.4}",
+            self.criterion, self.ccs_removed, self.rf, self.rp
+        )
+    }
+}
+
+/// Process-global plan-cache key: `(model, prune config, OptLevel)`.
+/// The serve layer compiles one [`crate::exec::Plan`] per distinct key
+/// and shares it across requests (see `crate::serve::PlanCache`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Zoo model name (or any caller-chosen model identifier).
+    pub model: String,
+    /// Prune-configuration tag from [`PruneReport::cache_tag`]; empty
+    /// for the unpruned baseline.
+    pub prune: String,
+    /// Optimization level the plan was compiled at.
+    pub level: crate::exec::OptLevel,
+}
+
+impl PlanKey {
+    /// Key for an unpruned model at `level`.
+    pub fn baseline(model: &str, level: crate::exec::OptLevel) -> PlanKey {
+        PlanKey {
+            model: model.to_string(),
+            prune: String::new(),
+            level,
+        }
+    }
+
+    /// Key for a pruned model, deriving the prune tag from its report.
+    pub fn pruned(model: &str, report: &PruneReport, level: crate::exec::OptLevel) -> PlanKey {
+        PlanKey {
+            model: model.to_string(),
+            prune: report.cache_tag(),
+            level,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,6 +450,31 @@ mod tests {
         for (a, b) in want.data.iter().zip(&got.data) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn plan_keys_distinguish_prune_configs_and_levels() {
+        use crate::exec::OptLevel;
+        let g = mini();
+        let mk = |rf: f64| {
+            Session::on(&g)
+                .criterion(Criterion::L1)
+                .target(Target::FlopsRf(rf))
+                .plan()
+                .unwrap()
+                .apply()
+                .unwrap()
+        };
+        let a = mk(1.5);
+        let b = mk(1.9);
+        let ka = PlanKey::pruned("resnet18", &a.report, OptLevel::Exact);
+        let kb = PlanKey::pruned("resnet18", &b.report, OptLevel::Exact);
+        assert_ne!(ka, kb, "different prune configs must key differently");
+        assert_eq!(ka, PlanKey::pruned("resnet18", &a.report, OptLevel::Exact));
+        assert_ne!(ka, PlanKey::pruned("resnet18", &a.report, OptLevel::Fast));
+        let base = PlanKey::baseline("resnet18", OptLevel::Exact);
+        assert!(base.prune.is_empty());
+        assert_ne!(base, ka);
     }
 
     #[test]

@@ -155,8 +155,7 @@ pub fn quick_train(
 /// allocation) — bit-identical to interpreting each batch.
 pub fn evaluate(g: &Graph, ds: &ImageDataset, max_samples: usize) -> anyhow::Result<f32> {
     let plan = exec::Plan::compile(g, exec::PlanOpts::default())?;
-    let mut ws = plan.workspace();
-    let input = plan.inputs()[0];
+    let mut runner = plan.runner();
     let mut correct = 0.0f32;
     let mut total = 0usize;
     let bs = 64;
@@ -164,7 +163,7 @@ pub fn evaluate(g: &Graph, ds: &ImageDataset, max_samples: usize) -> anyhow::Res
     while offset < ds.test_len().min(max_samples) {
         let (x, y) = ds.test_batch(offset, bs);
         let n = y.len();
-        let logits = plan.run(&mut ws, &[(input, &x)])?;
+        let logits = runner.predict(&x)?;
         correct += ops::accuracy(&logits, &y) * n as f32;
         total += n;
         offset += n;
@@ -179,8 +178,7 @@ pub fn evaluate(g: &Graph, ds: &ImageDataset, max_samples: usize) -> anyhow::Res
 /// [`evaluate`]).
 pub fn evaluate_text(g: &Graph, ds: &TextDataset, max_samples: usize) -> anyhow::Result<f32> {
     let plan = exec::Plan::compile(g, exec::PlanOpts::default())?;
-    let mut ws = plan.workspace();
-    let input = plan.inputs()[0];
+    let mut runner = plan.runner();
     let mut correct = 0.0f32;
     let mut total = 0usize;
     let bs = 64;
@@ -188,7 +186,7 @@ pub fn evaluate_text(g: &Graph, ds: &TextDataset, max_samples: usize) -> anyhow:
     while offset < ds.test_len().min(max_samples) {
         let (x, y) = ds.test_batch(offset, bs);
         let n = y.len();
-        let logits = plan.run(&mut ws, &[(input, &x)])?;
+        let logits = runner.predict(&x)?;
         correct += ops::accuracy(&logits, &y) * n as f32;
         total += n;
         offset += n;

@@ -1,0 +1,115 @@
+//! End-to-end serve-loop test over a loopback socket: a spawned server,
+//! 8 concurrent clients with mixed soft deadlines, and responses gated
+//! bit-identical against a local `Plan::predict` on the same zoo build.
+//! Deadlines may only accelerate batch dispatch — every request must be
+//! answered, at any `SPA_THREADS`.
+
+use spa::exec::{Plan, PlanOpts};
+use spa::serve::{Client, ServeCfg, Server};
+use spa::tensor::Tensor;
+use spa::util::Rng;
+use spa::zoo::{self, ImageCfg};
+use std::time::Duration;
+
+const MODEL: &str = "mlp";
+const CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 6;
+
+fn image() -> ImageCfg {
+    ImageCfg {
+        channels: 3,
+        hw: 8,
+        classes: 10,
+        batch: 8,
+    }
+}
+
+#[test]
+fn concurrent_clients_get_bit_identical_responses_and_deadlines_never_drop() {
+    let server = Server::spawn(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        tick: Duration::from_millis(5),
+        max_batch: 32,
+        cache_cap: 2,
+        image: image(),
+        seed: 3,
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let addr = server.local_addr();
+
+    // the reference: same zoo build + compile the server's resolver does
+    let g = zoo::by_name(MODEL, image(), 3).unwrap();
+    let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+
+    // distinct per-client inputs with mixed request batch sizes (1..=3
+    // rows) so one server batch stacks unequal leading dims
+    let mut rng = Rng::new(11);
+    let inputs: Vec<Tensor> = (0..CLIENTS)
+        .map(|i| {
+            let rows = 1 + i % 3;
+            Tensor::new(
+                vec![rows, 3, 8, 8],
+                rng.uniform_vec(rows * 3 * 64, -1.0, 1.0),
+            )
+        })
+        .collect();
+    let want: Vec<Tensor> = inputs.iter().map(|x| plan.predict(x).unwrap()).collect();
+
+    std::thread::scope(|s| {
+        for (i, x) in inputs.iter().enumerate() {
+            let want = &want[i];
+            s.spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                for r in 0..REQS_PER_CLIENT {
+                    // odd requests carry a soft deadline far below the
+                    // tick: it accelerates dispatch, never drops
+                    let (y, _server_us) = if r % 2 == 1 {
+                        c.predict_deadline(MODEL, x, Duration::from_millis(1))
+                            .expect("deadline predict")
+                    } else {
+                        c.predict(MODEL, x).expect("predict")
+                    };
+                    assert_eq!(y.shape, want.shape, "client {i} shape drift");
+                    for (a, b) in y.data.iter().zip(&want.data) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "client {i} response must be bit-identical to Plan::predict"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    let stats = server.stats();
+    assert_eq!(
+        stats.served(),
+        CLIENTS * REQS_PER_CLIENT,
+        "every admitted request must be answered"
+    );
+    assert_eq!(stats.errors(), 0, "no request may fail or be dropped");
+    assert!(stats.batches() >= 1);
+    assert!(stats.latency_percentile_us(50.0).is_some());
+    server.shutdown();
+}
+
+#[test]
+fn malformed_model_errors_without_poisoning_the_connection() {
+    let server = Server::spawn(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: 3,
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    let x = Tensor::zeros(&[1, 3, 8, 8]);
+    assert!(c.predict("no-such-model", &x).is_err());
+    // same connection keeps working after the error reply
+    let (y, _us) = c.predict(MODEL, &x).expect("recover after error");
+    assert_eq!(y.shape, vec![1, 10]);
+    server.shutdown();
+}
