@@ -1,0 +1,496 @@
+//! Prune-coupling invariants (the paper's §3.2 made checkable).
+//!
+//! Structured pruning is only sound when every coupled channel set is
+//! pruned *identically* across the operators it ties together: both
+//! branches of a residual add keep the same channels, concat offsets are
+//! re-based after upstream deletions, grouped convolutions keep a channel
+//! count divisible by `groups`. [`check_widths`] verifies those
+//! cross-operator width agreements directly on declared shapes — with
+//! group-flavored messages, so an inconsistently pruned residual reads as
+//! a coupling violation rather than a generic shape error.
+//! [`check_coupling`] re-derives the dependency groups with
+//! [`crate::prune::build_groups`] and validates their global invariant
+//! (every prunable source channel belongs to exactly one coupled set);
+//! [`check_pruned`] audits an applied prune against the selection that
+//! produced it.
+
+use crate::ir::shape::broadcast_ok;
+use crate::ir::{Graph, OpKind};
+use crate::prune::{build_groups, prunable_source, Groups, Loc};
+use std::collections::{HashMap, HashSet};
+
+/// Cross-operator channel-width agreement on declared shapes. Runs before
+/// shape re-derivation in [`super::check_graph`] so coupling violations
+/// get coupling-flavored diagnostics.
+pub fn check_widths(g: &Graph) -> anyhow::Result<()> {
+    for op in &g.ops {
+        // Rewrite passes neutralize dead operators by emptying their
+        // endpoints; those carry no constraints.
+        if op.inputs.is_empty() || op.outputs.is_empty() {
+            continue;
+        }
+        let shape = |i: usize| &g.datas[op.inputs[i]].shape;
+        let iname = |i: usize| g.datas[op.inputs[i]].name.as_str();
+        match &op.kind {
+            OpKind::Add | OpKind::Mul => {
+                if op.inputs.len() != 2 {
+                    continue;
+                }
+                let (a, b) = (shape(0), shape(1));
+                if a == b || broadcast_ok(a, b) {
+                    continue;
+                }
+                if a.len() == b.len() {
+                    let d = a.iter().zip(b).position(|(x, y)| x != y).unwrap_or(0);
+                    anyhow::bail!(
+                        "residual group at `{}`: coupled inputs disagree on dim {d} — \
+                         `{}` has {} where `{}` has {} (inconsistently pruned group?)",
+                        op.name,
+                        iname(0),
+                        a[d],
+                        iname(1),
+                        b[d]
+                    );
+                }
+                anyhow::bail!(
+                    "residual group at `{}`: inputs `{}` {:?} and `{}` {:?} are not \
+                     shape-compatible",
+                    op.name,
+                    iname(0),
+                    a,
+                    iname(1),
+                    b
+                );
+            }
+            OpKind::Concat { axis } => {
+                let rank = shape(0).len();
+                anyhow::ensure!(
+                    *axis < rank,
+                    "concat `{}`: axis {axis} out of rank {rank}",
+                    op.name
+                );
+                let mut sum = 0usize;
+                for i in 0..op.inputs.len() {
+                    let s = shape(i);
+                    anyhow::ensure!(
+                        s.len() == rank,
+                        "concat group at `{}`: input `{}` has rank {} where `{}` has {}",
+                        op.name,
+                        iname(i),
+                        s.len(),
+                        iname(0),
+                        rank
+                    );
+                    for d in 0..rank {
+                        if d == *axis {
+                            continue;
+                        }
+                        anyhow::ensure!(
+                            s[d] == shape(0)[d],
+                            "concat group at `{}`: input `{}` has {} on dim {d} where `{}` \
+                             has {} (inconsistently pruned group?)",
+                            op.name,
+                            iname(i),
+                            s[d],
+                            iname(0),
+                            shape(0)[d]
+                        );
+                    }
+                    sum += s[*axis];
+                }
+                let out = &g.datas[op.outputs[0]].shape;
+                anyhow::ensure!(
+                    out.len() == rank && out[*axis] == sum,
+                    "concat group at `{}`: output `{}` declares {} on axis {axis} but the \
+                     inputs sum to {sum} (stale concat offsets?)",
+                    op.name,
+                    g.datas[op.outputs[0]].name,
+                    out.get(*axis).copied().unwrap_or(0)
+                );
+            }
+            OpKind::Conv2d { groups, .. } => {
+                if op.inputs.len() < 2 {
+                    continue;
+                }
+                let (x, w) = (shape(0), shape(1));
+                if x.len() != 4 || w.len() != 4 {
+                    continue; // rank errors belong to the shape checker
+                }
+                anyhow::ensure!(
+                    w[0] % groups == 0,
+                    "group-conv `{}`: {} output channels not divisible by groups={} \
+                     (channels pruned without respecting conv groups?)",
+                    op.name,
+                    w[0],
+                    groups
+                );
+                anyhow::ensure!(
+                    x[1] == w[1] * groups,
+                    "conv group at `{}`: input `{}` carries {} channels but weight `{}` \
+                     expects {}×{} (inconsistently pruned group?)",
+                    op.name,
+                    iname(0),
+                    x[1],
+                    iname(1),
+                    w[1],
+                    groups
+                );
+                if op.inputs.len() > 2 {
+                    anyhow::ensure!(
+                        shape(2) == &vec![w[0]],
+                        "conv group at `{}`: bias `{}` has {:?} entries but weight keeps \
+                         {} output channels (inconsistently pruned group?)",
+                        op.name,
+                        iname(2),
+                        shape(2),
+                        w[0]
+                    );
+                }
+            }
+            OpKind::Gemm => {
+                if op.inputs.len() < 2 {
+                    continue;
+                }
+                let (x, w) = (shape(0), shape(1));
+                if w.len() != 2 || x.is_empty() {
+                    continue;
+                }
+                anyhow::ensure!(
+                    x.last() == Some(&w[1]),
+                    "gemm group at `{}`: input `{}` ends in {} features but weight `{}` \
+                     expects {} (inconsistently pruned group?)",
+                    op.name,
+                    iname(0),
+                    x.last().unwrap(),
+                    iname(1),
+                    w[1]
+                );
+                if op.inputs.len() > 2 {
+                    anyhow::ensure!(
+                        shape(2) == &vec![w[0]],
+                        "gemm group at `{}`: bias `{}` has {:?} entries but weight keeps \
+                         {} output features (inconsistently pruned group?)",
+                        op.name,
+                        iname(2),
+                        shape(2),
+                        w[0]
+                    );
+                }
+            }
+            OpKind::BatchNorm { .. } => {
+                if op.inputs.len() != 5 || shape(0).len() < 2 {
+                    continue;
+                }
+                let c = shape(0)[1];
+                for i in 1..5 {
+                    anyhow::ensure!(
+                        shape(i) == &vec![c],
+                        "norm group at `{}`: param `{}` has {:?} channels but the input \
+                         carries {c} (inconsistently pruned group?)",
+                        op.name,
+                        iname(i),
+                        shape(i)
+                    );
+                }
+            }
+            OpKind::LayerNorm { .. } => {
+                if op.inputs.len() != 3 || shape(0).is_empty() {
+                    continue;
+                }
+                let d = *shape(0).last().unwrap();
+                for i in 1..3 {
+                    anyhow::ensure!(
+                        shape(i) == &vec![d],
+                        "norm group at `{}`: param `{}` has {:?} features but the input \
+                         ends in {d} (inconsistently pruned group?)",
+                        op.name,
+                        iname(i),
+                        shape(i)
+                    );
+                }
+            }
+            OpKind::SplitHeads { heads } => {
+                let x = shape(0);
+                if x.len() != 3 {
+                    continue;
+                }
+                anyhow::ensure!(
+                    x[2] % heads == 0,
+                    "attention group at `{}`: hidden dim {} not divisible by heads={} \
+                     (pruned unevenly across heads?)",
+                    op.name,
+                    x[2],
+                    heads
+                );
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// Re-derive the dependency groups and verify their global invariant:
+/// every channel of every prunable source parameter (conv/gemm weight
+/// out-dim) belongs to *exactly one* coupled channel set, and every
+/// recorded location is in range. A violation means the mask propagation
+/// double-counted or dropped channels — pruning on such groups would
+/// delete the wrong slices.
+pub fn check_coupling(g: &Graph) -> anyhow::Result<()> {
+    let groups = build_groups(g)?;
+    // (source param, out dim) universe the partition must cover
+    let mut sources: HashMap<usize, (usize, String)> = HashMap::new();
+    for op in &g.ops {
+        if let Some((src, dim)) = prunable_source(g, op.id) {
+            let d = g.data(src);
+            anyhow::ensure!(
+                dim < d.shape.len(),
+                "op `{}`: prunable dim {dim} out of rank for `{}`",
+                op.name,
+                d.name
+            );
+            sources.insert(src, (d.shape[dim], d.name.clone()));
+        }
+    }
+    let mut owner: HashMap<Loc, usize> = HashMap::new();
+    for gr in &groups.groups {
+        let src_name = &g.op(gr.source_op).name;
+        for cc in &gr.ccs {
+            for l in cc.locs.iter().chain(&cc.acts) {
+                anyhow::ensure!(
+                    l.data < g.datas.len(),
+                    "group {} (source `{src_name}`): location references data id {} out \
+                     of range",
+                    gr.id,
+                    l.data
+                );
+                let d = g.data(l.data);
+                anyhow::ensure!(
+                    l.dim < d.shape.len() && l.idx < d.shape[l.dim],
+                    "group {} (source `{src_name}`): channel {} of `{}` dim {} is out of \
+                     range for shape {:?}",
+                    gr.id,
+                    l.idx,
+                    d.name,
+                    l.dim,
+                    d.shape
+                );
+            }
+            for l in &cc.locs {
+                if l.dim != 0 || !sources.contains_key(&l.data) {
+                    continue;
+                }
+                if let Some(&prev) = owner.get(l) {
+                    if prev != gr.id {
+                        anyhow::bail!(
+                            "channel {} of `{}` is claimed by both group {prev} (source \
+                             `{}`) and group {} (source `{src_name}`)",
+                            l.idx,
+                            g.data(l.data).name,
+                            g.op(groups.groups[prev].source_op).name,
+                            gr.id
+                        );
+                    }
+                } else {
+                    owner.insert(*l, gr.id);
+                }
+            }
+        }
+    }
+    for (&src, &(channels, ref name)) in &sources {
+        for c in 0..channels {
+            anyhow::ensure!(
+                owner.contains_key(&Loc {
+                    data: src,
+                    dim: 0,
+                    idx: c
+                }),
+                "channel {c} of `{name}` is not covered by any dependency group",
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Audit an applied prune: for every parameter a selected coupled channel
+/// set touches, the pruned graph must have removed *exactly* those
+/// channels — no more, no fewer. Activations are not audited here;
+/// [`super::check_graph`] on the pruned graph re-derives them.
+pub fn check_pruned(
+    original: &Graph,
+    groups: &Groups,
+    selected: &[(usize, usize)],
+    pruned: &Graph,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        original.datas.len() == pruned.datas.len(),
+        "pruned graph has {} data nodes, original had {} (pruning must keep ids stable)",
+        pruned.datas.len(),
+        original.datas.len()
+    );
+    // per (data, dim): deleted channel set + the group that owns it
+    let mut deleted: HashMap<(usize, usize), HashSet<usize>> = HashMap::new();
+    let mut blame: HashMap<(usize, usize), usize> = HashMap::new();
+    for &(gi, ci) in selected {
+        anyhow::ensure!(
+            gi < groups.groups.len(),
+            "selection references group {gi} but only {} groups exist",
+            groups.groups.len()
+        );
+        let gr = &groups.groups[gi];
+        anyhow::ensure!(
+            gr.prunable,
+            "selection prunes group {gi} (source `{}`) which is marked un-prunable",
+            original.op(gr.source_op).name
+        );
+        anyhow::ensure!(
+            ci < gr.ccs.len(),
+            "selection references coupled set {ci} of group {gi} but it has only {}",
+            gr.ccs.len()
+        );
+        for l in &gr.ccs[ci].locs {
+            let d = original.data(l.data);
+            anyhow::ensure!(
+                l.dim < d.shape.len() && l.idx < d.shape[l.dim],
+                "group {gi}: channel {} of `{}` dim {} out of range for {:?}",
+                l.idx,
+                d.name,
+                l.dim,
+                d.shape
+            );
+            deleted.entry((l.data, l.dim)).or_default().insert(l.idx);
+            blame.entry((l.data, l.dim)).or_insert(gi);
+        }
+    }
+    for (&(data, dim), idxs) in &deleted {
+        let orig = &original.data(data).shape;
+        let now = &pruned.data(data).shape;
+        let expect = orig[dim] - idxs.len();
+        anyhow::ensure!(
+            now.len() == orig.len(),
+            "after pruning, `{}` changed rank ({} → {})",
+            original.data(data).name,
+            orig.len(),
+            now.len()
+        );
+        let gi = blame[&(data, dim)];
+        anyhow::ensure!(
+            now[dim] == expect,
+            "after pruning, `{}` kept {} channels on dim {dim} but group {gi} (source \
+             `{}`) expected {expect} ({} of {} deleted)",
+            original.data(data).name,
+            now[dim],
+            original.op(groups.groups[gi].source_op).name,
+            idxs.len(),
+            orig[dim]
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::tests::{corrupt_residual_branch, resnet_like};
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn widths_flag_corrupt_residual_as_group_violation() {
+        let mut g = resnet_like();
+        corrupt_residual_branch(&mut g);
+        let err = check_widths(&g).unwrap_err().to_string();
+        assert!(err.contains("residual group at `add`"), "got: {err}");
+        assert!(err.contains('7') && err.contains('8'), "got: {err}");
+    }
+
+    #[test]
+    fn widths_flag_stale_concat_offsets() {
+        let mut b = GraphBuilder::new("cat", 1);
+        let x = b.input("x", vec![1, 4, 6, 6]);
+        let c1 = b.conv2d("c1", x, 4, 3, 1, 1, 1, false);
+        let cat = b.concat("cat", &[x, c1], 1);
+        let c2 = b.conv2d("c2", cat, 6, 3, 1, 1, 1, false);
+        let gp = b.global_avgpool("gap", c2);
+        let fc = b.gemm("fc", gp, 2, false);
+        b.output(fc);
+        let mut g = b.finish().unwrap();
+        check_widths(&g).unwrap();
+        // pretend an upstream prune shrank the concat without re-basing
+        let cat_out = g.op_by_name("cat").unwrap().outputs[0];
+        g.datas[cat_out].shape[1] = 7;
+        let err = check_widths(&g).unwrap_err().to_string();
+        assert!(err.contains("stale concat offsets"), "got: {err}");
+        assert!(err.contains("cat"), "got: {err}");
+    }
+
+    #[test]
+    fn widths_flag_group_conv_divisibility() {
+        let mut b = GraphBuilder::new("grp", 2);
+        let x = b.input("x", vec![1, 4, 6, 6]);
+        let c0 = b.conv2d("c0", x, 8, 1, 1, 0, 1, false);
+        let c1 = b.conv2d("c1", c0, 8, 3, 1, 1, 4, false);
+        let gp = b.global_avgpool("gap", c1);
+        let fc = b.gemm("fc", gp, 2, false);
+        b.output(fc);
+        let mut g = b.finish().unwrap();
+        check_widths(&g).unwrap();
+        // shrink c1's out-channels to 7: 7 % 4 != 0
+        let w = g.data_by_name("c1.w").unwrap().id;
+        g.datas[w].shape[0] = 7;
+        let t = g.datas[w].param_mut().unwrap();
+        let inner: usize = t.shape[1..].iter().product();
+        t.shape[0] = 7;
+        t.data.truncate(7 * inner);
+        let err = check_widths(&g).unwrap_err().to_string();
+        assert!(err.contains("group-conv `c1`"), "got: {err}");
+        assert!(err.contains("groups=4"), "got: {err}");
+    }
+
+    #[test]
+    fn coupling_passes_on_clean_graphs() {
+        check_coupling(&resnet_like()).unwrap();
+    }
+
+    #[test]
+    fn pruned_audit_accepts_a_real_prune() {
+        let g = resnet_like();
+        let groups = build_groups(&g).unwrap();
+        // prune two coupled sets from the residual group, one from c1's
+        let selected = vec![(0usize, 0usize), (0, 3), (1, 5)];
+        let mut pruned = g.clone();
+        crate::prune::apply_pruning(&mut pruned, &groups, &selected).unwrap();
+        check_pruned(&g, &groups, &selected, &pruned).unwrap();
+        crate::check::check_graph(&pruned).unwrap();
+    }
+
+    #[test]
+    fn pruned_audit_rejects_a_tampered_result() {
+        let g = resnet_like();
+        let groups = build_groups(&g).unwrap();
+        let selected = vec![(0usize, 0usize)];
+        let mut pruned = g.clone();
+        crate::prune::apply_pruning(&mut pruned, &groups, &selected).unwrap();
+        // tamper: delete one extra channel from c2.w behind the audit's back
+        let w = pruned.data_by_name("c2.w").unwrap().id;
+        pruned.datas[w].shape[0] -= 1;
+        let err = check_pruned(&g, &groups, &selected, &pruned)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("c2.w"), "got: {err}");
+        assert!(err.contains("group"), "got: {err}");
+    }
+
+    #[test]
+    fn pruned_audit_rejects_unprunable_selection() {
+        let g = resnet_like();
+        let groups = build_groups(&g).unwrap();
+        let fc_group = groups
+            .groups
+            .iter()
+            .position(|gr| !gr.prunable)
+            .expect("classifier group must be un-prunable");
+        let err = check_pruned(&g, &groups, &[(fc_group, 0)], &g)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("un-prunable"), "got: {err}");
+    }
+}

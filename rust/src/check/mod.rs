@@ -1,0 +1,319 @@
+//! `spa::check` — static verification of graphs and compiled plans.
+//!
+//! The paper's "any architecture" claim rests on invariants that are easy
+//! to state and easy to silently break: every operator's declared output
+//! shape must follow from its inputs, every dependency group must prune
+//! its coupled producers/consumers identically (residual adds, re-based
+//! concat offsets, group-conv divisibility), and a compiled
+//! [`crate::exec::Plan`] must never let two simultaneously-live
+//! intermediates share an arena slot. Numeric parity tests catch
+//! violations only probabilistically; this module checks them
+//! *statically*, so a broken rewrite pass or a corrupted checkpoint fails
+//! at check time with a message naming the offending node — not at kernel
+//! time with a slice panic, and not at serve time with wrong logits.
+//!
+//! Three verifiers:
+//!
+//! * [`check_graph`] — shape/dtype abstract interpretation over the IR
+//!   ([`shape`]) plus prune-coupling invariants ([`coupling`]): declared
+//!   metadata is diffed against re-derived shapes, coupled channel widths
+//!   are cross-checked at every residual add / concat / group conv, and
+//!   the dependency groups from [`crate::prune::build_groups`] are
+//!   validated (source channels partition exactly into coupled sets).
+//! * [`check_pruned`] — provenance check after [`crate::session`]
+//!   applies a plan: every selected coupled-channel set must have removed
+//!   exactly its channels from every parameter it touches.
+//! * [`check_plan`] — verifies a compiled [`crate::exec::Plan`] before
+//!   its first run ([`plan`]): the schedule is a valid topological order,
+//!   fused post-op chains are well-formed, reshape aliases point at live
+//!   buffers, and the arena assignment never overwrites a slot whose
+//!   current value is still needed.
+//!
+//! Wiring: [`CheckLevel`] gates the checks in
+//! [`crate::exec::PlanOpts::check`] and [`crate::session::Session::check`]
+//! (default [`CheckLevel::Debug`] under `debug_assertions`, `Off` in
+//! release). [`crate::ir::passes::optimize_checked`] re-runs
+//! [`check_graph`] after every rewrite pass, checkpoint loading
+//! ([`crate::ir::serde::load_graph`]) always verifies, the serve-layer
+//! plan cache refuses to cache a plan that fails [`check_plan`], and
+//! `spa lint <model>` runs every checker across the zoo from the CLI.
+
+pub mod coupling;
+pub mod plan;
+pub mod shape;
+
+pub use coupling::{check_coupling, check_pruned};
+pub use plan::check_plan;
+pub use shape::check_shapes;
+
+use crate::ir::Graph;
+
+/// How much static checking to run at the wired-in sites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CheckLevel {
+    /// No static checks (release-build default).
+    Off,
+    /// Run every checker at its wiring point (debug-build default): after
+    /// `Session` applies a prune, after every `ir::passes` pass inside
+    /// [`crate::ir::passes::optimize_checked`], and on every compiled
+    /// plan.
+    Debug,
+    /// Everything `Debug` runs, plus a full graph re-check inside
+    /// [`crate::exec::Plan::compile`] — the explicit opt-in for CI lint
+    /// lanes and serving fleets that want checkpoints and plans verified
+    /// in release builds too.
+    Strict,
+}
+
+impl Default for CheckLevel {
+    /// `Debug` when compiled with `debug_assertions`, `Off` otherwise.
+    fn default() -> CheckLevel {
+        if cfg!(debug_assertions) {
+            CheckLevel::Debug
+        } else {
+            CheckLevel::Off
+        }
+    }
+}
+
+impl CheckLevel {
+    /// Whether any checking runs at this level.
+    pub fn enabled(self) -> bool {
+        !matches!(self, CheckLevel::Off)
+    }
+
+    /// Stable lowercase name (CLI flags, reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            CheckLevel::Off => "off",
+            CheckLevel::Debug => "debug",
+            CheckLevel::Strict => "strict",
+        }
+    }
+
+    /// Parse a CLI-style level name.
+    pub fn parse(s: &str) -> anyhow::Result<CheckLevel> {
+        match s {
+            "off" => Ok(CheckLevel::Off),
+            "debug" => Ok(CheckLevel::Debug),
+            "strict" => Ok(CheckLevel::Strict),
+            other => anyhow::bail!("unknown check level `{other}` (want off|debug|strict)"),
+        }
+    }
+}
+
+/// Run the full static graph analysis: structural sanity, coupled-width
+/// consistency, shape/dtype re-derivation, and dependency-group
+/// invariants — in that order, so a coupling violation (an
+/// inconsistently pruned residual, a stale concat offset) is reported
+/// with its group context rather than as a generic shape error.
+pub fn check_graph(g: &Graph) -> anyhow::Result<()> {
+    structural(g)?;
+    coupling::check_widths(g)?;
+    shape::check_shapes(g)?;
+    coupling::check_coupling(g)?;
+    Ok(())
+}
+
+/// Cheap structural sanity that every later checker relies on: ids match
+/// positions, references are in range, producer/consumer links are
+/// symmetric, and parameter tensors physically match their declared
+/// shapes (the gap `Graph::validate` does not cover — a checkpoint whose
+/// weight payload disagrees with its metadata).
+fn structural(g: &Graph) -> anyhow::Result<()> {
+    for (i, d) in g.datas.iter().enumerate() {
+        anyhow::ensure!(d.id == i, "data id mismatch at index {i} (recorded {})", d.id);
+        if let Some(p) = d.producer {
+            anyhow::ensure!(
+                p < g.ops.len() && g.ops[p].outputs.contains(&i),
+                "data `{}` claims a producer which does not output it",
+                d.name
+            );
+        }
+        for &c in &d.consumers {
+            anyhow::ensure!(
+                c < g.ops.len() && g.ops[c].inputs.contains(&i),
+                "data `{}` claims a consumer which does not input it",
+                d.name
+            );
+        }
+        if let Some(t) = d.param() {
+            anyhow::ensure!(
+                t.shape == d.shape,
+                "param `{}`: tensor storage has shape {:?} but the node declares {:?}",
+                d.name,
+                t.shape,
+                d.shape
+            );
+        }
+    }
+    for (i, op) in g.ops.iter().enumerate() {
+        anyhow::ensure!(op.id == i, "op id mismatch at index {i} (recorded {})", op.id);
+        for &d in op.inputs.iter().chain(&op.outputs) {
+            anyhow::ensure!(
+                d < g.datas.len(),
+                "op `{}` references data id {d} out of range ({} data nodes)",
+                op.name,
+                g.datas.len()
+            );
+        }
+        for &o in &op.outputs {
+            anyhow::ensure!(
+                g.datas[o].producer == Some(i),
+                "output `{}` of op `{}` records the wrong producer",
+                g.datas[o].name,
+                op.name
+            );
+        }
+    }
+    for &i in g.inputs.iter().chain(&g.outputs) {
+        anyhow::ensure!(
+            i < g.datas.len(),
+            "graph io references data id {i} out of range ({} data nodes)",
+            g.datas.len()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::ir::{DataKind, GraphBuilder};
+
+    /// The grouping module's residual exemplar: c0/c2 coupled via `add`.
+    pub(crate) fn resnet_like() -> Graph {
+        let mut b = GraphBuilder::new("resnetish", 1);
+        let x = b.input("x", vec![1, 3, 8, 8]);
+        let c0 = b.conv2d("c0", x, 8, 3, 1, 1, 1, false);
+        let n0 = b.batchnorm("bn0", c0);
+        let r0 = b.relu("r0", n0);
+        let c1 = b.conv2d("c1", r0, 8, 3, 1, 1, 1, false);
+        let n1 = b.batchnorm("bn1", c1);
+        let r1 = b.relu("r1", n1);
+        let c2 = b.conv2d("c2", r1, 8, 3, 1, 1, 1, false);
+        let n2 = b.batchnorm("bn2", c2);
+        let s = b.add("add", n2, r0);
+        let r2 = b.relu("r2", s);
+        let gp = b.global_avgpool("gap", r2);
+        let fc = b.gemm("fc", gp, 4, true);
+        b.output(fc);
+        b.finish().unwrap()
+    }
+
+    /// Shrink the `c2`/`bn2` branch of [`resnet_like`] to 7 channels
+    /// while the residual `r0` branch keeps 8 — the canonical
+    /// inconsistently-pruned group.
+    pub(crate) fn corrupt_residual_branch(g: &mut Graph) {
+        let keep = 7usize;
+        for d in &mut g.datas {
+            let name = d.name.clone();
+            if name == "c2.w" {
+                d.shape[0] = keep;
+                let t = d.param_mut().unwrap();
+                let inner: usize = t.shape[1..].iter().product();
+                t.shape[0] = keep;
+                t.data.truncate(keep * inner);
+            } else if name.starts_with("bn2.") {
+                d.shape = vec![keep];
+                let t = d.param_mut().unwrap();
+                t.shape = vec![keep];
+                t.data.truncate(keep);
+            }
+        }
+        let c2 = g.op_by_name("c2").unwrap().outputs[0];
+        let bn2 = g.op_by_name("bn2").unwrap().outputs[0];
+        g.datas[c2].shape[1] = keep;
+        g.datas[bn2].shape[1] = keep;
+    }
+
+    #[test]
+    fn clean_graph_passes_all_checks() {
+        let g = resnet_like();
+        check_graph(&g).unwrap();
+    }
+
+    #[test]
+    fn rejects_inconsistently_pruned_residual_group() {
+        let mut g = resnet_like();
+        corrupt_residual_branch(&mut g);
+        let err = check_graph(&g).unwrap_err().to_string();
+        assert!(err.contains("residual group"), "got: {err}");
+        assert!(err.contains("add"), "must name the coupling op: {err}");
+        assert!(err.contains('7') && err.contains('8'), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_param_storage_shape_mismatch() {
+        let mut g = resnet_like();
+        let w = g.data_by_name("c1.w").unwrap().id;
+        // corrupt the payload only: metadata still claims 8 channels
+        let t = g.datas[w].param_mut().unwrap();
+        let inner: usize = t.shape[1..].iter().product();
+        t.shape[0] = 6;
+        t.data.truncate(6 * inner);
+        let err = check_graph(&g).unwrap_err().to_string();
+        assert!(err.contains("c1.w"), "must name the param: {err}");
+        assert!(err.contains("declares"), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_declared_shape_drift() {
+        let mut g = resnet_like();
+        // declared activation shape no longer follows from the inputs
+        let gap = g.op_by_name("gap").unwrap().outputs[0];
+        g.datas[gap].shape = vec![1, 5];
+        let err = check_graph(&g).unwrap_err().to_string();
+        assert!(err.contains("gap"), "must name the node: {err}");
+    }
+
+    #[test]
+    fn rejects_embedding_fed_by_non_input() {
+        let mut b = GraphBuilder::new("embgraph", 2);
+        let ids = b.input("ids", vec![1, 6]);
+        let e = b.embedding("emb", ids, 10, 8);
+        let ln = b.layernorm("ln", e);
+        let pooled = b.reduce_mean("pool", ln, 1);
+        let out = b.gemm("head", pooled, 3, true);
+        b.output(out);
+        let mut g = b.finish().unwrap();
+        check_graph(&g).unwrap();
+        // corrupt: the ids tensor is no longer an integer-typed graph
+        // input — embeddings must not gather with float indices
+        let ids_id = g.inputs[0];
+        g.datas[ids_id].kind = DataKind::Activation;
+        let err = check_graph(&g).unwrap_err().to_string();
+        assert!(err.contains("emb"), "must name the op: {err}");
+        assert!(err.contains("ids"), "must mention the dtype: {err}");
+    }
+
+    #[test]
+    fn level_semantics() {
+        assert!(!CheckLevel::Off.enabled());
+        assert!(CheckLevel::Debug.enabled());
+        assert!(CheckLevel::Strict.enabled());
+        assert_eq!(CheckLevel::parse("strict").unwrap(), CheckLevel::Strict);
+        assert_eq!(CheckLevel::parse("off").unwrap(), CheckLevel::Off);
+        assert!(CheckLevel::parse("bogus").is_err());
+        if cfg!(debug_assertions) {
+            assert_eq!(CheckLevel::default(), CheckLevel::Debug);
+        } else {
+            assert_eq!(CheckLevel::default(), CheckLevel::Off);
+        }
+    }
+
+    #[test]
+    fn every_zoo_model_passes_at_nominal_shapes() {
+        use crate::zoo::{self, ImageCfg};
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        for name in zoo::IMAGE_MODELS.iter().chain(zoo::EXTRA_MODELS) {
+            let g = zoo::by_name(name, cfg, 2).unwrap();
+            check_graph(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        let t = zoo::distilbert(zoo::TextCfg::default(), 3);
+        check_graph(&t).unwrap();
+    }
+}

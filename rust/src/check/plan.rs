@@ -1,0 +1,418 @@
+//! Static verification of compiled execution plans.
+//!
+//! [`crate::exec::Plan::compile`] turns a graph into a schedule over a
+//! liveness-analyzed buffer arena with fused in-place post-ops — exactly
+//! the transformations where a bug corrupts values silently: two
+//! simultaneously-live intermediates mapped to one slot, a fused
+//! activation mutating a buffer a reshape alias still exposes, a
+//! schedule that reads before it writes. Numeric parity tests catch such
+//! bugs only when a random input happens to excite them; [`check_plan`]
+//! proves their absence for a given plan by replaying the schedule
+//! abstractly: it re-derives liveness from the schedule itself, walks
+//! the steps simulating slot ownership, and verifies every invariant the
+//! executor relies on.
+
+use crate::exec::{act_of, Item, Loc, Plan, PostOp};
+use crate::ir::{DataId, OpKind};
+use std::collections::{HashMap, HashSet};
+
+/// Verify a compiled plan before its first run. Checks, in order:
+///
+/// 1. every `Alias` wraps a reshape-only op and its output's location
+///    equals its input's (reshape aliases share storage, never copy);
+/// 2. the schedule is a valid topological order — every read (following
+///    reshape aliases) sees a previously produced value;
+/// 3. fused post-op chains are well-formed: each hidden intermediate has
+///    exactly one consumer, is not readable after the run, and the chain's
+///    recorded end matches the graph;
+/// 4. the location table is consistent (slots in range, step outputs
+///    mapped to their slots, feeds/params pointing at real inputs/params);
+/// 5. every live op is covered exactly once (as a step, a fused post-op,
+///    or an alias) and no data is written twice;
+/// 6. **arena safety**: replaying the schedule with re-derived liveness,
+///    no step overwrites a slot whose current value is still needed —
+///    including values pinned by graph outputs, retained ids, and reshape
+///    aliases of any of those.
+pub fn check_plan(plan: &Plan) -> anyhow::Result<()> {
+    let g = &plan.graph;
+    let nd = g.datas.len();
+
+    // ---- alias map + rule 1 (well-formed aliases) ----
+    let mut alias_src: HashMap<DataId, DataId> = HashMap::new();
+    for item in &plan.schedule {
+        if let Item::Alias { op } = item {
+            let o = &g.ops[*op];
+            anyhow::ensure!(
+                matches!(o.kind, OpKind::Identity | OpKind::Flatten),
+                "plan aliases op `{}` ({}) which is not reshape-only",
+                o.name,
+                o.kind.name()
+            );
+            anyhow::ensure!(
+                !o.inputs.is_empty() && !o.outputs.is_empty(),
+                "plan aliases neutralized op `{}`",
+                o.name
+            );
+            alias_src.insert(o.outputs[0], o.inputs[0]);
+        }
+    }
+    let resolve = |mut d: DataId| -> anyhow::Result<DataId> {
+        let mut hops = 0usize;
+        while let Some(&s) = alias_src.get(&d) {
+            d = s;
+            hops += 1;
+            anyhow::ensure!(hops <= nd, "alias cycle at data `{}`", g.datas[d].name);
+        }
+        Ok(d)
+    };
+
+    // ---- rule 4: location table sanity ----
+    for (id, l) in plan.loc.iter().enumerate() {
+        match l {
+            Some(Loc::Slot(s)) => anyhow::ensure!(
+                *s < plan.slot_count,
+                "data `{}` mapped to arena slot {s} but the plan has {} slots",
+                g.datas[id].name,
+                plan.slot_count
+            ),
+            Some(Loc::Feed(k)) => anyhow::ensure!(
+                *k < g.inputs.len(),
+                "data `{}` mapped to feed {k} but the graph has {} inputs",
+                g.datas[id].name,
+                g.inputs.len()
+            ),
+            Some(Loc::Param(p)) => anyhow::ensure!(
+                g.datas.get(*p).is_some_and(|d| d.is_param()),
+                "data `{}` mapped to param {p} which is not a parameter",
+                g.datas[id].name
+            ),
+            None => {}
+        }
+    }
+
+    // ---- re-derive liveness from the schedule itself (mirror of the
+    // compiler's phase B, but from first principles: a slot's value is
+    // needed until the last step that reads it, or forever if a readable
+    // id — graph output or retained — resolves to it) ----
+    let mut write_at: HashMap<DataId, usize> = HashMap::new();
+    let mut last_read: HashMap<DataId, usize> = HashMap::new();
+    for (si, item) in plan.schedule.iter().enumerate() {
+        if let Item::Step { op, out_data, .. } = item {
+            for &i in &g.ops[*op].inputs {
+                let r = resolve(i)?;
+                if write_at.contains_key(&r) {
+                    last_read.insert(r, si);
+                }
+            }
+            write_at.insert(*out_data, si);
+        }
+    }
+    for &d in &plan.readable {
+        let r = resolve(d)?;
+        if write_at.contains_key(&r) {
+            last_read.insert(r, usize::MAX);
+        }
+    }
+
+    // ---- rules 2, 3, 5, 6: replay the schedule ----
+    let mut available: HashSet<DataId> = g.inputs.iter().copied().collect();
+    for d in &g.datas {
+        if d.is_param() {
+            available.insert(d.id);
+        }
+    }
+    let mut steps_seen: HashSet<usize> = HashSet::new();
+    let mut written: HashSet<DataId> = HashSet::new();
+    let mut slot_owner: Vec<Option<DataId>> = vec![None; plan.slot_count];
+    let mut fused_count = 0usize;
+    let mut alias_count = 0usize;
+    for (si, item) in plan.schedule.iter().enumerate() {
+        match item {
+            Item::Alias { op } => {
+                let o = &g.ops[*op];
+                let (inp, out) = (o.inputs[0], o.outputs[0]);
+                let r = resolve(inp)?;
+                anyhow::ensure!(
+                    available.contains(&r),
+                    "schedule is not a topological order: alias `{}` reads `{}` before \
+                     it is produced",
+                    o.name,
+                    g.datas[r].name
+                );
+                anyhow::ensure!(
+                    plan.loc[r].is_some(),
+                    "alias `{}`: source `{}` has no run-time location",
+                    o.name,
+                    g.datas[r].name
+                );
+                anyhow::ensure!(
+                    plan.loc[out] == plan.loc[inp],
+                    "alias `{}`: output `{}` does not share its input's location",
+                    o.name,
+                    g.datas[out].name
+                );
+                available.insert(out);
+                alias_count += 1;
+            }
+            Item::Step {
+                op,
+                out_data,
+                out_slot,
+                post,
+            } => {
+                let o = &g.ops[*op];
+                anyhow::ensure!(
+                    !o.outputs.is_empty(),
+                    "plan schedules neutralized op `{}`",
+                    o.name
+                );
+                anyhow::ensure!(steps_seen.insert(*op), "op `{}` is scheduled twice", o.name);
+                for &i in &o.inputs {
+                    let r = resolve(i)?;
+                    anyhow::ensure!(
+                        available.contains(&r),
+                        "schedule is not a topological order: step {si} (`{}`) reads \
+                         `{}` before it is produced",
+                        o.name,
+                        g.datas[r].name
+                    );
+                }
+                // fused post-op chain must mirror the graph exactly
+                let mut cur = o.outputs[0];
+                for p in post {
+                    let d = &g.datas[cur];
+                    anyhow::ensure!(
+                        d.consumers.len() == 1,
+                        "fused chain at `{}`: hidden intermediate `{}` has {} consumers",
+                        o.name,
+                        d.name,
+                        d.consumers.len()
+                    );
+                    anyhow::ensure!(
+                        !plan.readable.contains(&cur),
+                        "fused chain at `{}` hides `{}` which must stay readable",
+                        o.name,
+                        d.name
+                    );
+                    let cop = &g.ops[d.consumers[0]];
+                    match p {
+                        PostOp::Bn { .. } => anyhow::ensure!(
+                            matches!(cop.kind, OpKind::BatchNorm { .. })
+                                && cop.inputs.first() == Some(&cur),
+                            "fused chain at `{}`: BN post-op does not match consumer `{}`",
+                            o.name,
+                            cop.name
+                        ),
+                        PostOp::Act(a) => anyhow::ensure!(
+                            act_of(&cop.kind) == Some(*a),
+                            "fused chain at `{}`: activation post-op does not match \
+                             consumer `{}`",
+                            o.name,
+                            cop.name
+                        ),
+                    }
+                    cur = cop.outputs[0];
+                }
+                anyhow::ensure!(
+                    cur == *out_data,
+                    "step for `{}` records out data `{}` but its fused chain ends at `{}`",
+                    o.name,
+                    g.datas[*out_data].name,
+                    g.datas[cur].name
+                );
+                fused_count += post.len();
+                anyhow::ensure!(
+                    *out_slot < plan.slot_count,
+                    "step for `{}` writes slot {} but the plan has {} slots",
+                    o.name,
+                    out_slot,
+                    plan.slot_count
+                );
+                anyhow::ensure!(
+                    plan.loc[*out_data] == Some(Loc::Slot(*out_slot)),
+                    "step output `{}`: location table disagrees with the scheduled \
+                     slot {}",
+                    g.datas[*out_data].name,
+                    out_slot
+                );
+                anyhow::ensure!(
+                    written.insert(*out_data),
+                    "data `{}` is written by two schedule steps",
+                    g.datas[*out_data].name
+                );
+                // rule 6: the slot's current value must be dead (its last
+                // reader strictly before this step)
+                if let Some(prev) = slot_owner[*out_slot] {
+                    if prev != *out_data {
+                        let live = last_read.get(&prev).copied().unwrap_or(0);
+                        if live >= si {
+                            let until = if live == usize::MAX {
+                                "it must stay readable after the run".to_string()
+                            } else {
+                                format!("its last read is at step {live}")
+                            };
+                            anyhow::bail!(
+                                "arena hazard: step {si} (`{}`) overwrites slot {} while \
+                                 `{}` is still live ({until})",
+                                o.name,
+                                out_slot,
+                                g.datas[prev].name
+                            );
+                        }
+                    }
+                }
+                slot_owner[*out_slot] = Some(*out_data);
+                available.insert(*out_data);
+            }
+        }
+    }
+
+    // ---- rule 5: every live op covered exactly once ----
+    let covered = steps_seen.len() + fused_count + alias_count;
+    let expected = g.ops.iter().filter(|o| !o.outputs.is_empty()).count();
+    anyhow::ensure!(
+        covered == expected,
+        "plan schedule covers {covered} ops (steps + fused + aliases) but the graph has \
+         {expected} live ops"
+    );
+    for &out in &g.outputs {
+        let r = resolve(out)?;
+        anyhow::ensure!(
+            available.contains(&r),
+            "graph output `{}` is never produced by the schedule",
+            g.datas[out].name
+        );
+        anyhow::ensure!(
+            plan.loc[out].is_some(),
+            "graph output `{}` has no run-time location",
+            g.datas[out].name
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{OptLevel, Plan, PlanOpts};
+    use crate::ir::GraphBuilder;
+    use crate::zoo::{self, ImageCfg};
+
+    fn cfg() -> ImageCfg {
+        ImageCfg {
+            hw: 8,
+            ..Default::default()
+        }
+    }
+
+    /// x → fc1 → relu → add(relu, fc1): fc1.out has two consumers, so no
+    /// fusion and two simultaneously-live intermediates — the minimal
+    /// graph where slot sharing would corrupt the residual.
+    fn residual_gemm() -> crate::ir::Graph {
+        let mut b = GraphBuilder::new("resgemm", 1);
+        let x = b.input("x", vec![1, 8]);
+        let f = b.gemm("fc1", x, 8, false);
+        let r = b.relu("relu", f);
+        let s = b.add("res", r, f);
+        b.output(s);
+        b.finish().unwrap()
+    }
+
+    fn compile(g: &crate::ir::Graph, level: OptLevel) -> Plan {
+        Plan::compile(
+            g,
+            PlanOpts {
+                level,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn compiled_zoo_plans_verify_at_every_level() {
+        for name in ["resnet18", "mobilenetv2", "densenet", "mlp", "vit"] {
+            let g = zoo::by_name(name, cfg(), 2).unwrap();
+            for level in [OptLevel::None, OptLevel::Exact, OptLevel::Fast] {
+                let plan = compile(&g, level);
+                check_plan(&plan).unwrap_or_else(|e| panic!("{name}/{level:?}: {e}"));
+            }
+        }
+        let t = zoo::distilbert(zoo::TextCfg::default(), 3);
+        check_plan(&compile(&t, OptLevel::Exact)).unwrap();
+    }
+
+    #[test]
+    fn rejects_overlapping_live_arena_slots() {
+        let g = residual_gemm();
+        let mut plan = compile(&g, OptLevel::None);
+        check_plan(&plan).unwrap();
+        // force relu's output into fc1's slot — fc1.out is still read by
+        // the later add, so the two values are simultaneously live
+        let (fc1_slot, fc1_out) = plan
+            .schedule
+            .iter()
+            .find_map(|it| match it {
+                Item::Step {
+                    op,
+                    out_slot,
+                    out_data,
+                    ..
+                } if plan.graph.ops[*op].name == "fc1" => Some((*out_slot, *out_data)),
+                _ => None,
+            })
+            .unwrap();
+        let relu_out = {
+            let it = plan
+                .schedule
+                .iter_mut()
+                .find(|it| {
+                    matches!(it, Item::Step { op, .. } if plan.graph.ops[*op].name == "relu")
+                })
+                .unwrap();
+            match it {
+                Item::Step {
+                    out_slot, out_data, ..
+                } => {
+                    assert_ne!(*out_slot, fc1_slot, "compiler must separate live values");
+                    *out_slot = fc1_slot;
+                    *out_data
+                }
+                _ => unreachable!(),
+            }
+        };
+        plan.loc[relu_out] = plan.loc[fc1_out];
+        let err = check_plan(&plan).unwrap_err().to_string();
+        assert!(err.contains("arena hazard"), "got: {err}");
+        assert!(err.contains("fc1.out"), "must name the clobbered value: {err}");
+    }
+
+    #[test]
+    fn rejects_non_topological_schedule() {
+        let g = residual_gemm();
+        let mut plan = compile(&g, OptLevel::None);
+        plan.schedule.swap(0, 1); // relu now runs before fc1
+        let err = check_plan(&plan).unwrap_err().to_string();
+        assert!(err.contains("not a topological order"), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_corrupt_location_table() {
+        let g = residual_gemm();
+        let mut plan = compile(&g, OptLevel::None);
+        let out = plan.graph.outputs[0];
+        plan.loc[out] = Some(Loc::Slot(plan.slot_count + 3));
+        let err = check_plan(&plan).unwrap_err().to_string();
+        assert!(err.contains("slot"), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_double_write() {
+        let g = residual_gemm();
+        let mut plan = compile(&g, OptLevel::None);
+        let first = plan.schedule[0].clone();
+        plan.schedule.push(first);
+        let err = check_plan(&plan).unwrap_err().to_string();
+        assert!(err.contains("scheduled twice"), "got: {err}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Shape/dtype abstract interpretation over SPA-IR.
+//!
+//! Walks the graph in topological order re-deriving every operator's
+//! output shape from its *inputs'* declared shapes (the same per-operator
+//! semantics as [`crate::ir::shape::infer_op_output_shapes`]) and diffs
+//! the result against the declared metadata. A rewrite pass that edits a
+//! weight without fixing downstream shapes, or a checkpoint whose
+//! metadata drifted from its payload, fails here with the node named —
+//! before any kernel indexes out of bounds.
+//!
+//! SPA-IR carries a deliberately tiny dtype universe: everything is f32
+//! except [`crate::ir::OpKind::Embedding`] indices, which are integer
+//! ids stored in a float tensor. The dtype pass enforces the two rules
+//! that keep that sound: embedding indices must come from a graph input,
+//! and no tensor may be consumed both as ids and as float arithmetic.
+
+use crate::ir::shape::{infer_op_output_shapes, infer_shapes};
+use crate::ir::{DataKind, Graph, OpKind};
+
+/// Re-derive every data node's shape and diff against declared metadata;
+/// enforce the ids/float dtype split. Assumes the structural sanity of
+/// [`super::check_graph`]'s first stage.
+pub fn check_shapes(g: &Graph) -> anyhow::Result<()> {
+    check_dtypes(g)?;
+    // Abstract interpretation: `infer_shapes` seeds producer-less nodes
+    // (inputs/params) from declared shapes and folds
+    // `infer_op_output_shapes` over the topological order, so one call
+    // re-derives the whole graph from first principles.
+    let derived = infer_shapes(g)?;
+    for d in &g.datas {
+        if let Some(s) = derived.get(&d.id) {
+            anyhow::ensure!(
+                s == &d.shape,
+                "shape drift on `{}`: declared {:?} but re-derived {:?} from its producer's inputs",
+                d.name,
+                d.shape,
+                s
+            );
+        } else {
+            // Unreached by inference means no producer seeded it — a
+            // dangling activation is only a defect if something reads it.
+            anyhow::ensure!(
+                d.consumers.is_empty() && !g.outputs.contains(&d.id),
+                "activation `{}` has no producer but is consumed",
+                d.name
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The ids/float dtype rules (see module docs).
+fn check_dtypes(g: &Graph) -> anyhow::Result<()> {
+    for op in &g.ops {
+        if !matches!(op.kind, OpKind::Embedding) || op.inputs.is_empty() {
+            continue;
+        }
+        let ids = &g.datas[op.inputs[0]];
+        anyhow::ensure!(
+            matches!(ids.kind, DataKind::Input),
+            "op `{}`: embedding ids input `{}` must be an integer-typed graph input, \
+             not a float {}",
+            op.name,
+            ids.name,
+            match ids.kind {
+                DataKind::Param(_) => "parameter",
+                _ => "activation",
+            }
+        );
+        // ids must never double as float data elsewhere
+        for &c in &ids.consumers {
+            let cop = &g.ops[c];
+            let float_use = !matches!(cop.kind, OpKind::Embedding)
+                || cop.inputs.first() != Some(&ids.id);
+            anyhow::ensure!(
+                !float_use,
+                "data `{}` is consumed both as integer ids (op `{}`) and as floats (op `{}`)",
+                ids.name,
+                op.name,
+                cop.name
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Standalone single-op re-derivation, shared with the plan checker:
+/// derive `kind`'s output shape from input shapes, with the op name
+/// attached to errors.
+pub(crate) fn derive_output(
+    name: &str,
+    kind: &OpKind,
+    ins: &[Vec<usize>],
+) -> anyhow::Result<Vec<usize>> {
+    let mut outs =
+        infer_op_output_shapes(kind, ins).map_err(|e| anyhow::anyhow!("op `{name}`: {e}"))?;
+    anyhow::ensure!(!outs.is_empty(), "op `{name}` derives no outputs");
+    Ok(outs.swap_remove(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn detects_stale_downstream_shape() {
+        let mut b = GraphBuilder::new("stale", 1);
+        let x = b.input("x", vec![1, 3, 8, 8]);
+        let c = b.conv2d("c", x, 4, 3, 1, 1, 1, false);
+        let gp = b.global_avgpool("gap", c);
+        let out = b.gemm("fc", gp, 2, false);
+        b.output(out);
+        let mut g = b.finish().unwrap();
+        check_shapes(&g).unwrap();
+        // "prune" the conv weight without re-inferring anything downstream
+        let w = g.data_by_name("c.w").unwrap().id;
+        g.datas[w].shape[0] = 3;
+        let t = g.datas[w].param_mut().unwrap();
+        let inner: usize = t.shape[1..].iter().product();
+        t.shape[0] = 3;
+        t.data.truncate(3 * inner);
+        let err = check_shapes(&g).unwrap_err().to_string();
+        // the conv output is the first place declaration and derivation
+        // disagree
+        assert!(err.contains("shape drift") || err.contains("op `"), "got: {err}");
+    }
+
+    #[test]
+    fn derive_output_names_the_op() {
+        let err = derive_output(
+            "badconv",
+            &OpKind::Conv2d {
+                stride: 1,
+                pad: 0,
+                groups: 1,
+            },
+            &[vec![1, 4, 8, 8], vec![8, 3, 3, 3]],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("badconv"), "got: {err}");
+    }
+}

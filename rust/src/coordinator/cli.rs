@@ -18,6 +18,7 @@
 
 use super::{train_prune, train_prune_finetune, prune_train, NoFinetuneAlgo, PipelineCfg};
 use crate::analysis;
+use crate::check::CheckLevel;
 use crate::criteria::Criterion;
 use crate::data::ImageDataset;
 use crate::exec::OptLevel;
@@ -281,6 +282,26 @@ impl ServeArgs {
     }
 }
 
+/// `spa lint` flags: which models, at what [`CheckLevel`].
+struct LintArgs {
+    model: String,
+    icfg: ImageCfg,
+    seed: u64,
+    level: CheckLevel,
+}
+
+impl LintArgs {
+    fn parse(f: &Flags) -> anyhow::Result<LintArgs> {
+        let common = CommonArgs::parse(f, "all");
+        Ok(LintArgs {
+            model: common.model,
+            icfg: common.icfg,
+            seed: common.seed,
+            level: CheckLevel::parse(&f.get("level", "strict"))?,
+        })
+    }
+}
+
 struct BenchDiffArgs {
     base: String,
     fresh: String,
@@ -319,6 +340,9 @@ COMMANDS:
   serve    [--addr H:P --tick-ms N --max-batch N --cache-cap N]
            [--opt none|exact|fast --prune-rf F --criterion l1]
            batching inference server over compiled plans (spa::serve)
+  lint     [--model <name>|all] [--level off|debug|strict]
+           run every static checker (spa::check) over the zoo: graph
+           shape/coupling invariants, an audited prune, compiled plans
   bench-diff --base <json> --new <json> [--warn-pct F]
            compare two SPA_BENCH_JSON snapshots, warn on regressions
   convert  --model <name> --dialect <torch|tf|jax|mxnet> --out <file>
@@ -510,6 +534,89 @@ fn load_bench(path: &str) -> anyhow::Result<Vec<(String, f64)>> {
     Ok(out)
 }
 
+/// Run every static checker over one model: graph, a strict-audited
+/// prune, and compiled plans (baseline + pruned) at `level`. Returns a
+/// short summary for the report table.
+fn lint_one(name: &str, icfg: ImageCfg, seed: u64, level: CheckLevel) -> anyhow::Result<String> {
+    let g = if name == "distilbert" {
+        zoo::distilbert(zoo::TextCfg::default(), seed)
+    } else {
+        zoo::by_name(name, icfg, seed)?
+    };
+    crate::check::check_graph(&g).map_err(|e| anyhow::anyhow!("graph: {e}"))?;
+    let plan = crate::Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(crate::Target::FlopsRf(1.3))
+        .check(level)
+        .plan()
+        .map_err(|e| anyhow::anyhow!("prune: {e}"))?;
+    let pruned = plan.apply().map_err(|e| anyhow::anyhow!("prune: {e}"))?;
+    let opts = crate::exec::PlanOpts {
+        check: level,
+        ..Default::default()
+    };
+    let base = crate::exec::Plan::compile(&g, opts.clone())
+        .map_err(|e| anyhow::anyhow!("plan(base): {e}"))?;
+    let fast = crate::exec::Plan::compile(&pruned.graph, opts)
+        .map_err(|e| anyhow::anyhow!("plan(pruned): {e}"))?;
+    Ok(format!(
+        "{} ops, {} groups, {}+{} steps",
+        g.ops.len(),
+        plan.num_groups(),
+        base.report().steps,
+        fast.report().steps
+    ))
+}
+
+fn cmd_lint(a: &LintArgs) -> anyhow::Result<()> {
+    let names: Vec<String> = if a.model == "all" {
+        zoo::IMAGE_MODELS
+            .iter()
+            .chain(zoo::EXTRA_MODELS)
+            .map(|s| s.to_string())
+            .chain(std::iter::once("distilbert".to_string()))
+            .collect()
+    } else {
+        vec![a.model.clone()]
+    };
+    let mut t = Table::new(
+        &format!("spa lint (level {})", a.level.name()),
+        &["model", "summary", "status"],
+    );
+    let mut failures: Vec<(String, String)> = Vec::new();
+    for name in &names {
+        match lint_one(name, a.icfg, a.seed, a.level) {
+            Ok(summary) => t.row(&[name.clone(), summary, "ok".to_string()]),
+            Err(e) => {
+                t.row(&[name.clone(), "-".to_string(), "FAIL".to_string()]);
+                failures.push((name.clone(), e.to_string()));
+            }
+        }
+    }
+    t.print();
+    if !failures.is_empty() {
+        for (name, e) in &failures {
+            println!("lint: {name}: {e}");
+        }
+        anyhow::bail!(
+            "lint failed for {} of {} model(s) at level {}",
+            failures.len(),
+            names.len(),
+            a.level.name()
+        );
+    }
+    println!("lint: {} model(s) clean at level {}", names.len(), a.level.name());
+    Ok(())
+}
+
+/// Percent delta of `new_ns` against a baseline measurement, or `None`
+/// when the baseline is missing or non-positive (an empty smoke-lane
+/// snapshot records no usable time — treat as "no baseline", never as a
+/// division by zero).
+fn bench_delta(base_ns: Option<f64>, new_ns: f64) -> Option<f64> {
+    base_ns.filter(|&b| b > 0.0).map(|b| (new_ns - b) / b * 100.0)
+}
+
 fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
     let base = match load_bench(&a.base) {
         Ok(v) if !v.is_empty() => v,
@@ -528,13 +635,16 @@ fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
     anyhow::ensure!(!fresh.is_empty(), "{}: no bench entries", a.fresh);
     let mut t = Table::new("bench-diff (ns/iter)", &["bench", "base", "new", "delta"]);
     let mut regressions = 0usize;
+    let mut compared = 0usize;
     for (name, new_ns) in &fresh {
-        match base.iter().find(|(n, _)| n == name) {
-            Some((_, base_ns)) if *base_ns > 0.0 => {
-                let pct = (new_ns - base_ns) / base_ns * 100.0;
+        let base_ns = base.iter().find(|(n, _)| n == name).map(|(_, b)| *b);
+        match bench_delta(base_ns, *new_ns) {
+            Some(pct) => {
+                compared += 1;
+                let b = base_ns.expect("delta implies baseline");
                 t.row(&[
                     name.clone(),
-                    format!("{base_ns:.0}"),
+                    format!("{b:.0}"),
                     format!("{new_ns:.0}"),
                     format!("{pct:+.1}%"),
                 ]);
@@ -542,21 +652,26 @@ fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
                     regressions += 1;
                     println!(
                         "::warning::bench `{name}` regressed {pct:+.1}% \
-                         ({base_ns:.0} -> {new_ns:.0} ns/iter)"
+                         ({b:.0} -> {new_ns:.0} ns/iter)"
                     );
                 }
             }
-            _ => t.row(&[
-                name.clone(),
-                "-".to_string(),
-                format!("{new_ns:.0}"),
-                "new".to_string(),
-            ]),
+            None => {
+                // missing entry or a zero-time record (empty snapshot):
+                // notice only, never part of the regression gate
+                let label = if base_ns.is_some() { "no baseline" } else { "new" };
+                t.row(&[
+                    name.clone(),
+                    "-".to_string(),
+                    format!("{new_ns:.0}"),
+                    label.to_string(),
+                ]);
+            }
         }
     }
     t.print();
     println!(
-        "bench-diff: {} benches compared, {} regression(s) beyond {:.0}%",
+        "bench-diff: {compared} of {} benches compared, {} regression(s) beyond {:.0}%",
         fresh.len(),
         regressions,
         a.warn_pct
@@ -585,6 +700,7 @@ pub fn run(args: Vec<String>) -> anyhow::Result<()> {
         "obspa" => cmd_obspa(&ObspaArgs::parse(&flags)?),
         "optimize" => cmd_optimize(&OptimizeArgs::parse(&flags)),
         "serve" => cmd_serve(ServeArgs::parse(&flags)?),
+        "lint" => cmd_lint(&LintArgs::parse(&flags)?),
         "bench-diff" => cmd_bench_diff(&BenchDiffArgs::parse(&flags)?),
         "convert" => cmd_convert(&ConvertArgs::parse(&flags)?),
         "import" => cmd_import(&ImportArgs::parse(&flags)?),
@@ -738,5 +854,56 @@ mod tests {
     fn bench_diff_requires_both_paths() {
         let f = flags(&[("base", "x.json")]);
         assert!(BenchDiffArgs::parse(&f).is_err());
+    }
+
+    #[test]
+    fn bench_delta_treats_zero_or_missing_baseline_as_no_baseline() {
+        // the regression gate must never divide by a zero-time record
+        assert_eq!(bench_delta(None, 130.0), None);
+        assert_eq!(bench_delta(Some(0.0), 130.0), None);
+        assert_eq!(bench_delta(Some(-5.0), 130.0), None);
+        let pct = bench_delta(Some(100.0), 130.0).unwrap();
+        assert!((pct - 30.0).abs() < 1e-9, "got {pct}");
+    }
+
+    #[test]
+    fn bench_diff_zero_time_baseline_is_notice_only() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let base = dir.join(format!("spa_cli_bd_zero_{pid}.json"));
+        let fresh = dir.join(format!("spa_cli_bd_zero_new_{pid}.json"));
+        std::fs::write(&base, r#"[{"name":"a","ns_per_iter":0.0,"iters":0}]"#).unwrap();
+        std::fs::write(&fresh, r#"[{"name":"a","ns_per_iter":130.0,"iters":3}]"#).unwrap();
+        run(vec![
+            "bench-diff".into(),
+            "--base".into(),
+            base.to_str().unwrap().into(),
+            "--new".into(),
+            fresh.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+    }
+
+    #[test]
+    fn lint_command_passes_on_a_small_model() {
+        run(vec![
+            "lint".into(),
+            "--model".into(),
+            "mlp".into(),
+            "--hw".into(),
+            "8".into(),
+            "--level".into(),
+            "strict".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn lint_rejects_unknown_level_and_model() {
+        let f = flags(&[("level", "paranoid")]);
+        assert!(LintArgs::parse(&f).is_err());
+        assert!(run(vec!["lint".into(), "--model".into(), "nope".into()]).is_err());
     }
 }

@@ -58,6 +58,7 @@
 //! hand-rolling workspace management. [`Plan::predict`] remains as a
 //! one-shot convenience shim over a throwaway runner.
 
+use crate::check::CheckLevel;
 use crate::ir::passes::{self, OptReport};
 use crate::ir::shape::infer_op_output_shapes;
 use crate::ir::{DataId, DataKind, Graph, OpId, OpKind, OpNode};
@@ -94,6 +95,13 @@ pub struct PlanOpts {
     /// out of arena reuse and block fusion across themselves. Only valid
     /// with id-stable levels (`None` / `Exact`).
     pub retain: Vec<DataId>,
+    /// Static verification level: when enabled, the compiled plan is
+    /// verified by [`crate::check::check_plan`] before it is returned, and
+    /// at [`CheckLevel::Strict`] the plan's (possibly rewritten) graph is
+    /// additionally re-checked by [`crate::check::check_graph`]. Defaults
+    /// to [`CheckLevel::Debug`] under `debug_assertions`, `Off` in
+    /// release.
+    pub check: CheckLevel,
 }
 
 /// What [`Plan::compile`] produced, in numbers.
@@ -121,8 +129,8 @@ pub struct PlanReport {
 }
 
 /// Where a data node's value lives at run time.
-#[derive(Debug, Clone, Copy)]
-enum Loc {
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Loc {
     /// `k`-th graph input, bound per run.
     Feed(usize),
     /// Parameter on the plan's graph.
@@ -133,7 +141,7 @@ enum Loc {
 
 /// Fused in-place epilogue applied to a step's output buffer.
 #[derive(Debug, Clone)]
-enum PostOp {
+pub(crate) enum PostOp {
     /// Eval-mode BatchNorm as a per-channel affine (`v·scale + shift`,
     /// exactly [`ops::batchnorm_infer`]'s arithmetic).
     Bn {
@@ -148,8 +156,8 @@ enum PostOp {
 
 /// Unary activations that fuse (same per-element expressions as the
 /// interpreter's eval path).
-#[derive(Debug, Clone, Copy)]
-enum Act {
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Act {
     Relu,
     Gelu,
     Silu,
@@ -187,7 +195,7 @@ fn apply_act(a: Act, buf: &mut [f32]) {
     }
 }
 
-fn act_of(kind: &OpKind) -> Option<Act> {
+pub(crate) fn act_of(kind: &OpKind) -> Option<Act> {
     match kind {
         OpKind::Relu => Some(Act::Relu),
         OpKind::Gelu => Some(Act::Gelu),
@@ -200,7 +208,7 @@ fn act_of(kind: &OpKind) -> Option<Act> {
 
 /// One schedule entry.
 #[derive(Debug, Clone)]
-enum Item {
+pub(crate) enum Item {
     /// Reshape-only op: the output aliases the input's location; only
     /// the shape changes.
     Alias { op: OpId },
@@ -216,19 +224,21 @@ enum Item {
 }
 
 /// An immutable, reusable execution plan — see the [module docs](self).
+/// Internals are `pub(crate)` so [`crate::check::check_plan`] can verify
+/// the schedule/arena invariants without an accessor per field.
 pub struct Plan {
-    graph: Graph,
-    schedule: Vec<Item>,
-    loc: Vec<Option<Loc>>,
-    slot_count: usize,
-    readable: HashSet<DataId>,
+    pub(crate) graph: Graph,
+    pub(crate) schedule: Vec<Item>,
+    pub(crate) loc: Vec<Option<Loc>>,
+    pub(crate) slot_count: usize,
+    pub(crate) readable: HashSet<DataId>,
     /// Per graph-input: whether a readable id resolves to this feed, so
     /// its tensor must be copied into the workspace at run time.
-    keep_feeds: Vec<bool>,
+    pub(crate) keep_feeds: Vec<bool>,
     /// Pre-transposed `[K, N]` weights per Gemm op, so the multi-row
     /// GEMM path skips the interpreter's per-call `w.t2()`.
-    gemm_wt: HashMap<OpId, Tensor>,
-    report: PlanReport,
+    pub(crate) gemm_wt: HashMap<OpId, Tensor>,
+    pub(crate) report: PlanReport,
 }
 
 /// Conv im2col / GEMM scratch, reused across runs (the interpreter
@@ -261,7 +271,10 @@ impl Plan {
         );
         let mut graph = g.clone();
         let opt = match opts.level {
-            OptLevel::Fast => Some(passes::optimize(&mut graph)?),
+            // thread the plan's check level through the rewrite pipeline
+            // so every pass state is verified at the level the caller
+            // asked for (not just the build-profile default)
+            OptLevel::Fast => Some(passes::optimize_checked(&mut graph, opts.check)?),
             _ => None,
         };
         for &id in &opts.retain {
@@ -478,7 +491,7 @@ impl Plan {
             gemm_wt_bytes,
             opt,
         };
-        Ok(Plan {
+        let plan = Plan {
             graph,
             schedule,
             loc,
@@ -487,7 +500,15 @@ impl Plan {
             keep_feeds,
             gemm_wt,
             report,
-        })
+        };
+        if opts.check.enabled() {
+            if opts.check == CheckLevel::Strict {
+                crate::check::check_graph(&plan.graph)
+                    .map_err(|e| anyhow::anyhow!("plan graph failed static checks: {e}"))?;
+            }
+            crate::check::check_plan(&plan)?;
+        }
+        Ok(plan)
     }
 
     /// Compile stats: step/fusion/alias counts and the arena-vs-
@@ -1294,6 +1315,7 @@ mod tests {
             PlanOpts {
                 level: OptLevel::Fast,
                 retain: vec![0],
+                ..Default::default()
             },
         );
         assert!(err.is_err());
@@ -1351,6 +1373,49 @@ mod tests {
         let mut again = Runner::from_parts(&plan, ws);
         let x = rand_input(&g, 2, &mut rng);
         assert_bits_eq(&again.predict(&x).unwrap(), &plan.predict(&x).unwrap());
+    }
+
+    // The `arena_micro_*` tests are deliberately tiny (mlp at hw 4, no
+    // timing, no file IO) so CI's Miri lane can run them: they drive the
+    // whole arena/workspace machinery — exactly the unsafe-adjacent slot
+    // reuse the static checker reasons about — under the interpreter.
+    #[test]
+    fn arena_micro_plan_reuses_slots_and_runs() {
+        let g = zoo::mlp(
+            ImageCfg {
+                hw: 4,
+                ..Default::default()
+            },
+            &[6, 5],
+            21,
+        );
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        crate::check::check_plan(&plan).unwrap();
+        let mut rng = Rng::new(31);
+        let x = rand_input(&g, 1, &mut rng);
+        let mut runner = plan.runner();
+        let a = runner.predict(&x).unwrap();
+        let b = runner.predict(&x).unwrap();
+        assert_bits_eq(&a, &b);
+    }
+
+    #[test]
+    fn arena_micro_workspace_roundtrip() {
+        let g = zoo::mlp(
+            ImageCfg {
+                hw: 4,
+                ..Default::default()
+            },
+            &[6],
+            22,
+        );
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let mut rng = Rng::new(32);
+        let x = rand_input(&g, 2, &mut rng);
+        let want = plan.predict(&x).unwrap();
+        let ws = plan.runner().into_workspace();
+        let mut again = Runner::from_parts(&plan, ws);
+        assert_bits_eq(&again.predict(&x).unwrap(), &want);
     }
 
     #[test]

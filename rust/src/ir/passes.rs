@@ -319,12 +319,38 @@ impl OptReport {
 /// dead-node sweep → identity elimination → BatchNorm folding → constant
 /// folding. Numerics are preserved up to the float reassociation of
 /// [`fold_batchnorm`] (the other passes are exact); the graph re-validates
-/// after every pass.
+/// after every pass, and [`crate::check::check_graph`] additionally re-runs
+/// after each pass at the default [`crate::check::CheckLevel`] (debug
+/// builds).
 pub fn optimize(g: &mut Graph) -> anyhow::Result<OptReport> {
+    optimize_checked(g, crate::check::CheckLevel::default())
+}
+
+/// [`optimize`] with an explicit verification level: when `check` is
+/// enabled, the full static graph analysis re-runs after every rewrite
+/// pass, so a pass that breaks a shape or prune-coupling invariant is
+/// attributed to the pass that introduced it instead of surfacing later
+/// as a compile- or kernel-time failure.
+pub fn optimize_checked(
+    g: &mut Graph,
+    check: crate::check::CheckLevel,
+) -> anyhow::Result<OptReport> {
+    let verify = |g: &Graph, pass: &str| -> anyhow::Result<()> {
+        if check.enabled() {
+            crate::check::check_graph(g).map_err(|e| {
+                anyhow::anyhow!("graph failed static checks after pass `{pass}`: {e}")
+            })?;
+        }
+        Ok(())
+    };
     let (dead_ops, dead_datas) = prune_dead_nodes(g)?;
+    verify(g, "prune_dead_nodes")?;
     let identities_removed = eliminate_identity(g)?;
+    verify(g, "eliminate_identity")?;
     let bn_folded = fold_batchnorm(g)?;
+    verify(g, "fold_batchnorm")?;
     let constants_folded = fold_constants(g)?;
+    verify(g, "fold_constants")?;
     Ok(OptReport {
         dead_ops,
         dead_datas,
@@ -564,6 +590,21 @@ mod tests {
         g.validate().unwrap();
         let after = engine::predict(&g, x).unwrap();
         assert_allclose(&after, &before, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn optimize_checked_strict_matches_plain_optimize() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut a = zoo::resnet18(cfg, 9);
+        let mut b = a.clone();
+        let ra = optimize(&mut a).unwrap();
+        let rb = optimize_checked(&mut b, crate::check::CheckLevel::Strict).unwrap();
+        assert_eq!(ra, rb, "verification must not change the rewrites");
+        assert_eq!(a.ops.len(), b.ops.len());
+        crate::check::check_graph(&b).unwrap();
     }
 
     #[test]

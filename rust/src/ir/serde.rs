@@ -212,6 +212,12 @@ pub fn graph_from_json(j: &Json) -> anyhow::Result<Graph> {
     }
     g.inputs = j.field("inputs")?.usize_vec()?;
     g.outputs = j.field("outputs")?.usize_vec()?;
+    // Static checks before `validate`: a corrupted checkpoint should be
+    // blamed on the offending node and dependency group (the coupling
+    // checker's message), not on whichever generic shape-inference error
+    // `validate` happens to hit first.
+    crate::check::check_graph(&g)
+        .map_err(|e| anyhow::anyhow!("checkpoint `{}` fails static checks: {e}", g.name))?;
     g.validate()?;
     Ok(g)
 }
@@ -291,6 +297,22 @@ mod tests {
         let g2 = load_graph(path.to_str().unwrap()).unwrap();
         assert_eq!(g.num_params(), g2.num_params());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupted_checkpoint_fails_with_group_blame() {
+        // the acceptance case: a checkpoint whose c2/bn2 branch was
+        // shrunk to 7 channels while the residual branch kept 8 must be
+        // rejected at load with the coupling op named
+        let mut g = crate::check::tests::resnet_like();
+        crate::check::tests::corrupt_residual_branch(&mut g);
+        let path = std::env::temp_dir().join("spa_serde_corrupt.json");
+        save_graph(&g, path.to_str().unwrap(), true).unwrap();
+        let err = load_graph(path.to_str().unwrap()).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("fails static checks"), "got: {err}");
+        assert!(err.contains("residual group"), "got: {err}");
+        assert!(err.contains("add"), "must name the coupling op: {err}");
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   batcher that coalesces concurrent requests into one dispatch per
 //!   tick, and a process-global plan cache keyed by
 //!   `(model, prune config, OptLevel)`.
+//! * **Any confidence** — [`check`] statically verifies all of the above:
+//!   shape/dtype abstract interpretation over the IR, prune-coupling
+//!   invariants (every coupled group keeps one channel set), and
+//!   compiled-plan arena/alias safety — gated by [`CheckLevel`] and
+//!   surfaced as the `spa lint` CLI subcommand.
 //! * **Any time** — [`session`] is the single user-facing entry point:
 //!   a staged builder over the four-step algorithm, with pluggable
 //!   [`criteria::Saliency`] scores; [`coordinator`] drives prune-train,
@@ -32,6 +37,7 @@
 
 pub mod analysis;
 pub mod baselines;
+pub mod check;
 pub mod coordinator;
 pub mod criteria;
 pub mod data;
@@ -49,4 +55,5 @@ pub mod train;
 pub mod util;
 pub mod zoo;
 
+pub use check::CheckLevel;
 pub use session::{Plan, PlanKey, PruneReport, PrunedModel, Session, Target};

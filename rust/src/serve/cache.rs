@@ -93,8 +93,15 @@ impl PlanCache {
             return Ok(Arc::clone(&e.plan));
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = build()?;
+        // Never serve a plan that fails static verification, regardless of
+        // the CheckLevel it was compiled at: a bad arena assignment here
+        // corrupts every request batched onto the shared workspace pool.
+        crate::check::check_plan(&built).map_err(|e| {
+            anyhow::anyhow!("refusing to cache plan for model `{}`: {e}", key.model)
+        })?;
         let plan = Arc::new(CachedPlan {
-            plan: build()?,
+            plan: built,
             pool: Mutex::new(Vec::new()),
         });
         inner.map.insert(
@@ -197,6 +204,27 @@ mod tests {
             })
             .unwrap();
         assert!(rebuilt, "cold alexnet must have been evicted");
+    }
+
+    #[test]
+    fn refuses_to_cache_a_plan_that_fails_verification() {
+        use crate::exec::Loc;
+        let cache = PlanCache::with_capacity(2);
+        let err = cache
+            .get_or_compile(&key("mlp"), || {
+                let mut plan = compile("mlp")?;
+                // sabotage the location table so check_plan must reject it
+                let bad = plan.slot_count + 5;
+                if let Some(slot) = plan.loc.iter_mut().find(|l| matches!(l, Some(Loc::Slot(_))))
+                {
+                    *slot = Some(Loc::Slot(bad));
+                }
+                Ok(plan)
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("refusing to cache"), "got: {err}");
+        assert_eq!(cache.len(), 0, "rejected plan must not be cached");
     }
 
     #[test]

@@ -101,9 +101,18 @@ pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<FrameRead> {
             format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
         ));
     }
-    let mut body = vec![0u8; len as usize];
+    // Grow the body as bytes actually arrive instead of trusting the
+    // header: a hostile peer claiming a near-cap frame costs at most one
+    // chunk of memory until it delivers the payload.
+    const CHUNK: usize = 64 * 1024;
+    let len = len as usize;
+    let mut body: Vec<u8> = Vec::with_capacity(len.min(CHUNK));
     let mut off = 0usize;
-    while off < body.len() {
+    while off < len {
+        if off == body.len() {
+            let grow = (len - off).min(CHUNK);
+            body.resize(off + grow, 0);
+        }
         match stream.read(&mut body[off..]) {
             Ok(0) => {
                 return Err(std::io::Error::new(
@@ -143,7 +152,7 @@ impl<'a> Cur<'a> {
 
     fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
         anyhow::ensure!(
-            self.off + n <= self.b.len(),
+            self.off.checked_add(n).map_or(false, |e| e <= self.b.len()),
             "truncated frame: need {n} bytes at offset {}, have {}",
             self.off,
             self.b.len()
@@ -205,7 +214,10 @@ fn get_tensor(c: &mut Cur<'_>) -> anyhow::Result<Tensor> {
             .ok_or_else(|| anyhow::anyhow!("tensor dims overflow"))?;
         shape.push(d);
     }
-    let raw = c.take(numel * 4)?;
+    let bytes = numel
+        .checked_mul(4)
+        .ok_or_else(|| anyhow::anyhow!("tensor dims overflow"))?;
+    let raw = c.take(bytes)?;
     let data = raw
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -379,6 +391,73 @@ mod tests {
             }
             Response::Ok { .. } => panic!("expected err"),
         }
+    }
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn zero_length_frames_round_trip() {
+        let (mut a, mut b) = pair();
+        write_frame(&mut a, &[]).unwrap();
+        match read_frame(&mut b).unwrap() {
+            FrameRead::Frame(body) => assert!(body.is_empty()),
+            _ => panic!("expected a frame"),
+        }
+        // an empty request body is a protocol error, not a crash
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_response(&[]).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let (mut a, mut b) = pair();
+        a.write_all(&(MAX_FRAME + 1).to_le_bytes()).unwrap();
+        let err = read_frame(&mut b).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+        assert!(err.to_string().contains("cap"), "got: {err}");
+    }
+
+    #[test]
+    fn truncated_body_is_an_unexpected_eof() {
+        let (mut a, mut b) = pair();
+        a.write_all(&8u32.to_le_bytes()).unwrap();
+        a.write_all(&[1, 2, 3]).unwrap();
+        drop(a); // close mid-body
+        let err = read_frame(&mut b).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn truncated_header_is_an_unexpected_eof() {
+        let (mut a, mut b) = pair();
+        a.write_all(&[7u8, 7]).unwrap();
+        drop(a);
+        let err = read_frame(&mut b).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn hostile_tensor_header_cannot_force_a_huge_allocation() {
+        // a body whose dims promise ~64 EiB of f32s must die in the
+        // cursor's bounds check, never in an allocation
+        let mut body = vec![VERSION];
+        body.extend_from_slice(&3u16.to_le_bytes());
+        body.extend_from_slice(b"mlp");
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.push(2); // ndim
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_request(&body).unwrap_err().to_string();
+        assert!(
+            err.contains("truncated") || err.contains("overflow"),
+            "got: {err}"
+        );
     }
 
     #[test]

@@ -31,6 +31,7 @@
 //! maximum — while the session's own graph stays untouched.
 
 use crate::analysis;
+use crate::check::CheckLevel;
 use crate::criteria::{Batch, Saliency, SaliencyRef};
 use crate::ir::Graph;
 use crate::prune::{
@@ -69,6 +70,7 @@ pub struct Session<'g> {
     agg: Agg,
     norm: Norm,
     min_keep: usize,
+    check: CheckLevel,
 }
 
 impl<'g> Session<'g> {
@@ -84,6 +86,7 @@ impl<'g> Session<'g> {
             agg: Agg::Sum,
             norm: Norm::Mean,
             min_keep: 1,
+            check: CheckLevel::default(),
         }
     }
 
@@ -130,6 +133,17 @@ impl<'g> Session<'g> {
     /// Minimum surviving CCs per group (default 1).
     pub fn min_keep(mut self, min_keep: usize) -> Self {
         self.min_keep = min_keep;
+        self
+    }
+
+    /// Static-check level for the pruned result (default
+    /// [`CheckLevel::default`]: `Debug` under debug assertions, `Off` in
+    /// release). When enabled, [`Session::plan`] audits the pruned clone
+    /// with [`crate::check::check_pruned`] (every coupled group kept the
+    /// same channel set) and [`crate::check::check_graph`] before handing
+    /// it out.
+    pub fn check(mut self, check: CheckLevel) -> Self {
+        self.check = check;
         self
     }
 
@@ -198,6 +212,10 @@ impl<'g> Session<'g> {
         let t0 = std::time::Instant::now();
         let mut pruned = self.graph.clone();
         let outcome = prune::apply_pruning(&mut pruned, &groups, &selected)?;
+        if self.check.enabled() {
+            crate::check::check_pruned(self.graph, &groups, &selected, &pruned)?;
+            crate::check::check_graph(&pruned)?;
+        }
         let prune_seconds = t0.elapsed().as_secs_f64();
         let r = analysis::reduction(self.graph, &pruned);
         Ok(Plan {
@@ -475,6 +493,21 @@ mod tests {
         let base = PlanKey::baseline("resnet18", OptLevel::Exact);
         assert!(base.prune.is_empty());
         assert_ne!(base, ka);
+    }
+
+    #[test]
+    fn strict_checks_accept_a_clean_prune() {
+        // .check(Strict) must be invisible on a healthy pipeline: same
+        // selection, same result, no error
+        let g = mini();
+        let plan = Session::on(&g)
+            .criterion(Criterion::L1)
+            .target(Target::FlopsRf(1.5))
+            .check(CheckLevel::Strict)
+            .plan()
+            .unwrap();
+        let pruned = plan.apply().unwrap();
+        crate::check::check_graph(&pruned.graph).unwrap();
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Proptest: the inference-time rewrite pipeline never produces a graph
+//! that fails static analysis.
+//!
+//! Property: for a random zoo model, `ir::passes::optimize_checked` at
+//! `CheckLevel::Strict` — which re-runs `spa::check::check_graph` (shape
+//! re-derivation + coupling invariants) after *every* individual pass —
+//! succeeds, and its report is identical at worker-pool widths
+//! `SPA_THREADS` ∈ {1, 8} (the house rule: results are independent of
+//! parallelism).
+
+use spa::check::{self, CheckLevel};
+use spa::ir::passes;
+use spa::util::par;
+use spa::util::proptest::check as prop_check;
+use spa::zoo::{self, ImageCfg, TextCfg};
+
+const MODELS: &[&str] = &[
+    "mlp",
+    "alexnet",
+    "resnet18",
+    "vgg16",
+    "mobilenetv2",
+    "densenet",
+    "regnet",
+    "vit",
+];
+
+#[test]
+fn optimize_pass_states_stay_statically_valid() {
+    let _serial = par::test_lock();
+    let cfg = ImageCfg {
+        hw: 8,
+        ..Default::default()
+    };
+    prop_check(
+        "check-passes",
+        8,
+        0xC4EC,
+        |rng| {
+            let name = MODELS[rng.below(MODELS.len())];
+            (name.to_string(), rng.below(1 << 30) as u64)
+        },
+        |(name, seed)| {
+            let g0 = zoo::by_name(name, cfg, *seed).map_err(|e| e.to_string())?;
+            check::check_graph(&g0).map_err(|e| format!("{name} pre-pass: {e}"))?;
+            let mut reports = Vec::new();
+            for threads in [1usize, 8] {
+                let mut g = g0.clone();
+                let rep = par::with_threads(threads, || {
+                    passes::optimize_checked(&mut g, CheckLevel::Strict)
+                })
+                .map_err(|e| format!("{name} @ {threads} threads: {e}"))?;
+                check::check_graph(&g)
+                    .map_err(|e| format!("{name} @ {threads} threads post-pipeline: {e}"))?;
+                reports.push(rep);
+            }
+            if reports[0] != reports[1] {
+                return Err(format!(
+                    "{name}: pass pipeline diverged across thread widths: {:?} vs {:?}",
+                    reports[0], reports[1]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn optimize_pass_states_stay_valid_on_distilbert() {
+    let _serial = par::test_lock();
+    let mut g = zoo::distilbert(TextCfg::default(), 11);
+    passes::optimize_checked(&mut g, CheckLevel::Strict).unwrap();
+    check::check_graph(&g).unwrap();
+}
