@@ -67,6 +67,10 @@ fn main() {
         cache_cap: 2,
         image,
         seed,
+        // the 64-client phase keeps ~64 requests in flight; keep the
+        // admission cap far above that so the bench never sheds with
+        // `Overloaded` and the latency numbers stay pure batching
+        queue_cap: 4096,
         ..Default::default()
     })
     .expect("server spawn");

@@ -26,11 +26,13 @@ use crate::frontends::{self, Dialect};
 use crate::ir::serde as ir_serde;
 use crate::obspa::CalibSource;
 use crate::prune::Scope;
-use crate::serve::{self, ServeCfg};
+use crate::serve::{self, FaultPlan, ServeCfg};
 use crate::train::TrainCfg;
-use crate::util::{Json, Table};
+use crate::util::{Json, JsonObj, Table};
 use crate::zoo::{self, ImageCfg};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Parsed `--key value` flags.
@@ -277,6 +279,12 @@ impl ServeArgs {
                 seed: common.seed,
                 prune_rf: f.opt("prune-rf").and_then(|v| v.parse().ok()),
                 criterion: f.get("criterion", "l1"),
+                queue_cap: f.usize("queue-cap", 1024),
+                faults: f
+                    .opt("faults")
+                    .map(FaultPlan::parse)
+                    .transpose()?
+                    .map(Arc::new),
             },
         })
     }
@@ -306,20 +314,26 @@ struct BenchDiffArgs {
     base: String,
     fresh: String,
     warn_pct: f64,
+    /// Write the fresh entries (normalized `{name, ns_per_iter}`) here
+    /// after diffing, so CI can refresh the committed baseline.
+    write_baseline: Option<String>,
 }
 
 impl BenchDiffArgs {
     fn parse(f: &Flags) -> anyhow::Result<BenchDiffArgs> {
         let base = f.get("base", "");
         let fresh = f.get("new", "");
+        let write_baseline = f.opt("write-baseline").map(str::to_string);
+        anyhow::ensure!(!fresh.is_empty(), "bench-diff needs --new");
         anyhow::ensure!(
-            !base.is_empty() && !fresh.is_empty(),
-            "bench-diff needs --base and --new"
+            !base.is_empty() || write_baseline.is_some(),
+            "bench-diff needs --base and/or --write-baseline"
         );
         Ok(BenchDiffArgs {
             base,
             fresh,
             warn_pct: f.f64("warn-pct", 25.0),
+            write_baseline,
         })
     }
 }
@@ -339,12 +353,16 @@ COMMANDS:
            and report the compiled-plan arena footprint
   serve    [--addr H:P --tick-ms N --max-batch N --cache-cap N]
            [--opt none|exact|fast --prune-rf F --criterion l1]
-           batching inference server over compiled plans (spa::serve)
+           [--queue-cap N --faults <spec>]
+           batching inference server over compiled plans (spa::serve);
+           SIGINT/SIGTERM drain gracefully, --faults injects chaos
   lint     [--model <name>|all] [--level off|debug|strict]
            run every static checker (spa::check) over the zoo: graph
            shape/coupling invariants, an audited prune, compiled plans
-  bench-diff --base <json> --new <json> [--warn-pct F]
-           compare two SPA_BENCH_JSON snapshots, warn on regressions
+  bench-diff --new <json> [--base <json>] [--warn-pct F]
+           [--write-baseline <json>]
+           compare two SPA_BENCH_JSON snapshots, warn on regressions,
+           optionally refresh the committed baseline
   convert  --model <name> --dialect <torch|tf|jax|mxnet> --out <file>
   import   --file <dialect json> [--out <spa-ir json>]
   models                                       list zoo models
@@ -462,6 +480,37 @@ fn cmd_optimize(a: &OptimizeArgs) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Arm SIGINT/SIGTERM to flip a flag `cmd_serve` polls, so Ctrl-C and
+/// orchestrator stops drain the server instead of killing it mid-batch.
+#[cfg(unix)]
+fn install_stop_signals() -> &'static AtomicBool {
+    static STOP: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_stop(_signum: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        // libc signal(2); the return (previous handler) is unused
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    // SAFETY: the handler only stores to a static atomic, which is
+    // async-signal-safe; no allocation, locking, or panicking.
+    unsafe {
+        signal(SIGINT, on_stop);
+        signal(SIGTERM, on_stop);
+    }
+    &STOP
+}
+
+#[cfg(not(unix))]
+fn install_stop_signals() -> &'static AtomicBool {
+    // no signal(2) here; the flag simply never flips and the loop runs
+    // until the process is killed (same as the pre-drain behavior)
+    static STOP: AtomicBool = AtomicBool::new(false);
+    &STOP
+}
+
 fn cmd_serve(a: ServeArgs) -> anyhow::Result<()> {
     let tick = a.cfg.tick;
     let server = serve::Server::spawn(a.cfg)?;
@@ -470,18 +519,35 @@ fn cmd_serve(a: ServeArgs) -> anyhow::Result<()> {
         server.local_addr(),
         tick
     );
-    let stats = server.stats();
-    loop {
-        std::thread::sleep(Duration::from_secs(10));
-        println!(
-            "served {:>8} ({} errors, {} batches)  p50 {:>7}us  p99 {:>7}us",
-            stats.served(),
-            stats.errors(),
-            stats.batches(),
-            stats.latency_percentile_us(50.0).unwrap_or(0),
-            stats.latency_percentile_us(99.0).unwrap_or(0),
-        );
+    if let Some(f) = server.fault_plan() {
+        println!("fault injection armed: {f:?}");
     }
+    let stop = install_stop_signals();
+    let stats = server.stats();
+    let mut last_report = std::time::Instant::now();
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(200));
+        if last_report.elapsed() >= Duration::from_secs(10) {
+            last_report = std::time::Instant::now();
+            println!(
+                "served {:>8} ({} errors, {} batches, {} shed, {} expired, {} panics)  \
+                 p50 {:>7}us  p99 {:>7}us",
+                stats.served(),
+                stats.errors(),
+                stats.batches(),
+                stats.shed(),
+                stats.expired(),
+                stats.panics(),
+                stats.latency_percentile_us(50.0).unwrap_or(0),
+                stats.latency_percentile_us(99.0).unwrap_or(0),
+            );
+        }
+    }
+    let depth = server.health().queue_depth;
+    println!("stop signal received: draining ({depth} queued request(s))");
+    server.drain();
+    println!("drained cleanly");
+    Ok(())
 }
 
 fn cmd_convert(a: &ConvertArgs) -> anyhow::Result<()> {
@@ -617,22 +683,47 @@ fn bench_delta(base_ns: Option<f64>, new_ns: f64) -> Option<f64> {
     base_ns.filter(|&b| b > 0.0).map(|b| (new_ns - b) / b * 100.0)
 }
 
+/// Write bench entries as a normalized `[{name, ns_per_iter}]` snapshot
+/// (the shape `load_bench` reads back), for refreshing a committed
+/// baseline from a smoke-lane run.
+fn write_bench_baseline(path: &str, entries: &[(String, f64)]) -> anyhow::Result<()> {
+    let arr = Json::Arr(
+        entries
+            .iter()
+            .map(|(name, ns)| {
+                let mut o = JsonObj::new();
+                o.insert("name", name.as_str());
+                o.insert("ns_per_iter", *ns);
+                Json::Obj(o)
+            })
+            .collect(),
+    );
+    std::fs::write(path, format!("{arr}\n"))
+        .map_err(|e| anyhow::anyhow!("write {path}: {e}"))
+}
+
 fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
+    let fresh = load_bench(&a.fresh)?;
+    anyhow::ensure!(!fresh.is_empty(), "{}: no bench entries", a.fresh);
     let base = match load_bench(&a.base) {
         Ok(v) if !v.is_empty() => v,
         // tolerate a missing/empty baseline: the diff is advisory, and
         // the first PR that commits a snapshot bootstraps it
         _ => {
-            println!(
-                "bench-diff: no baseline entries at {} — commit the smoke-lane \
-                 SPA_BENCH_JSON output to enable regression diffs",
-                a.base
-            );
+            if !a.base.is_empty() {
+                println!(
+                    "bench-diff: no baseline entries at {} — commit the smoke-lane \
+                     SPA_BENCH_JSON output to enable regression diffs",
+                    a.base
+                );
+            }
+            if let Some(path) = &a.write_baseline {
+                write_bench_baseline(path, &fresh)?;
+                println!("bench-diff: wrote {} entries to {path}", fresh.len());
+            }
             return Ok(());
         }
     };
-    let fresh = load_bench(&a.fresh)?;
-    anyhow::ensure!(!fresh.is_empty(), "{}: no bench entries", a.fresh);
     let mut t = Table::new("bench-diff (ns/iter)", &["bench", "base", "new", "delta"]);
     let mut regressions = 0usize;
     let mut compared = 0usize;
@@ -676,6 +767,10 @@ fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
         regressions,
         a.warn_pct
     );
+    if let Some(path) = &a.write_baseline {
+        write_bench_baseline(path, &fresh)?;
+        println!("bench-diff: wrote {} entries to {path}", fresh.len());
+    }
     Ok(())
 }
 
@@ -819,6 +914,25 @@ mod tests {
     }
 
     #[test]
+    fn serve_args_parse_queue_cap_and_faults() {
+        let f = flags(&[
+            ("queue-cap", "32"),
+            ("faults", "seed=7;group.panic=0.5;frame.torn=0.25"),
+        ]);
+        let a = ServeArgs::parse(&f).unwrap();
+        assert_eq!(a.cfg.queue_cap, 32);
+        assert_eq!(a.cfg.faults.as_ref().unwrap().seed(), 7);
+        // defaults: bounded queue, no faults armed
+        let d = ServeArgs::parse(&flags(&[])).unwrap();
+        assert_eq!(d.cfg.queue_cap, 1024);
+        assert!(d.cfg.faults.is_none());
+        // a malformed spec is a parse error, not a silently inert plan
+        let bad = flags(&[("faults", "group.meteor=0.5")]);
+        let err = ServeArgs::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown fault kind"), "got: {err}");
+    }
+
+    #[test]
     fn bench_diff_tolerates_missing_baseline_and_warns_on_regression() {
         let dir = std::env::temp_dir();
         let pid = std::process::id();
@@ -854,6 +968,43 @@ mod tests {
     fn bench_diff_requires_both_paths() {
         let f = flags(&[("base", "x.json")]);
         assert!(BenchDiffArgs::parse(&f).is_err());
+        // --new alone is not enough either: there must be a baseline to
+        // diff against or a --write-baseline to produce
+        let f = flags(&[("new", "y.json")]);
+        assert!(BenchDiffArgs::parse(&f).is_err());
+        let f = flags(&[("new", "y.json"), ("write-baseline", "b.json")]);
+        assert!(BenchDiffArgs::parse(&f).is_ok());
+    }
+
+    #[test]
+    fn bench_diff_write_baseline_round_trips() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let fresh = dir.join(format!("spa_cli_bd_wb_new_{pid}.json"));
+        let written = dir.join(format!("spa_cli_bd_wb_out_{pid}.json"));
+        // duplicate names collapse (later wins) and extra fields drop
+        std::fs::write(
+            &fresh,
+            r#"[{"name":"a","ns_per_iter":120.0,"iters":3},
+                {"name":"b","ns_per_iter":7.5,"iters":9},
+                {"name":"a","ns_per_iter":130.0,"iters":3}]"#,
+        )
+        .unwrap();
+        run(vec![
+            "bench-diff".into(),
+            "--new".into(),
+            fresh.to_str().unwrap().into(),
+            "--write-baseline".into(),
+            written.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let loaded = load_bench(written.to_str().unwrap()).unwrap();
+        assert_eq!(
+            loaded,
+            vec![("a".to_string(), 130.0), ("b".to_string(), 7.5)]
+        );
+        std::fs::remove_file(&fresh).ok();
+        std::fs::remove_file(&written).ok();
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use crate::exec::{Plan, Workspace};
 use crate::session::PlanKey;
+use crate::util::relock;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -84,7 +85,10 @@ impl PlanCache {
         key: &PlanKey,
         build: impl FnOnce() -> anyhow::Result<Plan>,
     ) -> anyhow::Result<Arc<CachedPlan>> {
-        let mut inner = self.inner.lock().unwrap();
+        // relock: a panicked batch worker holding a workspace-pool or
+        // cache lock must not wedge every later compile (see
+        // `crate::util::relock`)
+        let mut inner = relock(&self.inner);
         inner.clock += 1;
         let now = inner.clock;
         if let Some(e) = inner.map.get_mut(key) {
@@ -97,9 +101,8 @@ impl PlanCache {
         // Never serve a plan that fails static verification, regardless of
         // the CheckLevel it was compiled at: a bad arena assignment here
         // corrupts every request batched onto the shared workspace pool.
-        crate::check::check_plan(&built).map_err(|e| {
-            anyhow::anyhow!("refusing to cache plan for model `{}`: {e}", key.model)
-        })?;
+        crate::check::check_plan(&built)
+            .map_err(|e| anyhow::anyhow!("refusing to cache plan for {key}: {e}"))?;
         let plan = Arc::new(CachedPlan {
             plan: built,
             pool: Mutex::new(Vec::new()),
@@ -126,7 +129,7 @@ impl PlanCache {
 
     /// Cached plans currently resident.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        relock(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -168,7 +171,9 @@ mod tests {
     #[test]
     fn hit_returns_the_same_plan() {
         let cache = PlanCache::with_capacity(4);
-        let a = cache.get_or_compile(&key("mlp"), || compile("mlp")).unwrap();
+        let a = cache
+            .get_or_compile(&key("mlp"), || compile("mlp"))
+            .unwrap();
         let b = cache
             .get_or_compile(&key("mlp"), || panic!("must not rebuild on a hit"))
             .unwrap();
@@ -179,7 +184,9 @@ mod tests {
     #[test]
     fn cold_entries_are_evicted_first() {
         let cache = PlanCache::with_capacity(2);
-        cache.get_or_compile(&key("mlp"), || compile("mlp")).unwrap();
+        cache
+            .get_or_compile(&key("mlp"), || compile("mlp"))
+            .unwrap();
         cache
             .get_or_compile(&key("alexnet"), || compile("alexnet"))
             .unwrap();
@@ -225,6 +232,22 @@ mod tests {
             .to_string();
         assert!(err.contains("refusing to cache"), "got: {err}");
         assert_eq!(cache.len(), 0, "rejected plan must not be cached");
+    }
+
+    #[test]
+    fn a_poisoned_lock_does_not_wedge_the_cache() {
+        let cache = Arc::new(PlanCache::with_capacity(2));
+        let c2 = Arc::clone(&cache);
+        let _ = std::thread::spawn(move || {
+            let _g = c2.inner.lock().unwrap();
+            panic!("poison the cache lock");
+        })
+        .join();
+        assert!(cache.inner.is_poisoned());
+        cache
+            .get_or_compile(&key("mlp"), || compile("mlp"))
+            .unwrap();
+        assert_eq!(cache.len(), 1, "cache must keep working after a poison");
     }
 
     #[test]

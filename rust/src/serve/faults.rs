@@ -1,0 +1,357 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] arms named sites inside the server with seeded
+//! failure rules — panics while resolving or executing a batch, slow
+//! batch ticks, torn response frames. Every decision comes from a
+//! per-site PCG32 stream forked from one seed, so a chaos run is
+//! exactly reproducible: same seed + same request order → same faults.
+//! Production servers run with no plan armed; the hooks cost one
+//! `Option` check per site.
+//!
+//! Specs are compact strings, e.g.
+//!
+//! ```text
+//! seed=42;group.panic=0.5;batch.slow=0.25:30;frame.torn=0.5
+//! ```
+//!
+//! `site.kind=prob` arms `kind` at `site` with probability `prob` per
+//! visit; `slow` takes `prob:millis`. Sites accept only the faults that
+//! make sense there: `panic` at `resolve`/`group` (both inside the
+//! batch loop's `catch_unwind`), `slow` at `batch`/`group`, `torn` at
+//! `frame` only. Configure via `ServeCfg::faults`, the `spa serve
+//! --faults` flag, or the `SPA_FAULTS` environment variable.
+
+use crate::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Marker embedded in every injected panic's message so test panic
+/// hooks can tell deliberate chaos from a real bug.
+pub const PANIC_TAG: &str = "spa-injected-fault";
+
+/// Named injection points inside the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Model lookup + plan compilation for one batch group.
+    Resolve,
+    /// Execution of one model group's fused batch.
+    Group,
+    /// Top of one batch-loop tick (outside any `catch_unwind` — only
+    /// non-unwinding faults are allowed here).
+    Batch,
+    /// Writing a response frame back to a client.
+    Frame,
+}
+
+/// All sites, in the fixed order their PRNG streams are forked.
+pub const SITES: [Site; 4] = [Site::Resolve, Site::Group, Site::Batch, Site::Frame];
+
+impl Site {
+    /// Stable name used in specs and panic messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::Resolve => "resolve",
+            Site::Group => "group",
+            Site::Batch => "batch",
+            Site::Frame => "frame",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Site::Resolve => 0,
+            Site::Group => 1,
+            Site::Batch => 2,
+            Site::Frame => 3,
+        }
+    }
+}
+
+/// What an armed site does when its probability roll hits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Unwind with a [`PANIC_TAG`]-marked message.
+    Panic,
+    /// Sleep this long before proceeding.
+    Slow(Duration),
+    /// Write a deliberately truncated frame and sever the connection.
+    Torn,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Rule {
+    prob: f32,
+    fault: Fault,
+}
+
+/// A seeded set of per-site failure rules. See the module docs for the
+/// spec grammar.
+pub struct FaultPlan {
+    seed: u64,
+    spec: String,
+    rules: [Option<Rule>; 4],
+    /// One independent stream per site, forked from `seed` in `SITES`
+    /// order, so concurrency at one site never perturbs another's rolls.
+    streams: [Mutex<Rng>; 4],
+    injected: [AtomicUsize; 4],
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("seed", &self.seed)
+            .field("spec", &self.spec)
+            .finish()
+    }
+}
+
+impl FaultPlan {
+    /// Parse a spec string (grammar in the module docs).
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut rules: [Option<Rule>; 4] = [None; 4];
+        for token in spec.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, value) = token
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault token `{token}` is not key=value"))?;
+            if key == "seed" {
+                seed = value
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad fault seed `{value}`: {e}"))?;
+                continue;
+            }
+            let (site_name, kind) = key.split_once('.').ok_or_else(|| {
+                anyhow::anyhow!("fault key `{key}` is not site.kind (or `seed`)")
+            })?;
+            let site = SITES
+                .iter()
+                .copied()
+                .find(|s| s.name() == site_name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown fault site `{site_name}` (resolve|group|batch|frame)"
+                    )
+                })?;
+            let (prob_str, fault) = match kind {
+                "panic" => {
+                    anyhow::ensure!(
+                        matches!(site, Site::Resolve | Site::Group),
+                        "`panic` is only valid at resolve/group (inside the \
+                         batch loop's catch_unwind), not `{site_name}`"
+                    );
+                    (value, Fault::Panic)
+                }
+                "slow" => {
+                    anyhow::ensure!(
+                        matches!(site, Site::Batch | Site::Group),
+                        "`slow` is only valid at batch/group, not `{site_name}`"
+                    );
+                    let (p, ms) = value.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("`slow` takes prob:millis, got `{value}`")
+                    })?;
+                    let ms: u64 = ms
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad slow millis `{ms}`: {e}"))?;
+                    (p, Fault::Slow(Duration::from_millis(ms)))
+                }
+                "torn" => {
+                    anyhow::ensure!(
+                        site == Site::Frame,
+                        "`torn` is only valid at frame, not `{site_name}`"
+                    );
+                    (value, Fault::Torn)
+                }
+                other => anyhow::bail!("unknown fault kind `{other}` (panic|slow|torn)"),
+            };
+            let prob: f32 = prob_str
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad fault probability `{prob_str}`: {e}"))?;
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&prob),
+                "fault probability {prob} is outside [0, 1]"
+            );
+            anyhow::ensure!(
+                rules[site.index()].is_none(),
+                "site `{site_name}` is armed twice"
+            );
+            rules[site.index()] = Some(Rule { prob, fault });
+        }
+        let mut root = Rng::new(seed);
+        let streams = [
+            Mutex::new(root.fork(0)),
+            Mutex::new(root.fork(1)),
+            Mutex::new(root.fork(2)),
+            Mutex::new(root.fork(3)),
+        ];
+        Ok(FaultPlan {
+            seed,
+            spec: spec.to_string(),
+            rules,
+            streams,
+            injected: [
+                AtomicUsize::new(0),
+                AtomicUsize::new(0),
+                AtomicUsize::new(0),
+                AtomicUsize::new(0),
+            ],
+        })
+    }
+
+    /// Read a plan from the `SPA_FAULTS` environment variable, if set.
+    pub fn from_env() -> anyhow::Result<Option<FaultPlan>> {
+        match std::env::var("SPA_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(FaultPlan::parse(&spec)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// The seed the per-site streams were forked from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Roll `site`'s stream; `Some(fault)` when the site is armed and
+    /// the roll hits. Rolls only happen on armed sites, so un-armed
+    /// sites stay free and streams advance once per armed visit.
+    pub fn check(&self, site: Site) -> Option<Fault> {
+        let rule = self.rules[site.index()]?;
+        let roll = crate::util::relock(&self.streams[site.index()]).uniform();
+        (roll < rule.prob).then_some(rule.fault)
+    }
+
+    /// Roll `site` and act on the outcome: sleep through a `Slow`
+    /// fault, unwind on `Panic` (message carries [`PANIC_TAG`]), and
+    /// return `true` for `Torn` so the caller tears its frame.
+    pub fn fire(&self, site: Site) -> bool {
+        match self.check(site) {
+            None => false,
+            Some(fault) => {
+                self.injected[site.index()].fetch_add(1, Ordering::Relaxed);
+                match fault {
+                    Fault::Panic => panic!("{PANIC_TAG}: injected panic at {}", site.name()),
+                    Fault::Slow(d) => {
+                        std::thread::sleep(d);
+                        false
+                    }
+                    Fault::Torn => true,
+                }
+            }
+        }
+    }
+
+    /// How many faults have fired at `site` so far.
+    pub fn injected(&self, site: Site) -> usize {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_spec() {
+        let plan =
+            FaultPlan::parse("seed=42;group.panic=0.5;batch.slow=0.25:30;frame.torn=0.5").unwrap();
+        assert_eq!(plan.seed(), 42);
+        assert_eq!(plan.rules[Site::Group.index()].unwrap().fault, Fault::Panic);
+        assert_eq!(
+            plan.rules[Site::Batch.index()].unwrap().fault,
+            Fault::Slow(Duration::from_millis(30))
+        );
+        assert_eq!(plan.rules[Site::Frame.index()].unwrap().fault, Fault::Torn);
+        assert!(plan.rules[Site::Resolve.index()].is_none());
+    }
+
+    #[test]
+    fn empty_and_whitespace_specs_are_inert() {
+        for spec in ["", "  ", ";;"] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            for site in SITES {
+                assert!(plan.check(site).is_none(), "spec {spec:?} armed {site:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for (spec, needle) in [
+            ("group.panic", "key=value"),
+            ("seed=banana", "bad fault seed"),
+            ("turbine.panic=0.5", "unknown fault site"),
+            ("group.meteor=0.5", "unknown fault kind"),
+            ("group.panic=1.5", "outside [0, 1]"),
+            ("group.panic=zebra", "bad fault probability"),
+            ("batch.slow=0.5", "prob:millis"),
+            ("batch.slow=0.5:fast", "bad slow millis"),
+            ("group.panic=0.5;group.panic=0.2", "armed twice"),
+            // kinds on sites that can't honor them
+            ("batch.panic=0.5", "only valid at resolve/group"),
+            ("frame.panic=0.5", "only valid at resolve/group"),
+            ("frame.slow=0.5:10", "only valid at batch/group"),
+            ("group.torn=0.5", "only valid at frame"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "spec {spec:?}: got `{err}`");
+        }
+    }
+
+    #[test]
+    fn rolls_are_deterministic_per_seed() {
+        let roll = |seed: u64| {
+            let plan = FaultPlan::parse(&format!("seed={seed};group.panic=0.5")).unwrap();
+            (0..64)
+                .map(|_| plan.check(Site::Group).is_some())
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(roll(7), roll(7), "same seed must give the same faults");
+        assert_ne!(roll(7), roll(8), "different seeds should diverge");
+        // prob 0.5 over 64 rolls: both outcomes must appear
+        let hits = roll(7).iter().filter(|h| **h).count();
+        assert!(hits > 0 && hits < 64, "got {hits}/64 hits");
+    }
+
+    #[test]
+    fn probability_bounds_always_and_never_fire() {
+        let never = FaultPlan::parse("seed=1;group.panic=0.0").unwrap();
+        let always = FaultPlan::parse("seed=1;frame.torn=1.0").unwrap();
+        for _ in 0..32 {
+            assert!(never.check(Site::Group).is_none());
+            assert_eq!(always.check(Site::Frame), Some(Fault::Torn));
+        }
+    }
+
+    #[test]
+    fn fire_counts_and_tags_injected_panics() {
+        let plan = FaultPlan::parse("seed=3;group.panic=1.0;frame.torn=1.0").unwrap();
+        assert!(plan.fire(Site::Frame), "torn must ask the caller to tear");
+        assert_eq!(plan.injected(Site::Frame), 1);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.fire(Site::Group);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains(PANIC_TAG), "panic message `{msg}` lacks the tag");
+        assert_eq!(plan.injected(Site::Group), 1);
+        assert_eq!(plan.injected(Site::Batch), 0);
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        let plan = FaultPlan::parse("seed=9;frame.torn=1.0").unwrap();
+        for _ in 0..16 {
+            assert!(!plan.fire(Site::Batch));
+            assert!(plan.check(Site::Resolve).is_none());
+        }
+    }
+
+    #[test]
+    fn from_env_is_none_when_unset() {
+        // the test harness never sets SPA_FAULTS for unit tests; chaos
+        // integration tests pass plans through ServeCfg instead
+        if std::env::var("SPA_FAULTS").is_err() {
+            assert!(FaultPlan::from_env().unwrap().is_none());
+        }
+    }
+}

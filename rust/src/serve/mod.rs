@@ -1,4 +1,5 @@
-//! `spa::serve` — a batching inference server over compiled plans.
+//! `spa::serve` — a batching, fault-tolerant inference server over
+//! compiled plans.
 //!
 //! The paper's "any time" pruning story only pays off when the pruned
 //! model's smaller FLOPs become user-visible throughput; this module is
@@ -7,17 +8,21 @@
 //! the `spa serve` CLI subcommand:
 //!
 //! * **Admission**: each connection gets a handler thread that decodes
-//!   requests and parks them on a [`queue::Queue`], blocking per
-//!   request until the batch loop responds.
+//!   requests and parks them on a bounded [`queue::Queue`], blocking
+//!   per request until the batch loop responds. A full queue rejects
+//!   with [`ErrorCode::Overloaded`] at admission (load shedding at the
+//!   cheapest point), never by growing without bound.
 //! * **Dynamic batching**: a single batch-loop thread drains the queue
 //!   once per tick, stacks same-shape requests into batched tensors,
 //!   and dispatches one [`crate::exec::Batcher`] call per tick per
 //!   plan. Per-sample kernels are bit-identical at any batch size, so
 //!   responses match [`crate::exec::Plan::predict`] exactly.
-//! * **Deadlines**: a request's soft deadline can only *accelerate* its
-//!   batch's dispatch (the batch leaves at
-//!   `min(oldest admission + tick, earliest deadline)`); requests are
-//!   never dropped.
+//! * **Deadlines**: a request's soft deadline accelerates its batch's
+//!   dispatch (the batch leaves at
+//!   `min(oldest admission + tick, earliest deadline)`). A request
+//!   still queued one full tick *past* its deadline is shed with
+//!   [`ErrorCode::DeadlineExceeded`] instead of computed late — the
+//!   one-tick grace means deadlines only shed under real backlog.
 //! * **Plan cache**: compiled plans live in a process-global
 //!   [`cache::PlanCache`] keyed by [`crate::session::PlanKey`] —
 //!   `(model, prune config, OptLevel)` — with warm/cold eviction, so
@@ -25,6 +30,28 @@
 //! * **Latency**: every response carries the server-measured
 //!   admission→response latency; [`Stats`] aggregates p50/p99 for the
 //!   CLI and the `micro_serve` bench.
+//!
+//! # Failure semantics
+//!
+//! Every error response carries a typed [`ErrorCode`], and the server
+//! is built so no single failure takes it down:
+//!
+//! * **Panic isolation** — each model group of a batch runs inside
+//!   `catch_unwind`; a panicking plan answers its own requests with
+//!   [`ErrorCode::Panic`] and the batch loop keeps serving everyone
+//!   else. Every serve-path mutex is taken through
+//!   [`crate::util::relock`], so a poisoned lock cannot cascade.
+//! * **Overload** — bounded queue + [`ErrorCode::Overloaded`];
+//!   [`Client::predict_retry`] implements capped jittered backoff.
+//! * **Health & drain** — the `health` verb ([`Client::health`])
+//!   reports queue depth, counters, and cache state without touching
+//!   the batch loop; [`Server::begin_drain`] stops admission
+//!   ([`ErrorCode::ShuttingDown`]) while queued work still completes,
+//!   and [`Server::drain`]/[`Server::shutdown`] flush then join.
+//! * **Fault injection** — a seeded [`faults::FaultPlan`]
+//!   (`ServeCfg::faults` or `SPA_FAULTS`) deterministically injects
+//!   panics, slow batches, and torn frames at named sites; the
+//!   `serve_chaos` integration suite drives it.
 //!
 //! ```no_run
 //! use spa::serve::{Client, ServeCfg, Server};
@@ -38,21 +65,27 @@
 //! ```
 
 pub mod cache;
+pub mod faults;
 pub mod protocol;
 pub mod queue;
 
 pub use cache::{CachedPlan, PlanCache};
-pub use protocol::{Client, Request, Response};
+pub use faults::{Fault, FaultPlan, Site};
+pub use protocol::{
+    Client, ErrorCode, HealthReport, Request, RequestMsg, Response, RetryCfg, ServeError,
+};
 pub use queue::{Pending, Queue};
 
 use crate::criteria::Criterion;
 use crate::exec::{Batcher, OptLevel, Plan, PlanOpts};
 use crate::ir::Graph;
-use crate::session::{PlanKey, Session, Target};
+use crate::session::{PlanKey, PrunedModel, Session, Target};
 use crate::tensor::Tensor;
+use crate::util::relock;
 use crate::zoo::{self, ImageCfg};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -83,6 +116,12 @@ pub struct ServeCfg {
     pub prune_rf: Option<f64>,
     /// Saliency criterion for `prune_rf` (data-free criteria only).
     pub criterion: String,
+    /// Admission-queue depth cap; requests past it are rejected with
+    /// [`ErrorCode::Overloaded`]. 0 = unbounded.
+    pub queue_cap: usize,
+    /// Deterministic fault injection (chaos testing); `None` also
+    /// consults the `SPA_FAULTS` environment variable at spawn.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeCfg {
@@ -97,6 +136,8 @@ impl Default for ServeCfg {
             seed: 1,
             prune_rf: None,
             criterion: "l1".to_string(),
+            queue_cap: 1024,
+            faults: None,
         }
     }
 }
@@ -106,6 +147,9 @@ pub struct Stats {
     served: AtomicUsize,
     errors: AtomicUsize,
     batches: AtomicUsize,
+    shed: AtomicUsize,
+    expired: AtomicUsize,
+    panics: AtomicUsize,
     lat_us: Mutex<Vec<u32>>,
 }
 
@@ -118,6 +162,9 @@ impl Stats {
             served: AtomicUsize::new(0),
             errors: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            expired: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
             lat_us: Mutex::new(Vec::new()),
         }
     }
@@ -137,17 +184,36 @@ impl Stats {
         self.batches.load(Ordering::Relaxed)
     }
 
+    /// Requests rejected at admission with [`ErrorCode::Overloaded`].
+    pub fn shed(&self) -> usize {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed at dispatch with [`ErrorCode::DeadlineExceeded`].
+    pub fn expired(&self) -> usize {
+        self.expired.load(Ordering::Relaxed)
+    }
+
+    /// Batch dispatches that panicked and were isolated.
+    pub fn panics(&self) -> usize {
+        self.panics.load(Ordering::Relaxed)
+    }
+
     /// The `p`-th latency percentile (0-100) over the recent ring, in
-    /// microseconds. `None` before any request completed.
+    /// microseconds, by the nearest-rank method: the smallest recorded
+    /// value with at least `⌈p/100 · n⌉` samples at or below it.
+    /// `None` before any request completed.
     pub fn latency_percentile_us(&self, p: f64) -> Option<u32> {
-        let lat = self.lat_us.lock().unwrap();
+        let lat = relock(&self.lat_us);
         if lat.is_empty() {
             return None;
         }
         let mut v = lat.clone();
+        drop(lat);
         v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        Some(v[idx.min(v.len() - 1)])
+        let n = v.len();
+        let rank = (((p / 100.0) * n as f64).ceil() as usize).clamp(1, n);
+        Some(v[rank - 1])
     }
 
     fn record(&self, latency_us: u32, ok: bool) {
@@ -155,11 +221,41 @@ impl Stats {
         if !ok {
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
-        let mut lat = self.lat_us.lock().unwrap();
+        let mut lat = relock(&self.lat_us);
         if lat.len() >= LAT_RING {
             lat.remove(0);
         }
         lat.push(latency_us);
+    }
+}
+
+/// Everything the accept loop, connection handlers, and batch loop
+/// share. Lives behind one `Arc` so a handler outliving the `Server`
+/// handle (client still connected during teardown) keeps valid state.
+struct Shared {
+    queue: Queue,
+    stats: Arc<Stats>,
+    cache: Arc<PlanCache>,
+    shutdown: AtomicBool,
+    draining: AtomicBool,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+impl Shared {
+    fn health_report(&self) -> HealthReport {
+        HealthReport {
+            queue_depth: self.queue.len() as u64,
+            served: self.stats.served() as u64,
+            errors: self.stats.errors() as u64,
+            batches: self.stats.batches() as u64,
+            shed: self.stats.shed() as u64,
+            expired: self.stats.expired() as u64,
+            panics: self.stats.panics() as u64,
+            cache_plans: self.cache.len() as u64,
+            cache_hits: self.cache.hits() as u64,
+            cache_misses: self.cache.misses() as u64,
+            draining: self.draining.load(Ordering::SeqCst) || self.shutdown.load(Ordering::SeqCst),
+        }
     }
 }
 
@@ -174,19 +270,26 @@ struct Resolver {
     criterion: String,
     cache: Arc<PlanCache>,
     keys: HashMap<String, PlanKey>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Resolver {
     /// Build the (optionally pruned) graph and derive its cache key.
-    fn build_model(&self, model: &str) -> anyhow::Result<(Graph, PlanKey)> {
-        let g = zoo::by_name(model, self.image, self.seed)?;
+    /// An unknown model name is the one admission-time user error here,
+    /// so it gets its own [`ErrorCode::ModelNotFound`].
+    fn build_model(&self, model: &str) -> Result<(Graph, PlanKey), ServeError> {
+        let g = zoo::by_name(model, self.image, self.seed)
+            .map_err(|e| ServeError::new(ErrorCode::ModelNotFound, e.to_string()))?;
         match self.prune_rf {
             Some(rf) => {
-                let pruned = Session::on(&g)
-                    .criterion(Criterion::parse(&self.criterion)?)
-                    .target(Target::FlopsRf(rf))
-                    .plan()?
-                    .apply()?;
+                let pruned = (|| -> anyhow::Result<PrunedModel> {
+                    Session::on(&g)
+                        .criterion(Criterion::parse(&self.criterion)?)
+                        .target(Target::FlopsRf(rf))
+                        .plan()?
+                        .apply()
+                })()
+                .map_err(|e| ServeError::internal(format!("pruning `{model}` failed: {e}")))?;
                 let key = PlanKey::pruned(model, &pruned.report, self.level);
                 Ok((pruned.graph, key))
             }
@@ -194,7 +297,12 @@ impl Resolver {
         }
     }
 
-    fn plan_for(&mut self, model: &str) -> anyhow::Result<Arc<CachedPlan>> {
+    fn plan_for(&mut self, model: &str) -> Result<Arc<CachedPlan>, ServeError> {
+        if let Some(f) = &self.faults {
+            // Site::Resolve may panic; plan_for always runs inside the
+            // batch loop's per-group catch_unwind
+            f.fire(Site::Resolve);
+        }
         let (key, prebuilt) = match self.keys.get(model) {
             Some(k) => (k.clone(), None),
             None => {
@@ -205,20 +313,22 @@ impl Resolver {
         };
         let cache = Arc::clone(&self.cache);
         let level = self.level;
-        cache.get_or_compile(&key, || {
-            let g = match prebuilt {
-                Some(g) => g,
-                // evicted since the key was derived: rebuild from source
-                None => self.build_model(model)?.0,
-            };
-            Plan::compile(
-                &g,
-                PlanOpts {
-                    level,
-                    ..Default::default()
-                },
-            )
-        })
+        cache
+            .get_or_compile(&key, || {
+                let g = match prebuilt {
+                    Some(g) => g,
+                    // evicted since the key was derived: rebuild from source
+                    None => self.build_model(model)?.0,
+                };
+                Plan::compile(
+                    &g,
+                    PlanOpts {
+                        level,
+                        ..Default::default()
+                    },
+                )
+            })
+            .map_err(|e| ServeError::internal(e.to_string()))
     }
 }
 
@@ -253,10 +363,10 @@ fn send_split(reqs: &[Pending], valid: &[usize], mem: &[usize], out: &Tensor) {
     let rows_total: usize = mem.iter().map(|&m| reqs[valid[m]].tensor.shape[0]).sum();
     if rows_total == 0 || out.shape.first().copied().unwrap_or(0) != rows_total {
         for &m in mem {
-            let _ = reqs[valid[m]].resp.send(Err(anyhow::anyhow!(
+            let _ = reqs[valid[m]].resp.send(Err(ServeError::internal(format!(
                 "model output rows {:?} do not match the {rows_total} stacked request rows",
                 out.shape.first()
-            )));
+            ))));
         }
         return;
     }
@@ -276,12 +386,23 @@ fn send_split(reqs: &[Pending], valid: &[usize], mem: &[usize], out: &Tensor) {
 /// [`Batcher`] whose workspace pool persists on the cache entry, split,
 /// respond. A failed combined dispatch falls back to per-chunk
 /// dispatch so one malformed request cannot poison co-batched ones.
-fn process_group(cached: &CachedPlan, reqs: &[Pending], max_rows: usize) {
+fn process_group(
+    cached: &CachedPlan,
+    reqs: &[Pending],
+    max_rows: usize,
+    faults: Option<&FaultPlan>,
+) {
+    if let Some(f) = faults {
+        // Site::Group may panic or sleep; the caller's catch_unwind
+        // turns a panic into per-request `ErrorCode::Panic` replies
+        f.fire(Site::Group);
+    }
     let mut valid: Vec<usize> = Vec::new();
     for (i, p) in reqs.iter().enumerate() {
         if p.tensor.shape.first().copied().unwrap_or(0) == 0 {
-            let _ = p.resp.send(Err(anyhow::anyhow!(
-                "request tensor needs a leading batch dim of at least 1"
+            let _ = p.resp.send(Err(ServeError::new(
+                ErrorCode::BadRequest,
+                "request tensor needs a leading batch dim of at least 1",
             )));
         } else {
             valid.push(i);
@@ -289,7 +410,7 @@ fn process_group(cached: &CachedPlan, reqs: &[Pending], max_rows: usize) {
     }
     let tensors: Vec<&Tensor> = valid.iter().map(|&i| &reqs[i].tensor).collect();
     let (chunks, members) = pack_chunks(&tensors, max_rows);
-    let pool = std::mem::take(&mut *cached.pool.lock().unwrap());
+    let pool = std::mem::take(&mut *relock(&cached.pool));
     let batcher = Batcher::with_pool(&cached.plan, pool);
     match batcher.run_batch(&chunks) {
         Ok(outs) => {
@@ -302,22 +423,62 @@ fn process_group(cached: &CachedPlan, reqs: &[Pending], max_rows: usize) {
                 match batcher.run_batch(std::slice::from_ref(chunk)) {
                     Ok(outs) => send_split(reqs, &valid, mem, &outs[0]),
                     Err(e) => {
-                        let msg = e.to_string();
+                        let err = ServeError::internal(e.to_string());
                         for &m in mem {
-                            let _ = reqs[valid[m]].resp.send(Err(anyhow::anyhow!("{msg}")));
+                            let _ = reqs[valid[m]].resp.send(Err(err.clone()));
                         }
                     }
                 }
             }
         }
     }
-    *cached.pool.lock().unwrap() = batcher.into_pool();
+    *relock(&cached.pool) = batcher.into_pool();
 }
 
-fn process_batch(resolver: &mut Resolver, batch: Vec<Pending>, max_rows: usize) {
+/// Best-effort text from a caught panic payload (`panic!` with a string
+/// or format args covers everything this crate throws).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "batch worker panicked".to_string()
+    }
+}
+
+fn process_batch(
+    resolver: &mut Resolver,
+    batch: Vec<Pending>,
+    max_rows: usize,
+    tick: Duration,
+    stats: &Stats,
+) {
+    // Shed requests whose deadline has long passed instead of computing
+    // results nobody is waiting on. One-tick grace: a deadline's primary
+    // job is to *accelerate* dispatch, so a request only sheds once it
+    // is a full tick past due — i.e. only under real backlog (a slow or
+    // panicking batch ahead of it), never on the fast path.
+    let now = Instant::now();
+    let mut live: Vec<Pending> = Vec::with_capacity(batch.len());
+    for p in batch {
+        match p.deadline {
+            Some(d) if d + tick < now => {
+                stats.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = p.resp.send(Err(ServeError::new(
+                    ErrorCode::DeadlineExceeded,
+                    format!(
+                        "request expired {:?} before dispatch under backlog",
+                        now.duration_since(d)
+                    ),
+                )));
+            }
+            _ => live.push(p),
+        }
+    }
     // group by model, preserving admission order within each group
     let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
-    for p in batch {
+    for p in live {
         match groups.iter_mut().find(|(m, _)| *m == p.model) {
             Some((_, v)) => v.push(p),
             None => {
@@ -327,93 +488,152 @@ fn process_batch(resolver: &mut Resolver, batch: Vec<Pending>, max_rows: usize) 
         }
     }
     for (model, reqs) in &groups {
-        match resolver.plan_for(model) {
-            Ok(cached) => process_group(&cached, reqs, max_rows),
+        // Panic isolation: one group's unwind (a plan bug, a poisoned
+        // workspace, an injected fault) answers its own requests with
+        // `ErrorCode::Panic` and leaves every other group — and the
+        // batch loop itself — serving.
+        let unwound = catch_unwind(AssertUnwindSafe(|| match resolver.plan_for(model) {
+            Ok(cached) => process_group(&cached, reqs, max_rows, resolver.faults.as_deref()),
             Err(e) => {
-                let msg = e.to_string();
                 for p in reqs {
-                    let _ = p.resp.send(Err(anyhow::anyhow!("{msg}")));
+                    let _ = p.resp.send(Err(e.clone()));
                 }
+            }
+        }));
+        if let Err(payload) = unwound {
+            stats.panics.fetch_add(1, Ordering::Relaxed);
+            let err = ServeError::new(
+                ErrorCode::Panic,
+                format!(
+                    "batch worker panicked while serving `{model}`: {}",
+                    panic_message(payload.as_ref())
+                ),
+            );
+            // requests answered before the unwind dropped their
+            // receivers already; this send is a no-op for them
+            for p in reqs {
+                let _ = p.resp.send(Err(err.clone()));
             }
         }
     }
 }
 
-fn batch_loop(
-    queue: Arc<Queue>,
-    shutdown: Arc<AtomicBool>,
-    mut resolver: Resolver,
-    tick: Duration,
-    max_batch: usize,
-    stats: Arc<Stats>,
-) {
+fn batch_loop(shared: Arc<Shared>, mut resolver: Resolver, tick: Duration, max_batch: usize) {
     loop {
-        let batch = queue.drain_tick(tick, max_batch);
+        let batch = shared.queue.drain_tick(tick, max_batch);
         if batch.is_empty() {
-            // flush-then-exit: handlers stop enqueuing once shutdown is
-            // set, so an empty queue here means we are done
-            if shutdown.load(Ordering::SeqCst) && queue.is_empty() {
+            // flush-then-exit: a closed queue admits nothing new, so an
+            // empty queue during shutdown/drain means we are done
+            if (shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed())
+                && shared.queue.is_empty()
+            {
                 break;
             }
             continue;
         }
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        process_batch(&mut resolver, batch, max_batch);
+        if let Some(f) = &shared.faults {
+            // Site::Batch allows only non-unwinding faults (slow ticks):
+            // this runs outside the per-group catch_unwind
+            f.fire(Site::Batch);
+        }
+        shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        process_batch(&mut resolver, batch, max_batch, tick, &shared.stats);
     }
 }
 
-fn handle_conn(
-    mut stream: TcpStream,
-    queue: Arc<Queue>,
-    shutdown: Arc<AtomicBool>,
-    stats: Arc<Stats>,
-) {
+/// Generous in-frame budget: a slow client may dribble one frame in for
+/// this long, while the 50 ms socket timeout still ends waits *between*
+/// frames promptly (see [`protocol::read_frame_budget`]).
+const FRAME_BUDGET: Duration = Duration::from_secs(5);
+
+/// Admit one decoded request and block until the batch loop answers.
+fn admit_and_wait(shared: &Shared, req: Request, t0: Instant) -> Result<Tensor, ServeError> {
+    let (tx, rx) = mpsc::channel();
+    let pending = Pending {
+        model: req.model,
+        tensor: req.tensor,
+        admitted: t0,
+        deadline: (req.deadline_ms > 0)
+            .then(|| t0 + Duration::from_millis(u64::from(req.deadline_ms))),
+        resp: tx,
+    };
+    if let Err(e) = shared.queue.try_push(pending) {
+        if e.code == ErrorCode::Overloaded {
+            shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        return Err(e);
+    }
+    match rx.recv() {
+        Ok(r) => r,
+        // the queue was flushed during teardown and the sender dropped
+        Err(_) => Err(ServeError::new(
+            ErrorCode::ShuttingDown,
+            "server shut down before responding",
+        )),
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
     let _ = stream.set_nodelay(true);
-    // short read timeout so idle handlers observe shutdown
+    // short read timeout so idle handlers observe shutdown between
+    // frames; FRAME_BUDGET governs stalls *inside* a frame
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
     loop {
-        match protocol::read_frame(&mut stream) {
+        match protocol::read_frame_budget(&mut stream, FRAME_BUDGET) {
             Ok(protocol::FrameRead::Idle) => {
-                if shutdown.load(Ordering::SeqCst) {
+                if shared.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
             }
             Ok(protocol::FrameRead::Eof) | Err(_) => break,
             Ok(protocol::FrameRead::Frame(body)) => {
                 let t0 = Instant::now();
-                let reply = match protocol::decode_request(&body) {
-                    Ok(req) => {
-                        let (tx, rx) = mpsc::channel();
-                        queue.push(Pending {
-                            model: req.model,
-                            tensor: req.tensor,
-                            admitted: t0,
-                            deadline: (req.deadline_ms > 0)
-                                .then(|| t0 + Duration::from_millis(u64::from(req.deadline_ms))),
-                            resp: tx,
-                        });
-                        match rx.recv() {
-                            Ok(Ok(t)) => Ok(t),
-                            Ok(Err(e)) => Err(e.to_string()),
-                            Err(_) => Err("server shut down before responding".to_string()),
+                let resp = match protocol::decode_request(&body) {
+                    Ok(RequestMsg::Health) => Response::Health {
+                        latency_us: t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32,
+                        report: shared.health_report(),
+                    },
+                    Ok(RequestMsg::Predict(req)) => {
+                        let reply = admit_and_wait(&shared, req, t0);
+                        let latency_us =
+                            t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32;
+                        shared.stats.record(latency_us, reply.is_ok());
+                        match reply {
+                            Ok(tensor) => Response::Ok { latency_us, tensor },
+                            Err(e) => Response::Err {
+                                latency_us,
+                                code: e.code,
+                                message: e.message,
+                            },
                         }
                     }
-                    Err(e) => Err(e.to_string()),
-                };
-                let latency_us = t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32;
-                stats.record(latency_us, reply.is_ok());
-                let resp = match reply {
-                    Ok(tensor) => Response::Ok { latency_us, tensor },
-                    Err(message) => Response::Err {
-                        latency_us,
-                        message,
-                    },
+                    Err(e) => {
+                        let latency_us =
+                            t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32;
+                        shared.stats.record(latency_us, false);
+                        Response::Err {
+                            latency_us,
+                            code: ErrorCode::BadRequest,
+                            message: e.to_string(),
+                        }
+                    }
                 };
                 let body = match protocol::encode_response(&resp) {
                     Ok(b) => b,
                     Err(_) => break,
                 };
+                if let Some(f) = &shared.faults {
+                    if f.fire(Site::Frame) {
+                        // torn frame: deliver half, sever, and stop —
+                        // the client must see EOF, never a hang
+                        let _ = protocol::write_frame_torn(&mut stream, &body);
+                        break;
+                    }
+                }
                 if protocol::write_frame(&mut stream, &body).is_err() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
             }
@@ -421,25 +641,18 @@ fn handle_conn(
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    queue: Arc<Queue>,
-    shutdown: Arc<AtomicBool>,
-    stats: Arc<Stats>,
-) {
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     let mut handlers: Vec<JoinHandle<()>> = Vec::new();
     for conn in listener.incoming() {
-        if shutdown.load(Ordering::SeqCst) {
+        if shared.shutdown.load(Ordering::SeqCst) {
             break;
         }
         match conn {
             Ok(stream) => {
-                let q = Arc::clone(&queue);
-                let f = Arc::clone(&shutdown);
-                let s = Arc::clone(&stats);
+                let s = Arc::clone(&shared);
                 if let Ok(h) = std::thread::Builder::new()
                     .name("spa-serve-conn".to_string())
-                    .spawn(move || handle_conn(stream, q, f, s))
+                    .spawn(move || handle_conn(stream, s))
                 {
                     handlers.push(h);
                 }
@@ -454,14 +667,14 @@ fn accept_loop(
 
 /// A running serve instance: an accept thread (one handler thread per
 /// connection) plus the batch-loop thread. Shuts down cleanly on
-/// [`Server::shutdown`] or drop, flushing queued requests first.
+/// [`Server::shutdown`], [`Server::drain`], or drop, flushing queued
+/// requests first — every admitted request is answered, with a typed
+/// [`ErrorCode::ShuttingDown`] if it can no longer be computed.
 pub struct Server {
     addr: SocketAddr,
-    shutdown: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     batch: Option<JoinHandle<()>>,
-    stats: Arc<Stats>,
-    cache: Arc<PlanCache>,
 }
 
 impl Server {
@@ -469,46 +682,50 @@ impl Server {
     pub fn spawn(cfg: ServeCfg) -> anyhow::Result<Server> {
         let listener = TcpListener::bind(cfg.addr.as_str())?;
         let addr = listener.local_addr()?;
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let queue = Arc::new(Queue::new());
-        let stats = Arc::new(Stats::new());
         let cache = match cfg.cache_cap {
             0 => PlanCache::global(),
             n => Arc::new(PlanCache::with_capacity(n)),
         };
+        let faults = match cfg.faults.clone() {
+            Some(f) => Some(f),
+            None => FaultPlan::from_env()?.map(Arc::new),
+        };
+        let shared = Arc::new(Shared {
+            queue: Queue::bounded(cfg.queue_cap),
+            stats: Arc::new(Stats::new()),
+            cache: Arc::clone(&cache),
+            shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            faults,
+        });
         let resolver = Resolver {
             image: cfg.image,
             seed: cfg.seed,
             level: cfg.level,
             prune_rf: cfg.prune_rf,
             criterion: cfg.criterion.clone(),
-            cache: Arc::clone(&cache),
+            cache,
             keys: HashMap::new(),
+            faults: shared.faults.clone(),
         };
         let batch = {
-            let queue = Arc::clone(&queue);
-            let shutdown = Arc::clone(&shutdown);
-            let stats = Arc::clone(&stats);
+            let shared = Arc::clone(&shared);
             let (tick, max_batch) = (cfg.tick, cfg.max_batch.max(1));
             std::thread::Builder::new()
                 .name("spa-serve-batch".to_string())
-                .spawn(move || batch_loop(queue, shutdown, resolver, tick, max_batch, stats))?
+                .spawn(move || batch_loop(shared, resolver, tick, max_batch))?
         };
         let accept = {
-            let queue = Arc::clone(&queue);
-            let shutdown = Arc::clone(&shutdown);
-            let stats = Arc::clone(&stats);
+            let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name("spa-serve-accept".to_string())
-                .spawn(move || accept_loop(listener, queue, shutdown, stats))?
+                .spawn(move || accept_loop(listener, shared))?
         };
         Ok(Server {
             addr,
-            shutdown,
+            shared,
             accept: Some(accept),
             batch: Some(batch),
-            stats,
-            cache,
         })
     }
 
@@ -519,12 +736,41 @@ impl Server {
 
     /// Live serving counters and latency percentiles.
     pub fn stats(&self) -> Arc<Stats> {
-        Arc::clone(&self.stats)
+        Arc::clone(&self.shared.stats)
     }
 
     /// The plan cache this server compiles into.
     pub fn cache(&self) -> Arc<PlanCache> {
-        Arc::clone(&self.cache)
+        Arc::clone(&self.shared.cache)
+    }
+
+    /// The fault plan this server runs under, if any.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.shared.faults.clone()
+    }
+
+    /// A health snapshot without going through the wire (the `health`
+    /// protocol verb reports the same data to remote clients).
+    pub fn health(&self) -> HealthReport {
+        self.shared.health_report()
+    }
+
+    /// Stop admitting new requests while queued work still completes:
+    /// every later predict is answered [`ErrorCode::ShuttingDown`],
+    /// connections stay open, and `health` reports `draining: true`.
+    /// Idempotent; follow with [`Server::drain`] (or drop) to flush and
+    /// join.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+    }
+
+    /// Graceful exit: stop admission, let the batch loop flush every
+    /// already-admitted request, then tear down the listener and join
+    /// all threads.
+    pub fn drain(mut self) {
+        self.begin_drain();
+        self.halt();
     }
 
     /// Stop accepting, flush queued requests, and join all threads.
@@ -533,13 +779,27 @@ impl Server {
     }
 
     fn halt(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        // ordering matters: close admission first so the batch loop's
+        // flush-then-exit condition is reachable, then wake the accept
+        // loop, join the batch loop (which drains the queue), answer
+        // anything it could not (batch thread died), and only then join
+        // accept — handler threads all unblock once every pending
+        // request has been answered.
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
         // unblock the accept loop with a throwaway connection
         let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.batch.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.batch.take() {
+        for p in self.shared.queue.drain_all() {
+            let _ = p.resp.send(Err(ServeError::new(
+                ErrorCode::ShuttingDown,
+                "server shut down before dispatching this request",
+            )));
+        }
+        if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
     }
@@ -583,6 +843,42 @@ mod tests {
     }
 
     #[test]
+    fn latency_percentiles_use_nearest_rank() {
+        let stats = Stats::new();
+        assert_eq!(stats.latency_percentile_us(50.0), None, "empty ring");
+        stats.record(70, true);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(stats.latency_percentile_us(p), Some(70), "single sample");
+        }
+        // known distribution 1..=100 in scrambled insert order
+        let stats = Stats::new();
+        for v in (51..=100).chain(1..=50) {
+            stats.record(v, true);
+        }
+        assert_eq!(stats.latency_percentile_us(50.0), Some(50));
+        assert_eq!(stats.latency_percentile_us(99.0), Some(99));
+        assert_eq!(stats.latency_percentile_us(100.0), Some(100));
+        assert_eq!(stats.latency_percentile_us(1.0), Some(1));
+        assert_eq!(stats.latency_percentile_us(0.0), Some(1), "p0 clamps to min");
+    }
+
+    #[test]
+    fn latency_percentiles_recover_from_a_poisoned_lock() {
+        let stats = Arc::new(Stats::new());
+        stats.record(42, true);
+        let s2 = Arc::clone(&stats);
+        let _ = std::thread::spawn(move || {
+            let _g = s2.lat_us.lock().unwrap();
+            panic!("poison the latency ring");
+        })
+        .join();
+        assert!(stats.lat_us.is_poisoned());
+        assert_eq!(stats.latency_percentile_us(50.0), Some(42));
+        stats.record(43, true);
+        assert_eq!(stats.latency_percentile_us(100.0), Some(43));
+    }
+
+    #[test]
     fn server_round_trips_one_request() {
         let cfg = ServeCfg {
             tick: Duration::from_millis(1),
@@ -613,12 +909,21 @@ mod tests {
         for (a, b) in logits.data.iter().zip(&want.data) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
-        // unknown models error without killing the connection
-        assert!(client.predict("definitely-not-a-model", &x).is_err());
+        // unknown models get a typed error without killing the connection
+        let err = client
+            .try_predict("definitely-not-a-model", &x, Duration::ZERO)
+            .unwrap()
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::ModelNotFound);
         let (again, _) = client.predict("mlp", &x).unwrap();
         assert_eq!(again.shape, want.shape);
         assert_eq!(server.stats().served(), 3);
         assert_eq!(server.stats().errors(), 1);
+        // in-process health snapshot agrees with the counters
+        let health = server.health();
+        assert_eq!(health.served, 3);
+        assert_eq!(health.errors, 1);
+        assert!(!health.draining);
         server.shutdown();
     }
 }

@@ -4,37 +4,135 @@
 //! followed by the body. Request bodies are
 //!
 //! ```text
-//! u8  version (= 1)
-//! u16 model-name length, then that many UTF-8 bytes
-//! u32 deadline in milliseconds (0 = no deadline)
-//! u8  ndim, then ndim × u32 dims
-//! numel × f32 tensor data (row-major, little-endian)
+//! u8  version (= 2)
+//! u8  verb (0 = predict, 1 = health)
+//! predict: u16 model-name length, then that many UTF-8 bytes
+//!          u32 deadline in milliseconds (0 = no deadline)
+//!          u8 ndim, then ndim × u32 dims
+//!          numel × f32 tensor data (row-major, little-endian)
+//! health:  (no further payload)
 //! ```
 //!
 //! and response bodies are
 //!
 //! ```text
-//! u8  status (0 = ok, 1 = error)
+//! u8  status (0 = ok, 1 = error, 2 = health)
 //! u32 server-measured latency in microseconds (admission → response)
-//! ok:    u8 ndim, ndim × u32 dims, numel × f32 data
-//! error: u16 message length, then that many UTF-8 bytes
+//! ok:     u8 ndim, ndim × u32 dims, numel × f32 data
+//! error:  u8 error code (see [`ErrorCode`]), u16 message length, then
+//!         that many UTF-8 bytes
+//! health: 10 × u64 counters (queue depth, served, errors, batches,
+//!         shed, expired, panics, cache plans/hits/misses) + u8 draining
 //! ```
 //!
 //! Frames are capped at 1 GiB; oversized lengths are rejected before
 //! any allocation. Deadlines travel with the request so the server's
-//! dynamic batcher can dispatch a batch early — see the deadline
-//! semantics on [`crate::serve`].
+//! dynamic batcher can dispatch a batch early — see the deadline and
+//! failure semantics on [`crate::serve`].
+//!
+//! Reads are budgeted two ways: the short socket read timeout the
+//! server installs only ever ends a read *between* frames (surfacing as
+//! [`FrameRead::Idle`] so handlers can observe shutdown), while a
+//! started frame gets a generous per-frame budget — a healthy-but-slow
+//! peer can dribble a frame in without being dropped, but a peer that
+//! stalls mid-frame past the budget is disconnected instead of pinning
+//! the handler forever.
 
 use crate::tensor::Tensor;
+use crate::util::Rng;
 use std::io::{ErrorKind, Read, Write};
-use std::net::{TcpStream, ToSocketAddrs};
-use std::time::Duration;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
 
 /// Protocol version carried in every request.
-pub const VERSION: u8 = 1;
+pub const VERSION: u8 = 2;
 
 /// Hard cap on one frame's body (1 GiB).
 pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Typed failure classes carried on error responses, so clients can
+/// tell a shed request from a crashed batch without parsing prose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Unclassified server-side failure.
+    Internal = 0,
+    /// The batch dispatching this request panicked; the worker was
+    /// isolated and the server keeps serving.
+    Panic = 1,
+    /// The requested model name is not in the zoo.
+    ModelNotFound = 2,
+    /// The request's soft deadline expired before its batch dispatched
+    /// (only possible under backlog; see the shedding semantics on
+    /// [`crate::serve`]).
+    DeadlineExceeded = 3,
+    /// Load shedding at admission: the bounded queue is full.
+    Overloaded = 4,
+    /// The server is draining or shutting down and admits no new work.
+    ShuttingDown = 5,
+    /// The request frame was malformed.
+    BadRequest = 6,
+}
+
+impl ErrorCode {
+    /// Stable lowercase name (used in `Display` and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Internal => "internal",
+            ErrorCode::Panic => "panic",
+            ErrorCode::ModelNotFound => "model-not-found",
+            ErrorCode::DeadlineExceeded => "deadline-exceeded",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::ShuttingDown => "shutting-down",
+            ErrorCode::BadRequest => "bad-request",
+        }
+    }
+
+    /// Decode a wire byte; unknown values degrade to [`ErrorCode::Internal`]
+    /// (never a decode failure — the message still travels).
+    pub fn from_u8(v: u8) -> ErrorCode {
+        match v {
+            1 => ErrorCode::Panic,
+            2 => ErrorCode::ModelNotFound,
+            3 => ErrorCode::DeadlineExceeded,
+            4 => ErrorCode::Overloaded,
+            5 => ErrorCode::ShuttingDown,
+            6 => ErrorCode::BadRequest,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// A typed serving error: an [`ErrorCode`] plus a human-readable
+/// message. Implements [`std::error::Error`], so it converts into
+/// `anyhow::Error` with `?` while keeping the code readable first.
+#[derive(Debug, Clone)]
+pub struct ServeError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ServeError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ServeError {
+        ServeError {
+            code,
+            message: message.into(),
+        }
+    }
+
+    /// Shorthand for an [`ErrorCode::Internal`] error.
+    pub fn internal(message: impl Into<String>) -> ServeError {
+        ServeError::new(ErrorCode::Internal, message)
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.message)
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// A decoded inference request.
 #[derive(Debug, Clone)]
@@ -47,11 +145,54 @@ pub struct Request {
     pub tensor: Tensor,
 }
 
+/// A decoded request frame: inference, or a control verb.
+#[derive(Debug, Clone)]
+pub enum RequestMsg {
+    Predict(Request),
+    Health,
+}
+
+/// A server-state snapshot answered to the `health` verb.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HealthReport {
+    /// Requests admitted but not yet dispatched.
+    pub queue_depth: u64,
+    /// Requests answered (ok or error).
+    pub served: u64,
+    /// Requests answered with an error response.
+    pub errors: u64,
+    /// Non-empty batch-loop ticks dispatched.
+    pub batches: u64,
+    /// Requests rejected at admission with [`ErrorCode::Overloaded`].
+    pub shed: u64,
+    /// Requests shed with [`ErrorCode::DeadlineExceeded`].
+    pub expired: u64,
+    /// Batch dispatches that panicked and were isolated.
+    pub panics: u64,
+    /// Compiled plans resident in the cache.
+    pub cache_plans: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Whether the server has stopped admitting new work.
+    pub draining: bool,
+}
+
 /// A decoded inference response.
 #[derive(Debug, Clone)]
 pub enum Response {
-    Ok { latency_us: u32, tensor: Tensor },
-    Err { latency_us: u32, message: String },
+    Ok {
+        latency_us: u32,
+        tensor: Tensor,
+    },
+    Err {
+        latency_us: u32,
+        code: ErrorCode,
+        message: String,
+    },
+    Health {
+        latency_us: u32,
+        report: HealthReport,
+    },
 }
 
 /// Outcome of reading one frame from a stream that may carry a read
@@ -66,12 +207,41 @@ pub enum FrameRead {
     Idle,
 }
 
-/// Read one length-prefixed frame. Timeouts that land *between* frames
-/// surface as [`FrameRead::Idle`]; a timeout inside a frame keeps
-/// reading (the rest of the frame is assumed to be in flight).
+/// Default per-frame budget for [`read_frame`]: effectively unbounded
+/// for blocking client sockets, a backstop for timeout sockets.
+const DEFAULT_FRAME_BUDGET: Duration = Duration::from_secs(3600);
+
+/// Read one length-prefixed frame with the default per-frame budget.
+/// See [`read_frame_budget`].
 pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<FrameRead> {
+    read_frame_budget(stream, DEFAULT_FRAME_BUDGET)
+}
+
+/// `Ok` while a started frame is within its budget, a `TimedOut` error
+/// once the peer has stalled mid-frame past it.
+fn check_stall(started: Option<Instant>, budget: Duration) -> std::io::Result<()> {
+    match started {
+        Some(t) if t.elapsed() > budget => Err(std::io::Error::new(
+            ErrorKind::TimedOut,
+            format!("peer stalled mid-frame beyond the {budget:?} frame budget"),
+        )),
+        _ => Ok(()),
+    }
+}
+
+/// Read one length-prefixed frame. A socket read timeout that lands
+/// *between* frames surfaces as [`FrameRead::Idle`]; once the first
+/// byte of a frame has arrived, timeouts keep the read alive (the rest
+/// is assumed in flight) until the frame has taken longer than
+/// `frame_budget` in total — then the read fails with `TimedOut` so a
+/// stalled peer cannot pin the handler forever.
+pub fn read_frame_budget(
+    stream: &mut TcpStream,
+    frame_budget: Duration,
+) -> std::io::Result<FrameRead> {
     let mut len4 = [0u8; 4];
     let mut got = 0usize;
+    let mut started: Option<Instant> = None;
     while got < 4 {
         match stream.read(&mut len4[got..]) {
             Ok(0) => {
@@ -84,11 +254,15 @@ pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<FrameRead> {
                     ))
                 };
             }
-            Ok(n) => got += n,
+            Ok(n) => {
+                got += n;
+                started.get_or_insert_with(Instant::now);
+            }
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
                 if got == 0 {
                     return Ok(FrameRead::Idle);
                 }
+                check_stall(started, frame_budget)?;
             }
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(e) => return Err(e),
@@ -121,11 +295,10 @@ pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<FrameRead> {
                 ));
             }
             Ok(n) => off += n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
-                ) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                check_stall(started, frame_budget)?;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(e) => return Err(e),
         }
     }
@@ -137,6 +310,17 @@ pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
     w.write_all(&(body.len() as u32).to_le_bytes())?;
     w.write_all(body)?;
     w.flush()
+}
+
+/// Deliberately write a torn frame — the length prefix plus only half
+/// the body — then shut the stream down. Fault injection only
+/// ([`crate::serve::faults`]): the peer must observe an unexpected EOF,
+/// never a hang or a decodable half-message.
+pub fn write_frame_torn(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+    stream.write_all(&(body.len() as u32).to_le_bytes())?;
+    stream.write_all(&body[..body.len() / 2])?;
+    stream.flush()?;
+    stream.shutdown(std::net::Shutdown::Both)
 }
 
 /// Byte cursor over a frame body.
@@ -174,6 +358,13 @@ impl<'a> Cur<'a> {
     fn u32(&mut self) -> anyhow::Result<u32> {
         let s = self.take(4)?;
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
     }
 
     fn done(&self) -> anyhow::Result<()> {
@@ -225,7 +416,11 @@ fn get_tensor(c: &mut Cur<'_>) -> anyhow::Result<Tensor> {
     Ok(Tensor::new(shape, data))
 }
 
-/// Encode a request body (frame it with [`write_frame`]).
+/// Request verbs on the wire.
+const VERB_PREDICT: u8 = 0;
+const VERB_HEALTH: u8 = 1;
+
+/// Encode a predict-request body (frame it with [`write_frame`]).
 pub fn encode_request(model: &str, deadline_ms: u32, t: &Tensor) -> anyhow::Result<Vec<u8>> {
     anyhow::ensure!(
         model.len() <= u16::MAX as usize,
@@ -234,6 +429,7 @@ pub fn encode_request(model: &str, deadline_ms: u32, t: &Tensor) -> anyhow::Resu
     );
     let mut out = Vec::with_capacity(16 + model.len() + t.numel() * 4);
     out.push(VERSION);
+    out.push(VERB_PREDICT);
     out.extend_from_slice(&(model.len() as u16).to_le_bytes());
     out.extend_from_slice(model.as_bytes());
     out.extend_from_slice(&deadline_ms.to_le_bytes());
@@ -241,23 +437,38 @@ pub fn encode_request(model: &str, deadline_ms: u32, t: &Tensor) -> anyhow::Resu
     Ok(out)
 }
 
+/// Encode a health-request body.
+pub fn encode_health_request() -> Vec<u8> {
+    vec![VERSION, VERB_HEALTH]
+}
+
 /// Decode a request body.
-pub fn decode_request(body: &[u8]) -> anyhow::Result<Request> {
+pub fn decode_request(body: &[u8]) -> anyhow::Result<RequestMsg> {
     let mut c = Cur::new(body);
     let v = c.u8()?;
     anyhow::ensure!(v == VERSION, "unsupported protocol version {v} (want {VERSION})");
-    let mlen = c.u16()? as usize;
-    let model = std::str::from_utf8(c.take(mlen)?)
-        .map_err(|e| anyhow::anyhow!("model name is not UTF-8: {e}"))?
-        .to_string();
-    let deadline_ms = c.u32()?;
-    let tensor = get_tensor(&mut c)?;
-    c.done()?;
-    Ok(Request {
-        model,
-        deadline_ms,
-        tensor,
-    })
+    let verb = c.u8()?;
+    match verb {
+        VERB_PREDICT => {
+            let mlen = c.u16()? as usize;
+            let model = std::str::from_utf8(c.take(mlen)?)
+                .map_err(|e| anyhow::anyhow!("model name is not UTF-8: {e}"))?
+                .to_string();
+            let deadline_ms = c.u32()?;
+            let tensor = get_tensor(&mut c)?;
+            c.done()?;
+            Ok(RequestMsg::Predict(Request {
+                model,
+                deadline_ms,
+                tensor,
+            }))
+        }
+        VERB_HEALTH => {
+            c.done()?;
+            Ok(RequestMsg::Health)
+        }
+        other => anyhow::bail!("unknown request verb {other}"),
+    }
 }
 
 /// Encode a response body (frame it with [`write_frame`]).
@@ -269,13 +480,37 @@ pub fn encode_response(resp: &Response) -> anyhow::Result<Vec<u8>> {
             out.extend_from_slice(&latency_us.to_le_bytes());
             put_tensor(&mut out, tensor)?;
         }
-        Response::Err { latency_us, message } => {
+        Response::Err {
+            latency_us,
+            code,
+            message,
+        } => {
             out.push(1u8);
             out.extend_from_slice(&latency_us.to_le_bytes());
+            out.push(*code as u8);
             let msg = message.as_bytes();
             let take = msg.len().min(u16::MAX as usize);
             out.extend_from_slice(&(take as u16).to_le_bytes());
             out.extend_from_slice(&msg[..take]);
+        }
+        Response::Health { latency_us, report } => {
+            out.push(2u8);
+            out.extend_from_slice(&latency_us.to_le_bytes());
+            for v in [
+                report.queue_depth,
+                report.served,
+                report.errors,
+                report.batches,
+                report.shed,
+                report.expired,
+                report.panics,
+                report.cache_plans,
+                report.cache_hits,
+                report.cache_misses,
+            ] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.push(u8::from(report.draining));
         }
     }
     Ok(out)
@@ -292,12 +527,30 @@ pub fn decode_response(body: &[u8]) -> anyhow::Result<Response> {
             tensor: get_tensor(&mut c)?,
         },
         1 => {
+            let code = ErrorCode::from_u8(c.u8()?);
             let mlen = c.u16()? as usize;
             let message = String::from_utf8_lossy(c.take(mlen)?).into_owned();
             Response::Err {
                 latency_us,
+                code,
                 message,
             }
+        }
+        2 => {
+            let report = HealthReport {
+                queue_depth: c.u64()?,
+                served: c.u64()?,
+                errors: c.u64()?,
+                batches: c.u64()?,
+                shed: c.u64()?,
+                expired: c.u64()?,
+                panics: c.u64()?,
+                cache_plans: c.u64()?,
+                cache_hits: c.u64()?,
+                cache_misses: c.u64()?,
+                draining: c.u8()? != 0,
+            };
+            Response::Health { latency_us, report }
         }
         other => anyhow::bail!("unknown response status {other}"),
     };
@@ -305,18 +558,96 @@ pub fn decode_response(body: &[u8]) -> anyhow::Result<Response> {
     Ok(resp)
 }
 
+/// Client-side retry policy for [`Client::predict_retry`] and
+/// [`Client::connect_retry`]: capped exponential backoff with
+/// deterministic (seeded) jitter. Retries cover [`ErrorCode::Overloaded`]
+/// rejections and transport failures (broken connection, torn frame);
+/// other typed errors surface immediately.
+#[derive(Debug, Clone)]
+pub struct RetryCfg {
+    /// Total tries, including the first (min 1).
+    pub attempts: u32,
+    /// Backoff before the second try; doubles per retry.
+    pub backoff: Duration,
+    /// Upper bound on any single backoff (before jitter).
+    pub max_backoff: Duration,
+    /// Seed for the jitter stream — same seed, same delays.
+    pub seed: u64,
+}
+
+impl Default for RetryCfg {
+    fn default() -> RetryCfg {
+        RetryCfg {
+            attempts: 5,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(250),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// The delay before retry `attempt` (1-based): `backoff * 2^(attempt-1)`
+/// capped at `max_backoff`, scaled by a jitter factor in [0.5, 1.5).
+fn backoff_delay(retry: &RetryCfg, attempt: u32, rng: &mut Rng) -> Duration {
+    let shift = attempt.saturating_sub(1).min(16);
+    let exp = retry.backoff.saturating_mul(1u32 << shift);
+    let capped = exp.min(retry.max_backoff);
+    capped.mul_f64(0.5 + f64::from(rng.uniform()))
+}
+
 /// A blocking client for the serve protocol. One request in flight per
 /// connection; open several clients for concurrency.
 pub struct Client {
     stream: TcpStream,
+    addr: SocketAddr,
+    /// The stream died (io error / torn frame); the next retrying call
+    /// reconnects before sending.
+    broken: bool,
 }
 
 impl Client {
     /// Connect to a running `spa serve` instance.
     pub fn connect(addr: impl ToSocketAddrs) -> anyhow::Result<Client> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("address resolved to nothing"))?;
+        Ok(Client::connect_one(addr)?)
+    }
+
+    fn connect_one(addr: SocketAddr) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        Ok(Client { stream })
+        Ok(Client {
+            stream,
+            addr,
+            broken: false,
+        })
+    }
+
+    /// Connect with capped jittered-backoff retries on failure (e.g.
+    /// the server is restarting and the listener is briefly gone).
+    pub fn connect_retry(addr: impl ToSocketAddrs, retry: &RetryCfg) -> anyhow::Result<Client> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("address resolved to nothing"))?;
+        let mut rng = Rng::new(retry.seed);
+        let attempts = retry.attempts.max(1);
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(backoff_delay(retry, attempt, &mut rng));
+            }
+            match Client::connect_one(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(anyhow::anyhow!(
+            "connect to {addr} failed after {attempts} attempt(s): {}",
+            last.expect("attempts >= 1 implies an error")
+        ))
     }
 
     /// Infer `x` on `model` with no deadline. Returns the output tensor
@@ -327,23 +658,111 @@ impl Client {
 
     /// Infer with a soft deadline: the server dispatches the batch
     /// containing this request no later than admission + `deadline`
-    /// (requests are never dropped; `Duration::ZERO` means none).
+    /// (`Duration::ZERO` means none). A request still queued one full
+    /// tick past its deadline is shed with
+    /// [`ErrorCode::DeadlineExceeded`] instead of computed late.
     pub fn predict_deadline(
         &mut self,
         model: &str,
         x: &Tensor,
         deadline: Duration,
     ) -> anyhow::Result<(Tensor, u32)> {
+        match self.try_predict(model, x, deadline)? {
+            Ok(r) => Ok(r),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Structured predict: the outer `Err` is a transport failure (the
+    /// connection is unusable), the inner `Err` a typed server-side
+    /// [`ServeError`] on a healthy connection.
+    pub fn try_predict(
+        &mut self,
+        model: &str,
+        x: &Tensor,
+        deadline: Duration,
+    ) -> std::io::Result<Result<(Tensor, u32), ServeError>> {
         let deadline_ms = deadline.as_millis().min(u32::MAX as u128) as u32;
-        let body = encode_request(model, deadline_ms, x)?;
-        write_frame(&mut self.stream, &body)?;
-        match read_frame(&mut self.stream)? {
-            FrameRead::Frame(body) => match decode_response(&body)? {
-                Response::Ok { latency_us, tensor } => Ok((tensor, latency_us)),
-                Response::Err { message, .. } => anyhow::bail!("server error: {message}"),
-            },
-            FrameRead::Eof | FrameRead::Idle => {
-                anyhow::bail!("server closed the connection")
+        let body = encode_request(model, deadline_ms, x)
+            .map_err(|e| std::io::Error::new(ErrorKind::InvalidInput, e.to_string()))?;
+        match self.round_trip(&body)? {
+            Response::Ok { latency_us, tensor } => Ok(Ok((tensor, latency_us))),
+            Response::Err { code, message, .. } => Ok(Err(ServeError::new(code, message))),
+            Response::Health { .. } => Err(std::io::Error::new(
+                ErrorKind::InvalidData,
+                "health response to a predict request",
+            )),
+        }
+    }
+
+    /// Infer with capped jittered-backoff retries: [`ErrorCode::Overloaded`]
+    /// rejections back off and retry on the same connection; transport
+    /// failures (broken/torn connection) reconnect first. Other typed
+    /// errors surface immediately — they are not transient.
+    pub fn predict_retry(
+        &mut self,
+        model: &str,
+        x: &Tensor,
+        deadline: Duration,
+        retry: &RetryCfg,
+    ) -> anyhow::Result<(Tensor, u32)> {
+        let mut rng = Rng::new(retry.seed);
+        let attempts = retry.attempts.max(1);
+        let mut last = anyhow::anyhow!("no attempts made");
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(backoff_delay(retry, attempt, &mut rng));
+            }
+            if self.broken {
+                match Client::connect_one(self.addr) {
+                    Ok(c) => *self = c,
+                    Err(e) => {
+                        last = anyhow::anyhow!("reconnect to {}: {e}", self.addr);
+                        continue;
+                    }
+                }
+            }
+            match self.try_predict(model, x, deadline) {
+                Ok(Ok(r)) => return Ok(r),
+                Ok(Err(e)) if e.code == ErrorCode::Overloaded => last = e.into(),
+                Ok(Err(e)) => return Err(e.into()),
+                Err(io) => {
+                    self.broken = true;
+                    last = anyhow::anyhow!("transport: {io}");
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Fetch the server's health snapshot (queue depth, served/error
+    /// counters, cache state, drain flag). Works during a drain.
+    pub fn health(&mut self) -> anyhow::Result<HealthReport> {
+        match self.round_trip(&encode_health_request())? {
+            Response::Health { report, .. } => Ok(report),
+            Response::Err { code, message, .. } => Err(ServeError::new(code, message).into()),
+            Response::Ok { .. } => anyhow::bail!("predict response to a health request"),
+        }
+    }
+
+    fn round_trip(&mut self, body: &[u8]) -> std::io::Result<Response> {
+        if let Err(e) = write_frame(&mut self.stream, body) {
+            self.broken = true;
+            return Err(e);
+        }
+        match read_frame(&mut self.stream) {
+            Ok(FrameRead::Frame(body)) => decode_response(&body)
+                .map_err(|e| std::io::Error::new(ErrorKind::InvalidData, e.to_string())),
+            Ok(FrameRead::Eof) | Ok(FrameRead::Idle) => {
+                self.broken = true;
+                Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                ))
+            }
+            Err(e) => {
+                self.broken = true;
+                Err(e)
             }
         }
     }
@@ -353,17 +772,37 @@ impl Client {
 mod tests {
     use super::*;
 
+    fn decode_predict(body: &[u8]) -> Request {
+        match decode_request(body).unwrap() {
+            RequestMsg::Predict(r) => r,
+            RequestMsg::Health => panic!("expected a predict request"),
+        }
+    }
+
     #[test]
     fn request_round_trips() {
         let t = Tensor::new(vec![2, 3], vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX]);
         let body = encode_request("resnet18", 7, &t).unwrap();
-        let req = decode_request(&body).unwrap();
+        let req = decode_predict(&body);
         assert_eq!(req.model, "resnet18");
         assert_eq!(req.deadline_ms, 7);
         assert_eq!(req.tensor.shape, t.shape);
         for (a, b) in req.tensor.data.iter().zip(&t.data) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn health_request_round_trips() {
+        let body = encode_health_request();
+        assert!(matches!(
+            decode_request(&body).unwrap(),
+            RequestMsg::Health
+        ));
+        // a health verb with trailing bytes is malformed
+        let mut bad = encode_health_request();
+        bad.push(0);
+        assert!(decode_request(&bad).is_err());
     }
 
     #[test]
@@ -378,18 +817,81 @@ mod tests {
                 assert_eq!(latency_us, 123);
                 assert_eq!(tensor.shape, t.shape);
             }
-            Response::Err { .. } => panic!("expected ok"),
+            _ => panic!("expected ok"),
         }
         let err = Response::Err {
             latency_us: 9,
+            code: ErrorCode::ModelNotFound,
             message: "no such model".into(),
         };
         match decode_response(&encode_response(&err).unwrap()).unwrap() {
-            Response::Err { latency_us, message } => {
+            Response::Err {
+                latency_us,
+                code,
+                message,
+            } => {
                 assert_eq!(latency_us, 9);
+                assert_eq!(code, ErrorCode::ModelNotFound);
                 assert_eq!(message, "no such model");
             }
-            Response::Ok { .. } => panic!("expected err"),
+            _ => panic!("expected err"),
+        }
+    }
+
+    #[test]
+    fn every_error_code_round_trips() {
+        for code in [
+            ErrorCode::Internal,
+            ErrorCode::Panic,
+            ErrorCode::ModelNotFound,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::Overloaded,
+            ErrorCode::ShuttingDown,
+            ErrorCode::BadRequest,
+        ] {
+            assert_eq!(ErrorCode::from_u8(code as u8), code);
+            let resp = Response::Err {
+                latency_us: 1,
+                code,
+                message: code.name().to_string(),
+            };
+            match decode_response(&encode_response(&resp).unwrap()).unwrap() {
+                Response::Err { code: got, .. } => assert_eq!(got, code),
+                _ => panic!("expected err"),
+            }
+        }
+        // unknown wire bytes degrade to Internal, never a decode failure
+        assert_eq!(ErrorCode::from_u8(250), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn health_response_round_trips() {
+        let report = HealthReport {
+            queue_depth: 3,
+            served: 100,
+            errors: 7,
+            batches: 42,
+            shed: 5,
+            expired: 2,
+            panics: 1,
+            cache_plans: 2,
+            cache_hits: 90,
+            cache_misses: 2,
+            draining: true,
+        };
+        let resp = Response::Health {
+            latency_us: 11,
+            report: report.clone(),
+        };
+        match decode_response(&encode_response(&resp).unwrap()).unwrap() {
+            Response::Health {
+                latency_us,
+                report: got,
+            } => {
+                assert_eq!(latency_us, 11);
+                assert_eq!(got, report);
+            }
+            _ => panic!("expected health"),
         }
     }
 
@@ -443,10 +945,66 @@ mod tests {
     }
 
     #[test]
+    fn torn_frame_is_an_unexpected_eof_not_a_hang() {
+        let (mut a, mut b) = pair();
+        let body = encode_response(&Response::Err {
+            latency_us: 1,
+            code: ErrorCode::Internal,
+            message: "torn on purpose".into(),
+        })
+        .unwrap();
+        write_frame_torn(&mut a, &body).unwrap();
+        let err = read_frame(&mut b).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn slow_peer_within_frame_budget_is_not_dropped() {
+        let (mut a, mut b) = pair();
+        // server-style short inter-frame timeout: it must NOT truncate a
+        // frame whose body dribbles in across several timeouts
+        b.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        let body: Vec<u8> = (0..32u8).collect();
+        let writer = std::thread::spawn(move || {
+            a.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+            a.write_all(&body[..16]).unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+            a.write_all(&body[16..]).unwrap();
+            a.flush().unwrap();
+            a // keep the stream alive until the reader is done
+        });
+        match read_frame_budget(&mut b, Duration::from_secs(2)).unwrap() {
+            FrameRead::Frame(got) => assert_eq!(got, (0..32u8).collect::<Vec<u8>>()),
+            _ => panic!("expected the dribbled frame"),
+        }
+        let _ = writer.join().unwrap();
+    }
+
+    #[test]
+    fn stalled_peer_beyond_frame_budget_is_disconnected() {
+        let (mut a, mut b) = pair();
+        b.set_read_timeout(Some(Duration::from_millis(10))).unwrap();
+        // promise 8 bytes, deliver 2, then stall (but keep the socket open)
+        a.write_all(&8u32.to_le_bytes()).unwrap();
+        a.write_all(&[1, 2]).unwrap();
+        a.flush().unwrap();
+        let t0 = Instant::now();
+        let err = read_frame_budget(&mut b, Duration::from_millis(80)).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::TimedOut);
+        assert!(err.to_string().contains("stalled"), "got: {err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "budget must bound the stall"
+        );
+        drop(a);
+    }
+
+    #[test]
     fn hostile_tensor_header_cannot_force_a_huge_allocation() {
         // a body whose dims promise ~64 EiB of f32s must die in the
         // cursor's bounds check, never in an allocation
-        let mut body = vec![VERSION];
+        let mut body = vec![VERSION, 0u8];
         body.extend_from_slice(&3u16.to_le_bytes());
         body.extend_from_slice(b"mlp");
         body.extend_from_slice(&0u32.to_le_bytes());
@@ -463,10 +1021,17 @@ mod tests {
     #[test]
     fn malformed_frames_are_rejected() {
         assert!(decode_request(&[]).is_err());
-        // bad version
+        // bad version (including the retired v1)
         let t = Tensor::new(vec![1], vec![1.0]);
+        for v in [1u8, 99] {
+            let mut body = encode_request("mlp", 0, &t).unwrap();
+            body[0] = v;
+            let err = decode_request(&body).unwrap_err().to_string();
+            assert!(err.contains("version"), "got: {err}");
+        }
+        // bad verb
         let mut body = encode_request("mlp", 0, &t).unwrap();
-        body[0] = 99;
+        body[1] = 9;
         assert!(decode_request(&body).is_err());
         // trailing garbage
         let mut body = encode_request("mlp", 0, &t).unwrap();
@@ -475,5 +1040,57 @@ mod tests {
         // truncated tensor data
         let body = encode_request("mlp", 0, &t).unwrap();
         assert!(decode_request(&body[..body.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn backoff_delays_are_deterministic_jittered_and_capped() {
+        let retry = RetryCfg {
+            attempts: 6,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(50),
+            seed: 42,
+        };
+        let delays: Vec<Duration> = {
+            let mut rng = Rng::new(retry.seed);
+            (1..retry.attempts)
+                .map(|a| backoff_delay(&retry, a, &mut rng))
+                .collect()
+        };
+        let again: Vec<Duration> = {
+            let mut rng = Rng::new(retry.seed);
+            (1..retry.attempts)
+                .map(|a| backoff_delay(&retry, a, &mut rng))
+                .collect()
+        };
+        assert_eq!(delays, again, "same seed must give the same delays");
+        for (i, d) in delays.iter().enumerate() {
+            // base doubles per attempt but never exceeds the cap; jitter
+            // scales by [0.5, 1.5)
+            let base = Duration::from_millis(10 * (1 << i)).min(Duration::from_millis(50));
+            assert!(*d >= base.mul_f64(0.5), "attempt {i}: {d:?} below jitter floor");
+            assert!(*d < base.mul_f64(1.5), "attempt {i}: {d:?} above jitter ceiling");
+        }
+    }
+
+    #[test]
+    fn connect_retry_reaches_a_live_listener() {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let c = Client::connect_retry(
+            addr,
+            &RetryCfg {
+                attempts: 2,
+                ..Default::default()
+            },
+        );
+        assert!(c.is_ok());
+    }
+
+    #[test]
+    fn serve_error_displays_code_first() {
+        let e = ServeError::new(ErrorCode::Overloaded, "queue full (cap 4)");
+        assert_eq!(e.to_string(), "overloaded: queue full (cap 4)");
+        let any: anyhow::Error = e.into();
+        assert!(any.to_string().starts_with("overloaded:"));
     }
 }

@@ -1,18 +1,35 @@
-//! Deadline-aware admission queue feeding the serve batch loop.
+//! Deadline-aware bounded admission queue feeding the serve batch loop.
 //!
-//! Connection handlers [`Queue::push`] one [`Pending`] per request and
-//! block on its response channel; the single batch-loop thread calls
-//! [`Queue::drain_tick`] to collect one batch per tick. Coalescing is
-//! bounded two ways:
+//! Connection handlers [`Queue::try_push`] one [`Pending`] per request
+//! and block on its response channel; the single batch-loop thread
+//! calls [`Queue::drain_tick`] to collect one batch per tick.
+//! Coalescing is bounded two ways:
 //!
 //! * the **tick**: a batch dispatches once its oldest request has
 //!   waited one tick (letting concurrent requests pile in behind it);
 //! * the **earliest deadline**: a pending request's soft deadline can
-//!   only *accelerate* dispatch — requests are never dropped, a missed
-//!   deadline just means the batch left as fast as the queue allowed.
+//!   only *accelerate* dispatch here — expiry shedding happens at
+//!   dispatch time in the batch loop, never inside the queue.
+//!
+//! Robustness properties (see [`crate::serve`]'s failure semantics):
+//!
+//! * **bounded depth** — [`Queue::bounded`] caps pending requests;
+//!   admission past the cap is rejected with
+//!   [`ErrorCode::Overloaded`](crate::serve::ErrorCode::Overloaded)
+//!   instead of growing without bound under backlog;
+//! * **closable** — [`Queue::close`] flips the queue into a
+//!   drain state where every new admission is rejected with
+//!   [`ErrorCode::ShuttingDown`](crate::serve::ErrorCode::ShuttingDown)
+//!   while already-admitted work still drains;
+//! * **poison-proof** — all locking goes through
+//!   [`relock`](crate::util::relock), so a panicked producer or
+//!   consumer can't wedge admission for everyone else.
 
+use super::protocol::{ErrorCode, ServeError};
 use crate::tensor::Tensor;
+use crate::util::relock;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -28,7 +45,7 @@ pub struct Pending {
     pub deadline: Option<Instant>,
     /// Where the batch loop sends the result; the handler blocks on the
     /// receiving end.
-    pub resp: mpsc::Sender<anyhow::Result<Tensor>>,
+    pub resp: mpsc::Sender<Result<Tensor, ServeError>>,
 }
 
 /// MPSC admission queue with condvar wakeups (multiple handler
@@ -36,6 +53,10 @@ pub struct Pending {
 pub struct Queue {
     inner: Mutex<VecDeque<Pending>>,
     ready: Condvar,
+    /// Admission cap; 0 = unbounded.
+    cap: usize,
+    /// Once set, every `try_push` is rejected with `ShuttingDown`.
+    closed: AtomicBool,
 }
 
 impl Default for Queue {
@@ -45,25 +66,77 @@ impl Default for Queue {
 }
 
 impl Queue {
+    /// An unbounded queue (tests and trusted in-process callers).
     pub fn new() -> Queue {
+        Queue::bounded(0)
+    }
+
+    /// A queue admitting at most `cap` pending requests (0 = unbounded).
+    pub fn bounded(cap: usize) -> Queue {
         Queue {
             inner: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
+            cap,
+            closed: AtomicBool::new(false),
         }
     }
 
-    /// Admit one request and wake the batch loop.
-    pub fn push(&self, p: Pending) {
-        self.inner.lock().unwrap().push_back(p);
+    /// Admit one request and wake the batch loop. Rejects with
+    /// `Overloaded` when the queue is at capacity (load shedding at
+    /// admission — the cheapest possible point) and with
+    /// `ShuttingDown` once the queue is closed.
+    pub fn try_push(&self, p: Pending) -> Result<(), ServeError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(ServeError::new(
+                ErrorCode::ShuttingDown,
+                "server is draining and admits no new requests",
+            ));
+        }
+        let mut q = relock(&self.inner);
+        // re-check under the lock so a close() racing with this push
+        // can't admit work the drain will never dispatch
+        if self.closed.load(Ordering::Acquire) {
+            return Err(ServeError::new(
+                ErrorCode::ShuttingDown,
+                "server is draining and admits no new requests",
+            ));
+        }
+        if self.cap > 0 && q.len() >= self.cap {
+            return Err(ServeError::new(
+                ErrorCode::Overloaded,
+                format!("admission queue is full ({} pending, cap {})", q.len(), self.cap),
+            ));
+        }
+        q.push_back(p);
+        drop(q);
         self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Stop admitting: every later [`Queue::try_push`] fails with
+    /// `ShuttingDown`. Already-queued requests still drain. Wakes the
+    /// batch loop so it can observe the drain promptly.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        relock(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().is_empty()
+        relock(&self.inner).is_empty()
+    }
+
+    /// Take every queued request at once (shutdown flush — the caller
+    /// answers each with `ShuttingDown` so no handler blocks forever).
+    pub fn drain_all(&self) -> Vec<Pending> {
+        relock(&self.inner).drain(..).collect()
     }
 
     /// Collect the next batch: block up to `tick` for a first request
@@ -72,9 +145,12 @@ impl Queue {
     /// earliest pending deadline arrives — whichever is sooner — and
     /// drain up to `max` requests in admission order.
     pub fn drain_tick(&self, tick: Duration, max: usize) -> Vec<Pending> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = relock(&self.inner);
         if q.is_empty() {
-            let (guard, _) = self.ready.wait_timeout(q, tick).unwrap();
+            let (guard, _) = self
+                .ready
+                .wait_timeout(q, tick)
+                .unwrap_or_else(|e| e.into_inner());
             q = guard;
             if q.is_empty() {
                 return Vec::new();
@@ -90,12 +166,15 @@ impl Queue {
                     dispatch = dispatch.min(d);
                 }
             }
-            if dispatch <= now || q.len() >= max {
+            if dispatch <= now || q.len() >= max || self.is_closed() {
                 break;
             }
             // woken early by a push: loop to recompute the dispatch
             // time (a new request may carry an earlier deadline)
-            let (guard, _) = self.ready.wait_timeout(q, dispatch - now).unwrap();
+            let (guard, _) = self
+                .ready
+                .wait_timeout(q, dispatch - now)
+                .unwrap_or_else(|e| e.into_inner());
             q = guard;
         }
         let take = q.len().min(max.max(1));
@@ -111,7 +190,7 @@ mod tests {
     fn pending(
         model: &str,
         deadline: Option<Duration>,
-    ) -> (Pending, mpsc::Receiver<anyhow::Result<Tensor>>) {
+    ) -> (Pending, mpsc::Receiver<Result<Tensor, ServeError>>) {
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
         (
@@ -138,11 +217,11 @@ mod tests {
         let q = Arc::new(Queue::new());
         let (p1, _r1) = pending("mlp", None);
         let (p2, _r2) = pending("mlp", None);
-        q.push(p1);
+        q.try_push(p1).unwrap();
         let q2 = Arc::clone(&q);
         let pusher = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(5));
-            q2.push(p2);
+            q2.try_push(p2).unwrap();
         });
         let batch = q.drain_tick(Duration::from_millis(100), 8);
         pusher.join().unwrap();
@@ -154,8 +233,8 @@ mod tests {
         let q = Queue::new();
         let (p1, _r1) = pending("mlp", None);
         let (p2, _r2) = pending("mlp", Some(Duration::from_millis(2)));
-        q.push(p1);
-        q.push(p2);
+        q.try_push(p1).unwrap();
+        q.try_push(p2).unwrap();
         let t0 = Instant::now();
         // tick is a full second; the 2 ms deadline must cut the wait
         let batch = q.drain_tick(Duration::from_secs(1), 8);
@@ -169,11 +248,61 @@ mod tests {
         let mut rxs = Vec::new();
         for _ in 0..5 {
             let (p, r) = pending("mlp", Some(Duration::ZERO));
-            q.push(p);
+            q.try_push(p).unwrap();
             rxs.push(r);
         }
         let batch = q.drain_tick(Duration::from_millis(50), 3);
         assert_eq!(batch.len(), 3);
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_with_overloaded_at_capacity() {
+        let q = Queue::bounded(2);
+        let mut rxs = Vec::new();
+        for _ in 0..2 {
+            let (p, r) = pending("mlp", None);
+            q.try_push(p).unwrap();
+            rxs.push(r);
+        }
+        let (p3, _r3) = pending("mlp", None);
+        let err = q.try_push(p3).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Overloaded);
+        assert!(err.message.contains("cap 2"), "got: {}", err.message);
+        // draining makes room again
+        assert_eq!(q.drain_tick(Duration::ZERO, 8).len(), 2);
+        let (p4, _r4) = pending("mlp", None);
+        q.try_push(p4).unwrap();
+    }
+
+    #[test]
+    fn closed_queue_rejects_with_shutting_down_but_still_drains() {
+        let q = Queue::new();
+        let (p1, _r1) = pending("mlp", None);
+        q.try_push(p1).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        let (p2, _r2) = pending("mlp", None);
+        let err = q.try_push(p2).unwrap_err();
+        assert_eq!(err.code, ErrorCode::ShuttingDown);
+        // admitted-before-close work is still dispatched
+        assert_eq!(q.drain_tick(Duration::from_millis(50), 8).len(), 1);
+        assert_eq!(q.drain_all().len(), 0);
+    }
+
+    #[test]
+    fn close_wakes_a_parked_consumer() {
+        let q = Arc::new(Queue::new());
+        let q2 = Arc::clone(&q);
+        let t0 = Instant::now();
+        let consumer =
+            std::thread::spawn(move || q2.drain_tick(Duration::from_secs(5), 8).len());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        // close() can't interrupt the initial empty-queue wait (there is
+        // nothing to dispatch anyway) but an armed consumer must not
+        // sleep a full tick past it; give it the whole tick as a bound
+        assert_eq!(consumer.join().unwrap(), 0);
+        assert!(t0.elapsed() < Duration::from_secs(6));
     }
 }

@@ -404,6 +404,18 @@ impl PlanKey {
     }
 }
 
+impl std::fmt::Display for PlanKey {
+    /// The form serve-layer error paths print — enough to tell two
+    /// cache entries for the same model apart in a log line.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "model `{}` at {:?}", self.model, self.level)?;
+        if !self.prune.is_empty() {
+            write!(f, " (prune {})", self.prune)?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

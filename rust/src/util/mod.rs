@@ -13,3 +13,36 @@ pub mod rng;
 pub use bench::{bench, time_once, BenchStats, Table};
 pub use json::{parse as parse_json, Json, JsonObj};
 pub use rng::Rng;
+
+/// Lock `m`, recovering from a poisoned mutex instead of panicking.
+///
+/// A worker that panics while holding a lock (e.g. an injected fault in
+/// a serve batch thread) poisons it for every later accessor;
+/// `lock().unwrap()` would then cascade that one panic through stats,
+/// the plan cache, and the admission queue. Every serve-path lock is a
+/// single-step or idempotent write, so the guarded data is still
+/// consistent after an unwind and recovery is safe.
+pub fn relock<T: ?Sized>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod relock_tests {
+    use super::relock;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn relock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned(), "the panicking holder must poison the lock");
+        assert_eq!(*relock(&m), 7, "relock must still hand out the data");
+        *relock(&m) = 8;
+        assert_eq!(*relock(&m), 8);
+    }
+}

@@ -1,0 +1,369 @@
+//! Chaos suite: the serving stack under deterministic fault injection.
+//!
+//! Every test spawns a server with a seeded [`FaultPlan`] and drives it
+//! with real clients over loopback. The invariants are absolute, at any
+//! seed and any `SPA_THREADS`:
+//!
+//!   - no client ever hangs — every request gets an answer;
+//!   - every answer is either a typed `ServeError` or a response
+//!     bit-identical to a local `Plan::predict` on the same build;
+//!   - the server keeps serving after every injected fault.
+//!
+//! CI runs this file across a seed matrix; set `SPA_CHAOS_SEED` to
+//! replay a particular lane locally, e.g.
+//! `SPA_CHAOS_SEED=2 cargo test --test serve_chaos`.
+
+use spa::exec::{Plan, PlanOpts};
+use spa::serve::{
+    faults, Client, ErrorCode, FaultPlan, RetryCfg, ServeCfg, ServeError, Server, Site,
+};
+use spa::tensor::Tensor;
+use spa::zoo::{self, ImageCfg};
+use std::sync::{Arc, Once};
+use std::time::Duration;
+
+const MODEL: &str = "mlp";
+const SEED: u64 = 3; // zoo weight seed — must match ServeCfg.seed
+
+fn image() -> ImageCfg {
+    ImageCfg {
+        channels: 3,
+        hw: 8,
+        classes: 10,
+        batch: 8,
+    }
+}
+
+/// The fault seed for this run: `SPA_CHAOS_SEED` (CI matrixes over it),
+/// default 1.
+fn chaos_seed() -> u64 {
+    std::env::var("SPA_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(1)
+}
+
+/// Injected panics are expected output here; silence their backtraces
+/// so a green run isn't pages of red. Real (untagged) panics still
+/// reach the default hook.
+fn quiet_injected_panics() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let tagged = match payload.downcast_ref::<String>() {
+                Some(s) => s.contains(faults::PANIC_TAG),
+                None => match payload.downcast_ref::<&str>() {
+                    Some(s) => s.contains(faults::PANIC_TAG),
+                    None => false,
+                },
+            };
+            if !tagged {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn spawn(spec: &str, cfg: ServeCfg) -> Server {
+    quiet_injected_panics();
+    let faults = Arc::new(FaultPlan::parse(spec).expect("fault spec"));
+    Server::spawn(ServeCfg {
+        faults: Some(faults),
+        ..cfg
+    })
+    .expect("server spawn")
+}
+
+/// One request over the wire; a transport-level failure aborts the
+/// test, a typed server error comes back as `Err`.
+fn ask(c: &mut Client, model: &str, x: &Tensor) -> Result<(Tensor, u32), ServeError> {
+    c.try_predict(model, x, Duration::ZERO).expect("transport")
+}
+
+/// [`ask`] with a soft deadline.
+fn ask_dl(c: &mut Client, x: &Tensor, d: Duration) -> Result<(Tensor, u32), ServeError> {
+    c.try_predict(MODEL, x, d).expect("transport")
+}
+
+/// The reference every surviving response is gated against.
+fn reference(x: &Tensor) -> Tensor {
+    let g = zoo::by_name(MODEL, image(), SEED).unwrap();
+    let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+    plan.predict(x).unwrap()
+}
+
+fn assert_bit_identical(y: &Tensor, want: &Tensor, who: &str) {
+    assert_eq!(y.shape, want.shape, "{who}: shape drift");
+    for (a, b) in y.data.iter().zip(&want.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{who}: must be bit-identical");
+    }
+}
+
+/// Panics injected into batch groups surface as typed `Panic` errors on
+/// exactly the affected requests; everything else is bit-identical, and
+/// the batch loop survives to serve more.
+#[test]
+fn group_panics_become_typed_errors_and_the_loop_survives() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(&format!("seed={};group.panic=0.4", chaos_seed()), cfg);
+    let addr = server.local_addr();
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.5; 3 * 64]);
+    let want = reference(&x);
+
+    const CLIENTS: usize = 4;
+    const REQS: usize = 10;
+    let mut oks = 0usize;
+    let mut panics = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|i| {
+                let (x, want) = (&x, &want);
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).expect("connect");
+                    let (mut oks, mut panics) = (0usize, 0usize);
+                    for _ in 0..REQS {
+                        match ask(&mut c, MODEL, x) {
+                            Ok((y, _us)) => {
+                                assert_bit_identical(&y, want, &format!("client {i}"));
+                                oks += 1;
+                            }
+                            Err(e) => {
+                                // only the injected panic may fail requests
+                                assert_eq!(e.code, ErrorCode::Panic, "got: {e}");
+                                assert!(e.message.contains(MODEL), "got: {e}");
+                                panics += 1;
+                            }
+                        }
+                    }
+                    (oks, panics)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (o, p) = h.join().expect("client thread");
+            oks += o;
+            panics += p;
+        }
+    });
+
+    let stats = server.stats();
+    assert_eq!(oks + panics, CLIENTS * REQS, "every request was answered");
+    assert_eq!(stats.served(), CLIENTS * REQS);
+    assert_eq!(stats.errors(), panics);
+    if panics > 0 {
+        assert!(stats.panics() >= 1, "panic counter must record unwinds");
+    }
+    // recovery: at prob 0.4 a handful of retries must land an Ok — the
+    // loop is still alive and still correct after every unwind
+    let mut c = Client::connect(addr).expect("reconnect");
+    let mut recovered = None;
+    for _ in 0..50 {
+        if let Ok((y, _us)) = ask(&mut c, MODEL, &x) {
+            recovered = Some(y);
+            break;
+        }
+    }
+    let y = recovered.expect("server must keep serving after panics");
+    assert_bit_identical(&y, &want, "recovery");
+    server.shutdown();
+}
+
+/// An injected slow batch pushes queued work past its deadline: the
+/// expired request gets a typed `DeadlineExceeded` instead of a stale
+/// answer, while undeadlined work still completes exactly.
+#[test]
+fn slow_batches_expire_deadlines_with_a_typed_error() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(&format!("seed={};batch.slow=1:80", chaos_seed()), cfg);
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.25; 3 * 64]);
+    // 2 ms deadline + 1 ms grace tick < the 80 ms injected stall
+    let r = ask_dl(&mut c, &x, Duration::from_millis(2));
+    let err = r.expect_err("an 80ms stall must expire a 2ms deadline");
+    assert_eq!(err.code, ErrorCode::DeadlineExceeded, "got: {err}");
+    assert!(server.stats().expired() >= 1);
+    // no deadline: slow, but exact
+    let r = ask(&mut c, MODEL, &x);
+    let (y, _us) = r.expect("undeadlined request must complete");
+    assert_bit_identical(&y, &reference(&x), "undeadlined");
+    server.shutdown();
+}
+
+/// A full admission queue rejects with `Overloaded` instead of queueing
+/// unboundedly; every client still gets an answer, and the retry client
+/// rides the backoff to an eventual success.
+#[test]
+fn overload_sheds_with_typed_rejections_and_retry_recovers() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        max_batch: 1,
+        queue_cap: 2,
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(&format!("seed={};batch.slow=1:50", chaos_seed()), cfg);
+    let addr = server.local_addr();
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![-0.5; 3 * 64]);
+    let want = reference(&x);
+
+    let (mut oks, mut overloaded) = (0usize, 0usize);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..12)
+            .map(|_| {
+                let x = &x;
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).expect("connect");
+                    ask(&mut c, MODEL, x)
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join().expect("client thread") {
+                Ok((y, _us)) => {
+                    assert_bit_identical(&y, &want, "admitted under overload");
+                    oks += 1;
+                }
+                Err(e) => {
+                    assert_eq!(e.code, ErrorCode::Overloaded, "got: {e}");
+                    overloaded += 1;
+                }
+            }
+        }
+    });
+    assert_eq!(oks + overloaded, 12, "every request was answered");
+    assert!(overloaded >= 1, "a 12-client rush into a cap-2 queue must shed");
+    assert!(server.stats().shed() >= 1);
+
+    // a polite client with jittered backoff gets through the same storm
+    let retry = RetryCfg {
+        attempts: 10,
+        backoff: Duration::from_millis(10),
+        max_backoff: Duration::from_millis(100),
+        seed: chaos_seed(),
+    };
+    let mut c = Client::connect(addr).expect("connect");
+    let r = c.predict_retry(MODEL, &x, Duration::ZERO, &retry);
+    let (y, _us) = r.expect("backoff retry must eventually be admitted");
+    assert_bit_identical(&y, &want, "retry");
+    server.shutdown();
+}
+
+/// Torn response frames look like transport failures, never hangs: the
+/// budgeted reader sees EOF, and a reconnecting retry client converges
+/// on correct answers.
+#[test]
+fn torn_frames_are_survivable_transport_errors() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(&format!("seed={};frame.torn=0.5", chaos_seed()), cfg);
+    let x = Tensor::new(vec![2, 3, 8, 8], vec![0.125; 2 * 3 * 64]);
+    let want = reference(&x);
+    let retry = RetryCfg {
+        attempts: 10,
+        backoff: Duration::from_millis(1),
+        max_backoff: Duration::from_millis(10),
+        seed: chaos_seed(),
+    };
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    for i in 0..12 {
+        // predict_retry reconnects after each severed connection; a
+        // torn frame may cost retries but never the answer
+        let r = c.predict_retry(MODEL, &x, Duration::ZERO, &retry);
+        let (y, _us) = r.unwrap_or_else(|e| panic!("request {i} lost to torn frames: {e}"));
+        assert_bit_identical(&y, &want, &format!("request {i}"));
+    }
+    if let Some(f) = server.fault_plan() {
+        assert!(f.injected(Site::Frame) >= 1, "prob-0.5 tearing must have fired");
+    }
+    server.shutdown();
+}
+
+/// Unknown models are a typed `ModelNotFound` on the wire — even with
+/// resolve-site panics armed, the two failure modes stay distinct.
+#[test]
+fn unknown_models_are_model_not_found_not_panic() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(&format!("seed={};resolve.panic=0.3", chaos_seed()), cfg);
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    let x = Tensor::zeros(&[1, 3, 8, 8]);
+    for _ in 0..10 {
+        let r = ask(&mut c, "no-such-model", &x);
+        let err = r.expect_err("unknown model must fail");
+        let expected = matches!(err.code, ErrorCode::ModelNotFound | ErrorCode::Panic);
+        assert!(expected, "got: {err}");
+        if err.code == ErrorCode::ModelNotFound {
+            assert!(err.message.contains("no-such-model"), "got: {err}");
+        }
+    }
+    // the real model still resolves (or panics with the typed code) —
+    // resolve faults never wedge the loop
+    let mut survived = false;
+    for _ in 0..50 {
+        if ask(&mut c, MODEL, &x).is_ok() {
+            survived = true;
+            break;
+        }
+    }
+    assert!(survived, "server must still serve the real model");
+    server.shutdown();
+}
+
+/// The health verb reports live counters over the wire and flips
+/// `draining` the moment a drain begins.
+#[test]
+fn health_verb_reports_counters_and_drain_state() {
+    quiet_injected_panics();
+    let server = Server::spawn(ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    let x = Tensor::zeros(&[1, 3, 8, 8]);
+
+    let h0 = c.health().expect("health");
+    assert_eq!(h0.served, 0);
+    assert!(!h0.draining);
+
+    for _ in 0..3 {
+        c.predict(MODEL, &x).expect("predict");
+    }
+    let h1 = c.health().expect("health");
+    assert_eq!(h1.served, 3, "health verbs must not count as served");
+    assert_eq!(h1.errors, 0);
+    assert!(h1.batches >= 1);
+    assert!(h1.cache_plans >= 1, "the plan cache holds the model");
+    assert!(!h1.draining);
+
+    server.begin_drain();
+    let h2 = c.health().expect("health during drain");
+    assert!(h2.draining, "drain must be visible over the wire");
+    let r = ask(&mut c, MODEL, &x);
+    let err = r.expect_err("draining server rejects predicts");
+    assert_eq!(err.code, ErrorCode::ShuttingDown);
+    server.drain();
+}

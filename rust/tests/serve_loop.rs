@@ -5,10 +5,12 @@
 //! answered, at any `SPA_THREADS`.
 
 use spa::exec::{Plan, PlanOpts};
-use spa::serve::{Client, ServeCfg, Server};
+use spa::serve::{protocol, Client, ErrorCode, FaultPlan, ServeCfg, Server};
 use spa::tensor::Tensor;
 use spa::util::Rng;
 use spa::zoo::{self, ImageCfg};
+use std::io::Write;
+use std::sync::Arc;
 use std::time::Duration;
 
 const MODEL: &str = "mlp";
@@ -112,4 +114,129 @@ fn malformed_model_errors_without_poisoning_the_connection() {
     let (y, _us) = c.predict(MODEL, &x).expect("recover after error");
     assert_eq!(y.shape, vec![1, 10]);
     server.shutdown();
+}
+
+/// Regression: the server's 50 ms socket read timeout must only end
+/// waits *between* frames. A healthy-but-slow client that dribbles one
+/// request frame in across several timeout windows gets a normal
+/// response, not a dropped connection mid-body.
+#[test]
+fn slow_client_dribbling_a_frame_is_not_disconnected() {
+    let server = Server::spawn(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: 3,
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.25; 3 * 64]);
+    let body = protocol::encode_request(MODEL, 0, &x).expect("encode");
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).expect("connect");
+    // header, long pause (several 50 ms windows), half the body, pause,
+    // the rest — every gap lands inside the frame
+    let header = (body.len() as u32).to_le_bytes();
+    stream.write_all(&header).unwrap();
+    std::thread::sleep(Duration::from_millis(120));
+    stream.write_all(&body[..body.len() / 2]).unwrap();
+    stream.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(120));
+    stream.write_all(&body[body.len() / 2..]).unwrap();
+    stream.flush().unwrap();
+    let reply = match protocol::read_frame(&mut stream).expect("server must respond") {
+        protocol::FrameRead::Frame(b) => protocol::decode_response(&b).expect("decode"),
+        _ => panic!("server dropped the slow client mid-frame"),
+    };
+    let y = match reply {
+        spa::serve::Response::Ok { tensor, .. } => tensor,
+        other => panic!("expected ok, got {other:?}"),
+    };
+    // and the answer is still the bit-identical prediction
+    let g = zoo::by_name(MODEL, image(), 3).unwrap();
+    let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+    let want = plan.predict(&x).unwrap();
+    assert_eq!(y.shape, want.shape);
+    for (a, b) in y.data.iter().zip(&want.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    server.shutdown();
+}
+
+/// Shutdown race: a client connected while the server drains gets a
+/// typed `ShuttingDown` reply — never a hang, never a dead socket
+/// without an answer.
+#[test]
+fn clients_during_drain_get_shutting_down_not_a_hang() {
+    let server = Server::spawn(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: 3,
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let x = Tensor::zeros(&[1, 3, 8, 8]);
+    // a connection from before the drain...
+    let mut old = Client::connect(server.local_addr()).expect("connect");
+    old.predict(MODEL, &x).expect("pre-drain predict");
+    server.begin_drain();
+    let r = old.try_predict(MODEL, &x, Duration::ZERO).expect("socket");
+    let err = r.expect_err("drain must reject");
+    assert_eq!(err.code, ErrorCode::ShuttingDown);
+    // ...and a fresh connection during the drain: same typed answer
+    let mut c2 = Client::connect(server.local_addr()).expect("connect during drain");
+    let r = c2.try_predict(MODEL, &x, Duration::ZERO).expect("socket");
+    let err = r.expect_err("drain must reject");
+    assert_eq!(err.code, ErrorCode::ShuttingDown);
+    // health still answers and reports the drain
+    let health = c2.health().expect("health during drain");
+    assert!(health.draining, "health must report draining");
+    assert_eq!(health.served, 3, "pre-drain ok + two rejections");
+    server.drain();
+}
+
+/// Shutdown race: dropping the `Server` with requests still in flight
+/// (held up by an injected 150 ms slow batch) answers every one —
+/// either the real bit-identical result or a typed `ShuttingDown`.
+#[test]
+fn dropping_the_server_answers_every_in_flight_request() {
+    let faults = Arc::new(FaultPlan::parse("seed=1;batch.slow=1:150").expect("fault spec"));
+    let server = Server::spawn(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        tick: Duration::from_millis(5),
+        image: image(),
+        seed: 3,
+        faults: Some(faults),
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let addr = server.local_addr();
+    let g = zoo::by_name(MODEL, image(), 3).unwrap();
+    let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.5; 3 * 64]);
+    let want = plan.predict(&x).unwrap();
+    let workers: Vec<_> = (0..4)
+        .map(|_| {
+            let x = x.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                // the outer io::Result must survive the drop
+                c.try_predict(MODEL, &x, Duration::ZERO).expect("socket")
+            })
+        })
+        .collect();
+    // let the requests land in the queue / the slow batch, then drop
+    std::thread::sleep(Duration::from_millis(40));
+    drop(server);
+    for w in workers {
+        match w.join().expect("worker must not hang or panic") {
+            Ok((y, _us)) => {
+                assert_eq!(y.shape, want.shape);
+                for (a, b) in y.data.iter().zip(&want.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "flushed result must be exact");
+                }
+            }
+            Err(e) => assert_eq!(e.code, ErrorCode::ShuttingDown, "got: {e}"),
+        }
+    }
 }
