@@ -6,6 +6,7 @@
 //! spa prune   --model resnet18 --time tpf --criterion l1 --target-rf 2.0
 //! spa obspa   --model resnet50 --source datafree --target-rf 1.5
 //! spa serve   --addr 127.0.0.1:7878 --tick-ms 2      # batching inference server
+//! spa swap    --addr 127.0.0.1:7878 --model resnet18 --target-rf 2.0
 //! spa convert --model resnet18 --dialect tf --out model.tf.json
 //! spa import  --file model.tf.json --out model.spa.json
 //! ```
@@ -290,6 +291,29 @@ impl ServeArgs {
     }
 }
 
+/// `spa swap` flags: a live re-prune request against a running server.
+struct SwapArgs {
+    addr: String,
+    req: serve::SwapRequest,
+}
+
+impl SwapArgs {
+    fn parse(f: &Flags) -> anyhow::Result<SwapArgs> {
+        let model = f.get("model", "");
+        anyhow::ensure!(!model.is_empty(), "swap needs --model");
+        Ok(SwapArgs {
+            addr: f.get("addr", "127.0.0.1:7878"),
+            req: serve::SwapRequest {
+                model,
+                target_rf: f.f64("target-rf", 2.0),
+                criterion: f.get("criterion", "l1"),
+                shadow: f.usize("shadow-requests", 0) as u32,
+                max_divergence: f.f64("max-divergence", 0.0),
+            },
+        })
+    }
+}
+
 /// `spa lint` flags: which models, at what [`CheckLevel`].
 struct LintArgs {
     model: String,
@@ -356,9 +380,14 @@ COMMANDS:
            [--queue-cap N --faults <spec>]
            batching inference server over compiled plans (spa::serve);
            SIGINT/SIGTERM drain gracefully, --faults injects chaos
+  swap     --addr H:P --model <name> --target-rf F [--criterion l1]
+           [--shadow-requests N --max-divergence F]
+           live re-prune a model on a running server: verify, shadow,
+           atomic plan flip, automatic rollback (spa::serve swap verb)
   lint     [--model <name>|all] [--level off|debug|strict]
            run every static checker (spa::check) over the zoo: graph
-           shape/coupling invariants, an audited prune, compiled plans
+           shape/coupling invariants, an audited prune, compiled plans;
+           `all` also lints a patched-then-repruned surgery lineage
   bench-diff --new <json> [--base <json>] [--warn-pct F]
            [--write-baseline <json>]
            compare two SPA_BENCH_JSON snapshots, warn on regressions,
@@ -550,6 +579,31 @@ fn cmd_serve(a: ServeArgs) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_swap(a: &SwapArgs) -> anyhow::Result<()> {
+    let mut client = serve::Client::connect(a.addr.as_str())?;
+    let rep = client.swap(&a.req)?;
+    println!("key        : {}", rep.key);
+    println!("generation : {} -> {}", rep.from_generation, rep.to_generation);
+    println!("outcome    : {:?}", rep.outcome);
+    println!(
+        "recompiled : {} region(s), {} of {} steps reused",
+        rep.recompiled_regions, rep.reused_steps, rep.steps
+    );
+    println!(
+        "shadow     : {} request(s) checked, worst divergence {:.3e}",
+        rep.shadow_checked, rep.divergence
+    );
+    println!("message    : {}", rep.message);
+    // a rollback is a correct server outcome but a failed operator
+    // intent — exit nonzero so scripts notice
+    anyhow::ensure!(
+        rep.outcome == serve::SwapOutcome::Committed,
+        "swap did not commit: {}",
+        rep.message
+    );
+    Ok(())
+}
+
 fn cmd_convert(a: &ConvertArgs) -> anyhow::Result<()> {
     let g = a.common.graph()?;
     let out = a
@@ -634,6 +688,47 @@ fn lint_one(name: &str, icfg: ImageCfg, seed: u64, level: CheckLevel) -> anyhow:
     ))
 }
 
+/// Lint the surgery lineage a live `spa swap` produces: run the
+/// optimize passes as verified patches, re-prune the patched graph
+/// through a session patch, and check the graph plus its compiled plan
+/// after the second surgery.
+fn lint_patched(
+    name: &str,
+    icfg: ImageCfg,
+    seed: u64,
+    level: CheckLevel,
+) -> anyhow::Result<String> {
+    let mut g = zoo::by_name(name, icfg, seed)?;
+    let reports = crate::ir::patch::optimize_as_patches(&mut g, level)
+        .map_err(|e| anyhow::anyhow!("patch(optimize): {e}"))?;
+    let sess = crate::Session::on(&g)
+        .criterion(Criterion::L1)
+        .target(crate::Target::FlopsRf(1.3))
+        .check(level)
+        .plan()
+        .map_err(|e| anyhow::anyhow!("prune: {e}"))?;
+    let patch = sess
+        .as_patch(&g)
+        .map_err(|e| anyhow::anyhow!("patch(prune): {e}"))?;
+    let mut repatched = g.clone();
+    let prep = patch
+        .apply_checked(&mut repatched, level)
+        .map_err(|e| anyhow::anyhow!("patch(apply): {e}"))?;
+    crate::check::check_graph(&repatched).map_err(|e| anyhow::anyhow!("graph: {e}"))?;
+    let opts = crate::exec::PlanOpts {
+        check: level,
+        ..Default::default()
+    };
+    let plan = crate::exec::Plan::compile(&repatched, opts)
+        .map_err(|e| anyhow::anyhow!("plan(repatched): {e}"))?;
+    Ok(format!(
+        "{} patch(es), {} param edit(s), {} steps",
+        reports.len() + 1,
+        prep.param_edits,
+        plan.report().steps
+    ))
+}
+
 fn cmd_lint(a: &LintArgs) -> anyhow::Result<()> {
     let names: Vec<String> = if a.model == "all" {
         zoo::IMAGE_MODELS
@@ -650,12 +745,26 @@ fn cmd_lint(a: &LintArgs) -> anyhow::Result<()> {
         &["model", "summary", "status"],
     );
     let mut failures: Vec<(String, String)> = Vec::new();
+    let mut total = names.len();
     for name in &names {
         match lint_one(name, a.icfg, a.seed, a.level) {
             Ok(summary) => t.row(&[name.clone(), summary, "ok".to_string()]),
             Err(e) => {
                 t.row(&[name.clone(), "-".to_string(), "FAIL".to_string()]);
                 failures.push((name.clone(), e.to_string()));
+            }
+        }
+    }
+    if a.model == "all" {
+        // the graph lineage a live `spa swap` serves: optimize patches
+        // followed by a session re-prune patch, verified at `level`
+        total += 1;
+        let label = "resnet18+patch".to_string();
+        match lint_patched("resnet18", a.icfg, a.seed, a.level) {
+            Ok(summary) => t.row(&[label, summary, "ok".to_string()]),
+            Err(e) => {
+                t.row(&[label.clone(), "-".to_string(), "FAIL".to_string()]);
+                failures.push((label, e.to_string()));
             }
         }
     }
@@ -667,11 +776,11 @@ fn cmd_lint(a: &LintArgs) -> anyhow::Result<()> {
         anyhow::bail!(
             "lint failed for {} of {} model(s) at level {}",
             failures.len(),
-            names.len(),
+            total,
             a.level.name()
         );
     }
-    println!("lint: {} model(s) clean at level {}", names.len(), a.level.name());
+    println!("lint: {} model(s) clean at level {}", total, a.level.name());
     Ok(())
 }
 
@@ -795,6 +904,7 @@ pub fn run(args: Vec<String>) -> anyhow::Result<()> {
         "obspa" => cmd_obspa(&ObspaArgs::parse(&flags)?),
         "optimize" => cmd_optimize(&OptimizeArgs::parse(&flags)),
         "serve" => cmd_serve(ServeArgs::parse(&flags)?),
+        "swap" => cmd_swap(&SwapArgs::parse(&flags)?),
         "lint" => cmd_lint(&LintArgs::parse(&flags)?),
         "bench-diff" => cmd_bench_diff(&BenchDiffArgs::parse(&flags)?),
         "convert" => cmd_convert(&ConvertArgs::parse(&flags)?),
@@ -930,6 +1040,40 @@ mod tests {
         let bad = flags(&[("faults", "group.meteor=0.5")]);
         let err = ServeArgs::parse(&bad).unwrap_err().to_string();
         assert!(err.contains("unknown fault kind"), "got: {err}");
+    }
+
+    #[test]
+    fn swap_args_resolve_typed_request() {
+        let f = flags(&[
+            ("addr", "127.0.0.1:9999"),
+            ("model", "mlp"),
+            ("target-rf", "1.4"),
+            ("criterion", "l1"),
+            ("shadow-requests", "6"),
+            ("max-divergence", "0.5"),
+        ]);
+        let a = SwapArgs::parse(&f).unwrap();
+        assert_eq!(a.addr, "127.0.0.1:9999");
+        assert_eq!(a.req.model, "mlp");
+        assert_eq!(a.req.target_rf, 1.4);
+        assert_eq!(a.req.shadow, 6);
+        assert_eq!(a.req.max_divergence, 0.5);
+        // defaults: bit-exact shadow gate, no shadow requests
+        let d = SwapArgs::parse(&flags(&[("model", "mlp")])).unwrap();
+        assert_eq!(d.req.shadow, 0);
+        assert_eq!(d.req.max_divergence, 0.0);
+        // --model is mandatory — there is no default model to re-prune
+        assert!(SwapArgs::parse(&flags(&[])).is_err());
+    }
+
+    #[test]
+    fn lint_patched_lineage_is_clean_at_strict() {
+        let icfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let summary = lint_patched("resnet18", icfg, 1, CheckLevel::Strict).unwrap();
+        assert!(summary.contains("patch(es)"), "got: {summary}");
     }
 
     #[test]

@@ -61,7 +61,7 @@
 use crate::check::CheckLevel;
 use crate::ir::passes::{self, OptReport};
 use crate::ir::shape::infer_op_output_shapes;
-use crate::ir::{DataId, DataKind, Graph, OpId, OpKind, OpNode};
+use crate::ir::{DataId, DataKind, Graph, OpId, OpKind, OpNode, PatchReport};
 use crate::tensor::{ops, Tensor};
 use crate::util::par;
 use std::collections::{HashMap, HashSet};
@@ -124,8 +124,29 @@ pub struct PlanReport {
     /// top of its graph copy (a compile-time space-for-time trade the
     /// arena numbers above do not include).
     pub gemm_wt_bytes: usize,
+    /// Maximal runs of consecutive patch-dirtied schedule items an
+    /// incremental [`Plan::recompile`] rebuilt. 0 for a fresh compile.
+    pub recompiled_regions: usize,
+    /// Steps an incremental recompile carried over untouched (their op,
+    /// fused chain, and params were outside every recompiled region).
+    pub reused_steps: usize,
+    /// Pre-transposed Gemm weights an incremental recompile reused from
+    /// the old plan instead of re-packing.
+    pub reused_gemm_wt: usize,
     /// Rewrite-pass report when compiled at [`OptLevel::Fast`].
     pub opt: Option<OptReport>,
+}
+
+impl PlanReport {
+    /// Fraction of steps an incremental recompile reused (0.0 for a
+    /// fresh compile; 1.0 when a patch dirtied nothing that executes).
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.reused_steps as f64 / self.steps as f64
+        }
+    }
 }
 
 /// Where a data node's value lives at run time.
@@ -259,12 +280,101 @@ pub struct Workspace {
     scratch: Scratch,
 }
 
+/// Work carried from an old [`Plan`] into an incremental recompile —
+/// keyed by ids in the *patched* graph (mapped through the
+/// [`PatchReport`] before construction).
+struct Reuse {
+    /// Pre-transposed Gemm weights whose op and weight param survived
+    /// the patch untouched.
+    gemm_wt: HashMap<OpId, Tensor>,
+    /// Old arena slot per surviving step output, preferred when free so
+    /// untouched schedule regions keep their slot assignment.
+    preferred: HashMap<DataId, usize>,
+    /// Ops the patch dirtied (patched-graph ids): rewired inputs, edited
+    /// params, or patch-added. Everything else may be carried over.
+    dirty: HashSet<OpId>,
+}
+
 impl Plan {
     /// Compile `graph` into an execution plan. The graph is cloned (the
     /// plan is self-contained and immutable); at [`OptLevel::Fast`] the
     /// private copy is additionally rewritten by
     /// [`crate::ir::passes::optimize`].
     pub fn compile(g: &Graph, opts: PlanOpts) -> anyhow::Result<Plan> {
+        Plan::compile_impl(g, opts, None)
+    }
+
+    /// Incrementally recompile this plan for `patched` — the result of
+    /// applying a [`crate::ir::GraphPatch`] (built against this plan's
+    /// graph) whose [`PatchReport`] is `rep`. Only schedule regions the
+    /// patch dirtied are rebuilt from scratch: untouched steps keep
+    /// their arena slots and untouched Gemms keep their pre-transposed
+    /// weights ([`PlanReport::recompiled_regions`] /
+    /// [`PlanReport::reused_steps`] / [`PlanReport::reused_gemm_wt`]
+    /// quantify the split). The compiled plan is bit-identical to a
+    /// fresh [`Plan::compile`] of `patched` at the same options.
+    pub fn recompile(
+        &self,
+        patched: &Graph,
+        rep: &PatchReport,
+        opts: PlanOpts,
+    ) -> anyhow::Result<Plan> {
+        anyhow::ensure!(
+            opts.level != OptLevel::Fast,
+            "incremental recompile requires an id-stable level (None/Exact), not Fast"
+        );
+        anyhow::ensure!(
+            rep.base_ops == self.graph.ops.len() && rep.base_datas == self.graph.datas.len(),
+            "patch report was built against a different graph ({} ops / {} datas; this plan has {} / {})",
+            rep.base_ops,
+            rep.base_datas,
+            self.graph.ops.len(),
+            self.graph.datas.len()
+        );
+        let dirty: HashSet<OpId> = rep.touched_ops.iter().copied().collect();
+        let edited: HashSet<DataId> = rep.edited_params.iter().copied().collect();
+        // Carry packed Gemm weights: the op must survive clean and its
+        // weight param must map through the sweep unedited.
+        let mut carry: HashMap<OpId, Tensor> = HashMap::new();
+        for (&old_op, wt) in &self.gemm_wt {
+            let Some(new_op) = rep.op_map.get(old_op).copied().flatten() else {
+                continue;
+            };
+            if dirty.contains(&new_op) {
+                continue;
+            }
+            let old_w = self.graph.ops[old_op].inputs[1];
+            if edited.contains(&old_w) {
+                continue;
+            }
+            let mapped = rep.data_map.get(old_w).copied().flatten();
+            if mapped.is_some() && mapped == patched.ops[new_op].inputs.get(1).copied() {
+                carry.insert(new_op, wt.clone());
+            }
+        }
+        let mut preferred: HashMap<DataId, usize> = HashMap::new();
+        for item in &self.schedule {
+            if let Item::Step {
+                out_data, out_slot, ..
+            } = item
+            {
+                if let Some(new_id) = rep.data_map.get(*out_data).copied().flatten() {
+                    preferred.insert(new_id, *out_slot);
+                }
+            }
+        }
+        Plan::compile_impl(
+            patched,
+            opts,
+            Some(Reuse {
+                gemm_wt: carry,
+                preferred,
+                dirty,
+            }),
+        )
+    }
+
+    fn compile_impl(g: &Graph, opts: PlanOpts, mut reuse: Option<Reuse>) -> anyhow::Result<Plan> {
         anyhow::ensure!(
             !(opts.level == OptLevel::Fast && !opts.retain.is_empty()),
             "PlanOpts::retain requires an id-stable level (None/Exact), not Fast"
@@ -303,6 +413,10 @@ impl Plan {
             op: OpId,
             out_data: DataId,
             post: Vec<PostOp>,
+            /// Recompile only: the step's op or any op fused into it was
+            /// dirtied by the patch, so the step is inside a rebuilt
+            /// region.
+            dirty: bool,
         }
         enum ProtoItem {
             Alias(OpId),
@@ -329,6 +443,7 @@ impl Plan {
             }
             let mut out_data = op.outputs[0];
             let mut post: Vec<PostOp> = Vec::new();
+            let mut dirty = reuse.as_ref().is_some_and(|r| r.dirty.contains(&op_id));
             if opts.level != OptLevel::None {
                 loop {
                     let d = &graph.datas[out_data];
@@ -350,12 +465,14 @@ impl Plan {
                                 eps,
                             });
                             fused.insert(c);
+                            dirty |= reuse.as_ref().is_some_and(|r| r.dirty.contains(&c));
                             out_data = cop.outputs[0];
                         }
                         _ => {
                             if let Some(a) = act_of(&cop.kind) {
                                 post.push(PostOp::Act(a));
                                 fused.insert(c);
+                                dirty |= reuse.as_ref().is_some_and(|r| r.dirty.contains(&c));
                                 out_data = cop.outputs[0];
                             } else {
                                 break;
@@ -369,7 +486,32 @@ impl Plan {
                 op: op_id,
                 out_data,
                 post,
+                dirty,
             }));
+        }
+
+        // Recompile bookkeeping: count maximal runs of dirty schedule
+        // items (the regions actually rebuilt) and the clean steps
+        // carried over around them.
+        let mut recompiled_regions = 0usize;
+        let mut reused_steps = 0usize;
+        if let Some(r) = &reuse {
+            let mut in_run = false;
+            for item in &proto {
+                let d = match item {
+                    ProtoItem::Alias(op) => r.dirty.contains(op),
+                    ProtoItem::Step(p) => p.dirty,
+                };
+                if d && !in_run {
+                    recompiled_regions += 1;
+                }
+                in_run = d;
+                if !d {
+                    if let ProtoItem::Step(_) = item {
+                        reused_steps += 1;
+                    }
+                }
+            }
         }
 
         // Resolve a read of `d` to the data id whose slot (if any) backs
@@ -429,7 +571,18 @@ impl Plan {
                             i += 1;
                         }
                     }
-                    let slot = free.pop().unwrap_or_else(|| {
+                    // An incremental recompile prefers the slot the old
+                    // plan used for this output, when it is free — clean
+                    // regions then keep their slot assignment verbatim.
+                    let mut slot = None;
+                    if let Some(r) = reuse.as_ref() {
+                        if let Some(&want) = r.preferred.get(&p.out_data) {
+                            if let Some(at) = free.iter().position(|&s| s == want) {
+                                slot = Some(free.swap_remove(at));
+                            }
+                        }
+                    }
+                    let slot = slot.or_else(|| free.pop()).unwrap_or_else(|| {
                         slot_nominal.push(0);
                         slot_nominal.len() - 1
                     });
@@ -470,9 +623,16 @@ impl Plan {
             }
         }
         let mut gemm_wt: HashMap<OpId, Tensor> = HashMap::new();
+        let mut reused_gemm_wt = 0usize;
         for op in &graph.ops {
             if matches!(op.kind, OpKind::Gemm) {
-                if let Some(w) = op.inputs.get(1).and_then(|&i| graph.datas[i].param()) {
+                // carry the old plan's transpose when the recompile
+                // proved the weight unchanged (t2 is deterministic, so
+                // the carried tensor is bit-identical to a re-pack)
+                if let Some(t) = reuse.as_mut().and_then(|r| r.gemm_wt.remove(&op.id)) {
+                    gemm_wt.insert(op.id, t);
+                    reused_gemm_wt += 1;
+                } else if let Some(w) = op.inputs.get(1).and_then(|&i| graph.datas[i].param()) {
                     gemm_wt.insert(op.id, w.t2());
                 }
             }
@@ -489,6 +649,9 @@ impl Plan {
             peak_arena_bytes,
             interp_intermediate_bytes,
             gemm_wt_bytes,
+            recompiled_regions,
+            reused_steps,
+            reused_gemm_wt,
             opt,
         };
         let plan = Plan {
@@ -1416,6 +1579,119 @@ mod tests {
         let ws = plan.runner().into_workspace();
         let mut again = Runner::from_parts(&plan, ws);
         assert_bits_eq(&again.predict(&x).unwrap(), &want);
+    }
+
+    #[test]
+    fn recompile_after_param_edit_matches_fresh_compile() {
+        use crate::ir::GraphPatch;
+        let g = zoo::resnet18(cfg(), 17);
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        // scale one conv weight — the localized edit a re-prune makes
+        let conv = g
+            .ops
+            .iter()
+            .find(|o| matches!(o.kind, OpKind::Conv2d { .. }))
+            .unwrap();
+        let wid = conv.inputs[1];
+        let mut w = g.datas[wid].param().unwrap().clone();
+        for v in &mut w.data {
+            *v *= 1.5;
+        }
+        let mut p = GraphPatch::new("scale-conv", &g);
+        p.set_param(wid, w);
+        let mut patched = g.clone();
+        let rep = p.apply(&mut patched).unwrap();
+
+        let fresh = Plan::compile(&patched, PlanOpts::default()).unwrap();
+        let inc = plan.recompile(&patched, &rep, PlanOpts::default()).unwrap();
+        let r = inc.report();
+        assert_eq!(r.recompiled_regions, 1, "one conv dirtied, one region");
+        assert!(r.reused_steps > 0, "clean steps must be carried over");
+        assert_eq!(r.steps, fresh.report().steps);
+        assert_eq!(r.arena_slots, fresh.report().arena_slots);
+        assert_eq!(
+            r.reused_gemm_wt, 1,
+            "the untouched fc transpose must carry over"
+        );
+        assert!(r.reuse_ratio() > 0.5, "ratio {}", r.reuse_ratio());
+        let mut rng = Rng::new(40);
+        let x = rand_input(&patched, 2, &mut rng);
+        assert_bits_eq(&inc.predict(&x).unwrap(), &fresh.predict(&x).unwrap());
+    }
+
+    #[test]
+    fn recompile_after_structural_patch_matches_fresh_compile() {
+        use crate::ir::{DataKind, GraphPatch};
+        let g = zoo::resnet18(cfg(), 18);
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        // splice a Scale op in front of the classifier head
+        let fc = g
+            .ops
+            .iter()
+            .find(|o| matches!(o.kind, OpKind::Gemm))
+            .unwrap();
+        let fc_in = fc.inputs[0];
+        let mut p = GraphPatch::new("insert-scale", &g);
+        let scaled = p.add_data(
+            "head.scaled",
+            g.datas[fc_in].shape.clone(),
+            DataKind::Activation,
+        );
+        p.rewire(fc_in, scaled);
+        p.add_op(
+            "head.scale",
+            OpKind::Scale { c: 0.5 },
+            vec![fc_in],
+            vec![scaled],
+        );
+        let mut patched = g.clone();
+        let rep = p.apply(&mut patched).unwrap();
+
+        let fresh = Plan::compile(&patched, PlanOpts::default()).unwrap();
+        let inc = plan.recompile(&patched, &rep, PlanOpts::default()).unwrap();
+        let r = inc.report();
+        assert!(r.recompiled_regions >= 1);
+        assert!(r.reused_steps > 0);
+        let mut rng = Rng::new(41);
+        let x = rand_input(&patched, 2, &mut rng);
+        assert_bits_eq(&inc.predict(&x).unwrap(), &fresh.predict(&x).unwrap());
+    }
+
+    #[test]
+    fn recompile_rejects_mismatched_reports_and_fast_level() {
+        use crate::ir::GraphPatch;
+        let g = zoo::mlp(cfg(), &[16], 19);
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        // a report built against a different graph must be refused
+        let other = zoo::resnet18(cfg(), 19);
+        let wid = other
+            .ops
+            .iter()
+            .find(|o| matches!(o.kind, OpKind::Conv2d { .. }))
+            .unwrap()
+            .inputs[1];
+        let mut p = GraphPatch::new("other", &other);
+        p.set_param(wid, other.datas[wid].param().unwrap().clone());
+        let mut patched_other = other.clone();
+        let rep = p.apply(&mut patched_other).unwrap();
+        let err = plan
+            .recompile(&patched_other, &rep, PlanOpts::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("different graph"), "got: {err}");
+        // Fast is not id-stable, so incremental recompile refuses it
+        let err = plan
+            .recompile(
+                &patched_other,
+                &rep,
+                PlanOpts {
+                    level: OptLevel::Fast,
+                    ..Default::default()
+                },
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("id-stable"), "got: {err}");
     }
 
     #[test]

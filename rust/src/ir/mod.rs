@@ -11,10 +11,12 @@
 
 pub mod build;
 pub mod passes;
+pub mod patch;
 pub mod serde;
 pub mod shape;
 
 pub use build::GraphBuilder;
+pub use patch::{GraphPatch, PatchReport};
 
 use crate::tensor::Tensor;
 use std::collections::HashMap;

@@ -22,7 +22,7 @@ use super::{DataId, DataKind, Graph, OpId, OpKind};
 
 /// Redirect every consumer of `from` to read `to` instead, and transfer
 /// graph-output status.
-fn replace_uses(g: &mut Graph, from: DataId, to: DataId) {
+pub(crate) fn replace_uses(g: &mut Graph, from: DataId, to: DataId) {
     let consumers = std::mem::take(&mut g.datas[from].consumers);
     for &op_id in &consumers {
         for slot in g.ops[op_id].inputs.iter_mut() {
@@ -56,6 +56,18 @@ fn bypass_op(g: &mut Graph, op_id: OpId) {
 /// Compact the graph: drop neutralized ops and unreachable data nodes,
 /// re-indexing ids. Returns the number of (ops, datas) removed.
 pub fn prune_dead_nodes(g: &mut Graph) -> anyhow::Result<(usize, usize)> {
+    let (removed_ops, removed_datas, _, _) = sweep_dead_nodes(g);
+    g.validate()?;
+    Ok((removed_ops, removed_datas))
+}
+
+/// The sweep behind [`prune_dead_nodes`], without the final validation:
+/// returns the removal counts plus the old→new id maps (`None` = swept)
+/// so callers mid-rewrite (`ir::patch`) can track surviving nodes and
+/// defer validation until shapes are re-inferred.
+pub(crate) fn sweep_dead_nodes(
+    g: &mut Graph,
+) -> (usize, usize, Vec<Option<DataId>>, Vec<Option<OpId>>) {
     // liveness: walk back from outputs
     let mut live_data = vec![false; g.datas.len()];
     let mut live_op = vec![false; g.ops.len()];
@@ -139,8 +151,7 @@ pub fn prune_dead_nodes(g: &mut Graph) -> anyhow::Result<(usize, usize)> {
     g.ops = new_ops;
     g.inputs = g.inputs.iter().filter_map(|&i| data_map[i]).collect();
     g.outputs = g.outputs.iter().map(|&o| data_map[o].unwrap()).collect();
-    g.validate()?;
-    Ok((removed_ops, removed_datas))
+    (removed_ops, removed_datas, data_map, op_map)
 }
 
 /// Drop all Identity ops.

@@ -1,0 +1,628 @@
+//! `GraphPatch`: localized rewrites of SPA-IR without whole-graph
+//! reconstruction (the tract `ModelPatch` idea, ported to our IR).
+//!
+//! A patch is built *against* a specific base graph (it records the base
+//! node counts and hands out ids for nodes it will append), accumulates a
+//! set of localized edits —
+//!
+//! * node additions ([`GraphPatch::add_data`] / [`GraphPatch::add_op`]),
+//! * removals ([`GraphPatch::remove_op`]),
+//! * re-wirings ([`GraphPatch::rewire`] / [`GraphPatch::push_input`]),
+//! * parameter edits ([`GraphPatch::set_param`]),
+//!
+//! — and applies them in one shot with [`GraphPatch::apply`]: append,
+//! rewire, edit, disconnect, sweep dead nodes, re-infer shapes,
+//! validate. Nodes
+//! the patch does not touch keep their identity; the returned
+//! [`PatchReport`] carries the old→new id maps from the dead-node sweep
+//! so downstream consumers (notably `exec::Plan::recompile`) can track
+//! untouched nodes across the rewrite and reuse work keyed by their old
+//! ids.
+//!
+//! The classic `ir::passes` rewrites are also re-expressed as patches
+//! where practical: [`identity_patch`] and [`batchnorm_fold_patch`]
+//! produce the same graphs as `eliminate_identity` / `fold_batchnorm`
+//! but through the patch primitive, which is what keeps the primitive
+//! honest (tested equivalent in this module).
+
+use super::passes::sweep_dead_nodes;
+use super::{DataId, DataKind, DataNode, Graph, OpId, OpKind, OpNode};
+use crate::tensor::Tensor;
+use std::collections::HashSet;
+
+/// What a [`GraphPatch::apply`] did, plus the id maps needed to track
+/// surviving nodes across the embedded dead-node sweep.
+#[derive(Debug, Clone)]
+pub struct PatchReport {
+    /// Ops appended by the patch (post-sweep survivors).
+    pub added_ops: usize,
+    /// Data nodes appended by the patch (post-sweep survivors).
+    pub added_datas: usize,
+    /// Ops removed (explicitly or by the dead-node sweep).
+    pub removed_ops: usize,
+    /// Data nodes removed by the dead-node sweep.
+    pub removed_datas: usize,
+    /// `rewire` edges applied.
+    pub rewired: usize,
+    /// Parameter tensors overwritten.
+    pub param_edits: usize,
+    /// Op count of the base graph the patch was built against.
+    pub base_ops: usize,
+    /// Data count of the base graph the patch was built against.
+    pub base_datas: usize,
+    /// Pre-sweep id → post-sweep id for every data node (`None` = swept).
+    /// Ids `< base_datas` are base-graph ids, so this doubles as the
+    /// base→patched correspondence for untouched nodes.
+    pub data_map: Vec<Option<DataId>>,
+    /// Pre-sweep id → post-sweep id for every op (`None` = swept).
+    pub op_map: Vec<Option<OpId>>,
+    /// Ops (post-sweep ids) whose inputs, params, or existence the patch
+    /// changed — the "dirty" set an incremental recompile must rebuild.
+    pub touched_ops: Vec<OpId>,
+    /// Params (pre-sweep ids) whose tensors the patch overwrote.
+    pub edited_params: Vec<DataId>,
+}
+
+impl PatchReport {
+    /// Total localized rewrites the patch performed.
+    pub fn total(&self) -> usize {
+        self.added_ops + self.removed_ops + self.rewired + self.param_edits
+    }
+}
+
+/// A localized rewrite of one specific [`Graph`] — see the module docs.
+#[derive(Debug, Clone)]
+pub struct GraphPatch {
+    /// Human-readable context carried into error messages.
+    pub label: String,
+    base_ops: usize,
+    base_datas: usize,
+    new_datas: Vec<DataNode>,
+    new_ops: Vec<OpNode>,
+    rewires: Vec<(DataId, DataId)>,
+    push_inputs: Vec<(OpId, DataId)>,
+    removes: Vec<OpId>,
+    param_edits: Vec<(DataId, Tensor)>,
+}
+
+impl GraphPatch {
+    /// An empty patch against `base`. The patch may only be applied to a
+    /// graph with the same node counts (a cheap staleness guard).
+    pub fn new(label: impl Into<String>, base: &Graph) -> GraphPatch {
+        GraphPatch {
+            label: label.into(),
+            base_ops: base.ops.len(),
+            base_datas: base.datas.len(),
+            new_datas: Vec::new(),
+            new_ops: Vec::new(),
+            rewires: Vec::new(),
+            push_inputs: Vec::new(),
+            removes: Vec::new(),
+            param_edits: Vec::new(),
+        }
+    }
+
+    /// True when the patch performs no edits at all.
+    pub fn is_empty(&self) -> bool {
+        self.new_datas.is_empty()
+            && self.new_ops.is_empty()
+            && self.rewires.is_empty()
+            && self.push_inputs.is_empty()
+            && self.removes.is_empty()
+            && self.param_edits.is_empty()
+    }
+
+    /// Append a data node; the returned id is valid in the patched graph
+    /// and may be referenced by later [`GraphPatch::add_op`] /
+    /// [`GraphPatch::rewire`] / [`GraphPatch::push_input`] calls.
+    pub fn add_data(
+        &mut self,
+        name: impl Into<String>,
+        shape: Vec<usize>,
+        kind: DataKind,
+    ) -> DataId {
+        let id = self.base_datas + self.new_datas.len();
+        self.new_datas.push(DataNode {
+            id,
+            name: name.into(),
+            shape,
+            kind,
+            producer: None,
+            consumers: Vec::new(),
+        });
+        id
+    }
+
+    /// Append an op reading `inputs` and producing `outputs` (each output
+    /// must be a patch-added data or an existing producer-less data).
+    pub fn add_op(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        inputs: Vec<DataId>,
+        outputs: Vec<DataId>,
+    ) -> OpId {
+        let id = self.base_ops + self.new_ops.len();
+        self.new_ops.push(OpNode {
+            id,
+            name: name.into(),
+            kind,
+            inputs,
+            outputs,
+        });
+        id
+    }
+
+    /// Redirect every consumer of `from` (and graph-output status) to
+    /// read `to` instead. Applied before patch-added ops are wired in,
+    /// so an added op may read `from` and produce `to` (the insert
+    /// pattern) without capturing its own rewire.
+    pub fn rewire(&mut self, from: DataId, to: DataId) {
+        self.rewires.push((from, to));
+    }
+
+    /// Append `data` to an existing op's input list (e.g. attaching a
+    /// folded bias to a conv that had none).
+    pub fn push_input(&mut self, op: OpId, data: DataId) {
+        self.push_inputs.push((op, data));
+    }
+
+    /// Disconnect and remove op `id`. Its outputs must be left without
+    /// consumers by the time the patch applies (rewire them first);
+    /// orphaned inputs/outputs are swept with the dead-node pass.
+    pub fn remove_op(&mut self, id: OpId) {
+        self.removes.push(id);
+    }
+
+    /// Overwrite a parameter tensor (shape may change; activation shapes
+    /// downstream are re-inferred at apply time).
+    pub fn set_param(&mut self, data: DataId, t: Tensor) {
+        self.param_edits.push((data, t));
+    }
+
+    /// Apply the patch to `g`: append datas → rewire → edit params →
+    /// append ops → disconnect removals → sweep dead nodes → re-infer
+    /// shapes → validate. Rewires run before the patch's ops are wired
+    /// in, so an added op may read a rewired-away data (the insert
+    /// pattern). `g` must be the graph (or an identically-shaped clone
+    /// of the graph) the patch was built against.
+    pub fn apply(self, g: &mut Graph) -> anyhow::Result<PatchReport> {
+        let label = self.label.clone();
+        self.apply_inner(g)
+            .map_err(|e| anyhow::anyhow!("patch `{label}` failed: {e}"))
+    }
+
+    /// [`GraphPatch::apply`] plus a full static re-check
+    /// ([`crate::check::check_graph`]) of the patched graph when `check`
+    /// is enabled — the gate a patch must pass before any traffic routes
+    /// to a plan compiled from it.
+    pub fn apply_checked(
+        self,
+        g: &mut Graph,
+        check: crate::check::CheckLevel,
+    ) -> anyhow::Result<PatchReport> {
+        let label = self.label.clone();
+        let rep = self.apply(g)?;
+        if check.enabled() {
+            crate::check::check_graph(g)
+                .map_err(|e| anyhow::anyhow!("patched graph `{label}` failed static checks: {e}"))?;
+        }
+        Ok(rep)
+    }
+
+    fn apply_inner(self, g: &mut Graph) -> anyhow::Result<PatchReport> {
+        anyhow::ensure!(
+            g.ops.len() == self.base_ops && g.datas.len() == self.base_datas,
+            "stale patch: built against {} ops / {} datas, applying to {} / {}",
+            self.base_ops,
+            self.base_datas,
+            g.ops.len(),
+            g.datas.len()
+        );
+        let added_datas = self.new_datas.len();
+        let added_ops = self.new_ops.len();
+        // dirty set in pre-sweep id space; mapped to post-sweep ids below
+        let mut touched: HashSet<OpId> = HashSet::new();
+
+        // 1. append data nodes
+        g.datas.extend(self.new_datas);
+
+        // 2. re-wirings — before the patch's ops are wired in, so an
+        //    added op may read `from` and produce the replacement data
+        //    (the insert pattern) without capturing its own rewire
+        for &(from, to) in &self.rewires {
+            anyhow::ensure!(
+                from < g.datas.len() && to < g.datas.len(),
+                "rewire references unknown data ({from} -> {to})"
+            );
+            super::passes::replace_uses(g, from, to);
+            touched.extend(g.datas[to].consumers.iter().copied());
+        }
+
+        // 3. parameter edits
+        for (pid, t) in &self.param_edits {
+            anyhow::ensure!(*pid < g.datas.len(), "param edit on unknown data {pid}");
+            let d = &mut g.datas[*pid];
+            anyhow::ensure!(
+                d.is_param(),
+                "param edit targets `{}` which is not a parameter",
+                d.name
+            );
+            d.shape = t.shape.clone();
+            d.kind = DataKind::Param(t.clone());
+            touched.extend(d.consumers.iter().copied());
+        }
+
+        // 4. extra input attachments
+        for &(op, data) in &self.push_inputs {
+            anyhow::ensure!(op < g.ops.len(), "push_input on unknown op {op}");
+            anyhow::ensure!(data < g.datas.len(), "push_input of unknown data {data}");
+            g.ops[op].inputs.push(data);
+            g.datas[data].consumers.push(op);
+            touched.insert(op);
+        }
+
+        // 5. append ops, wiring producer/consumer symmetry
+        for op in self.new_ops {
+            let id = op.id;
+            anyhow::ensure!(id == g.ops.len(), "patch op ids must be dense");
+            for &i in &op.inputs {
+                anyhow::ensure!(i < g.datas.len(), "op `{}` reads unknown data {i}", op.name);
+                g.datas[i].consumers.push(id);
+            }
+            for &o in &op.outputs {
+                anyhow::ensure!(o < g.datas.len(), "op `{}` writes unknown data {o}", op.name);
+                anyhow::ensure!(
+                    g.datas[o].producer.is_none(),
+                    "op `{}` writes data `{}` which already has a producer",
+                    op.name,
+                    g.datas[o].name
+                );
+                g.datas[o].producer = Some(id);
+            }
+            touched.insert(id);
+            g.ops.push(op);
+        }
+
+        // 6. removals: disconnect, leaving an id-stable tombstone the
+        //    sweep collects
+        for &op_id in &self.removes {
+            anyhow::ensure!(op_id < g.ops.len(), "remove of unknown op {op_id}");
+            let inputs = std::mem::take(&mut g.ops[op_id].inputs);
+            let outputs = std::mem::take(&mut g.ops[op_id].outputs);
+            for i in inputs {
+                g.datas[i].consumers.retain(|&c| c != op_id);
+            }
+            for o in outputs {
+                g.datas[o].producer = None;
+                anyhow::ensure!(
+                    g.datas[o].consumers.is_empty() && !g.outputs.contains(&o),
+                    "removed op `{}` still feeds `{}` — rewire its consumers first",
+                    g.ops[op_id].name,
+                    g.datas[o].name
+                );
+            }
+            touched.remove(&op_id);
+        }
+
+        // 7. sweep + remap, then re-infer shapes on the clean graph
+        let (swept_ops, swept_datas, data_map, op_map) = sweep_dead_nodes(g);
+        g.refresh_shapes()?;
+        g.validate()?;
+
+        let mut touched_ops: Vec<OpId> =
+            touched.iter().filter_map(|&o| op_map[o]).collect();
+        touched_ops.sort_unstable();
+        Ok(PatchReport {
+            added_ops: added_ops.saturating_sub(
+                (self.base_ops..self.base_ops + added_ops)
+                    .filter(|&o| op_map[o].is_none())
+                    .count(),
+            ),
+            added_datas: added_datas.saturating_sub(
+                (self.base_datas..self.base_datas + added_datas)
+                    .filter(|&d| data_map[d].is_none())
+                    .count(),
+            ),
+            removed_ops: swept_ops,
+            removed_datas: swept_datas,
+            rewired: self.rewires.len(),
+            param_edits: self.param_edits.len(),
+            base_ops: self.base_ops,
+            base_datas: self.base_datas,
+            data_map,
+            op_map,
+            touched_ops,
+            edited_params: self.param_edits.iter().map(|(d, _)| *d).collect(),
+        })
+    }
+}
+
+/// `eliminate_identity` expressed as a patch: rewire each Identity's
+/// output to its input and remove the op. Returns `None` when the graph
+/// has no identities (nothing to patch).
+pub fn identity_patch(g: &Graph) -> Option<GraphPatch> {
+    let mut p = GraphPatch::new("eliminate-identity", g);
+    for op in &g.ops {
+        if matches!(op.kind, OpKind::Identity) && !op.inputs.is_empty() {
+            // resolve chains of identities to the root non-identity
+            // data, since every rewire is recorded against the
+            // unpatched graph
+            let mut to = op.inputs[0];
+            while let Some(prod) = g.datas[to].producer {
+                if matches!(g.ops[prod].kind, OpKind::Identity) && !g.ops[prod].inputs.is_empty() {
+                    to = g.ops[prod].inputs[0];
+                } else {
+                    break;
+                }
+            }
+            p.rewire(op.outputs[0], to);
+            p.remove_op(op.id);
+        }
+    }
+    if p.is_empty() {
+        None
+    } else {
+        Some(p)
+    }
+}
+
+/// `fold_batchnorm` expressed as a patch: per foldable BN, edit the
+/// preceding conv/gemm weight (and bias, appending one if absent),
+/// rewire the BN's output to the conv's, and remove the BN. Same
+/// fold conditions as the pass: the conv/gemm output must feed *only*
+/// the BN. Returns `None` when nothing is foldable.
+pub fn batchnorm_fold_patch(g: &Graph) -> anyhow::Result<Option<GraphPatch>> {
+    let mut p = GraphPatch::new("fold-batchnorm", g);
+    // weight/bias edits may stack when two BNs share a producer chain;
+    // the fold conditions make producers unique per BN, so one edit each
+    for bn in &g.ops {
+        let OpKind::BatchNorm { eps } = bn.kind else {
+            continue;
+        };
+        let x = match bn.inputs.first() {
+            Some(&x) => x,
+            None => continue,
+        };
+        let Some(prod) = g.datas[x].producer else {
+            continue;
+        };
+        if g.datas[x].consumers.len() != 1 {
+            continue;
+        }
+        let has_bias = match g.ops[prod].kind {
+            OpKind::Conv2d { .. } | OpKind::Gemm => g.ops[prod].inputs.len() > 2,
+            _ => continue,
+        };
+        let (gamma, beta, mean, var) = {
+            let ins = &bn.inputs;
+            (
+                g.datas[ins[1]].param().unwrap(),
+                g.datas[ins[2]].param().unwrap(),
+                g.datas[ins[3]].param().unwrap(),
+                g.datas[ins[4]].param().unwrap(),
+            )
+        };
+        let co = gamma.numel();
+        let scale: Vec<f32> = (0..co)
+            .map(|c| gamma.data[c] / (var.data[c] + eps).sqrt())
+            .collect();
+        let wid = g.ops[prod].inputs[1];
+        let mut w = g.datas[wid].param().unwrap().clone();
+        let inner = w.numel() / co;
+        for c in 0..co {
+            for v in &mut w.data[c * inner..(c + 1) * inner] {
+                *v *= scale[c];
+            }
+        }
+        p.set_param(wid, w);
+        if has_bias {
+            let bid = g.ops[prod].inputs[2];
+            let mut b = g.datas[bid].param().unwrap().clone();
+            for c in 0..co {
+                b.data[c] = (b.data[c] - mean.data[c]) * scale[c] + beta.data[c];
+            }
+            p.set_param(bid, b);
+        } else {
+            let bias: Vec<f32> = (0..co)
+                .map(|c| -mean.data[c] * scale[c] + beta.data[c])
+                .collect();
+            let bid = p.add_data(
+                format!("{}.folded_bias", g.ops[prod].name),
+                vec![co],
+                DataKind::Param(Tensor::new(vec![co], bias)),
+            );
+            p.push_input(prod, bid);
+        }
+        p.rewire(bn.outputs[0], x);
+        p.remove_op(bn.id);
+    }
+    Ok(if p.is_empty() { None } else { Some(p) })
+}
+
+/// Run the patch-expressible optimize passes (identity elimination, then
+/// BN folding) as sequential patches, verifying after each when `check`
+/// is enabled. Mirrors the front half of `ir::passes::optimize`.
+pub fn optimize_as_patches(
+    g: &mut Graph,
+    check: crate::check::CheckLevel,
+) -> anyhow::Result<Vec<PatchReport>> {
+    let mut reports = Vec::new();
+    if let Some(p) = identity_patch(g) {
+        reports.push(p.apply_checked(g, check)?);
+    }
+    if let Some(p) = batchnorm_fold_patch(g)? {
+        reports.push(p.apply_checked(g, check)?);
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine;
+    use crate::ir::passes;
+    use crate::ir::GraphBuilder;
+    use crate::tensor::assert_allclose;
+    use crate::util::Rng;
+    use crate::zoo::{self, ImageCfg};
+
+    fn conv_graph() -> Graph {
+        let mut b = GraphBuilder::new("patchy", 1);
+        let x = b.input("x", vec![1, 3, 8, 8]);
+        let i = b.identity("drop", x);
+        let c = b.conv2d("c1", i, 4, 3, 1, 1, 1, true);
+        let n = b.batchnorm("bn1", c);
+        let r = b.relu("r1", n);
+        let g2 = b.global_avgpool("gap", r);
+        let out = b.gemm("fc", g2, 3, true);
+        b.output(out);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn identity_patch_matches_the_pass() {
+        let mut via_patch = conv_graph();
+        let mut via_pass = via_patch.clone();
+        let mut rng = Rng::new(3);
+        let x = Tensor::new(vec![1, 3, 8, 8], rng.uniform_vec(192, -1.0, 1.0));
+        let before = engine::predict(&via_patch, x.clone()).unwrap();
+
+        let rep = identity_patch(&via_patch)
+            .expect("one identity")
+            .apply(&mut via_patch)
+            .unwrap();
+        passes::eliminate_identity(&mut via_pass).unwrap();
+
+        assert_eq!(rep.removed_ops, 1);
+        assert_eq!(via_patch.ops.len(), via_pass.ops.len());
+        assert!(via_patch
+            .ops
+            .iter()
+            .all(|o| !matches!(o.kind, OpKind::Identity)));
+        let after = engine::predict(&via_patch, x).unwrap();
+        for (a, b) in before.data.iter().zip(&after.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "identity patch must be exact");
+        }
+    }
+
+    #[test]
+    fn batchnorm_patch_matches_the_pass() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut via_patch = zoo::vgg16(cfg, 3);
+        let mut rng = Rng::new(4);
+        for d in &mut via_patch.datas {
+            let name = d.name.clone();
+            if let Some(t) = d.param_mut() {
+                if name.ends_with(".mean") {
+                    t.data = rng.uniform_vec(t.numel(), -0.5, 0.5);
+                } else if name.ends_with(".var") {
+                    t.data = rng.uniform_vec(t.numel(), 0.5, 2.0);
+                }
+            }
+        }
+        let mut via_pass = via_patch.clone();
+        let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 192, -1.0, 1.0));
+        let before = engine::predict(&via_patch, x.clone()).unwrap();
+
+        let rep = batchnorm_fold_patch(&via_patch)
+            .unwrap()
+            .expect("foldable BNs")
+            .apply(&mut via_patch)
+            .unwrap();
+        let folded = passes::fold_batchnorm(&mut via_pass).unwrap();
+
+        assert!(folded >= 10, "folded only {folded}");
+        assert_eq!(rep.removed_ops, folded, "exactly the folded BNs are swept");
+        assert_eq!(via_patch.ops.len(), via_pass.ops.len());
+        assert_eq!(via_patch.num_params(), via_pass.num_params());
+        let after = engine::predict(&via_patch, x).unwrap();
+        assert_allclose(&after, &before, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn patch_inserts_an_op_without_rebuilding() {
+        let mut g = conv_graph();
+        let mut rng = Rng::new(5);
+        let x = Tensor::new(vec![1, 3, 8, 8], rng.uniform_vec(192, -1.0, 1.0));
+        let before = engine::predict(&g, x.clone()).unwrap();
+        // splice a Scale(2.0) between gap and fc
+        let gap_out = g.op_by_name("gap").unwrap().outputs[0];
+        let mut p = GraphPatch::new("insert-scale", &g);
+        let scaled = p.add_data("gap.scaled", g.data(gap_out).shape.clone(), DataKind::Activation);
+        p.rewire(gap_out, scaled);
+        p.add_op("scale2", OpKind::Scale { c: 2.0 }, vec![gap_out], vec![scaled]);
+        let rep = p.apply(&mut g).unwrap();
+        assert_eq!(rep.added_ops, 1);
+        assert!(!rep.touched_ops.is_empty());
+        let after = engine::predict(&g, x).unwrap();
+        // logits scale by 2 exactly
+        for (a, b) in after.data.iter().zip(&before.data) {
+            assert_eq!(a.to_bits(), (b * 2.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn stale_patch_is_rejected() {
+        let g = conv_graph();
+        let mut p = GraphPatch::new("stale", &g);
+        p.remove_op(0);
+        let mut other = conv_graph();
+        passes::eliminate_identity(&mut other).unwrap();
+        let err = p.apply(&mut other).unwrap_err().to_string();
+        assert!(err.contains("stale patch"), "got: {err}");
+    }
+
+    #[test]
+    fn removing_a_consumed_op_without_rewire_is_rejected() {
+        let mut g = conv_graph();
+        let conv = g.op_by_name("c1").unwrap().id;
+        let mut p = GraphPatch::new("bad-remove", &g);
+        p.remove_op(conv);
+        let err = p.apply(&mut g).unwrap_err().to_string();
+        assert!(err.contains("rewire its consumers first"), "got: {err}");
+    }
+
+    #[test]
+    fn report_maps_track_ids_across_the_sweep() {
+        let g = conv_graph();
+        let fc_old = g.op_by_name("fc").unwrap().id;
+        let mut patched = g.clone();
+        let rep = identity_patch(&g).unwrap().apply(&mut patched).unwrap();
+        // identity op swept; fc survives and the map finds it
+        let fc_new = rep.op_map[fc_old].expect("fc survives");
+        assert_eq!(patched.ops[fc_new].name, "fc");
+        let drop_old = g.op_by_name("drop").unwrap().id;
+        assert!(rep.op_map[drop_old].is_none(), "identity must be swept");
+        // every surviving base data maps to a node with the same name
+        for (old, new) in rep.data_map.iter().enumerate() {
+            if let Some(new) = new {
+                assert_eq!(g.datas[old].name, patched.datas[*new].name);
+            }
+        }
+    }
+
+    #[test]
+    fn optimize_as_patches_matches_pass_numerics() {
+        let cfg = ImageCfg {
+            hw: 8,
+            ..Default::default()
+        };
+        let mut via_patch = zoo::resnet18(cfg, 9);
+        let mut via_pass = via_patch.clone();
+        let mut rng = Rng::new(6);
+        let x = Tensor::new(vec![2, 3, 8, 8], rng.uniform_vec(2 * 192, -1.0, 1.0));
+        let reports =
+            optimize_as_patches(&mut via_patch, crate::check::CheckLevel::Strict).unwrap();
+        assert!(!reports.is_empty());
+        passes::eliminate_identity(&mut via_pass).unwrap();
+        passes::fold_batchnorm(&mut via_pass).unwrap();
+        assert_eq!(via_patch.ops.len(), via_pass.ops.len());
+        let a = engine::predict(&via_patch, x.clone()).unwrap();
+        let b = engine::predict(&via_pass, x).unwrap();
+        assert_allclose(&a, &b, 1e-5, 1e-5);
+    }
+}

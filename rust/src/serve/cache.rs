@@ -27,14 +27,48 @@ pub struct CachedPlan {
     pub pool: Mutex<Vec<Workspace>>,
 }
 
+/// Stage of the live-swap pipeline at which a candidate was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapStage {
+    /// Static verification (`check_graph` + `check_plan` at Strict).
+    Verify,
+    /// Shadow-parity gate against live requests.
+    Shadow,
+    /// Post-flip error/panic-rate monitor.
+    PostFlip,
+}
+
+/// Outcome of the most recent swap attempt for a key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SwapOutcome {
+    /// No swap has ever been attempted for this key.
+    #[default]
+    None,
+    /// The last swap committed; its generation is serving.
+    Committed,
+    /// The last swap was rejected or rolled back at this stage; the
+    /// previous generation kept serving throughout.
+    RolledBack(SwapStage),
+}
+
 struct Entry {
     plan: Arc<CachedPlan>,
     last_use: u64,
 }
 
+/// Per-key swap bookkeeping. Kept in a side map that eviction never
+/// touches, so health reporting survives a plan being shed and
+/// recompiled.
+#[derive(Clone, Copy)]
+struct SwapMeta {
+    generation: u64,
+    outcome: SwapOutcome,
+}
+
 struct Inner {
     clock: u64,
     map: HashMap<PlanKey, Entry>,
+    meta: HashMap<PlanKey, SwapMeta>,
 }
 
 /// Bounded plan cache with warm/cold eviction — see the module docs.
@@ -54,6 +88,7 @@ impl PlanCache {
             inner: Mutex::new(Inner {
                 clock: 0,
                 map: HashMap::new(),
+                meta: HashMap::new(),
             }),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
@@ -114,6 +149,16 @@ impl PlanCache {
                 last_use: now,
             },
         );
+        // an evicted-then-recompiled key keeps its swap history
+        inner.meta.entry(key.clone()).or_insert(SwapMeta {
+            generation: 1,
+            outcome: SwapOutcome::None,
+        });
+        self.evict_over_cap(&mut inner);
+        Ok(plan)
+    }
+
+    fn evict_over_cap(&self, inner: &mut Inner) {
         while inner.map.len() > self.cap {
             let coldest = inner
                 .map
@@ -124,7 +169,119 @@ impl PlanCache {
             inner.map.remove(&coldest);
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
-        Ok(plan)
+    }
+
+    /// The active plan generation for `key`: 1 for an entry that has
+    /// never been swapped, 0 when the key has never been resident.
+    pub fn generation(&self, key: &PlanKey) -> u64 {
+        relock(&self.inner).meta.get(key).map_or(0, |m| m.generation)
+    }
+
+    /// Generation + last-swap outcome for `key`, when it has ever been
+    /// resident.
+    pub fn swap_meta(&self, key: &PlanKey) -> Option<(u64, SwapOutcome)> {
+        relock(&self.inner)
+            .meta
+            .get(key)
+            .map(|m| (m.generation, m.outcome))
+    }
+
+    /// Every key's generation and last-swap outcome, sorted for a
+    /// deterministic wire order (the health verb reports this).
+    pub fn snapshot_meta(&self) -> Vec<(PlanKey, u64, SwapOutcome)> {
+        let inner = relock(&self.inner);
+        let mut v: Vec<(PlanKey, u64, SwapOutcome)> = inner
+            .meta
+            .iter()
+            .map(|(k, m)| (k.clone(), m.generation, m.outcome))
+            .collect();
+        v.sort_by(|a, b| {
+            a.0.model
+                .cmp(&b.0.model)
+                .then_with(|| a.0.prune.cmp(&b.0.prune))
+        });
+        v
+    }
+
+    /// Record the outcome of a swap attempt that never flipped (a
+    /// verify or shadow failure): the serving plan and its generation
+    /// stay untouched.
+    pub fn record_outcome(&self, key: &PlanKey, outcome: SwapOutcome) {
+        let mut inner = relock(&self.inner);
+        let m = inner.meta.entry(key.clone()).or_insert(SwapMeta {
+            generation: 1,
+            outcome: SwapOutcome::None,
+        });
+        m.outcome = outcome;
+    }
+
+    /// Atomically install a new generation for `key`: verify `built`,
+    /// swap it into the map, bump the generation, and return
+    /// `(from_gen, to_gen, old)` — `old` being the displaced entry,
+    /// which in-flight batches keep alive (its workspace pool is freed
+    /// only when the last holder drops it). The outcome is recorded as
+    /// [`SwapOutcome::Committed`]; a post-flip monitor that decides
+    /// otherwise rolls back with [`PlanCache::restore`].
+    pub fn flip(
+        &self,
+        key: &PlanKey,
+        built: Plan,
+    ) -> anyhow::Result<(u64, u64, Option<Arc<CachedPlan>>)> {
+        // same refusal as get_or_compile: an unverifiable plan must
+        // never become an admission target
+        crate::check::check_plan(&built)
+            .map_err(|e| anyhow::anyhow!("refusing to flip plan for {key}: {e}"))?;
+        let plan = Arc::new(CachedPlan {
+            plan: built,
+            pool: Mutex::new(Vec::new()),
+        });
+        let mut inner = relock(&self.inner);
+        inner.clock += 1;
+        let now = inner.clock;
+        let old = inner
+            .map
+            .insert(
+                key.clone(),
+                Entry {
+                    plan,
+                    last_use: now,
+                },
+            )
+            .map(|e| e.plan);
+        let m = inner.meta.entry(key.clone()).or_insert(SwapMeta {
+            generation: 0,
+            outcome: SwapOutcome::None,
+        });
+        let from = m.generation;
+        m.generation += 1;
+        m.outcome = SwapOutcome::Committed;
+        let to = m.generation;
+        self.evict_over_cap(&mut inner);
+        Ok((from, to, old))
+    }
+
+    /// Roll back a committed flip: re-install `old` as the serving
+    /// entry, restore the generation to `gen`, and record the rollback
+    /// outcome. New admissions land back on the old plan as soon as
+    /// this returns.
+    pub fn restore(&self, key: &PlanKey, old: Arc<CachedPlan>, gen: u64, outcome: SwapOutcome) {
+        let mut inner = relock(&self.inner);
+        inner.clock += 1;
+        let now = inner.clock;
+        inner.map.insert(
+            key.clone(),
+            Entry {
+                plan: old,
+                last_use: now,
+            },
+        );
+        let m = inner.meta.entry(key.clone()).or_insert(SwapMeta {
+            generation: gen,
+            outcome: SwapOutcome::None,
+        });
+        m.generation = gen;
+        m.outcome = outcome;
+        self.evict_over_cap(&mut inner);
     }
 
     /// Cached plans currently resident.
@@ -256,5 +413,167 @@ mod tests {
         let err = cache.get_or_compile(&key("nope"), || compile("nope"));
         assert!(err.is_err());
         assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn flip_swaps_atomically_and_tracks_generations() {
+        let cache = PlanCache::with_capacity(4);
+        let k = key("mlp");
+        assert_eq!(cache.generation(&k), 0, "unseen key has no generation");
+        let first = cache.get_or_compile(&k, || compile("mlp")).unwrap();
+        assert_eq!(cache.generation(&k), 1);
+        assert_eq!(cache.swap_meta(&k), Some((1, SwapOutcome::None)));
+        let (from, to, old) = cache.flip(&k, compile("mlp").unwrap()).unwrap();
+        assert_eq!((from, to), (1, 2));
+        assert!(Arc::ptr_eq(old.as_ref().unwrap(), &first));
+        let now = cache
+            .get_or_compile(&k, || panic!("flipped entry must be a hit"))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&now, &first), "admissions land on the new generation");
+        let snap = cache.snapshot_meta();
+        assert!(snap
+            .iter()
+            .any(|(sk, g, o)| sk == &k && *g == 2 && *o == SwapOutcome::Committed));
+    }
+
+    #[test]
+    fn restore_rolls_back_to_the_old_generation() {
+        let cache = PlanCache::with_capacity(4);
+        let k = key("mlp");
+        let first = cache.get_or_compile(&k, || compile("mlp")).unwrap();
+        let (from, _, old) = cache.flip(&k, compile("mlp").unwrap()).unwrap();
+        cache.restore(
+            &k,
+            old.unwrap(),
+            from,
+            SwapOutcome::RolledBack(SwapStage::PostFlip),
+        );
+        let serving = cache
+            .get_or_compile(&k, || panic!("restored entry must be a hit"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&serving, &first), "old generation serves again");
+        assert_eq!(
+            cache.swap_meta(&k),
+            Some((1, SwapOutcome::RolledBack(SwapStage::PostFlip)))
+        );
+    }
+
+    #[test]
+    fn flip_refuses_an_unverifiable_plan() {
+        use crate::exec::Loc;
+        let cache = PlanCache::with_capacity(2);
+        let k = key("mlp");
+        let first = cache.get_or_compile(&k, || compile("mlp")).unwrap();
+        let mut bad = compile("mlp").unwrap();
+        let slot = bad.slot_count + 5;
+        if let Some(l) = bad.loc.iter_mut().find(|l| matches!(l, Some(Loc::Slot(_)))) {
+            *l = Some(Loc::Slot(slot));
+        }
+        let err = cache.flip(&k, bad).unwrap_err().to_string();
+        assert!(err.contains("refusing to flip"), "got: {err}");
+        let serving = cache.get_or_compile(&k, || panic!("must be a hit")).unwrap();
+        assert!(Arc::ptr_eq(&serving, &first), "old plan must keep serving");
+        assert_eq!(cache.generation(&k), 1, "generation must not advance");
+    }
+
+    #[test]
+    fn swap_meta_survives_eviction() {
+        let cache = PlanCache::with_capacity(1);
+        let k = key("mlp");
+        cache.get_or_compile(&k, || compile("mlp")).unwrap();
+        cache.flip(&k, compile("mlp").unwrap()).unwrap();
+        // evict mlp by inserting another model into the 1-slot cache
+        cache
+            .get_or_compile(&key("alexnet"), || compile("alexnet"))
+            .unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(
+            cache.swap_meta(&k),
+            Some((2, SwapOutcome::Committed)),
+            "history must survive the plan being shed"
+        );
+        // recompiling after eviction keeps the generation counter
+        cache.get_or_compile(&k, || compile("mlp")).unwrap();
+        assert_eq!(cache.generation(&k), 2);
+    }
+
+    #[test]
+    fn old_generation_pool_is_released_after_last_holder_drops() {
+        let cache = PlanCache::with_capacity(2);
+        let k = key("mlp");
+        let held = cache.get_or_compile(&k, || compile("mlp")).unwrap();
+        relock(&held.pool).push(held.plan.workspace());
+        let weak = Arc::downgrade(&held);
+        let (_, _, old) = cache.flip(&k, compile("mlp").unwrap()).unwrap();
+        drop(old);
+        // an in-flight batch still holds the old generation alive
+        assert!(weak.upgrade().is_some(), "in-flight holder keeps it alive");
+        drop(held);
+        assert!(
+            weak.upgrade().is_none(),
+            "pool must be freed with the last holder, not leaked"
+        );
+    }
+
+    #[test]
+    fn concurrent_flips_race_eviction_and_in_flight_batches() {
+        use crate::exec::Batcher;
+        use crate::tensor::Tensor;
+        use crate::util::par;
+        use std::sync::atomic::AtomicBool;
+        let _serial = par::test_lock();
+        for width in [1usize, 8] {
+            par::with_threads(width, || {
+                let cache = Arc::new(PlanCache::with_capacity(2));
+                let k = key("mlp");
+                let old = cache.get_or_compile(&k, || compile("mlp")).unwrap();
+                let weak = Arc::downgrade(&old);
+                let stop = Arc::new(AtomicBool::new(false));
+                let (c2, s2) = (Arc::clone(&cache), Arc::clone(&stop));
+                let flipper = std::thread::spawn(move || {
+                    let mut flips = 0usize;
+                    while !s2.load(Ordering::Relaxed) {
+                        c2.flip(&key("mlp"), compile("mlp").unwrap()).unwrap();
+                        flips += 1;
+                    }
+                    flips
+                });
+                let (c3, s3) = (Arc::clone(&cache), Arc::clone(&stop));
+                let evictor = std::thread::spawn(move || {
+                    while !s3.load(Ordering::Relaxed) {
+                        c3.get_or_compile(&key("alexnet"), || compile("alexnet"))
+                            .unwrap();
+                        c3.get_or_compile(&key("resnet18"), || compile("resnet18"))
+                            .unwrap();
+                    }
+                });
+                // in-flight batches on the pre-flip generation keep
+                // producing that generation's exact bits throughout
+                let x = Tensor::zeros(&[2, 3, 8, 8]);
+                let want = old.plan.predict(&x).unwrap();
+                let pool = std::mem::take(&mut *relock(&old.pool));
+                let batcher = Batcher::with_pool(&old.plan, pool);
+                for _ in 0..10 {
+                    for out in batcher.run_batch(&[x.clone(), x.clone()]).unwrap() {
+                        assert_eq!(out.shape, want.shape);
+                        for (a, b) in out.data.iter().zip(&want.data) {
+                            assert_eq!(a.to_bits(), b.to_bits());
+                        }
+                    }
+                }
+                *relock(&old.pool) = batcher.into_pool();
+                stop.store(true, Ordering::Relaxed);
+                let flips = flipper.join().unwrap();
+                evictor.join().unwrap();
+                assert!(flips > 0, "flipper must have flipped");
+                assert!(cache.len() <= 2, "eviction must hold the cap");
+                assert!(cache.generation(&key("mlp")) > 1);
+                drop(old);
+                assert!(
+                    weak.upgrade().is_none(),
+                    "old generations must be released once batches finish"
+                );
+            });
+        }
     }
 }

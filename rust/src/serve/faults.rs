@@ -18,8 +18,13 @@
 //! visit; `slow` takes `prob:millis`. Sites accept only the faults that
 //! make sense there: `panic` at `resolve`/`group` (both inside the
 //! batch loop's `catch_unwind`), `slow` at `batch`/`group`, `torn` at
-//! `frame` only. Configure via `ServeCfg::faults`, the `spa serve
-//! --faults` flag, or the `SPA_FAULTS` environment variable.
+//! `frame` only. The live-swap pipeline adds three gates of its own —
+//! `swap.verify_fail` (static verification of the candidate plan
+//! reports failure), `swap.shadow_diverge` (the shadow-parity gate
+//! reports divergence), and `swap.post_flip_panic` (a batch group
+//! panics inside the post-flip monitoring window) — each proving one
+//! rollback path recovers. Configure via `ServeCfg::faults`, the
+//! `spa serve --faults` flag, or the `SPA_FAULTS` environment variable.
 
 use crate::util::Rng;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -42,10 +47,27 @@ pub enum Site {
     Batch,
     /// Writing a response frame back to a client.
     Frame,
+    /// Static verification of a swap candidate (`check_graph` +
+    /// `check_plan` at Strict).
+    SwapVerify,
+    /// The shadow-parity gate comparing candidate outputs against the
+    /// serving plan on live requests.
+    SwapShadow,
+    /// Batch-group execution inside the post-flip monitoring window
+    /// (inside the batch loop's `catch_unwind`).
+    SwapPostFlip,
 }
 
 /// All sites, in the fixed order their PRNG streams are forked.
-pub const SITES: [Site; 4] = [Site::Resolve, Site::Group, Site::Batch, Site::Frame];
+pub const SITES: [Site; 7] = [
+    Site::Resolve,
+    Site::Group,
+    Site::Batch,
+    Site::Frame,
+    Site::SwapVerify,
+    Site::SwapShadow,
+    Site::SwapPostFlip,
+];
 
 impl Site {
     /// Stable name used in specs and panic messages.
@@ -55,6 +77,9 @@ impl Site {
             Site::Group => "group",
             Site::Batch => "batch",
             Site::Frame => "frame",
+            Site::SwapVerify => "swap.verify_fail",
+            Site::SwapShadow => "swap.shadow_diverge",
+            Site::SwapPostFlip => "swap.post_flip_panic",
         }
     }
 
@@ -64,6 +89,9 @@ impl Site {
             Site::Group => 1,
             Site::Batch => 2,
             Site::Frame => 3,
+            Site::SwapVerify => 4,
+            Site::SwapShadow => 5,
+            Site::SwapPostFlip => 6,
         }
     }
 }
@@ -77,6 +105,10 @@ pub enum Fault {
     Slow(Duration),
     /// Write a deliberately truncated frame and sever the connection.
     Torn,
+    /// Report failure at a swap gate: [`FaultPlan::fire`] returns `true`
+    /// and the swap pipeline converts it into a failed verification or
+    /// parity check (no unwind, no sleep).
+    Fail,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -90,11 +122,11 @@ struct Rule {
 pub struct FaultPlan {
     seed: u64,
     spec: String,
-    rules: [Option<Rule>; 4],
+    rules: [Option<Rule>; 7],
     /// One independent stream per site, forked from `seed` in `SITES`
     /// order, so concurrency at one site never perturbs another's rolls.
-    streams: [Mutex<Rng>; 4],
-    injected: [AtomicUsize; 4],
+    streams: [Mutex<Rng>; 7],
+    injected: [AtomicUsize; 7],
 }
 
 impl std::fmt::Debug for FaultPlan {
@@ -110,7 +142,7 @@ impl FaultPlan {
     /// Parse a spec string (grammar in the module docs).
     pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
         let mut seed = 0u64;
-        let mut rules: [Option<Rule>; 4] = [None; 4];
+        let mut rules: [Option<Rule>; 7] = [None; 7];
         for token in spec.split(';').map(str::trim).filter(|t| !t.is_empty()) {
             let (key, value) = token
                 .split_once('=')
@@ -124,45 +156,61 @@ impl FaultPlan {
             let (site_name, kind) = key.split_once('.').ok_or_else(|| {
                 anyhow::anyhow!("fault key `{key}` is not site.kind (or `seed`)")
             })?;
-            let site = SITES
-                .iter()
-                .copied()
-                .find(|s| s.name() == site_name)
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown fault site `{site_name}` (resolve|group|batch|frame)"
-                    )
-                })?;
-            let (prob_str, fault) = match kind {
-                "panic" => {
-                    anyhow::ensure!(
-                        matches!(site, Site::Resolve | Site::Group),
-                        "`panic` is only valid at resolve/group (inside the \
-                         batch loop's catch_unwind), not `{site_name}`"
-                    );
-                    (value, Fault::Panic)
-                }
-                "slow" => {
-                    anyhow::ensure!(
-                        matches!(site, Site::Batch | Site::Group),
-                        "`slow` is only valid at batch/group, not `{site_name}`"
-                    );
-                    let (p, ms) = value.split_once(':').ok_or_else(|| {
-                        anyhow::anyhow!("`slow` takes prob:millis, got `{value}`")
+            let (site, fault, prob_str) = if site_name == "swap" {
+                // swap gates pair a fixed fault with each site; the
+                // full spec token is the site's stable name
+                let (site, fault) = match kind {
+                    "verify_fail" => (Site::SwapVerify, Fault::Fail),
+                    "shadow_diverge" => (Site::SwapShadow, Fault::Fail),
+                    "post_flip_panic" => (Site::SwapPostFlip, Fault::Panic),
+                    other => anyhow::bail!(
+                        "unknown swap fault `{other}` \
+                         (verify_fail|shadow_diverge|post_flip_panic)"
+                    ),
+                };
+                (site, fault, value)
+            } else {
+                let site = SITES
+                    .iter()
+                    .copied()
+                    .find(|s| s.name() == site_name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown fault site `{site_name}` (resolve|group|batch|frame|swap)"
+                        )
                     })?;
-                    let ms: u64 = ms
-                        .parse()
-                        .map_err(|e| anyhow::anyhow!("bad slow millis `{ms}`: {e}"))?;
-                    (p, Fault::Slow(Duration::from_millis(ms)))
-                }
-                "torn" => {
-                    anyhow::ensure!(
-                        site == Site::Frame,
-                        "`torn` is only valid at frame, not `{site_name}`"
-                    );
-                    (value, Fault::Torn)
-                }
-                other => anyhow::bail!("unknown fault kind `{other}` (panic|slow|torn)"),
+                let (prob_str, fault) = match kind {
+                    "panic" => {
+                        anyhow::ensure!(
+                            matches!(site, Site::Resolve | Site::Group),
+                            "`panic` is only valid at resolve/group (inside the \
+                             batch loop's catch_unwind), not `{site_name}`"
+                        );
+                        (value, Fault::Panic)
+                    }
+                    "slow" => {
+                        anyhow::ensure!(
+                            matches!(site, Site::Batch | Site::Group),
+                            "`slow` is only valid at batch/group, not `{site_name}`"
+                        );
+                        let (p, ms) = value.split_once(':').ok_or_else(|| {
+                            anyhow::anyhow!("`slow` takes prob:millis, got `{value}`")
+                        })?;
+                        let ms: u64 = ms
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad slow millis `{ms}`: {e}"))?;
+                        (p, Fault::Slow(Duration::from_millis(ms)))
+                    }
+                    "torn" => {
+                        anyhow::ensure!(
+                            site == Site::Frame,
+                            "`torn` is only valid at frame, not `{site_name}`"
+                        );
+                        (value, Fault::Torn)
+                    }
+                    other => anyhow::bail!("unknown fault kind `{other}` (panic|slow|torn)"),
+                };
+                (site, fault, prob_str)
             };
             let prob: f32 = prob_str
                 .parse()
@@ -173,7 +221,8 @@ impl FaultPlan {
             );
             anyhow::ensure!(
                 rules[site.index()].is_none(),
-                "site `{site_name}` is armed twice"
+                "site `{}` is armed twice",
+                site.name()
             );
             rules[site.index()] = Some(Rule { prob, fault });
         }
@@ -183,18 +232,16 @@ impl FaultPlan {
             Mutex::new(root.fork(1)),
             Mutex::new(root.fork(2)),
             Mutex::new(root.fork(3)),
+            Mutex::new(root.fork(4)),
+            Mutex::new(root.fork(5)),
+            Mutex::new(root.fork(6)),
         ];
         Ok(FaultPlan {
             seed,
             spec: spec.to_string(),
             rules,
             streams,
-            injected: [
-                AtomicUsize::new(0),
-                AtomicUsize::new(0),
-                AtomicUsize::new(0),
-                AtomicUsize::new(0),
-            ],
+            injected: std::array::from_fn(|_| AtomicUsize::new(0)),
         })
     }
 
@@ -222,7 +269,8 @@ impl FaultPlan {
 
     /// Roll `site` and act on the outcome: sleep through a `Slow`
     /// fault, unwind on `Panic` (message carries [`PANIC_TAG`]), and
-    /// return `true` for `Torn` so the caller tears its frame.
+    /// return `true` for `Torn`/`Fail` so the caller tears its frame or
+    /// fails its swap gate.
     pub fn fire(&self, site: Site) -> bool {
         match self.check(site) {
             None => false,
@@ -234,7 +282,7 @@ impl FaultPlan {
                         std::thread::sleep(d);
                         false
                     }
-                    Fault::Torn => true,
+                    Fault::Torn | Fault::Fail => true,
                 }
             }
         }
@@ -291,10 +339,68 @@ mod tests {
             ("frame.panic=0.5", "only valid at resolve/group"),
             ("frame.slow=0.5:10", "only valid at batch/group"),
             ("group.torn=0.5", "only valid at frame"),
+            // swap gate grammar
+            ("swap.meteor=0.5", "unknown swap fault"),
+            ("swap.verify_fail=1.5", "outside [0, 1]"),
+            ("swap.verify_fail=zebra", "bad fault probability"),
+            (
+                "swap.shadow_diverge=0.5;swap.shadow_diverge=0.2",
+                "armed twice",
+            ),
         ] {
             let err = FaultPlan::parse(spec).unwrap_err().to_string();
             assert!(err.contains(needle), "spec {spec:?}: got `{err}`");
         }
+    }
+
+    #[test]
+    fn parses_swap_gates() {
+        let plan = FaultPlan::parse(
+            "seed=7;swap.verify_fail=1.0;swap.shadow_diverge=0.5;swap.post_flip_panic=0.25",
+        )
+        .unwrap();
+        assert_eq!(
+            plan.rules[Site::SwapVerify.index()].unwrap().fault,
+            Fault::Fail
+        );
+        assert_eq!(
+            plan.rules[Site::SwapShadow.index()].unwrap().fault,
+            Fault::Fail
+        );
+        assert_eq!(
+            plan.rules[Site::SwapPostFlip.index()].unwrap().fault,
+            Fault::Panic
+        );
+        // swap gates never collide with the classic sites
+        for site in [Site::Resolve, Site::Group, Site::Batch, Site::Frame] {
+            assert!(plan.rules[site.index()].is_none());
+        }
+    }
+
+    #[test]
+    fn swap_fail_gates_fire_without_unwinding() {
+        let plan = FaultPlan::parse("seed=5;swap.verify_fail=1.0;swap.shadow_diverge=1.0").unwrap();
+        assert!(plan.fire(Site::SwapVerify), "armed gate must report failure");
+        assert!(plan.fire(Site::SwapShadow));
+        assert_eq!(plan.injected(Site::SwapVerify), 1);
+        assert_eq!(plan.injected(Site::SwapShadow), 1);
+        assert!(!plan.fire(Site::SwapPostFlip), "unarmed gate stays quiet");
+    }
+
+    #[test]
+    fn swap_post_flip_panics_with_the_tag() {
+        let plan = FaultPlan::parse("seed=5;swap.post_flip_panic=1.0").unwrap();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.fire(Site::SwapPostFlip);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains(PANIC_TAG), "panic `{msg}` lacks the tag");
+        assert!(
+            msg.contains("swap.post_flip_panic"),
+            "panic `{msg}` lacks the site name"
+        );
+        assert_eq!(plan.injected(Site::SwapPostFlip), 1);
     }
 
     #[test]

@@ -52,6 +52,17 @@
 //!   (`ServeCfg::faults` or `SPA_FAULTS`) deterministically injects
 //!   panics, slow batches, and torn frames at named sites; the
 //!   `serve_chaos` integration suite drives it.
+//! * **Live re-pruning** — [`Server::swap`] (and the `swap` wire verb)
+//!   re-prunes a serving plan toward a tighter FLOPs target without
+//!   dropping a request: the candidate compiles off the hot path via
+//!   [`crate::exec::Plan::recompile`], passes `check_graph` +
+//!   `check_plan` at [`CheckLevel::Strict`], optionally shadow-executes
+//!   recent live requests against both plans, and only then atomically
+//!   flips the cache entry's generation — in-flight batches finish on
+//!   the old plan, new admissions land on the new one. A failure at any
+//!   stage (verification, shadow divergence, a post-flip panic spike)
+//!   rolls back automatically; the health verb reports each key's
+//!   generation and last-swap outcome.
 //!
 //! ```no_run
 //! use spa::serve::{Client, ServeCfg, Server};
@@ -69,21 +80,23 @@ pub mod faults;
 pub mod protocol;
 pub mod queue;
 
-pub use cache::{CachedPlan, PlanCache};
+pub use cache::{CachedPlan, PlanCache, SwapOutcome, SwapStage};
 pub use faults::{Fault, FaultPlan, Site};
 pub use protocol::{
     Client, ErrorCode, HealthReport, Request, RequestMsg, Response, RetryCfg, ServeError,
+    SwapHealth, SwapReport, SwapRequest,
 };
 pub use queue::{Pending, Queue};
 
+use crate::check::{self, CheckLevel};
 use crate::criteria::Criterion;
 use crate::exec::{Batcher, OptLevel, Plan, PlanOpts};
 use crate::ir::Graph;
 use crate::session::{PlanKey, PrunedModel, Session, Target};
 use crate::tensor::Tensor;
-use crate::util::relock;
+use crate::util::{relock, Rng};
 use crate::zoo::{self, ImageCfg};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -229,51 +242,19 @@ impl Stats {
     }
 }
 
-/// Everything the accept loop, connection handlers, and batch loop
-/// share. Lives behind one `Arc` so a handler outliving the `Server`
-/// handle (client still connected during teardown) keeps valid state.
-struct Shared {
-    queue: Queue,
-    stats: Arc<Stats>,
-    cache: Arc<PlanCache>,
-    shutdown: AtomicBool,
-    draining: AtomicBool,
-    faults: Option<Arc<FaultPlan>>,
-}
-
-impl Shared {
-    fn health_report(&self) -> HealthReport {
-        HealthReport {
-            queue_depth: self.queue.len() as u64,
-            served: self.stats.served() as u64,
-            errors: self.stats.errors() as u64,
-            batches: self.stats.batches() as u64,
-            shed: self.stats.shed() as u64,
-            expired: self.stats.expired() as u64,
-            panics: self.stats.panics() as u64,
-            cache_plans: self.cache.len() as u64,
-            cache_hits: self.cache.hits() as u64,
-            cache_misses: self.cache.misses() as u64,
-            draining: self.draining.load(Ordering::SeqCst) || self.shutdown.load(Ordering::SeqCst),
-        }
-    }
-}
-
-/// Resolves model names to cached compiled plans. Lives on the batch-
-/// loop thread; `keys` memoizes the model → [`PlanKey`] derivation
-/// (pruning must run once before the prune tag is known).
-struct Resolver {
+/// How the server instantiates and (optionally pre-)prunes models:
+/// the `ServeCfg` slice both the batch-loop [`Resolver`] and the swap
+/// pipeline need.
+#[derive(Clone)]
+struct ModelCfg {
     image: ImageCfg,
     seed: u64,
     level: OptLevel,
     prune_rf: Option<f64>,
     criterion: String,
-    cache: Arc<PlanCache>,
-    keys: HashMap<String, PlanKey>,
-    faults: Option<Arc<FaultPlan>>,
 }
 
-impl Resolver {
+impl ModelCfg {
     /// Build the (optionally pruned) graph and derive its cache key.
     /// An unknown model name is the one admission-time user error here,
     /// so it gets its own [`ErrorCode::ModelNotFound`].
@@ -296,7 +277,279 @@ impl Resolver {
             None => Ok((g, PlanKey::baseline(model, self.level))),
         }
     }
+}
 
+/// Live request tensors retained per model as shadow-gate samples.
+const SHADOW_RING: usize = 8;
+
+/// Everything the accept loop, connection handlers, and batch loop
+/// share. Lives behind one `Arc` so a handler outliving the `Server`
+/// handle (client still connected during teardown) keeps valid state.
+struct Shared {
+    queue: Queue,
+    stats: Arc<Stats>,
+    cache: Arc<PlanCache>,
+    shutdown: AtomicBool,
+    draining: AtomicBool,
+    faults: Option<Arc<FaultPlan>>,
+    model: ModelCfg,
+    tick: Duration,
+    /// Models under a post-flip watch window: [`Site::SwapPostFlip`]
+    /// fires only for groups serving these.
+    monitor: Mutex<HashSet<String>>,
+    /// First few live request tensors per model, retained as shadow
+    /// samples for the swap gate.
+    recent: Mutex<HashMap<String, Vec<Tensor>>>,
+    /// Serializes swap pipelines — one candidate compile at a time.
+    swap_lock: Mutex<()>,
+}
+
+impl Shared {
+    fn health_report(&self) -> HealthReport {
+        HealthReport {
+            queue_depth: self.queue.len() as u64,
+            served: self.stats.served() as u64,
+            errors: self.stats.errors() as u64,
+            batches: self.stats.batches() as u64,
+            shed: self.stats.shed() as u64,
+            expired: self.stats.expired() as u64,
+            panics: self.stats.panics() as u64,
+            cache_plans: self.cache.len() as u64,
+            cache_hits: self.cache.hits() as u64,
+            cache_misses: self.cache.misses() as u64,
+            draining: self.draining.load(Ordering::SeqCst) || self.shutdown.load(Ordering::SeqCst),
+            swaps: self
+                .cache
+                .snapshot_meta()
+                .into_iter()
+                .map(|(k, generation, outcome)| SwapHealth {
+                    key: k.to_string(),
+                    generation,
+                    outcome,
+                })
+                .collect(),
+        }
+    }
+
+    /// Shadow-gate inputs for `model`: up to `want` retained live
+    /// request tensors, topped up with seeded synthetic tensors shaped
+    /// like the graph's input (batch 1) when traffic has not filled the
+    /// ring yet.
+    fn shadow_inputs(&self, model: &str, want: usize, g: &Graph) -> Vec<Tensor> {
+        let mut xs: Vec<Tensor> = relock(&self.recent)
+            .get(model)
+            .map(|ring| ring.iter().take(want).cloned().collect())
+            .unwrap_or_default();
+        let mut rng = Rng::new(0x5AAB ^ self.model.seed);
+        while xs.len() < want {
+            let mut shape = g.data(g.inputs[0]).shape.clone();
+            if !shape.is_empty() {
+                shape[0] = 1;
+            }
+            let n = shape.iter().product();
+            xs.push(Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0)));
+        }
+        xs
+    }
+
+    /// The live re-prune pipeline behind [`Server::swap`] and the wire
+    /// `swap` verb: re-prune the serving graph toward `req.target_rf`,
+    /// recompile incrementally off the hot path, gate through static
+    /// verification and an optional shadow-parity check, flip the cache
+    /// generation, then watch for a post-flip panic spike. Returns `Ok`
+    /// for commits *and* rollbacks — the report carries the outcome;
+    /// `Err` only for request-level mistakes (unknown model, bad
+    /// criterion).
+    fn swap(&self, req: &SwapRequest) -> Result<SwapReport, ServeError> {
+        // one candidate compile at a time; predicts keep flowing
+        let _one_at_a_time = relock(&self.swap_lock);
+        Criterion::parse(&req.criterion)
+            .map_err(|e| ServeError::new(ErrorCode::BadRequest, e.to_string()))?;
+        // resolve the serving key, compiling a plan if none is resident
+        let (source, key) = self.model.build_model(&req.model)?;
+        let level = self.model.level;
+        let old = self
+            .cache
+            .get_or_compile(&key, || {
+                Plan::compile(
+                    &source,
+                    PlanOpts {
+                        level,
+                        ..Default::default()
+                    },
+                )
+            })
+            .map_err(|e| ServeError::internal(e.to_string()))?;
+        let from_generation = self.cache.generation(&key);
+        let mut report = SwapReport {
+            key: key.to_string(),
+            from_generation,
+            to_generation: from_generation,
+            outcome: SwapOutcome::None,
+            recompiled_regions: 0,
+            reused_steps: 0,
+            steps: 0,
+            shadow_checked: 0,
+            divergence: 0.0,
+            message: String::new(),
+        };
+        // Stage 1 — build and verify the candidate, entirely off the
+        // hot path: derive the re-prune as a patch against the graph
+        // that is *actually serving*, recompile only the dirty schedule
+        // regions, and gate through the full static analysis at Strict.
+        let base = old.plan.graph().clone();
+        let built = (|| -> anyhow::Result<Plan> {
+            let sess = Session::on(&base)
+                .criterion(Criterion::parse(&req.criterion)?)
+                .target(Target::FlopsRf(req.target_rf))
+                .check(CheckLevel::Strict)
+                .plan()?;
+            let patch = sess.as_patch(&base)?;
+            let mut patched = base.clone();
+            let prep = patch.apply_checked(&mut patched, CheckLevel::Strict)?;
+            let candidate = old.plan.recompile(
+                &patched,
+                &prep,
+                PlanOpts {
+                    level,
+                    ..Default::default()
+                },
+            )?;
+            if let Some(f) = &self.faults {
+                if f.fire(Site::SwapVerify) {
+                    anyhow::bail!("injected swap verification failure");
+                }
+            }
+            check::check_graph(&patched)?;
+            check::check_plan(&candidate)?;
+            Ok(candidate)
+        })();
+        let candidate = match built {
+            Ok(c) => c,
+            Err(e) => {
+                report.outcome = SwapOutcome::RolledBack(SwapStage::Verify);
+                report.message = format!("verification failed: {e:#}");
+                self.cache.record_outcome(&key, report.outcome);
+                return Ok(report);
+            }
+        };
+        report.recompiled_regions = candidate.report().recompiled_regions as u64;
+        report.reused_steps = candidate.report().reused_steps as u64;
+        report.steps = candidate.report().steps as u64;
+        // Stage 2 — shadow parity: run retained live requests through
+        // both plans and bound their divergence (0.0 demands bit-equal)
+        if req.shadow > 0 {
+            let shadow = (|| -> anyhow::Result<(u64, f64)> {
+                let xs = self.shadow_inputs(&req.model, req.shadow as usize, &base);
+                let mut worst = 0.0f64;
+                let mut bit_equal = true;
+                for x in &xs {
+                    let a = old.plan.predict(x)?;
+                    let b = candidate.predict(x)?;
+                    anyhow::ensure!(
+                        a.shape == b.shape,
+                        "shadow output shapes diverged: {:?} vs {:?}",
+                        a.shape,
+                        b.shape
+                    );
+                    for (u, v) in a.data.iter().zip(&b.data) {
+                        if u.to_bits() != v.to_bits() {
+                            bit_equal = false;
+                        }
+                        worst = worst.max((f64::from(*u) - f64::from(*v)).abs());
+                    }
+                }
+                if let Some(f) = &self.faults {
+                    if f.fire(Site::SwapShadow) {
+                        anyhow::bail!("injected shadow divergence on {} request(s)", xs.len());
+                    }
+                }
+                if req.max_divergence == 0.0 {
+                    anyhow::ensure!(
+                        bit_equal,
+                        "shadow outputs are not bit-equal (worst |delta| = {worst:e})"
+                    );
+                } else {
+                    anyhow::ensure!(
+                        worst <= req.max_divergence,
+                        "shadow divergence {worst:e} exceeds the {:e} bound",
+                        req.max_divergence
+                    );
+                }
+                Ok((xs.len() as u64, worst))
+            })();
+            match shadow {
+                Ok((checked, worst)) => {
+                    report.shadow_checked = checked;
+                    report.divergence = worst;
+                }
+                Err(e) => {
+                    report.outcome = SwapOutcome::RolledBack(SwapStage::Shadow);
+                    report.message = format!("shadow gate failed: {e:#}");
+                    self.cache.record_outcome(&key, report.outcome);
+                    return Ok(report);
+                }
+            }
+        }
+        // Stage 3 — the flip: atomic under the cache lock. In-flight
+        // batches hold the old Arc and finish on the old plan; every
+        // admission from here on resolves to the new generation.
+        let (from, to, displaced) = match self.cache.flip(&key, candidate) {
+            Ok(v) => v,
+            Err(e) => {
+                report.outcome = SwapOutcome::RolledBack(SwapStage::Verify);
+                report.message = format!("flip refused: {e:#}");
+                self.cache.record_outcome(&key, report.outcome);
+                return Ok(report);
+            }
+        };
+        report.from_generation = from;
+        report.to_generation = to;
+        report.outcome = SwapOutcome::Committed;
+        report.message = "committed".to_string();
+        // Stage 4 — post-flip watch: keep the displaced generation in
+        // hand for a few ticks; a panic spike while the new generation
+        // serves rolls it straight back.
+        let window = (self.tick * 16).max(Duration::from_millis(40));
+        let poll = (self.tick / 2).max(Duration::from_millis(1));
+        let panics_before = self.stats.panics();
+        relock(&self.monitor).insert(req.model.clone());
+        let deadline = Instant::now() + window;
+        let mut spiked = false;
+        while Instant::now() < deadline {
+            std::thread::sleep(poll);
+            if self.stats.panics() > panics_before {
+                spiked = true;
+                break;
+            }
+        }
+        relock(&self.monitor).remove(&req.model);
+        if spiked {
+            report.outcome = SwapOutcome::RolledBack(SwapStage::PostFlip);
+            report.to_generation = from;
+            report.message =
+                format!("rolled back: panic rate spiked within the {window:?} post-flip window");
+            // `displaced` is the plan the flip removed; it can only be
+            // None if eviction raced the key out, in which case the Arc
+            // we resolved at the start is the same generation
+            let prev = displaced.unwrap_or_else(|| Arc::clone(&old));
+            self.cache.restore(&key, prev, from, report.outcome);
+        }
+        Ok(report)
+    }
+}
+
+/// Resolves model names to cached compiled plans. Lives on the batch-
+/// loop thread; `keys` memoizes the model → [`PlanKey`] derivation
+/// (pruning must run once before the prune tag is known).
+struct Resolver {
+    model: ModelCfg,
+    cache: Arc<PlanCache>,
+    keys: HashMap<String, PlanKey>,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+impl Resolver {
     fn plan_for(&mut self, model: &str) -> Result<Arc<CachedPlan>, ServeError> {
         if let Some(f) = &self.faults {
             // Site::Resolve may panic; plan_for always runs inside the
@@ -306,19 +559,19 @@ impl Resolver {
         let (key, prebuilt) = match self.keys.get(model) {
             Some(k) => (k.clone(), None),
             None => {
-                let (g, key) = self.build_model(model)?;
+                let (g, key) = self.model.build_model(model)?;
                 self.keys.insert(model.to_string(), key.clone());
                 (key, Some(g))
             }
         };
         let cache = Arc::clone(&self.cache);
-        let level = self.level;
+        let level = self.model.level;
         cache
             .get_or_compile(&key, || {
                 let g = match prebuilt {
                     Some(g) => g,
                     // evicted since the key was derived: rebuild from source
-                    None => self.build_model(model)?.0,
+                    None => self.model.build_model(model)?.0,
                 };
                 Plan::compile(
                     &g,
@@ -452,8 +705,9 @@ fn process_batch(
     batch: Vec<Pending>,
     max_rows: usize,
     tick: Duration,
-    stats: &Stats,
+    shared: &Shared,
 ) {
+    let stats = &*shared.stats;
     // Shed requests whose deadline has long passed instead of computing
     // results nobody is waiting on. One-tick grace: a deadline's primary
     // job is to *accelerate* dispatch, so a request only sheds once it
@@ -488,15 +742,27 @@ fn process_batch(
         }
     }
     for (model, reqs) in &groups {
+        // A model under a post-flip watch window runs its injected
+        // `Site::SwapPostFlip` panic inside the same catch_unwind the
+        // real serving path uses — the monitor must observe the spike
+        // through the ordinary panic counter, not a side channel.
+        let monitored = relock(&shared.monitor).contains(model.as_str());
         // Panic isolation: one group's unwind (a plan bug, a poisoned
         // workspace, an injected fault) answers its own requests with
         // `ErrorCode::Panic` and leaves every other group — and the
         // batch loop itself — serving.
-        let unwound = catch_unwind(AssertUnwindSafe(|| match resolver.plan_for(model) {
-            Ok(cached) => process_group(&cached, reqs, max_rows, resolver.faults.as_deref()),
-            Err(e) => {
-                for p in reqs {
-                    let _ = p.resp.send(Err(e.clone()));
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            if monitored {
+                if let Some(f) = &resolver.faults {
+                    f.fire(Site::SwapPostFlip);
+                }
+            }
+            match resolver.plan_for(model) {
+                Ok(cached) => process_group(&cached, reqs, max_rows, resolver.faults.as_deref()),
+                Err(e) => {
+                    for p in reqs {
+                        let _ = p.resp.send(Err(e.clone()));
+                    }
                 }
             }
         }));
@@ -536,8 +802,19 @@ fn batch_loop(shared: Arc<Shared>, mut resolver: Resolver, tick: Duration, max_b
             // this runs outside the per-group catch_unwind
             f.fire(Site::Batch);
         }
+        // retain the first few live tensors per model as shadow-gate
+        // samples (cheap: only while a model's ring is still filling)
+        {
+            let mut recent = relock(&shared.recent);
+            for p in &batch {
+                let ring = recent.entry(p.model.clone()).or_default();
+                if ring.len() < SHADOW_RING {
+                    ring.push(p.tensor.clone());
+                }
+            }
+        }
         shared.stats.batches.fetch_add(1, Ordering::Relaxed);
-        process_batch(&mut resolver, batch, max_batch, tick, &shared.stats);
+        process_batch(&mut resolver, batch, max_batch, tick, &shared);
     }
 }
 
@@ -593,6 +870,21 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
                         latency_us: t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32,
                         report: shared.health_report(),
                     },
+                    Ok(RequestMsg::Swap(req)) => {
+                        // runs inline on this handler thread — the whole
+                        // pipeline stays off the batch loop's hot path
+                        let result = shared.swap(&req);
+                        let latency_us =
+                            t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32;
+                        match result {
+                            Ok(report) => Response::Swap { latency_us, report },
+                            Err(e) => Response::Err {
+                                latency_us,
+                                code: e.code,
+                                message: e.message,
+                            },
+                        }
+                    }
                     Ok(RequestMsg::Predict(req)) => {
                         let reply = admit_and_wait(&shared, req, t0);
                         let latency_us =
@@ -690,6 +982,13 @@ impl Server {
             Some(f) => Some(f),
             None => FaultPlan::from_env()?.map(Arc::new),
         };
+        let model = ModelCfg {
+            image: cfg.image,
+            seed: cfg.seed,
+            level: cfg.level,
+            prune_rf: cfg.prune_rf,
+            criterion: cfg.criterion.clone(),
+        };
         let shared = Arc::new(Shared {
             queue: Queue::bounded(cfg.queue_cap),
             stats: Arc::new(Stats::new()),
@@ -697,13 +996,14 @@ impl Server {
             shutdown: AtomicBool::new(false),
             draining: AtomicBool::new(false),
             faults,
+            model: model.clone(),
+            tick: cfg.tick,
+            monitor: Mutex::new(HashSet::new()),
+            recent: Mutex::new(HashMap::new()),
+            swap_lock: Mutex::new(()),
         });
         let resolver = Resolver {
-            image: cfg.image,
-            seed: cfg.seed,
-            level: cfg.level,
-            prune_rf: cfg.prune_rf,
-            criterion: cfg.criterion.clone(),
+            model,
             cache,
             keys: HashMap::new(),
             faults: shared.faults.clone(),
@@ -753,6 +1053,20 @@ impl Server {
     /// protocol verb reports the same data to remote clients).
     pub fn health(&self) -> HealthReport {
         self.shared.health_report()
+    }
+
+    /// Live re-prune `model`'s serving plan toward a tighter FLOPs
+    /// target with zero dropped requests — the `swap` wire verb calls
+    /// this same pipeline. The candidate compiles off the hot path
+    /// (incremental [`crate::exec::Plan::recompile`] over the serving
+    /// graph), is gated through static verification at
+    /// [`CheckLevel::Strict`] and an optional shadow-parity check, and
+    /// only then atomically replaces the cache entry, bumping its
+    /// generation; a post-flip panic spike rolls the old generation
+    /// back in. Rollbacks return `Ok` with the stage in the report's
+    /// outcome; `Err` means the request itself was invalid.
+    pub fn swap(&self, req: &SwapRequest) -> anyhow::Result<SwapReport> {
+        self.shared.swap(req).map_err(anyhow::Error::from)
     }
 
     /// Stop admitting new requests while queued work still completes:
@@ -924,6 +1238,66 @@ mod tests {
         assert_eq!(health.served, 3);
         assert_eq!(health.errors, 1);
         assert!(!health.draining);
+        server.shutdown();
+    }
+
+    #[test]
+    fn swap_commits_and_health_reports_the_generation() {
+        let cfg = ServeCfg {
+            tick: Duration::from_millis(1),
+            cache_cap: 2,
+            image: ImageCfg {
+                hw: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let image = cfg.image;
+        let server = Server::spawn(cfg).unwrap();
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        let x = Tensor::zeros(&[1, image.channels, image.hw, image.hw]);
+        // traffic before the swap fills the shadow ring
+        client.predict("mlp", &x).unwrap();
+        let report = server
+            .swap(&SwapRequest {
+                model: "mlp".into(),
+                target_rf: 1.3,
+                criterion: "l1".into(),
+                shadow: 4,
+                max_divergence: f64::INFINITY,
+            })
+            .unwrap();
+        assert_eq!(report.outcome, SwapOutcome::Committed, "{}", report.message);
+        assert_eq!(
+            (report.from_generation, report.to_generation),
+            (1, 2),
+            "first swap flips generation 1 to 2"
+        );
+        assert!(report.steps > 0);
+        assert_eq!(report.shadow_checked, 4);
+        // the new generation serves (same wire key, re-pruned plan)
+        let (y, _) = client.predict("mlp", &x).unwrap();
+        assert_eq!(y.shape, vec![1, image.classes]);
+        // the wire health verb reports the flip
+        let health = client.health().unwrap();
+        let entry = health
+            .swaps
+            .iter()
+            .find(|s| s.key.contains("mlp"))
+            .expect("swapped key in health");
+        assert_eq!(entry.generation, 2);
+        assert_eq!(entry.outcome, SwapOutcome::Committed);
+        // an unknown model is a request-level error, not a rollback
+        let err = server
+            .swap(&SwapRequest {
+                model: "definitely-not-a-model".into(),
+                target_rf: 1.3,
+                criterion: "l1".into(),
+                shadow: 0,
+                max_divergence: 0.0,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("model-not-found"), "got: {err}");
         server.shutdown();
     }
 }

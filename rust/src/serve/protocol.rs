@@ -4,25 +4,34 @@
 //! followed by the body. Request bodies are
 //!
 //! ```text
-//! u8  version (= 2)
-//! u8  verb (0 = predict, 1 = health)
+//! u8  version (= 3)
+//! u8  verb (0 = predict, 1 = health, 2 = swap)
 //! predict: u16 model-name length, then that many UTF-8 bytes
 //!          u32 deadline in milliseconds (0 = no deadline)
 //!          u8 ndim, then ndim × u32 dims
 //!          numel × f32 tensor data (row-major, little-endian)
 //! health:  (no further payload)
+//! swap:    u16 model-name length + bytes, f64 target FLOPs RF,
+//!          u16 criterion length + bytes, u32 shadow-request count,
+//!          f64 max divergence
 //! ```
 //!
 //! and response bodies are
 //!
 //! ```text
-//! u8  status (0 = ok, 1 = error, 2 = health)
+//! u8  status (0 = ok, 1 = error, 2 = health, 3 = swap)
 //! u32 server-measured latency in microseconds (admission → response)
 //! ok:     u8 ndim, ndim × u32 dims, numel × f32 data
 //! error:  u8 error code (see [`ErrorCode`]), u16 message length, then
 //!         that many UTF-8 bytes
 //! health: 10 × u64 counters (queue depth, served, errors, batches,
 //!         shed, expired, panics, cache plans/hits/misses) + u8 draining
+//!         + u16 swap-entry count, then per entry u16 key length +
+//!         bytes, u64 generation, u8 outcome (0 = none, 1 = committed,
+//!         2/3/4 = rolled back at verify/shadow/post-flip)
+//! swap:   u16 key length + bytes, u64 from/to generations, u8 outcome,
+//!         u64 recompiled regions / reused steps / steps / shadow
+//!         checked, f64 divergence, u16 message length + bytes
 //! ```
 //!
 //! Frames are capped at 1 GiB; oversized lengths are rejected before
@@ -38,6 +47,7 @@
 //! stalls mid-frame past the budget is disconnected instead of pinning
 //! the handler forever.
 
+use crate::serve::cache::{SwapOutcome, SwapStage};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use std::io::{ErrorKind, Read, Write};
@@ -45,7 +55,7 @@ use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 /// Protocol version carried in every request.
-pub const VERSION: u8 = 2;
+pub const VERSION: u8 = 3;
 
 /// Hard cap on one frame's body (1 GiB).
 pub const MAX_FRAME: u32 = 1 << 30;
@@ -145,11 +155,58 @@ pub struct Request {
     pub tensor: Tensor,
 }
 
+/// A live re-prune request: swap the serving plan for `model` to one
+/// pruned toward `target_rf`, verified and (optionally) shadow-checked
+/// before the flip — see `crate::serve::Server::swap`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwapRequest {
+    /// Zoo model whose serving plan is re-pruned in place.
+    pub model: String,
+    /// FLOPs reduction factor the candidate is pruned toward.
+    pub target_rf: f64,
+    /// Saliency criterion name (data-free criteria only).
+    pub criterion: String,
+    /// Shadow requests executed against both plans before the flip
+    /// (0 skips the shadow gate).
+    pub shadow: u32,
+    /// Largest element-wise |old − new| the shadow gate tolerates;
+    /// exactly `0.0` demands bit-equal outputs.
+    pub max_divergence: f64,
+}
+
+/// What a swap attempt did, as answered to the `swap` verb and returned
+/// by `crate::serve::Server::swap`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwapReport {
+    /// Display form of the [`crate::session::PlanKey`] that was swapped.
+    pub key: String,
+    /// Generation serving when the swap began.
+    pub from_generation: u64,
+    /// Generation serving when the swap returned (equals
+    /// `from_generation` unless the outcome is `Committed`).
+    pub to_generation: u64,
+    /// Committed, or rolled back at a named stage.
+    pub outcome: SwapOutcome,
+    /// Schedule regions the incremental recompile rebuilt.
+    pub recompiled_regions: u64,
+    /// Schedule steps carried over from the old plan untouched.
+    pub reused_steps: u64,
+    /// Total steps in the candidate plan.
+    pub steps: u64,
+    /// Shadow requests actually executed against both plans.
+    pub shadow_checked: u64,
+    /// Largest element-wise |old − new| the shadow gate observed.
+    pub divergence: f64,
+    /// Human-readable detail (the failure, for rollbacks).
+    pub message: String,
+}
+
 /// A decoded request frame: inference, or a control verb.
 #[derive(Debug, Clone)]
 pub enum RequestMsg {
     Predict(Request),
     Health,
+    Swap(SwapRequest),
 }
 
 /// A server-state snapshot answered to the `health` verb.
@@ -175,6 +232,20 @@ pub struct HealthReport {
     pub cache_misses: u64,
     /// Whether the server has stopped admitting new work.
     pub draining: bool,
+    /// Per-key plan generation and last-swap outcome, sorted by model
+    /// then prune tag (stable wire order).
+    pub swaps: Vec<SwapHealth>,
+}
+
+/// One plan key's swap state inside a [`HealthReport`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SwapHealth {
+    /// Display form of the [`crate::session::PlanKey`].
+    pub key: String,
+    /// Active plan generation (1 = never swapped).
+    pub generation: u64,
+    /// Outcome of the most recent swap attempt.
+    pub outcome: SwapOutcome,
 }
 
 /// A decoded inference response.
@@ -192,6 +263,10 @@ pub enum Response {
     Health {
         latency_us: u32,
         report: HealthReport,
+    },
+    Swap {
+        latency_us: u32,
+        report: SwapReport,
     },
 }
 
@@ -367,6 +442,10 @@ impl<'a> Cur<'a> {
         ]))
     }
 
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
     fn done(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.off == self.b.len(),
@@ -416,9 +495,50 @@ fn get_tensor(c: &mut Cur<'_>) -> anyhow::Result<Tensor> {
     Ok(Tensor::new(shape, data))
 }
 
+/// One-byte wire form of a [`SwapOutcome`].
+fn outcome_to_u8(o: SwapOutcome) -> u8 {
+    match o {
+        SwapOutcome::None => 0,
+        SwapOutcome::Committed => 1,
+        SwapOutcome::RolledBack(SwapStage::Verify) => 2,
+        SwapOutcome::RolledBack(SwapStage::Shadow) => 3,
+        SwapOutcome::RolledBack(SwapStage::PostFlip) => 4,
+    }
+}
+
+fn outcome_from_u8(v: u8) -> anyhow::Result<SwapOutcome> {
+    Ok(match v {
+        0 => SwapOutcome::None,
+        1 => SwapOutcome::Committed,
+        2 => SwapOutcome::RolledBack(SwapStage::Verify),
+        3 => SwapOutcome::RolledBack(SwapStage::Shadow),
+        4 => SwapOutcome::RolledBack(SwapStage::PostFlip),
+        other => anyhow::bail!("unknown swap outcome {other} on the wire"),
+    })
+}
+
+fn put_str(out: &mut Vec<u8>, what: &str, s: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        s.len() <= u16::MAX as usize,
+        "{what} of {} bytes exceeds the wire limit",
+        s.len()
+    );
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn get_str(c: &mut Cur<'_>, what: &str) -> anyhow::Result<String> {
+    let len = c.u16()? as usize;
+    Ok(std::str::from_utf8(c.take(len)?)
+        .map_err(|e| anyhow::anyhow!("{what} is not UTF-8: {e}"))?
+        .to_string())
+}
+
 /// Request verbs on the wire.
 const VERB_PREDICT: u8 = 0;
 const VERB_HEALTH: u8 = 1;
+const VERB_SWAP: u8 = 2;
 
 /// Encode a predict-request body (frame it with [`write_frame`]).
 pub fn encode_request(model: &str, deadline_ms: u32, t: &Tensor) -> anyhow::Result<Vec<u8>> {
@@ -440,6 +560,19 @@ pub fn encode_request(model: &str, deadline_ms: u32, t: &Tensor) -> anyhow::Resu
 /// Encode a health-request body.
 pub fn encode_health_request() -> Vec<u8> {
     vec![VERSION, VERB_HEALTH]
+}
+
+/// Encode a swap-request body (frame it with [`write_frame`]).
+pub fn encode_swap_request(req: &SwapRequest) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(32 + req.model.len() + req.criterion.len());
+    out.push(VERSION);
+    out.push(VERB_SWAP);
+    put_str(&mut out, "model name", &req.model)?;
+    out.extend_from_slice(&req.target_rf.to_bits().to_le_bytes());
+    put_str(&mut out, "criterion name", &req.criterion)?;
+    out.extend_from_slice(&req.shadow.to_le_bytes());
+    out.extend_from_slice(&req.max_divergence.to_bits().to_le_bytes());
+    Ok(out)
 }
 
 /// Decode a request body.
@@ -466,6 +599,21 @@ pub fn decode_request(body: &[u8]) -> anyhow::Result<RequestMsg> {
         VERB_HEALTH => {
             c.done()?;
             Ok(RequestMsg::Health)
+        }
+        VERB_SWAP => {
+            let model = get_str(&mut c, "model name")?;
+            let target_rf = c.f64()?;
+            let criterion = get_str(&mut c, "criterion name")?;
+            let shadow = c.u32()?;
+            let max_divergence = c.f64()?;
+            c.done()?;
+            Ok(RequestMsg::Swap(SwapRequest {
+                model,
+                target_rf,
+                criterion,
+                shadow,
+                max_divergence,
+            }))
         }
         other => anyhow::bail!("unknown request verb {other}"),
     }
@@ -511,6 +659,38 @@ pub fn encode_response(resp: &Response) -> anyhow::Result<Vec<u8>> {
                 out.extend_from_slice(&v.to_le_bytes());
             }
             out.push(u8::from(report.draining));
+            anyhow::ensure!(
+                report.swaps.len() <= u16::MAX as usize,
+                "{} swap entries exceed the wire limit",
+                report.swaps.len()
+            );
+            out.extend_from_slice(&(report.swaps.len() as u16).to_le_bytes());
+            for s in &report.swaps {
+                put_str(&mut out, "plan key", &s.key)?;
+                out.extend_from_slice(&s.generation.to_le_bytes());
+                out.push(outcome_to_u8(s.outcome));
+            }
+        }
+        Response::Swap { latency_us, report } => {
+            out.push(3u8);
+            out.extend_from_slice(&latency_us.to_le_bytes());
+            put_str(&mut out, "plan key", &report.key)?;
+            out.extend_from_slice(&report.from_generation.to_le_bytes());
+            out.extend_from_slice(&report.to_generation.to_le_bytes());
+            out.push(outcome_to_u8(report.outcome));
+            for v in [
+                report.recompiled_regions,
+                report.reused_steps,
+                report.steps,
+                report.shadow_checked,
+            ] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend_from_slice(&report.divergence.to_bits().to_le_bytes());
+            let msg = report.message.as_bytes();
+            let take = msg.len().min(u16::MAX as usize);
+            out.extend_from_slice(&(take as u16).to_le_bytes());
+            out.extend_from_slice(&msg[..take]);
         }
     }
     Ok(out)
@@ -537,7 +717,7 @@ pub fn decode_response(body: &[u8]) -> anyhow::Result<Response> {
             }
         }
         2 => {
-            let report = HealthReport {
+            let mut report = HealthReport {
                 queue_depth: c.u64()?,
                 served: c.u64()?,
                 errors: c.u64()?,
@@ -549,8 +729,43 @@ pub fn decode_response(body: &[u8]) -> anyhow::Result<Response> {
                 cache_hits: c.u64()?,
                 cache_misses: c.u64()?,
                 draining: c.u8()? != 0,
+                swaps: Vec::new(),
             };
+            let n = c.u16()? as usize;
+            for _ in 0..n {
+                report.swaps.push(SwapHealth {
+                    key: get_str(&mut c, "plan key")?,
+                    generation: c.u64()?,
+                    outcome: outcome_from_u8(c.u8()?)?,
+                });
+            }
             Response::Health { latency_us, report }
+        }
+        3 => {
+            let key = get_str(&mut c, "plan key")?;
+            let from_generation = c.u64()?;
+            let to_generation = c.u64()?;
+            let outcome = outcome_from_u8(c.u8()?)?;
+            let recompiled_regions = c.u64()?;
+            let reused_steps = c.u64()?;
+            let steps = c.u64()?;
+            let shadow_checked = c.u64()?;
+            let divergence = c.f64()?;
+            let mlen = c.u16()? as usize;
+            let message = String::from_utf8_lossy(c.take(mlen)?).into_owned();
+            let report = SwapReport {
+                key,
+                from_generation,
+                to_generation,
+                outcome,
+                recompiled_regions,
+                reused_steps,
+                steps,
+                shadow_checked,
+                divergence,
+                message,
+            };
+            Response::Swap { latency_us, report }
         }
         other => anyhow::bail!("unknown response status {other}"),
     };
@@ -688,17 +903,21 @@ impl Client {
         match self.round_trip(&body)? {
             Response::Ok { latency_us, tensor } => Ok(Ok((tensor, latency_us))),
             Response::Err { code, message, .. } => Ok(Err(ServeError::new(code, message))),
-            Response::Health { .. } => Err(std::io::Error::new(
+            Response::Health { .. } | Response::Swap { .. } => Err(std::io::Error::new(
                 ErrorKind::InvalidData,
-                "health response to a predict request",
+                "control response to a predict request",
             )),
         }
     }
 
     /// Infer with capped jittered-backoff retries: [`ErrorCode::Overloaded`]
     /// rejections back off and retry on the same connection; transport
-    /// failures (broken/torn connection) reconnect first. Other typed
-    /// errors surface immediately — they are not transient.
+    /// failures (broken/torn connection) reconnect first. A single
+    /// [`ErrorCode::ShuttingDown`] is treated as the brief window of a
+    /// server restart or plan-generation flip: the client backs off,
+    /// reconnects once, and retries — a second one surfaces immediately
+    /// (the server really is going away). Other typed errors surface
+    /// immediately — they are not transient.
     pub fn predict_retry(
         &mut self,
         model: &str,
@@ -709,6 +928,7 @@ impl Client {
         let mut rng = Rng::new(retry.seed);
         let attempts = retry.attempts.max(1);
         let mut last = anyhow::anyhow!("no attempts made");
+        let mut reconnected_on_shutdown = false;
         for attempt in 0..attempts {
             if attempt > 0 {
                 std::thread::sleep(backoff_delay(retry, attempt, &mut rng));
@@ -725,6 +945,11 @@ impl Client {
             match self.try_predict(model, x, deadline) {
                 Ok(Ok(r)) => return Ok(r),
                 Ok(Err(e)) if e.code == ErrorCode::Overloaded => last = e.into(),
+                Ok(Err(e)) if e.code == ErrorCode::ShuttingDown && !reconnected_on_shutdown => {
+                    reconnected_on_shutdown = true;
+                    self.broken = true;
+                    last = e.into();
+                }
                 Ok(Err(e)) => return Err(e.into()),
                 Err(io) => {
                     self.broken = true;
@@ -741,7 +966,21 @@ impl Client {
         match self.round_trip(&encode_health_request())? {
             Response::Health { report, .. } => Ok(report),
             Response::Err { code, message, .. } => Err(ServeError::new(code, message).into()),
-            Response::Ok { .. } => anyhow::bail!("predict response to a health request"),
+            _ => anyhow::bail!("mismatched response to a health request"),
+        }
+    }
+
+    /// Ask the server to live re-prune `model`'s serving plan (see
+    /// `crate::serve::Server::swap`). Blocks until the swap pipeline —
+    /// recompile, verify, shadow, flip, post-flip monitor — has
+    /// resolved; a rollback still returns `Ok` with the outcome in the
+    /// report.
+    pub fn swap(&mut self, req: &SwapRequest) -> anyhow::Result<SwapReport> {
+        let body = encode_swap_request(req)?;
+        match self.round_trip(&body)? {
+            Response::Swap { report, .. } => Ok(report),
+            Response::Err { code, message, .. } => Err(ServeError::new(code, message).into()),
+            _ => anyhow::bail!("mismatched response to a swap request"),
         }
     }
 
@@ -865,6 +1104,68 @@ mod tests {
     }
 
     #[test]
+    fn swap_request_round_trips() {
+        let req = SwapRequest {
+            model: "resnet18".into(),
+            target_rf: 2.5,
+            criterion: "l1".into(),
+            shadow: 16,
+            max_divergence: 0.125,
+        };
+        let body = encode_swap_request(&req).unwrap();
+        match decode_request(&body).unwrap() {
+            RequestMsg::Swap(got) => assert_eq!(got, req),
+            _ => panic!("expected a swap request"),
+        }
+        // trailing garbage and truncation are malformed, not a crash
+        let mut bad = encode_swap_request(&req).unwrap();
+        bad.push(0);
+        assert!(decode_request(&bad).is_err());
+        assert!(decode_request(&body[..body.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn swap_response_round_trips_every_outcome() {
+        for outcome in [
+            SwapOutcome::None,
+            SwapOutcome::Committed,
+            SwapOutcome::RolledBack(SwapStage::Verify),
+            SwapOutcome::RolledBack(SwapStage::Shadow),
+            SwapOutcome::RolledBack(SwapStage::PostFlip),
+        ] {
+            assert_eq!(outcome_from_u8(outcome_to_u8(outcome)).unwrap(), outcome);
+            let report = SwapReport {
+                key: "model `mlp` at Exact".into(),
+                from_generation: 3,
+                to_generation: 4,
+                outcome,
+                recompiled_regions: 2,
+                reused_steps: 11,
+                steps: 13,
+                shadow_checked: 8,
+                divergence: 0.5,
+                message: "ok".into(),
+            };
+            let resp = Response::Swap {
+                latency_us: 77,
+                report: report.clone(),
+            };
+            match decode_response(&encode_response(&resp).unwrap()).unwrap() {
+                Response::Swap {
+                    latency_us,
+                    report: got,
+                } => {
+                    assert_eq!(latency_us, 77);
+                    assert_eq!(got, report);
+                }
+                _ => panic!("expected swap"),
+            }
+        }
+        // an unknown outcome byte is a decode error, not a panic
+        assert!(outcome_from_u8(9).is_err());
+    }
+
+    #[test]
     fn health_response_round_trips() {
         let report = HealthReport {
             queue_depth: 3,
@@ -878,6 +1179,18 @@ mod tests {
             cache_hits: 90,
             cache_misses: 2,
             draining: true,
+            swaps: vec![
+                SwapHealth {
+                    key: "model `mlp` at Exact".into(),
+                    generation: 2,
+                    outcome: SwapOutcome::Committed,
+                },
+                SwapHealth {
+                    key: "model `resnet18` at Exact".into(),
+                    generation: 1,
+                    outcome: SwapOutcome::RolledBack(SwapStage::PostFlip),
+                },
+            ],
         };
         let resp = Response::Health {
             latency_us: 11,
@@ -1021,9 +1334,9 @@ mod tests {
     #[test]
     fn malformed_frames_are_rejected() {
         assert!(decode_request(&[]).is_err());
-        // bad version (including the retired v1)
+        // bad version (including the retired v1 and v2)
         let t = Tensor::new(vec![1], vec![1.0]);
-        for v in [1u8, 99] {
+        for v in [1u8, 2, 99] {
             let mut body = encode_request("mlp", 0, &t).unwrap();
             body[0] = v;
             let err = decode_request(&body).unwrap_err().to_string();

@@ -317,6 +317,59 @@ impl Plan {
     pub fn into_parts(self) -> (Groups, Vec<(usize, usize)>) {
         (self.groups, self.selected)
     }
+
+    /// Derive a [`crate::ir::GraphPatch`] that rewrites `base` into this
+    /// plan's pruned graph. Structured pruning slices channels out of
+    /// parameter tensors but never rewrites topology, so the patch is
+    /// parameter-edits-only — exactly the localized diff
+    /// [`crate::exec::Plan::recompile`] and the serve layer's live swap
+    /// consume. `base` must be the graph this session planned against
+    /// (or an identically-shaped clone, e.g. a serving plan's private
+    /// copy); a topology mismatch is an error, not a bigger patch.
+    pub fn as_patch(&self, base: &Graph) -> anyhow::Result<crate::ir::GraphPatch> {
+        anyhow::ensure!(
+            base.ops.len() == self.pruned.ops.len()
+                && base.datas.len() == self.pruned.datas.len(),
+            "pruned graph's topology differs from the base ({} ops / {} datas vs {} / {})",
+            self.pruned.ops.len(),
+            self.pruned.datas.len(),
+            base.ops.len(),
+            base.datas.len()
+        );
+        for (a, b) in base.ops.iter().zip(&self.pruned.ops) {
+            anyhow::ensure!(
+                a.name == b.name && a.inputs == b.inputs && a.outputs == b.outputs,
+                "op `{}` was rewired between base and pruned graph — \
+                 as_patch requires identical topology",
+                a.name
+            );
+        }
+        let mut p = crate::ir::GraphPatch::new(
+            format!("re-prune:{}:rf{:.2}", self.criterion, self.achieved_rf),
+            base,
+        );
+        for (db, dp) in base.datas.iter().zip(&self.pruned.datas) {
+            match (db.param(), dp.param()) {
+                (Some(old), Some(new)) => {
+                    let same = old.shape == new.shape
+                        && old
+                            .data
+                            .iter()
+                            .zip(&new.data)
+                            .all(|(x, y)| x.to_bits() == y.to_bits());
+                    if !same {
+                        p.set_param(db.id, new.clone());
+                    }
+                }
+                (None, None) => {}
+                _ => anyhow::bail!(
+                    "data `{}` changed kind between base and pruned graph",
+                    db.name
+                ),
+            }
+        }
+        Ok(p)
+    }
 }
 
 /// The output of [`Plan::apply`]: the pruned graph plus its report.
@@ -520,6 +573,77 @@ mod tests {
             .unwrap();
         let pruned = plan.apply().unwrap();
         crate::check::check_graph(&pruned.graph).unwrap();
+    }
+
+    #[test]
+    fn as_patch_reproduces_the_pruned_graph() {
+        use crate::engine;
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let g = mini();
+        let plan = Session::on(&g)
+            .criterion(Criterion::L1)
+            .target(Target::FlopsRf(1.6))
+            .plan()
+            .unwrap();
+        let pruned = plan.apply().unwrap();
+        let patch = plan.as_patch(&g).unwrap();
+        assert!(!patch.is_empty());
+        let mut patched = g.clone();
+        let rep = patch.apply(&mut patched).unwrap();
+        assert_eq!(
+            rep.added_ops + rep.removed_ops + rep.rewired,
+            0,
+            "a re-prune patch is parameter edits only"
+        );
+        assert!(rep.param_edits > 0);
+        assert_eq!(patched.num_params(), pruned.graph.num_params());
+        let mut rng = Rng::new(21);
+        let shape = patched.data(patched.inputs[0]).shape.clone();
+        let n: usize = shape.iter().product();
+        let x = Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0));
+        let a = engine::predict(&patched, x.clone()).unwrap();
+        let b = engine::predict(&pruned.graph, x).unwrap();
+        assert_eq!(a.shape, b.shape);
+        for (p, q) in a.data.iter().zip(&b.data) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        // the incremental recompile path accepts the derived patch
+        let base_plan =
+            crate::exec::Plan::compile(&g, crate::exec::PlanOpts::default()).unwrap();
+        let inc = base_plan
+            .recompile(&patched, &rep, crate::exec::PlanOpts::default())
+            .unwrap();
+        let fresh =
+            crate::exec::Plan::compile(&patched, crate::exec::PlanOpts::default()).unwrap();
+        assert!(inc.report().recompiled_regions >= 1);
+        let shape = patched.data(patched.inputs[0]).shape.clone();
+        let n: usize = shape.iter().product();
+        let x = Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0));
+        let yi = inc.predict(&x).unwrap();
+        let yf = fresh.predict(&x).unwrap();
+        for (p, q) in yi.data.iter().zip(&yf.data) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn as_patch_rejects_a_mismatched_base() {
+        let g = mini();
+        let plan = Session::on(&g)
+            .criterion(Criterion::L1)
+            .target(Target::FlopsRf(1.5))
+            .plan()
+            .unwrap();
+        let other = zoo::vgg16(
+            ImageCfg {
+                hw: 8,
+                ..Default::default()
+            },
+            3,
+        );
+        let err = plan.as_patch(&other).unwrap_err().to_string();
+        assert!(err.contains("topology differs"), "got: {err}");
     }
 
     #[test]

@@ -13,12 +13,17 @@
 //! replay a particular lane locally, e.g.
 //! `SPA_CHAOS_SEED=2 cargo test --test serve_chaos`.
 
+use spa::criteria::Criterion;
 use spa::exec::{Plan, PlanOpts};
+use spa::ir::Graph;
 use spa::serve::{
     faults, Client, ErrorCode, FaultPlan, RetryCfg, ServeCfg, ServeError, Server, Site,
+    SwapOutcome, SwapRequest, SwapStage,
 };
 use spa::tensor::Tensor;
 use spa::zoo::{self, ImageCfg};
+use spa::{CheckLevel, Session, Target};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Once};
 use std::time::Duration;
 
@@ -92,6 +97,49 @@ fn reference(x: &Tensor) -> Tensor {
     let g = zoo::by_name(MODEL, image(), SEED).unwrap();
     let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
     plan.predict(x).unwrap()
+}
+
+/// Re-prune `base` exactly the way the server's swap pipeline does: a
+/// Strict l1 session at `target_rf`, applied to a clone as a verified
+/// patch. At the serve default `OptLevel::Exact` the serving plan's
+/// graph is the compile input verbatim, so chaining this replays the
+/// server's generation lineage bit-for-bit.
+fn repruned(base: &Graph, target_rf: f64) -> Graph {
+    let sess = Session::on(base)
+        .criterion(Criterion::L1)
+        .target(Target::FlopsRf(target_rf))
+        .check(CheckLevel::Strict)
+        .plan()
+        .unwrap();
+    let patch = sess.as_patch(base).unwrap();
+    let mut patched = base.clone();
+    patch
+        .apply_checked(&mut patched, CheckLevel::Strict)
+        .unwrap();
+    patched
+}
+
+fn plan_predict(g: &Graph, x: &Tensor) -> Tensor {
+    let plan = Plan::compile(g, PlanOpts::default()).unwrap();
+    plan.predict(x).unwrap()
+}
+
+fn bits_equal(y: &Tensor, want: &Tensor) -> bool {
+    y.shape == want.shape
+        && y.data
+            .iter()
+            .zip(&want.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+fn swap_req(target_rf: f64, shadow: u32) -> SwapRequest {
+    SwapRequest {
+        model: MODEL.to_string(),
+        target_rf,
+        criterion: "l1".to_string(),
+        shadow,
+        max_divergence: f64::INFINITY,
+    }
 }
 
 fn assert_bit_identical(y: &Tensor, want: &Tensor, who: &str) {
@@ -365,5 +413,297 @@ fn health_verb_reports_counters_and_drain_state() {
     let r = ask(&mut c, MODEL, &x);
     let err = r.expect_err("draining server rejects predicts");
     assert_eq!(err.code, ErrorCode::ShuttingDown);
+    server.drain();
+}
+
+/// The tentpole end-to-end: a server under concurrent client load is
+/// live re-pruned over the wire. Zero requests are dropped, every
+/// response is bit-identical to whichever plan generation served it,
+/// and health reports the committed generation afterwards.
+#[test]
+fn live_swap_under_load_serves_every_request_exactly() {
+    quiet_injected_panics();
+    let server = Server::spawn(ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let addr = server.local_addr();
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.5; 3 * 64]);
+    let base = zoo::by_name(MODEL, image(), SEED).unwrap();
+    let old_want = plan_predict(&base, &x);
+    let new_want = plan_predict(&repruned(&base, 1.3), &x);
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                let (x, old_want, new_want, stop) = (&x, &old_want, &new_want, &stop);
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).expect("connect");
+                    let mut served = 0usize;
+                    while !stop.load(Ordering::SeqCst) {
+                        let (y, _us) =
+                            ask(&mut c, MODEL, x).expect("no request may fail during a swap");
+                        assert!(
+                            bits_equal(&y, old_want) || bits_equal(&y, new_want),
+                            "client {i}: response matches neither plan generation"
+                        );
+                        served += 1;
+                    }
+                    served
+                })
+            })
+            .collect();
+
+        // let the storm build, then re-prune over the wire mid-flight
+        std::thread::sleep(Duration::from_millis(20));
+        let mut cc = Client::connect(addr).expect("swap client");
+        let rep = cc.swap(&swap_req(1.3, 4)).expect("swap transport");
+        assert_eq!(rep.outcome, SwapOutcome::Committed, "{}", rep.message);
+        assert_eq!((rep.from_generation, rep.to_generation), (1, 2));
+        assert_eq!(rep.shadow_checked, 4, "the shadow gate must run live requests");
+        assert!(rep.steps > 0);
+        std::thread::sleep(Duration::from_millis(20));
+        stop.store(true, Ordering::SeqCst);
+        let total: usize = handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .sum();
+        assert!(total > 0, "the storm must have served requests");
+    });
+
+    // the flip is total: post-swap answers come from the new plan only
+    let mut c = Client::connect(addr).expect("reconnect");
+    let (y, _us) = ask(&mut c, MODEL, &x).expect("post-swap predict");
+    assert_bit_identical(&y, &new_want, "post-swap");
+    let h = c.health().expect("health");
+    let entry = h
+        .swaps
+        .iter()
+        .find(|e| e.key.contains(MODEL))
+        .expect("health must report the swapped key");
+    assert_eq!(entry.generation, 2);
+    assert_eq!(entry.outcome, SwapOutcome::Committed);
+    assert_eq!(server.stats().errors(), 0, "zero requests dropped or failed");
+    server.shutdown();
+}
+
+/// An injected verification failure rolls the swap back before the
+/// flip: the generation never advances and the old plan keeps serving
+/// bit-identically.
+#[test]
+fn injected_verify_failure_rolls_back_before_the_flip() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(&format!("seed={};swap.verify_fail=1", chaos_seed()), cfg);
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.5; 3 * 64]);
+    let want = reference(&x);
+    let (y, _us) = ask(&mut c, MODEL, &x).expect("warmup");
+    assert_bit_identical(&y, &want, "warmup");
+
+    let rep = c.swap(&swap_req(1.3, 0)).expect("swap transport");
+    assert_eq!(
+        rep.outcome,
+        SwapOutcome::RolledBack(SwapStage::Verify),
+        "{}",
+        rep.message
+    );
+    assert_eq!(rep.from_generation, 1);
+    assert_eq!(rep.to_generation, 1, "a verify rollback must not advance");
+    assert!(rep.message.contains("verification failed"), "got: {}", rep.message);
+
+    let (y, _us) = ask(&mut c, MODEL, &x).expect("post-rollback predict");
+    assert_bit_identical(&y, &want, "post-rollback");
+    let h = c.health().expect("health");
+    let entry = h.swaps.iter().find(|e| e.key.contains(MODEL)).expect("meta");
+    assert_eq!(entry.generation, 1);
+    assert_eq!(entry.outcome, SwapOutcome::RolledBack(SwapStage::Verify));
+    server.shutdown();
+}
+
+/// An injected shadow divergence fails the parity gate: the candidate
+/// is discarded pre-flip and the old generation keeps serving.
+#[test]
+fn injected_shadow_divergence_rolls_back_pre_flip() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(&format!("seed={};swap.shadow_diverge=1", chaos_seed()), cfg);
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![-0.25; 3 * 64]);
+    let want = reference(&x);
+    let (y, _us) = ask(&mut c, MODEL, &x).expect("warmup");
+    assert_bit_identical(&y, &want, "warmup");
+
+    // the shadow stage only runs when the request asks for it
+    let rep = c.swap(&swap_req(1.3, 4)).expect("swap transport");
+    assert_eq!(
+        rep.outcome,
+        SwapOutcome::RolledBack(SwapStage::Shadow),
+        "{}",
+        rep.message
+    );
+    assert_eq!(rep.to_generation, 1, "a shadow rollback must not advance");
+    assert!(rep.message.contains("shadow gate failed"), "got: {}", rep.message);
+
+    let (y, _us) = ask(&mut c, MODEL, &x).expect("post-rollback predict");
+    assert_bit_identical(&y, &want, "post-rollback");
+    let h = c.health().expect("health");
+    let entry = h.swaps.iter().find(|e| e.key.contains(MODEL)).expect("meta");
+    assert_eq!(entry.generation, 1);
+    assert_eq!(entry.outcome, SwapOutcome::RolledBack(SwapStage::Shadow));
+    server.shutdown();
+}
+
+/// A panic spike right after the flip rolls the swap back to the old
+/// generation automatically — the displaced plan is restored and serves
+/// bit-identically once the monitor window closes.
+#[test]
+fn post_flip_panic_spike_rolls_back_to_the_old_generation() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(&format!("seed={};swap.post_flip_panic=1", chaos_seed()), cfg);
+    let addr = server.local_addr();
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.125; 3 * 64]);
+    let want = reference(&x);
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let hammer = {
+            let (x, stop) = (&x, &stop);
+            s.spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                let mut panics = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    match ask(&mut c, MODEL, x) {
+                        Ok(_) => {}
+                        Err(e) => {
+                            // only the injected post-flip panic may fail
+                            assert_eq!(e.code, ErrorCode::Panic, "got: {e}");
+                            panics += 1;
+                        }
+                    }
+                }
+                panics
+            })
+        };
+        // traffic must be flowing so the post-flip monitor sees batches
+        std::thread::sleep(Duration::from_millis(20));
+        let rep = server.swap(&swap_req(1.3, 0)).expect("swap");
+        assert_eq!(
+            rep.outcome,
+            SwapOutcome::RolledBack(SwapStage::PostFlip),
+            "{}",
+            rep.message
+        );
+        assert_eq!(
+            rep.to_generation, rep.from_generation,
+            "rollback must restore the old generation"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+        stop.store(true, Ordering::SeqCst);
+        let panics = hammer.join().expect("hammer thread");
+        assert!(panics >= 1, "the monitored window must record the injected panic");
+    });
+
+    let mut c = Client::connect(addr).expect("reconnect");
+    let (y, _us) = ask(&mut c, MODEL, &x).expect("post-rollback predict");
+    assert_bit_identical(&y, &want, "post-rollback");
+    let h = c.health().expect("health");
+    let entry = h.swaps.iter().find(|e| e.key.contains(MODEL)).expect("meta");
+    assert_eq!(entry.generation, 1, "the restored generation serves");
+    assert_eq!(entry.outcome, SwapOutcome::RolledBack(SwapStage::PostFlip));
+    server.shutdown();
+}
+
+/// `predict_retry` rides through back-to-back live swaps without a
+/// single lost request, and a genuinely draining server still surfaces
+/// the typed `ShuttingDown` after the one reconnect the retry spends on
+/// a presumed flip window.
+#[test]
+fn predict_retry_rides_through_swaps_and_still_sees_real_drains() {
+    quiet_injected_panics();
+    let server = Server::spawn(ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    })
+    .expect("server spawn");
+    let addr = server.local_addr();
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.75; 3 * 64]);
+    // generation lineage: base, re-pruned at 1.3, then that re-pruned
+    // at 1.5 (the second swap patches the already-pruned serving graph)
+    let g1 = zoo::by_name(MODEL, image(), SEED).unwrap();
+    let g2 = repruned(&g1, 1.3);
+    let g3 = repruned(&g2, 1.5);
+    let wants = [
+        plan_predict(&g1, &x),
+        plan_predict(&g2, &x),
+        plan_predict(&g3, &x),
+    ];
+    let retry = RetryCfg {
+        attempts: 6,
+        backoff: Duration::from_millis(2),
+        max_backoff: Duration::from_millis(20),
+        seed: chaos_seed(),
+    };
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let client = {
+            let (x, wants, stop, retry) = (&x, &wants, &stop, &retry);
+            s.spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                let mut served = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    let (y, _us) = c
+                        .predict_retry(MODEL, x, Duration::ZERO, retry)
+                        .expect("predict_retry must ride through swaps");
+                    assert!(
+                        wants.iter().any(|w| bits_equal(&y, w)),
+                        "response matches no known plan generation"
+                    );
+                    served += 1;
+                }
+                served
+            })
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        for rf in [1.3, 1.5] {
+            let rep = server.swap(&swap_req(rf, 0)).expect("swap");
+            assert_eq!(rep.outcome, SwapOutcome::Committed, "{}", rep.message);
+        }
+        stop.store(true, Ordering::SeqCst);
+        assert!(client.join().expect("client thread") > 0);
+    });
+
+    // a real drain is not a flip blip: after the single ShuttingDown
+    // reconnect, the typed error surfaces instead of looping
+    server.begin_drain();
+    let mut c = Client::connect(addr).expect("connect");
+    let err = c
+        .predict_retry(MODEL, &x, Duration::ZERO, &retry)
+        .expect_err("a draining server must surface ShuttingDown");
+    let msg = err.to_string();
+    assert!(
+        msg.starts_with(ErrorCode::ShuttingDown.name()),
+        "expected a shutting-down error, got: {msg}"
+    );
     server.drain();
 }
