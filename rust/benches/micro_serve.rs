@@ -129,5 +129,31 @@ fn main() {
         "batching speedup at 8 clients: {:.2}x over sequential",
         rps(8) / rps(1)
     );
+
+    // obs lane: the same 8-client load with trace recording on. The
+    // bench-diff gate holds this entry to the same <25% warn threshold
+    // as every other bench, and the served bits must stay identical.
+    spa::obs::ObsCfg::tracing().apply();
+    let mut probe = Client::connect(addr).expect("obs probe connect");
+    let (got, _us) = probe.predict(MODEL, &x).expect("obs probe predict");
+    assert_eq!(want.shape, got.shape, "traced shape drift");
+    for (a, b) in want.data.iter().zip(&got.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "traced serving must stay bit-identical");
+    }
+    drop(probe);
+    let mut last = None;
+    bench("serve/clients8_obs", 0, 1, || {
+        last = Some(run_load(addr, 8, per_client, &x));
+    });
+    spa::obs::ObsCfg::default().apply();
+    let buf = spa::obs::trace::drain();
+    let r = last.expect("one obs load run");
+    assert!(!buf.events.is_empty(), "traced serving must record events");
+    println!(
+        "obs lane: 8 clients {:.0} req/s traced vs {:.0} untraced, {} event(s) recorded",
+        r.req_per_sec,
+        rps(8),
+        buf.events.len() as u64 + buf.dropped
+    );
     server.shutdown();
 }

@@ -7,6 +7,8 @@
 //! spa obspa   --model resnet50 --source datafree --target-rf 1.5
 //! spa serve   --addr 127.0.0.1:7878 --tick-ms 2      # batching inference server
 //! spa swap    --addr 127.0.0.1:7878 --model resnet18 --target-rf 2.0
+//! spa profile --model resnet18 --runs 10             # per-step plan profile
+//! spa trace   --model mlp --out trace.json           # Chrome trace demo run
 //! spa convert --model resnet18 --dialect tf --out model.tf.json
 //! spa import  --file model.tf.json --out model.spa.json
 //! ```
@@ -22,14 +24,16 @@ use crate::analysis;
 use crate::check::CheckLevel;
 use crate::criteria::Criterion;
 use crate::data::ImageDataset;
-use crate::exec::OptLevel;
+use crate::exec::{OptLevel, Plan, PlanOpts, Runner};
 use crate::frontends::{self, Dialect};
 use crate::ir::serde as ir_serde;
+use crate::obs::{self, ObsCfg, Profiler};
 use crate::obspa::CalibSource;
 use crate::prune::Scope;
 use crate::serve::{self, FaultPlan, ServeCfg};
+use crate::tensor::Tensor;
 use crate::train::TrainCfg;
-use crate::util::{Json, JsonObj, Table};
+use crate::util::{Json, JsonObj, Rng, Table};
 use crate::zoo::{self, ImageCfg};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -286,8 +290,50 @@ impl ServeArgs {
                     .map(FaultPlan::parse)
                     .transpose()?
                     .map(Arc::new),
+                obs: f.opt("obs").map(ObsCfg::from_flag).unwrap_or_default(),
             },
         })
+    }
+}
+
+/// `spa profile` flags: per-step profiling of one compiled plan.
+struct ProfileArgs {
+    common: CommonArgs,
+    runs: usize,
+    level: OptLevel,
+    json: Option<String>,
+}
+
+impl ProfileArgs {
+    fn parse(f: &Flags) -> anyhow::Result<ProfileArgs> {
+        let runs = f.usize("runs", 10);
+        anyhow::ensure!(runs > 0, "profile needs --runs >= 1");
+        Ok(ProfileArgs {
+            common: CommonArgs::parse(f, "resnet18"),
+            runs,
+            level: parse_opt_level(&f.get("opt", "exact"))?,
+            json: f.opt("json").map(str::to_string),
+        })
+    }
+}
+
+/// `spa trace` flags: a traced in-process serve demo whose events are
+/// exported as Chrome `trace_event` JSON.
+struct TraceArgs {
+    common: CommonArgs,
+    requests: usize,
+    out: String,
+    metrics: Option<String>,
+}
+
+impl TraceArgs {
+    fn parse(f: &Flags) -> TraceArgs {
+        TraceArgs {
+            common: CommonArgs::parse(f, "mlp"),
+            requests: f.usize("requests", 8),
+            out: f.get("out", "trace.json"),
+            metrics: f.opt("metrics").map(str::to_string),
+        }
     }
 }
 
@@ -341,6 +387,9 @@ struct BenchDiffArgs {
     /// Write the fresh entries (normalized `{name, ns_per_iter}`) here
     /// after diffing, so CI can refresh the committed baseline.
     write_baseline: Option<String>,
+    /// Write the full diff (per-row deltas + summary) as JSON here, for
+    /// machine consumption alongside the human table.
+    json: Option<String>,
 }
 
 impl BenchDiffArgs {
@@ -358,6 +407,7 @@ impl BenchDiffArgs {
             fresh,
             warn_pct: f.f64("warn-pct", 25.0),
             write_baseline,
+            json: f.opt("json").map(str::to_string),
         })
     }
 }
@@ -377,21 +427,28 @@ COMMANDS:
            and report the compiled-plan arena footprint
   serve    [--addr H:P --tick-ms N --max-batch N --cache-cap N]
            [--opt none|exact|fast --prune-rf F --criterion l1]
-           [--queue-cap N --faults <spec>]
+           [--queue-cap N --faults <spec> --obs on|off]
            batching inference server over compiled plans (spa::serve);
-           SIGINT/SIGTERM drain gracefully, --faults injects chaos
+           SIGINT/SIGTERM drain gracefully, --faults injects chaos,
+           --obs (or SPA_OBS=1) records trace events (spa::obs)
   swap     --addr H:P --model <name> --target-rf F [--criterion l1]
            [--shadow-requests N --max-divergence F]
            live re-prune a model on a running server: verify, shadow,
            atomic plan flip, automatic rollback (spa::serve swap verb)
+  profile  --model <name> [--runs N --opt none|exact|fast --json <file>]
+           per-step plan profile: wall time, bytes, GEMM dims, fusion
+           attribution, hottest op first (spa::obs profiler)
+  trace    [--model <name> --requests N --out <file> --metrics <file>]
+           run a traced in-process serve demo and export the events as
+           Chrome trace_event JSON (load in chrome://tracing or Perfetto)
   lint     [--model <name>|all] [--level off|debug|strict]
            run every static checker (spa::check) over the zoo: graph
            shape/coupling invariants, an audited prune, compiled plans;
            `all` also lints a patched-then-repruned surgery lineage
   bench-diff --new <json> [--base <json>] [--warn-pct F]
-           [--write-baseline <json>]
-           compare two SPA_BENCH_JSON snapshots, warn on regressions,
-           optionally refresh the committed baseline
+           [--write-baseline <json> --json <file>]
+           compare two SPA_BENCH_JSON snapshots, warn on regressions and
+           stale baselines, optionally refresh the committed baseline
   convert  --model <name> --dialect <torch|tf|jax|mxnet> --out <file>
   import   --file <dialect json> [--out <spa-ir json>]
   models                                       list zoo models
@@ -601,6 +658,93 @@ fn cmd_swap(a: &SwapArgs) -> anyhow::Result<()> {
         "swap did not commit: {}",
         rep.message
     );
+    Ok(())
+}
+
+/// A deterministic input tensor shaped for `g`'s single graph input.
+fn demo_input(g: &crate::ir::Graph, seed: u64) -> Tensor {
+    let shape = g.data(g.inputs[0]).shape.clone();
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(seed);
+    Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0))
+}
+
+fn cmd_profile(a: &ProfileArgs) -> anyhow::Result<()> {
+    let g = a.common.graph()?;
+    let plan = Plan::compile(
+        &g,
+        PlanOpts {
+            level: a.level,
+            ..Default::default()
+        },
+    )?;
+    let x = demo_input(&g, a.common.seed);
+    let mut runner = Runner::new(&plan);
+    // one unprofiled warm-up so first-touch page faults and the lazy
+    // GEMM weight cache don't land on the measured runs
+    runner.predict(&x)?;
+    let mut prof = Profiler::new();
+    for _ in 0..a.runs {
+        runner.predict_profiled(&x, &mut prof)?;
+    }
+    let rep = prof.report(&plan);
+    print!("{}", rep.render(&format!("spa profile {}", a.common.model)));
+    // a gate, not just a report: if the per-step rows stop accounting
+    // for the end-to-end plan time the profiler (or the schedule's
+    // instrumentation) is broken, and CI should fail loudly rather
+    // than upload a misleading per-op baseline
+    anyhow::ensure!(
+        rep.coverage() > 0.5,
+        "profiled steps account for only {:.1}% of end-to-end time",
+        rep.coverage() * 100.0
+    );
+    if let Some(path) = &a.json {
+        std::fs::write(path, format!("{}\n", rep.to_json()))
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(a: &TraceArgs) -> anyhow::Result<()> {
+    ObsCfg::tracing().apply();
+    // start from empty rings so the export holds only this demo run
+    let _ = obs::trace::drain();
+    let common = &a.common;
+    let server = serve::Server::spawn(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        image: common.icfg,
+        seed: common.seed,
+        obs: ObsCfg::tracing(),
+        ..Default::default()
+    })?;
+    let g = common.graph()?;
+    let x = demo_input(&g, common.seed);
+    let mut client = serve::Client::connect(server.local_addr())?;
+    for _ in 0..a.requests {
+        client.predict(&common.model, &x)?;
+    }
+    let report = client.metrics()?;
+    drop(client);
+    server.drain();
+    let buf = obs::trace::drain();
+    ObsCfg::default().apply();
+    let json = obs::chrome_json(&buf);
+    std::fs::write(&a.out, format!("{json}\n"))
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", a.out))?;
+    println!(
+        "traced {} request(s) against {}: {} event(s) ({} dropped) -> {}",
+        a.requests,
+        common.model,
+        buf.events.len(),
+        buf.dropped,
+        a.out
+    );
+    if let Some(path) = &a.metrics {
+        std::fs::write(path, report.render_prometheus())
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("wrote metrics snapshot to {path}");
+    }
     Ok(())
 }
 
@@ -826,18 +970,29 @@ fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
                     a.base
                 );
             }
-            if let Some(path) = &a.write_baseline {
-                write_bench_baseline(path, &fresh)?;
-                println!("bench-diff: wrote {} entries to {path}", fresh.len());
-            }
-            return Ok(());
+            Vec::new()
         }
     };
+    // a baseline where *every* row is a zero-time placeholder came from
+    // an empty smoke run: say so out loud instead of quietly labelling
+    // each row "no baseline" and reporting a clean diff
+    let stale = !base.is_empty() && base.iter().all(|(_, ns)| *ns <= 0.0);
+    if stale {
+        println!(
+            "::warning::bench-diff: stale baseline at {} — every entry is a zero-time \
+             placeholder; refresh it from a real smoke run (--write-baseline)",
+            a.base
+        );
+    }
     let mut t = Table::new("bench-diff (ns/iter)", &["bench", "base", "new", "delta"]);
+    let mut json_rows: Vec<Json> = Vec::new();
     let mut regressions = 0usize;
     let mut compared = 0usize;
     for (name, new_ns) in &fresh {
         let base_ns = base.iter().find(|(n, _)| n == name).map(|(_, b)| *b);
+        let mut row = JsonObj::new();
+        row.insert("name", name.as_str());
+        row.insert("new_ns", *new_ns);
         match bench_delta(base_ns, *new_ns) {
             Some(pct) => {
                 compared += 1;
@@ -848,6 +1003,9 @@ fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
                     format!("{new_ns:.0}"),
                     format!("{pct:+.1}%"),
                 ]);
+                row.insert("base_ns", b);
+                row.insert("delta_pct", pct);
+                row.insert("regressed", pct > a.warn_pct);
                 if pct > a.warn_pct {
                     regressions += 1;
                     println!(
@@ -866,8 +1024,10 @@ fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
                     format!("{new_ns:.0}"),
                     label.to_string(),
                 ]);
+                row.insert("status", label);
             }
         }
+        json_rows.push(Json::Obj(row));
     }
     t.print();
     println!(
@@ -876,6 +1036,17 @@ fn cmd_bench_diff(a: &BenchDiffArgs) -> anyhow::Result<()> {
         regressions,
         a.warn_pct
     );
+    if let Some(path) = &a.json {
+        let mut o = JsonObj::new();
+        o.insert("compared", compared);
+        o.insert("regressions", regressions);
+        o.insert("warn_pct", a.warn_pct);
+        o.insert("stale_baseline", stale);
+        o.insert("rows", json_rows);
+        std::fs::write(path, format!("{}\n", Json::Obj(o)))
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("bench-diff: wrote diff json to {path}");
+    }
     if let Some(path) = &a.write_baseline {
         write_bench_baseline(path, &fresh)?;
         println!("bench-diff: wrote {} entries to {path}", fresh.len());
@@ -905,6 +1076,8 @@ pub fn run(args: Vec<String>) -> anyhow::Result<()> {
         "optimize" => cmd_optimize(&OptimizeArgs::parse(&flags)),
         "serve" => cmd_serve(ServeArgs::parse(&flags)?),
         "swap" => cmd_swap(&SwapArgs::parse(&flags)?),
+        "profile" => cmd_profile(&ProfileArgs::parse(&flags)?),
+        "trace" => cmd_trace(&TraceArgs::parse(&flags)),
         "lint" => cmd_lint(&LintArgs::parse(&flags)?),
         "bench-diff" => cmd_bench_diff(&BenchDiffArgs::parse(&flags)?),
         "convert" => cmd_convert(&ConvertArgs::parse(&flags)?),
@@ -1032,10 +1205,13 @@ mod tests {
         let a = ServeArgs::parse(&f).unwrap();
         assert_eq!(a.cfg.queue_cap, 32);
         assert_eq!(a.cfg.faults.as_ref().unwrap().seed(), 7);
-        // defaults: bounded queue, no faults armed
+        // defaults: bounded queue, no faults armed, observability off
         let d = ServeArgs::parse(&flags(&[])).unwrap();
         assert_eq!(d.cfg.queue_cap, 1024);
         assert!(d.cfg.faults.is_none());
+        assert!(!d.cfg.obs.trace);
+        let o = ServeArgs::parse(&flags(&[("obs", "on")])).unwrap();
+        assert!(o.cfg.obs.trace);
         // a malformed spec is a parse error, not a silently inert plan
         let bad = flags(&[("faults", "group.meteor=0.5")]);
         let err = ServeArgs::parse(&bad).unwrap_err().to_string();
@@ -1179,6 +1355,91 @@ mod tests {
         .unwrap();
         std::fs::remove_file(&base).ok();
         std::fs::remove_file(&fresh).ok();
+    }
+
+    #[test]
+    fn bench_diff_json_reports_stale_zero_time_baseline() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let base = dir.join(format!("spa_cli_bd_stale_{pid}.json"));
+        let fresh = dir.join(format!("spa_cli_bd_stale_new_{pid}.json"));
+        let out = dir.join(format!("spa_cli_bd_stale_out_{pid}.json"));
+        std::fs::write(&base, r#"[{"name":"a","ns_per_iter":0.0,"iters":0}]"#).unwrap();
+        std::fs::write(&fresh, r#"[{"name":"a","ns_per_iter":130.0,"iters":3}]"#).unwrap();
+        run(vec![
+            "bench-diff".into(),
+            "--base".into(),
+            base.to_str().unwrap().into(),
+            "--new".into(),
+            fresh.to_str().unwrap().into(),
+            "--json".into(),
+            out.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let j = crate::util::parse_json(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.field("stale_baseline").unwrap().as_bool(), Some(true));
+        assert_eq!(j.field("compared").unwrap().as_usize(), Some(0));
+        let rows = j.field("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].field("status").unwrap().as_str(), Some("no baseline"));
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn profile_command_writes_a_json_report() {
+        let dir = std::env::temp_dir();
+        let out = dir.join(format!("spa_cli_profile_{}.json", std::process::id()));
+        run(vec![
+            "profile".into(),
+            "--model".into(),
+            "mlp".into(),
+            "--hw".into(),
+            "8".into(),
+            "--runs".into(),
+            "2".into(),
+            "--json".into(),
+            out.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let j = crate::util::parse_json(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.field("runs").unwrap().as_usize(), Some(2));
+        assert!(!j.field("rows").unwrap().as_arr().unwrap().is_empty());
+        std::fs::remove_file(&out).ok();
+        // --runs 0 is a parse error, not a silent empty report
+        assert!(ProfileArgs::parse(&flags(&[("runs", "0")])).is_err());
+    }
+
+    #[test]
+    fn trace_command_writes_chrome_json_and_metrics() {
+        // toggles the global trace flag: serialize with other obs tests
+        let _guard = crate::util::par::test_lock();
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let out = dir.join(format!("spa_cli_trace_{pid}.json"));
+        let prom = dir.join(format!("spa_cli_trace_{pid}.prom"));
+        run(vec![
+            "trace".into(),
+            "--model".into(),
+            "mlp".into(),
+            "--hw".into(),
+            "8".into(),
+            "--requests".into(),
+            "2".into(),
+            "--out".into(),
+            out.to_str().unwrap().into(),
+            "--metrics".into(),
+            prom.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let j = crate::util::parse_json(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let events = j.field("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty(), "demo run must record trace events");
+        let text = std::fs::read_to_string(&prom).unwrap();
+        assert!(text.contains("spa_requests_total"), "got: {text}");
+        std::fs::remove_file(&out).ok();
+        std::fs::remove_file(&prom).ok();
     }
 
     #[test]

@@ -375,6 +375,14 @@ impl Plan {
     }
 
     fn compile_impl(g: &Graph, opts: PlanOpts, mut reuse: Option<Reuse>) -> anyhow::Result<Plan> {
+        let _span = crate::obs::trace::span_with(
+            if reuse.is_some() {
+                "exec.recompile"
+            } else {
+                "exec.compile"
+            },
+            || format!("{} ops", g.ops.len()),
+        );
         anyhow::ensure!(
             !(opts.level == OptLevel::Fast && !opts.retain.is_empty()),
             "PlanOpts::retain requires an id-stable level (None/Exact), not Fast"
@@ -779,6 +787,31 @@ impl Plan {
 
     /// Execute all steps, leaving results in the workspace.
     pub fn execute(&self, ws: &mut Workspace, feeds: &[(DataId, &Tensor)]) -> anyhow::Result<()> {
+        self.execute_obs(ws, feeds, None)
+    }
+
+    /// [`Plan::execute`] while accumulating per-step wall time, bytes
+    /// moved, and GEMM dimensions into `prof`. Identical results to an
+    /// unprofiled run — the only difference is two clock reads per step.
+    pub fn execute_profiled(
+        &self,
+        ws: &mut Workspace,
+        feeds: &[(DataId, &Tensor)],
+        prof: &mut crate::obs::Profiler,
+    ) -> anyhow::Result<()> {
+        self.execute_obs(ws, feeds, Some(prof))
+    }
+
+    fn execute_obs(
+        &self,
+        ws: &mut Workspace,
+        feeds: &[(DataId, &Tensor)],
+        mut prof: Option<&mut crate::obs::Profiler>,
+    ) -> anyhow::Result<()> {
+        let t_run = prof.as_ref().map(|_| std::time::Instant::now());
+        if let Some(p) = prof.as_deref_mut() {
+            p.ensure(self.schedule.len());
+        }
         // Param shapes are static (pre-filled by `workspace`); only
         // feed/activation shapes reset per run.
         for (id, l) in self.loc.iter().enumerate() {
@@ -808,7 +841,7 @@ impl Plan {
             }
             ws.shapes[*id] = t.shape.clone();
         }
-        for item in &self.schedule {
+        for (idx, item) in self.schedule.iter().enumerate() {
             match item {
                 Item::Alias { op } => {
                     let o = &self.graph.ops[*op];
@@ -843,6 +876,8 @@ impl Plan {
                         .map_err(|e| anyhow::anyhow!("op `{}`: {e}", o.name))?
                         .swap_remove(0);
                     let numel: usize = out_shape.iter().product();
+                    let _step_span = crate::obs::trace::span_with("exec.step", || o.name.clone());
+                    let t_step = prof.as_ref().map(|_| std::time::Instant::now());
                     let mut buf = std::mem::take(&mut ws.slots[*out_slot]);
                     buf.resize(numel, 0.0);
                     let mut scratch = std::mem::take(&mut ws.scratch);
@@ -879,10 +914,54 @@ impl Plan {
                     }
                     ws.slots[*out_slot] = buf;
                     ws.shapes[*out_data] = out_shape;
+                    if let (Some(p), Some(t0)) = (prof.as_deref_mut(), t_step) {
+                        let in_numel: usize =
+                            in_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+                        let bytes = ((in_numel + numel) * std::mem::size_of::<f32>()) as u64;
+                        p.record_step(
+                            idx,
+                            t0.elapsed().as_nanos() as u64,
+                            bytes,
+                            self.gemm_dims(o, &in_shapes, &out_shape),
+                        );
+                    }
                 }
             }
         }
+        if let (Some(p), Some(t0)) = (prof.as_deref_mut(), t_run) {
+            p.record_run(t0.elapsed().as_nanos() as u64);
+        }
         Ok(())
+    }
+
+    /// GEMM dimensions `[M, K, N]` a step dispatches, for Gemm and
+    /// (im2col'd) Conv2d ops — the profiler's kernel-shape attribution.
+    fn gemm_dims(
+        &self,
+        op: &OpNode,
+        in_shapes: &[Vec<usize>],
+        out_shape: &[usize],
+    ) -> Option<[usize; 3]> {
+        match &op.kind {
+            OpKind::Gemm => {
+                let k = *in_shapes[0].last()?;
+                let m = in_shapes[0].iter().product::<usize>() / k.max(1);
+                let n = *out_shape.last()?;
+                Some([m, k, n])
+            }
+            OpKind::Conv2d { .. } => {
+                // weight [OC, C/g, KH, KW]; one GEMM of [N·OH·OW, C/g·KH·KW]
+                // by [C/g·KH·KW, OC] per group (summed over groups as N=OC)
+                let w = &self.graph.datas[*op.inputs.get(1)?].shape;
+                if w.len() != 4 || out_shape.len() != 4 {
+                    return None;
+                }
+                let m = out_shape[0] * out_shape[2] * out_shape[3];
+                let k = w[1] * w[2] * w[3];
+                Some([m, k, w[0]])
+            }
+            _ => None,
+        }
     }
 
     fn param(&self, id: DataId) -> anyhow::Result<&Tensor> {
@@ -1190,6 +1269,22 @@ impl<'p> Runner<'p> {
     /// Execute all steps, leaving results readable via [`Runner::value`].
     pub fn execute(&mut self, feeds: &[(DataId, &Tensor)]) -> anyhow::Result<()> {
         self.plan.execute(&mut self.ws, feeds)
+    }
+
+    /// [`Runner::predict`] while accumulating per-step timings into
+    /// `prof` (see [`crate::obs::Profiler`]). Bit-identical outputs.
+    pub fn predict_profiled(
+        &mut self,
+        x: &Tensor,
+        prof: &mut crate::obs::Profiler,
+    ) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(
+            self.plan.graph.inputs.len() == 1,
+            "predict requires a single-input graph"
+        );
+        let input = self.plan.graph.inputs[0];
+        self.plan.execute_profiled(&mut self.ws, &[(input, x)], prof)?;
+        self.plan.value(&self.ws, self.plan.graph.outputs[0])
     }
 
     /// Read a retained/output value after a run (see [`Plan::value`]).

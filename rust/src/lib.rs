@@ -26,6 +26,11 @@
 //!   invariants (every coupled group keeps one channel set), and
 //!   compiled-plan arena/alias safety — gated by [`CheckLevel`] and
 //!   surfaced as the `spa lint` CLI subcommand.
+//! * **Any visibility** — [`obs`] watches all of it run: structured
+//!   trace spans across exec/serve (Chrome `trace_event` export), an
+//!   opt-in per-step plan profiler (`spa profile`), and log-linear
+//!   latency histograms behind the serve protocol's `metrics` verb —
+//!   all off by default with a one-atomic-load disabled path.
 //! * **Any time** — [`session`] is the single user-facing entry point:
 //!   a staged builder over the four-step algorithm, with pluggable
 //!   [`criteria::Saliency`] scores; [`coordinator`] drives prune-train,
@@ -45,6 +50,7 @@ pub mod engine;
 pub mod exec;
 pub mod frontends;
 pub mod ir;
+pub mod obs;
 pub mod obspa;
 pub mod prune;
 pub mod runtime;

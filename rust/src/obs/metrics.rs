@@ -1,0 +1,408 @@
+//! Histogram metrics: log-linear latency histograms with exact-rank
+//! percentiles, and the [`MetricsReport`] snapshot the serve layer's
+//! protocol-v4 `metrics` verb ships to clients.
+//!
+//! [`Histogram`] replaces the old sampled percentile ring in
+//! `serve::Stats`: every observation is counted (nothing is sampled
+//! away), bucketed log-linearly — values below 64 land in exact
+//! unit-width buckets, larger values in 64 sub-buckets per power-of-two
+//! octave, bounding relative quantization error at 1/64 (~1.6%).
+//! Percentiles are nearest-rank over the full count and return the
+//! bucket's lower bound, so for small integer latencies (µs) they are
+//! exact.
+//!
+//! [`MetricsReport`] is plain data (no serve dependencies): the serve
+//! layer builds one from its live counters and histogram, the protocol
+//! layer encodes it on the wire, and [`MetricsReport::render_prometheus`]
+//! renders the Prometheus text exposition format for scraping or
+//! snapshot artifacts.
+
+use crate::util::{json::JsonObj, Json};
+
+/// Unit-width buckets below this value (exact small-value resolution).
+const LINEAR_MAX: u64 = 64;
+/// Sub-buckets per power-of-two octave above [`LINEAR_MAX`].
+const SUB: usize = 64;
+/// Octaves tracked above the linear range. The last bucket's lower
+/// bound is `(64 + 63) << 33` ≈ 1.09e12, far beyond any latency in µs
+/// or stage time in ms this crate records; larger values clamp there.
+const OCTAVES: usize = 34;
+const BUCKETS: usize = LINEAR_MAX as usize + OCTAVES * SUB;
+
+fn index_of(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        v as usize
+    } else {
+        let p = 63 - v.leading_zeros() as usize; // >= 6
+        let g = (p - 6).min(OCTAVES - 1);
+        let sub = ((v >> (p - 6)) as usize - SUB).min(SUB - 1);
+        LINEAR_MAX as usize + g * SUB + sub
+    }
+}
+
+fn lower_bound(i: usize) -> u64 {
+    if i < LINEAR_MAX as usize {
+        i as u64
+    } else {
+        let g = (i - LINEAR_MAX as usize) / SUB;
+        let sub = ((i - LINEAR_MAX as usize) % SUB) as u64;
+        (LINEAR_MAX + sub) << g
+    }
+}
+
+/// A log-linear histogram of `u64` observations. See the
+/// [module docs](self) for the bucket scheme.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    /// Count one observation. O(1), no allocation.
+    pub fn record(&mut self, v: u64) {
+        self.counts[index_of(v)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Sum of all observations (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Largest observation recorded (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100) over every recorded
+    /// observation, returned as the matching bucket's lower bound —
+    /// exact for values below 64, within 1/64 above. `None` when empty.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        if self.total == 0 {
+            return None;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = ((p / 100.0 * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(lower_bound(i));
+            }
+        }
+        Some(self.max)
+    }
+
+    /// Non-empty buckets as `(upper_bound_exclusive, count)` pairs, in
+    /// ascending value order — the shape Prometheus histogram series
+    /// and JSON snapshots want.
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (lower_bound(i + 1), c))
+    }
+
+    /// Merge another histogram's counts into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// One self-contained snapshot of a server's observability state:
+/// request/fault counters, plan-cache and swap activity, exact-count
+/// latency percentiles, and cumulative per-stage time. Built by the
+/// serve layer, shipped by the protocol-v4 `metrics` verb, rendered by
+/// [`MetricsReport::render_prometheus`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsReport {
+    /// Requests answered (ok or error).
+    pub served: u64,
+    /// Requests answered with a typed error (a subset of `served`).
+    pub errors: u64,
+    /// Batch-loop ticks that dispatched at least one request.
+    pub batches: u64,
+    /// Requests shed at admission (queue full / shutting down).
+    pub shed: u64,
+    /// Requests expired past their deadline before dispatch.
+    pub expired: u64,
+    /// Batch-group panics caught and converted to error responses.
+    pub panics: u64,
+    /// Plan-cache hits.
+    pub cache_hits: u64,
+    /// Plan-cache misses (compiles).
+    pub cache_misses: u64,
+    /// Plans evicted from the cache.
+    pub cache_evictions: u64,
+    /// Live swaps committed.
+    pub swaps_committed: u64,
+    /// Live swaps rolled back at any stage.
+    pub swaps_rolled_back: u64,
+    /// Current plan-cache generation.
+    pub generation: u64,
+    /// Whether the server is draining.
+    pub draining: bool,
+    /// Latency observations counted (served + error responses).
+    pub lat_count: u64,
+    /// Sum of all request latencies, µs.
+    pub lat_sum_us: u64,
+    /// Largest request latency, µs.
+    pub lat_max_us: u64,
+    /// Nearest-rank latency percentiles, µs (0 when no requests yet).
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    /// Cumulative time requests spent queued between admission and
+    /// batch dispatch, ns.
+    pub queue_wait_ns: u64,
+    /// Cumulative time inside plan execution (batch-group inference), ns.
+    pub exec_ns: u64,
+    /// Cumulative batch-loop tick time (dispatch overhead incl. exec), ns.
+    pub batch_ns: u64,
+    /// Cumulative time inside swap pipelines, ns.
+    pub swap_ns: u64,
+}
+
+impl MetricsReport {
+    /// Render in the Prometheus text exposition format (counters,
+    /// gauges, and a latency summary with exact-count quantiles).
+    pub fn render_prometheus(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        let mut counter = |name: &str, labels: &str, v: u64| {
+            s.push_str(&format!("spa_{name}{labels} {v}\n"));
+        };
+        counter("requests_total", "{outcome=\"ok\"}", self.served);
+        counter("requests_total", "{outcome=\"error\"}", self.errors);
+        counter("batches_total", "", self.batches);
+        counter("shed_total", "", self.shed);
+        counter("expired_total", "", self.expired);
+        counter("panics_total", "", self.panics);
+        counter("cache_events_total", "{kind=\"hit\"}", self.cache_hits);
+        counter("cache_events_total", "{kind=\"miss\"}", self.cache_misses);
+        counter("cache_events_total", "{kind=\"evict\"}", self.cache_evictions);
+        counter("swaps_total", "{outcome=\"committed\"}", self.swaps_committed);
+        counter(
+            "swaps_total",
+            "{outcome=\"rolled_back\"}",
+            self.swaps_rolled_back,
+        );
+        counter("generation", "", self.generation);
+        counter("draining", "", self.draining as u64);
+        counter("request_latency_us{quantile=\"0.5\"}", "", self.p50_us);
+        counter("request_latency_us{quantile=\"0.99\"}", "", self.p99_us);
+        counter("request_latency_us{quantile=\"0.999\"}", "", self.p999_us);
+        counter("request_latency_us_sum", "", self.lat_sum_us);
+        counter("request_latency_us_count", "", self.lat_count);
+        counter("request_latency_us_max", "", self.lat_max_us);
+        counter("stage_ns", "{stage=\"queue_wait\"}", self.queue_wait_ns);
+        counter("stage_ns", "{stage=\"exec\"}", self.exec_ns);
+        counter("stage_ns", "{stage=\"batch\"}", self.batch_ns);
+        counter("stage_ns", "{stage=\"swap\"}", self.swap_ns);
+        s
+    }
+
+    /// The same snapshot as a JSON object (artifact / `--json` form).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("served", self.served as usize);
+        o.insert("errors", self.errors as usize);
+        o.insert("batches", self.batches as usize);
+        o.insert("shed", self.shed as usize);
+        o.insert("expired", self.expired as usize);
+        o.insert("panics", self.panics as usize);
+        o.insert("cache_hits", self.cache_hits as usize);
+        o.insert("cache_misses", self.cache_misses as usize);
+        o.insert("cache_evictions", self.cache_evictions as usize);
+        o.insert("swaps_committed", self.swaps_committed as usize);
+        o.insert("swaps_rolled_back", self.swaps_rolled_back as usize);
+        o.insert("generation", self.generation as usize);
+        o.insert("draining", self.draining);
+        o.insert("lat_count", self.lat_count as usize);
+        o.insert("lat_sum_us", self.lat_sum_us as usize);
+        o.insert("lat_max_us", self.lat_max_us as usize);
+        o.insert("p50_us", self.p50_us as usize);
+        o.insert("p99_us", self.p99_us as usize);
+        o.insert("p999_us", self.p999_us as usize);
+        o.insert("queue_wait_ns", self.queue_wait_ns as usize);
+        o.insert("exec_ns", self.exec_ns as usize);
+        o.insert("batch_ns", self.batch_ns as usize);
+        o.insert("swap_ns", self.swap_ns as usize);
+        Json::from(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_have_exact_percentiles() {
+        // the distribution the old sampled-ring test used: 1..=100 µs
+        let mut h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(50.0), Some(50));
+        assert_eq!(h.percentile(99.0), Some(99));
+        assert_eq!(h.percentile(100.0), Some(100));
+        assert_eq!(h.percentile(0.0), Some(1));
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 5050);
+        assert_eq!(h.max(), 100);
+    }
+
+    #[test]
+    fn empty_histogram_has_no_percentiles() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(50.0), None);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn quantization_error_is_bounded() {
+        // every value maps to a bucket whose lower bound is within 1/64
+        for v in [
+            1u64,
+            63,
+            64,
+            65,
+            127,
+            128,
+            1000,
+            4097,
+            1_000_000,
+            123_456_789,
+            u64::MAX / 2,
+            u64::MAX,
+        ] {
+            let lb = lower_bound(index_of(v));
+            assert!(lb <= v, "lower bound {lb} above value {v}");
+            if index_of(v) < BUCKETS - 1 && v < (LINEAR_MAX + SUB as u64 - 1) << (OCTAVES - 1) {
+                let err = (v - lb) as f64 / v.max(1) as f64;
+                assert!(err <= 1.0 / 64.0 + 1e-9, "value {v}: error {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_contiguous() {
+        for i in 1..BUCKETS {
+            assert!(
+                lower_bound(i) > lower_bound(i - 1),
+                "bucket {i} not increasing"
+            );
+        }
+        // index_of(lower_bound(i)) == i for every bucket
+        for i in 0..BUCKETS {
+            assert_eq!(index_of(lower_bound(i)), i, "bucket {i} round trip");
+        }
+    }
+
+    #[test]
+    fn heavy_tail_percentiles_rank_correctly() {
+        let mut h = Histogram::new();
+        for _ in 0..990 {
+            h.record(10);
+        }
+        for _ in 0..10 {
+            h.record(100_000);
+        }
+        assert_eq!(h.percentile(50.0), Some(10));
+        assert_eq!(h.percentile(99.0), Some(10));
+        let p999 = h.percentile(99.9).unwrap();
+        assert!(
+            (98_000..=100_000).contains(&p999),
+            "p999 {p999} should land in the tail bucket"
+        );
+    }
+
+    #[test]
+    fn merge_combines_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 1..=50u64 {
+            a.record(v);
+        }
+        for v in 51..=100u64 {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.percentile(50.0), Some(50));
+        assert_eq!(a.percentile(100.0), Some(100));
+    }
+
+    #[test]
+    fn prometheus_rendering_has_the_expected_series() {
+        let r = MetricsReport {
+            served: 12,
+            errors: 3,
+            p50_us: 40,
+            p99_us: 90,
+            p999_us: 95,
+            lat_count: 15,
+            queue_wait_ns: 1234,
+            draining: true,
+            ..Default::default()
+        };
+        let text = r.render_prometheus();
+        for needle in [
+            "spa_requests_total{outcome=\"ok\"} 12",
+            "spa_requests_total{outcome=\"error\"} 3",
+            "spa_request_latency_us{quantile=\"0.5\"} 40",
+            "spa_request_latency_us{quantile=\"0.999\"} 95",
+            "spa_request_latency_us_count 15",
+            "spa_stage_ns{stage=\"queue_wait\"} 1234",
+            "spa_draining 1",
+        ] {
+            assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn json_snapshot_round_trips() {
+        let r = MetricsReport {
+            served: 7,
+            p99_us: 123,
+            swap_ns: 456,
+            ..Default::default()
+        };
+        let j = crate::util::parse_json(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.field("served").unwrap().as_usize(), Some(7));
+        assert_eq!(j.field("p99_us").unwrap().as_usize(), Some(123));
+        assert_eq!(j.field("swap_ns").unwrap().as_usize(), Some(456));
+        assert_eq!(j.field("draining").unwrap().as_bool(), Some(false));
+    }
+}

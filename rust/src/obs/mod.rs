@@ -1,0 +1,88 @@
+//! `spa::obs` — end-to-end observability: structured tracing, per-step
+//! plan profiling, and histogram metrics.
+//!
+//! The serving stack runs the paper's "any time" story under live
+//! traffic (plan-cache swaps, fault injection, dynamic batching); this
+//! module makes that activity visible without perturbing it:
+//!
+//! * [`trace`] — per-thread bounded rings of typed span events
+//!   (`exec.step`, `batch.tick`, `swap.*`, `cache.*`, `queue.*`),
+//!   exported as Chrome `trace_event` JSON by `spa trace`. Off by
+//!   default; the disabled path costs one relaxed atomic load per site.
+//! * [`profile`] — an opt-in per-step profiler over `exec::Plan`
+//!   (wall ns, bytes moved, GEMM dims, fusion attribution), surfaced by
+//!   `spa profile` as the op-level baseline for kernel work.
+//! * [`metrics`] — log-linear latency histograms (exact-count
+//!   p50/p99/p999) and the [`MetricsReport`] snapshot served by the
+//!   protocol-v4 `metrics` verb, renderable as Prometheus text.
+//!
+//! Everything is gated behind [`ObsCfg`] (`SPA_OBS` / `spa serve
+//! --obs`), defaults off, and never changes computed outputs: traced
+//! and untraced runs are bit-identical (asserted by the chaos suite).
+
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+pub use metrics::{Histogram, MetricsReport};
+pub use profile::{ProfileReport, ProfileRow, Profiler};
+pub use trace::{chrome_json, Event, EventKind, Span, TraceBuf};
+
+/// Runtime observability switches. `Default` is everything off — the
+/// zero-overhead production posture.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ObsCfg {
+    /// Record trace events into the per-thread rings.
+    pub trace: bool,
+}
+
+impl ObsCfg {
+    /// Tracing on.
+    pub fn tracing() -> ObsCfg {
+        ObsCfg { trace: true }
+    }
+
+    /// Read `SPA_OBS`: `1`/`true`/`on`/`trace` enable tracing; unset,
+    /// empty, `0`, `false`, and `off` leave it disabled.
+    pub fn from_env() -> ObsCfg {
+        let v = std::env::var("SPA_OBS").unwrap_or_default();
+        ObsCfg {
+            trace: matches!(
+                v.trim().to_ascii_lowercase().as_str(),
+                "1" | "true" | "on" | "trace"
+            ),
+        }
+    }
+
+    /// Parse a CLI flag value (same grammar as `SPA_OBS`).
+    pub fn from_flag(v: &str) -> ObsCfg {
+        ObsCfg {
+            trace: matches!(
+                v.trim().to_ascii_lowercase().as_str(),
+                "1" | "true" | "on" | "trace"
+            ),
+        }
+    }
+
+    /// Apply to the process-global trace switch.
+    pub fn apply(&self) {
+        trace::set_enabled(self.trace);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_cfg_flag_grammar() {
+        for on in ["1", "true", "ON", "trace", " on "] {
+            assert!(ObsCfg::from_flag(on).trace, "`{on}` should enable");
+        }
+        for off in ["", "0", "false", "off", "no"] {
+            assert!(!ObsCfg::from_flag(off).trace, "`{off}` should disable");
+        }
+        assert_eq!(ObsCfg::default(), ObsCfg { trace: false });
+        assert!(ObsCfg::tracing().trace);
+    }
+}

@@ -1,0 +1,315 @@
+//! Per-step execution profiler for compiled [`crate::exec::Plan`]s.
+//!
+//! A [`Profiler`] rides along `Plan::execute` (via
+//! `Runner::predict_profiled` / `Plan::execute_profiled`) and
+//! accumulates, per schedule step: wall nanoseconds, bytes moved
+//! (inputs read + output written), GEMM dimensions for Gemm/Conv2d
+//! dispatches, and the fused post-op chain — the op-level baseline the
+//! ROADMAP's packed-GEMM work needs before it can claim a speedup.
+//! [`Profiler::report`] aggregates everything into a [`ProfileReport`]
+//! whose table ranks ops by total time; the summed per-step time is
+//! checked against the end-to-end plan time, so the table provably
+//! accounts for (almost) the whole run.
+//!
+//! Profiling is explicit opt-in per call — the plain `Plan::execute`
+//! path carries no profiling state and no per-step clock reads.
+
+use crate::exec::{Item, Plan, PostOp};
+use crate::util::{json::JsonObj, Json, Table};
+
+/// Accumulated measurements for one schedule step across runs.
+#[derive(Debug, Clone, Default)]
+struct StepAcc {
+    calls: u64,
+    wall_ns: u64,
+    bytes: u64,
+    gemm: Option<[usize; 3]>,
+}
+
+/// Accumulates per-step timings across one or more profiled runs of a
+/// single plan. Reuse the same profiler across runs to average noise;
+/// do not share one across different plans.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    steps: Vec<StepAcc>,
+    runs: u64,
+    total_ns: u64,
+}
+
+impl Profiler {
+    pub fn new() -> Profiler {
+        Profiler::default()
+    }
+
+    /// Profiled runs recorded so far.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// End-to-end wall time across all profiled runs.
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns
+    }
+
+    pub(crate) fn ensure(&mut self, schedule_len: usize) {
+        if self.steps.len() < schedule_len {
+            self.steps.resize(schedule_len, StepAcc::default());
+        }
+    }
+
+    pub(crate) fn record_step(
+        &mut self,
+        idx: usize,
+        wall_ns: u64,
+        bytes: u64,
+        gemm: Option<[usize; 3]>,
+    ) {
+        let s = &mut self.steps[idx];
+        s.calls += 1;
+        s.wall_ns += wall_ns;
+        s.bytes += bytes;
+        if gemm.is_some() {
+            s.gemm = gemm;
+        }
+    }
+
+    pub(crate) fn record_run(&mut self, total_ns: u64) {
+        self.runs += 1;
+        self.total_ns += total_ns;
+    }
+
+    /// Aggregate into a report. `plan` must be the plan the profiled
+    /// runs executed (step labels come from its schedule).
+    pub fn report(&self, plan: &Plan) -> ProfileReport {
+        let step_ns: u64 = self.steps.iter().map(|s| s.wall_ns).sum();
+        let mut rows = Vec::new();
+        for (idx, item) in plan.schedule.iter().enumerate() {
+            let Item::Step { op, post, .. } = item else {
+                continue;
+            };
+            let Some(acc) = self.steps.get(idx) else {
+                continue;
+            };
+            if acc.calls == 0 {
+                continue;
+            }
+            let o = &plan.graph.ops[*op];
+            let fused = post
+                .iter()
+                .map(|p| match p {
+                    PostOp::Bn { .. } => "bn",
+                    PostOp::Act(_) => "act",
+                })
+                .collect::<Vec<_>>()
+                .join("+");
+            rows.push(ProfileRow {
+                name: o.name.clone(),
+                kind: kind_label(&format!("{:?}", o.kind)),
+                fused,
+                calls: acc.calls,
+                wall_ns: acc.wall_ns,
+                pct: if step_ns > 0 {
+                    acc.wall_ns as f64 * 100.0 / step_ns as f64
+                } else {
+                    0.0
+                },
+                bytes: acc.bytes,
+                gemm: acc.gemm,
+            });
+        }
+        rows.sort_by(|a, b| b.wall_ns.cmp(&a.wall_ns).then(a.name.cmp(&b.name)));
+        ProfileReport {
+            rows,
+            runs: self.runs,
+            total_ns: self.total_ns,
+            step_ns,
+        }
+    }
+}
+
+/// `"Conv2d { stride: 2, .. }"` → `"Conv2d"`.
+fn kind_label(debug: &str) -> String {
+    debug.split([' ', '{']).next().unwrap_or(debug).to_string()
+}
+
+/// One aggregated table row: a schedule step (base op plus everything
+/// fused into it) summed across profiled runs.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    /// Base op name from the plan's graph.
+    pub name: String,
+    /// Base op kind (`Conv2d`, `Gemm`, ...).
+    pub kind: String,
+    /// Fused post-op chain (`"bn+act"`, empty when nothing fused).
+    pub fused: String,
+    /// Times this step executed.
+    pub calls: u64,
+    /// Total wall nanoseconds across all calls.
+    pub wall_ns: u64,
+    /// Share of the summed per-step time, percent.
+    pub pct: f64,
+    /// Bytes moved (inputs read + output written) across all calls.
+    pub bytes: u64,
+    /// GEMM dimensions `[M, K, N]` for Gemm / im2col'd Conv2d dispatches.
+    pub gemm: Option<[usize; 3]>,
+}
+
+/// The aggregated profile: rows ranked by total time, plus the
+/// end-to-end vs summed-step accounting.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// Per-step rows, hottest first.
+    pub rows: Vec<ProfileRow>,
+    /// Profiled runs aggregated.
+    pub runs: u64,
+    /// End-to-end plan time across all runs (includes shape inference
+    /// and dispatch overhead between steps).
+    pub total_ns: u64,
+    /// Sum of per-step wall time across all runs.
+    pub step_ns: u64,
+}
+
+impl ProfileReport {
+    /// Fraction of end-to-end time the per-step rows account for
+    /// (1.0 when steps explain everything; 0.0 with no runs).
+    pub fn coverage(&self) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            self.step_ns as f64 / self.total_ns as f64
+        }
+    }
+
+    /// Render as an ASCII table plus the accounting summary line.
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(
+            title,
+            &["op", "kind", "fused", "calls", "us/call", "%", "KB/call", "gemm MxKxN"],
+        );
+        for r in &self.rows {
+            let per_call_us = r.wall_ns as f64 / r.calls.max(1) as f64 / 1e3;
+            let kb_per_call = r.bytes as f64 / r.calls.max(1) as f64 / 1024.0;
+            t.row(&[
+                r.name.clone(),
+                r.kind.clone(),
+                r.fused.clone(),
+                r.calls.to_string(),
+                format!("{per_call_us:.2}"),
+                format!("{:.1}", r.pct),
+                format!("{kb_per_call:.1}"),
+                r.gemm
+                    .map(|[m, k, n]| format!("{m}x{k}x{n}"))
+                    .unwrap_or_default(),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "steps {:.3} ms / end-to-end {:.3} ms over {} run(s) — {:.1}% accounted\n",
+            self.step_ns as f64 / 1e6,
+            self.total_ns as f64 / 1e6,
+            self.runs,
+            self.coverage() * 100.0
+        ));
+        out
+    }
+
+    /// Machine-readable form (the `spa profile --json` artifact).
+    pub fn to_json(&self) -> Json {
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for r in &self.rows {
+            let mut o = JsonObj::new();
+            o.insert("op", r.name.as_str());
+            o.insert("kind", r.kind.as_str());
+            o.insert("fused", r.fused.as_str());
+            o.insert("calls", r.calls as usize);
+            o.insert("wall_ns", r.wall_ns as usize);
+            o.insert("pct", r.pct);
+            o.insert("bytes", r.bytes as usize);
+            if let Some([m, k, n]) = r.gemm {
+                o.insert("gemm", &[m, k, n][..]);
+            }
+            rows.push(Json::from(o));
+        }
+        let mut root = JsonObj::new();
+        root.insert("runs", self.runs as usize);
+        root.insert("total_ns", self.total_ns as usize);
+        root.insert("step_ns", self.step_ns as usize);
+        root.insert("coverage", self.coverage());
+        root.insert("rows", rows);
+        Json::from(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{PlanOpts, Runner};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+    use crate::zoo::{self, ImageCfg};
+
+    fn mini() -> crate::ir::Graph {
+        zoo::resnet18(
+            ImageCfg {
+                hw: 8,
+                ..Default::default()
+            },
+            3,
+        )
+    }
+
+    #[test]
+    fn profiled_run_matches_unprofiled_bit_for_bit() {
+        let g = mini();
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let mut rng = Rng::new(5);
+        let shape = g.data(g.inputs[0]).shape.clone();
+        let n: usize = shape.iter().product();
+        let x = Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0));
+        let want = plan.predict(&x).unwrap();
+        let mut prof = Profiler::new();
+        let mut runner = Runner::new(&plan);
+        let got = runner.predict_profiled(&x, &mut prof).unwrap();
+        assert_eq!(want.shape, got.shape);
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn report_accounts_for_nearly_all_plan_time() {
+        let g = mini();
+        let plan = Plan::compile(&g, PlanOpts::default()).unwrap();
+        let mut rng = Rng::new(6);
+        let shape = g.data(g.inputs[0]).shape.clone();
+        let n: usize = shape.iter().product();
+        let x = Tensor::new(shape, rng.uniform_vec(n, -1.0, 1.0));
+        let mut prof = Profiler::new();
+        let mut runner = Runner::new(&plan);
+        for _ in 0..3 {
+            runner.predict_profiled(&x, &mut prof).unwrap();
+        }
+        let rep = prof.report(&plan);
+        assert_eq!(rep.runs, 3);
+        assert_eq!(rep.rows.len(), plan.report().steps);
+        assert!(rep.step_ns > 0 && rep.step_ns <= rep.total_ns);
+        // the per-step sum must be ≈ the end-to-end time: dispatch
+        // bookkeeping between steps is a thin slice of the run
+        assert!(
+            rep.coverage() > 0.5,
+            "steps account for only {:.1}% of the run",
+            rep.coverage() * 100.0
+        );
+        // resnet18 must attribute GEMM dims to conv and gemm steps and
+        // show bn/act fusion on at least one row
+        assert!(rep.rows.iter().any(|r| r.gemm.is_some()));
+        assert!(rep.rows.iter().any(|r| r.fused.contains("bn")));
+        assert!(rep.rows.iter().all(|r| r.calls == 3));
+        let table = rep.render("profile resnet18");
+        assert!(table.contains("gemm MxKxN"));
+        assert!(table.contains("accounted"));
+        let j = crate::util::parse_json(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.field("runs").unwrap().as_usize(), Some(3));
+        assert!(!j.field("rows").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,383 @@
+//! Low-overhead structured tracing: per-thread bounded ring buffers of
+//! typed span events, exportable as Chrome `trace_event` JSON.
+//!
+//! Recording is gated on one process-global flag ([`enabled`]): when
+//! tracing is off (the default), every hook costs a single relaxed
+//! atomic load and allocates nothing — [`span`] returns an inert guard
+//! and [`instant`] returns immediately. When on, events land in a
+//! per-thread ring ([`RING_CAP`] entries; the oldest events are
+//! overwritten and counted as dropped), so a misbehaving burst can
+//! never grow memory without bound or block another thread.
+//!
+//! Event names are `&'static str` in dotted form and stable across PRs:
+//! `exec.step`, `exec.compile`, `exec.recompile`, `session.prune`,
+//! `batch.tick`, `queue.admit`, `queue.shed`, `cache.hit`,
+//! `cache.miss`, `cache.evict`, `swap.verify`, `swap.shadow`,
+//! `swap.flip`, `swap.watch`. [`drain`] collects and clears every
+//! thread's ring; [`chrome_json`] renders the result in the Chrome
+//! `trace_event` array format (load via `chrome://tracing` or Perfetto).
+
+use crate::util::{json::JsonObj, relock, Json};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Bounded capacity of each thread's event ring.
+pub const RING_CAP: usize = 1 << 14;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+
+/// Whether tracing hooks record anything. The hot-path check every
+/// instrumented site performs first.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn event recording on or off (process-global). Spans already in
+/// flight when tracing turns off simply record nothing on drop.
+pub fn set_enabled(on: bool) {
+    if on {
+        // pin the time base before the first event
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Nanoseconds since the process trace epoch (pinned on first use).
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// How an [`Event`] renders: a duration slice or a point-in-time mark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A timed region (Chrome phase `X`).
+    Span,
+    /// An instantaneous mark, e.g. `cache.hit` (Chrome phase `i`).
+    Instant,
+}
+
+/// One recorded trace event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Stable dotted event name (`exec.step`, `batch.tick`, ...).
+    pub name: &'static str,
+    /// Optional free-form detail (op name, model, plan key, ...).
+    pub detail: Option<String>,
+    pub kind: EventKind,
+    /// Start time, nanoseconds since the trace epoch.
+    pub t0_ns: u64,
+    /// Duration (0 for [`EventKind::Instant`]).
+    pub dur_ns: u64,
+    /// Small stable id of the recording thread.
+    pub tid: u64,
+}
+
+struct Ring {
+    buf: Vec<Event>,
+    /// Next write position once `buf` reaches [`RING_CAP`].
+    next: usize,
+    dropped: u64,
+    tid: u64,
+}
+
+impl Ring {
+    fn push(&mut self, e: Event) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(e);
+        } else {
+            self.buf[self.next] = e;
+            self.next = (self.next + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events in chronological order, clearing the ring.
+    fn take(&mut self) -> Vec<Event> {
+        let mut out = self.buf.split_off(self.next);
+        out.append(&mut self.buf);
+        self.next = 0;
+        out
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static RING: RefCell<Option<Arc<Mutex<Ring>>>> = const { RefCell::new(None) };
+}
+
+fn with_ring(f: impl FnOnce(&mut Ring)) {
+    RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let arc = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Mutex::new(Ring {
+                buf: Vec::new(),
+                next: 0,
+                dropped: 0,
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            }));
+            relock(registry()).push(ring.clone());
+            ring
+        });
+        f(&mut relock(arc));
+    });
+}
+
+/// RAII guard for a timed region: records one [`EventKind::Span`] event
+/// on drop. Inert (no clock read, no allocation) when tracing is off.
+pub struct Span {
+    name: &'static str,
+    detail: Option<String>,
+    t0: Option<u64>,
+}
+
+impl Span {
+    /// Attach detail to an already-open span (only when it records).
+    pub fn detail(&mut self, f: impl FnOnce() -> String) {
+        if self.t0.is_some() {
+            self.detail = Some(f());
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.t0 {
+            let dur_ns = now_ns().saturating_sub(t0);
+            let detail = self.detail.take();
+            let name = self.name;
+            with_ring(|r| {
+                let tid = r.tid;
+                r.push(Event {
+                    name,
+                    detail,
+                    kind: EventKind::Span,
+                    t0_ns: t0,
+                    dur_ns,
+                    tid,
+                });
+            });
+        }
+    }
+}
+
+/// Open a timed span; the event records when the guard drops.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    Span {
+        name,
+        detail: None,
+        t0: enabled().then(now_ns),
+    }
+}
+
+/// [`span`] with a lazily-built detail string (only evaluated when
+/// tracing is on).
+#[inline]
+pub fn span_with(name: &'static str, detail: impl FnOnce() -> String) -> Span {
+    let t0 = enabled().then(now_ns);
+    Span {
+        name,
+        detail: t0.is_some().then(detail),
+        t0,
+    }
+}
+
+/// Record an instantaneous mark (`cache.hit`, `queue.shed`, ...).
+#[inline]
+pub fn instant(name: &'static str) {
+    if enabled() {
+        instant_slow(name, None);
+    }
+}
+
+/// [`instant`] with a lazily-built detail string.
+#[inline]
+pub fn instant_with(name: &'static str, detail: impl FnOnce() -> String) {
+    if enabled() {
+        instant_slow(name, Some(detail()));
+    }
+}
+
+#[cold]
+fn instant_slow(name: &'static str, detail: Option<String>) {
+    let t0 = now_ns();
+    with_ring(|r| {
+        let tid = r.tid;
+        r.push(Event {
+            name,
+            detail,
+            kind: EventKind::Instant,
+            t0_ns: t0,
+            dur_ns: 0,
+            tid,
+        });
+    });
+}
+
+/// Everything [`drain`] collected: the merged event stream plus how
+/// many events ring-overflow discarded since the last drain.
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    /// All threads' events, sorted by start time.
+    pub events: Vec<Event>,
+    /// Events overwritten by ring overflow (oldest-first policy).
+    pub dropped: u64,
+}
+
+/// Collect and clear every thread's ring. Threads keep recording into
+/// their (now empty) rings; events racing a drain land in the next one.
+pub fn drain() -> TraceBuf {
+    let mut buf = TraceBuf::default();
+    for ring in relock(registry()).iter() {
+        let mut r = relock(ring);
+        buf.events.append(&mut r.take());
+        buf.dropped += std::mem::take(&mut r.dropped);
+    }
+    buf.events.sort_by_key(|e| e.t0_ns);
+    buf
+}
+
+/// Render a drained trace in Chrome `trace_event` JSON (the "JSON array
+/// format" object variant: `{"traceEvents": [...]}`), loadable in
+/// `chrome://tracing` and Perfetto. Timestamps are microseconds with
+/// fractional nanosecond precision.
+pub fn chrome_json(buf: &TraceBuf) -> Json {
+    let mut events = Vec::with_capacity(buf.events.len());
+    for e in &buf.events {
+        let mut o = JsonObj::new();
+        o.insert("name", e.name);
+        o.insert("cat", "spa");
+        match e.kind {
+            EventKind::Span => {
+                o.insert("ph", "X");
+                o.insert("ts", e.t0_ns as f64 / 1000.0);
+                o.insert("dur", e.dur_ns as f64 / 1000.0);
+            }
+            EventKind::Instant => {
+                o.insert("ph", "i");
+                o.insert("ts", e.t0_ns as f64 / 1000.0);
+                o.insert("s", "t");
+            }
+        }
+        o.insert("pid", 1usize);
+        o.insert("tid", e.tid as usize);
+        if let Some(d) = &e.detail {
+            let mut args = JsonObj::new();
+            args.insert("detail", d.as_str());
+            o.insert("args", args);
+        }
+        events.push(Json::from(o));
+    }
+    let mut root = JsonObj::new();
+    root.insert("traceEvents", events);
+    root.insert("displayTimeUnit", "ns");
+    if buf.dropped > 0 {
+        root.insert("droppedEvents", buf.dropped as usize);
+    }
+    Json::from(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::par;
+
+    /// Trace tests share the process-global enable flag, so they hold
+    /// the same lock the thread-width tests use.
+    fn with_tracing<T>(f: impl FnOnce() -> T) -> T {
+        let _g = par::test_lock();
+        drain(); // discard anything a prior test left behind
+        set_enabled(true);
+        let r = f();
+        set_enabled(false);
+        drain();
+        r
+    }
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _g = par::test_lock();
+        set_enabled(false);
+        drain();
+        {
+            let _s = span("exec.step");
+            instant("cache.hit");
+        }
+        assert!(drain().events.is_empty());
+    }
+
+    #[test]
+    fn spans_and_instants_record_in_order() {
+        let buf = with_tracing(|| {
+            {
+                let mut s = span("batch.tick");
+                s.detail(|| "tick 7".to_string());
+                instant_with("cache.miss", || "mlp".to_string());
+            }
+            instant("queue.admit");
+            drain()
+        });
+        assert_eq!(buf.dropped, 0);
+        let names: Vec<&str> = buf.events.iter().map(|e| e.name).collect();
+        // the span records when its guard drops, after the instant inside
+        assert_eq!(names, ["cache.miss", "batch.tick", "queue.admit"]);
+        let tick = &buf.events[1];
+        assert_eq!(tick.kind, EventKind::Span);
+        assert_eq!(tick.detail.as_deref(), Some("tick 7"));
+        assert!(buf.events[2].t0_ns >= tick.t0_ns);
+        assert_eq!(buf.events[0].kind, EventKind::Instant);
+        assert_eq!(buf.events[0].dur_ns, 0);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let buf = with_tracing(|| {
+            for _ in 0..RING_CAP + 10 {
+                instant("queue.admit");
+            }
+            drain()
+        });
+        assert_eq!(buf.events.len(), RING_CAP);
+        assert_eq!(buf.dropped, 10);
+        // chronological despite the wrap
+        for w in buf.events.windows(2) {
+            assert!(w[0].t0_ns <= w[1].t0_ns);
+        }
+    }
+
+    #[test]
+    fn chrome_json_is_well_formed() {
+        let buf = with_tracing(|| {
+            {
+                let _s = span_with("exec.step", || "conv1".to_string());
+            }
+            instant("cache.hit");
+            drain()
+        });
+        let j = chrome_json(&buf);
+        // must round-trip through the crate's own JSON parser
+        let parsed = crate::util::parse_json(&j.to_string()).unwrap();
+        let events = parsed.field("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let step = &events[0];
+        assert_eq!(step.field("name").unwrap().as_str(), Some("exec.step"));
+        assert_eq!(step.field("ph").unwrap().as_str(), Some("X"));
+        assert!(step.field("dur").unwrap().as_f64().is_some());
+        assert_eq!(
+            step.field("args").unwrap().field("detail").unwrap().as_str(),
+            Some("conv1")
+        );
+        let mark = &events[1];
+        assert_eq!(mark.field("ph").unwrap().as_str(), Some("i"));
+        assert!(mark.field("ts").unwrap().as_f64().is_some());
+    }
+}

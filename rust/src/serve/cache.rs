@@ -129,9 +129,11 @@ impl PlanCache {
         if let Some(e) = inner.map.get_mut(key) {
             e.last_use = now;
             self.hits.fetch_add(1, Ordering::Relaxed);
+            crate::obs::trace::instant_with("cache.hit", || key.to_string());
             return Ok(Arc::clone(&e.plan));
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        crate::obs::trace::instant_with("cache.miss", || key.to_string());
         let built = build()?;
         // Never serve a plan that fails static verification, regardless of
         // the CheckLevel it was compiled at: a bad arena assignment here
@@ -168,6 +170,7 @@ impl PlanCache {
                 .expect("nonempty over-capacity cache");
             inner.map.remove(&coldest);
             self.evictions.fetch_add(1, Ordering::Relaxed);
+            crate::obs::trace::instant_with("cache.evict", || coldest.to_string());
         }
     }
 

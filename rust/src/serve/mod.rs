@@ -92,6 +92,7 @@ use crate::check::{self, CheckLevel};
 use crate::criteria::Criterion;
 use crate::exec::{Batcher, OptLevel, Plan, PlanOpts};
 use crate::ir::Graph;
+use crate::obs::{trace, Histogram, MetricsReport, ObsCfg};
 use crate::session::{PlanKey, PrunedModel, Session, Target};
 use crate::tensor::Tensor;
 use crate::util::{relock, Rng};
@@ -99,7 +100,7 @@ use crate::zoo::{self, ImageCfg};
 use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -135,6 +136,11 @@ pub struct ServeCfg {
     /// Deterministic fault injection (chaos testing); `None` also
     /// consults the `SPA_FAULTS` environment variable at spawn.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Observability switches ([`crate::obs::ObsCfg`]). Enable-only:
+    /// spawning with tracing off never turns off tracing another
+    /// component already switched on; the `SPA_OBS` environment
+    /// variable is also consulted at spawn.
+    pub obs: ObsCfg,
 }
 
 impl Default for ServeCfg {
@@ -151,11 +157,14 @@ impl Default for ServeCfg {
             criterion: "l1".to_string(),
             queue_cap: 1024,
             faults: None,
+            obs: ObsCfg::default(),
         }
     }
 }
 
-/// Serving counters plus a latency ring for percentile reporting.
+/// Serving counters, a log-linear latency histogram (every request is
+/// counted, nothing is sampled away — see [`crate::obs::Histogram`]),
+/// and cumulative per-stage wall time.
 pub struct Stats {
     served: AtomicUsize,
     errors: AtomicUsize,
@@ -163,11 +172,12 @@ pub struct Stats {
     shed: AtomicUsize,
     expired: AtomicUsize,
     panics: AtomicUsize,
-    lat_us: Mutex<Vec<u32>>,
+    lat: Mutex<Histogram>,
+    queue_wait_ns: AtomicU64,
+    exec_ns: AtomicU64,
+    batch_ns: AtomicU64,
+    swap_ns: AtomicU64,
 }
-
-/// Latency samples kept for percentiles (oldest dropped first).
-const LAT_RING: usize = 8192;
 
 impl Stats {
     fn new() -> Stats {
@@ -178,7 +188,11 @@ impl Stats {
             shed: AtomicUsize::new(0),
             expired: AtomicUsize::new(0),
             panics: AtomicUsize::new(0),
-            lat_us: Mutex::new(Vec::new()),
+            lat: Mutex::new(Histogram::new()),
+            queue_wait_ns: AtomicU64::new(0),
+            exec_ns: AtomicU64::new(0),
+            batch_ns: AtomicU64::new(0),
+            swap_ns: AtomicU64::new(0),
         }
     }
 
@@ -212,21 +226,39 @@ impl Stats {
         self.panics.load(Ordering::Relaxed)
     }
 
-    /// The `p`-th latency percentile (0-100) over the recent ring, in
-    /// microseconds, by the nearest-rank method: the smallest recorded
-    /// value with at least `⌈p/100 · n⌉` samples at or below it.
-    /// `None` before any request completed.
+    /// The `p`-th latency percentile (0-100) over *every* recorded
+    /// request, in microseconds, by the nearest-rank method — exact for
+    /// sub-64 µs values, within 1/64 above (the histogram's bucket
+    /// resolution). `None` before any request completed.
     pub fn latency_percentile_us(&self, p: f64) -> Option<u32> {
-        let lat = relock(&self.lat_us);
-        if lat.is_empty() {
-            return None;
-        }
-        let mut v = lat.clone();
-        drop(lat);
-        v.sort_unstable();
-        let n = v.len();
-        let rank = (((p / 100.0) * n as f64).ceil() as usize).clamp(1, n);
-        Some(v[rank - 1])
+        relock(&self.lat).percentile(p).map(|v| v.min(u64::from(u32::MAX)) as u32)
+    }
+
+    /// A snapshot of the full latency histogram.
+    pub fn latency_histogram(&self) -> Histogram {
+        relock(&self.lat).clone()
+    }
+
+    /// Cumulative time dispatched requests spent queued between
+    /// admission and batch dispatch, nanoseconds.
+    pub fn queue_wait_ns(&self) -> u64 {
+        self.queue_wait_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative time inside batch-group plan execution, nanoseconds.
+    pub fn exec_ns(&self) -> u64 {
+        self.exec_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative batch-loop tick time (shedding, grouping, dispatch —
+    /// a superset of [`Stats::exec_ns`]), nanoseconds.
+    pub fn batch_ns(&self) -> u64 {
+        self.batch_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative time inside swap pipelines, nanoseconds.
+    pub fn swap_ns(&self) -> u64 {
+        self.swap_ns.load(Ordering::Relaxed)
     }
 
     fn record(&self, latency_us: u32, ok: bool) {
@@ -234,11 +266,7 @@ impl Stats {
         if !ok {
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
-        let mut lat = relock(&self.lat_us);
-        if lat.len() >= LAT_RING {
-            lat.remove(0);
-        }
-        lat.push(latency_us);
+        relock(&self.lat).record(u64::from(latency_us));
     }
 }
 
@@ -317,6 +345,11 @@ impl Shared {
             cache_plans: self.cache.len() as u64,
             cache_hits: self.cache.hits() as u64,
             cache_misses: self.cache.misses() as u64,
+            p50_us: self.stats.latency_percentile_us(50.0).map_or(0, u64::from),
+            p99_us: self.stats.latency_percentile_us(99.0).map_or(0, u64::from),
+            p999_us: self.stats.latency_percentile_us(99.9).map_or(0, u64::from),
+            queue_wait_ns: self.stats.queue_wait_ns(),
+            exec_ns: self.stats.exec_ns(),
             draining: self.draining.load(Ordering::SeqCst) || self.shutdown.load(Ordering::SeqCst),
             swaps: self
                 .cache
@@ -328,6 +361,50 @@ impl Shared {
                     outcome,
                 })
                 .collect(),
+        }
+    }
+
+    /// The full observability snapshot behind the protocol-v4 `metrics`
+    /// verb and [`Server::metrics`]. Every counter here reconciles with
+    /// [`Shared::health_report`]: both read the same atomics and the
+    /// same latency histogram.
+    fn metrics_report(&self) -> MetricsReport {
+        let lat = self.stats.latency_histogram();
+        let mut swaps_committed = 0u64;
+        let mut swaps_rolled_back = 0u64;
+        let mut generation = 0u64;
+        for (_, g, outcome) in self.cache.snapshot_meta() {
+            generation = generation.max(g);
+            match outcome {
+                SwapOutcome::Committed => swaps_committed += 1,
+                SwapOutcome::RolledBack(_) => swaps_rolled_back += 1,
+                SwapOutcome::None => {}
+            }
+        }
+        MetricsReport {
+            served: self.stats.served() as u64,
+            errors: self.stats.errors() as u64,
+            batches: self.stats.batches() as u64,
+            shed: self.stats.shed() as u64,
+            expired: self.stats.expired() as u64,
+            panics: self.stats.panics() as u64,
+            cache_hits: self.cache.hits() as u64,
+            cache_misses: self.cache.misses() as u64,
+            cache_evictions: self.cache.evictions() as u64,
+            swaps_committed,
+            swaps_rolled_back,
+            generation,
+            draining: self.draining.load(Ordering::SeqCst) || self.shutdown.load(Ordering::SeqCst),
+            lat_count: lat.count(),
+            lat_sum_us: lat.sum(),
+            lat_max_us: lat.max(),
+            p50_us: lat.percentile(50.0).unwrap_or(0),
+            p99_us: lat.percentile(99.0).unwrap_or(0),
+            p999_us: lat.percentile(99.9).unwrap_or(0),
+            queue_wait_ns: self.stats.queue_wait_ns(),
+            exec_ns: self.stats.exec_ns(),
+            batch_ns: self.stats.batch_ns(),
+            swap_ns: self.stats.swap_ns(),
         }
     }
 
@@ -361,6 +438,16 @@ impl Shared {
     /// `Err` only for request-level mistakes (unknown model, bad
     /// criterion).
     fn swap(&self, req: &SwapRequest) -> Result<SwapReport, ServeError> {
+        let _span = trace::span_with("serve.swap", || req.model.clone());
+        let t0 = Instant::now();
+        let result = self.swap_inner(req);
+        self.stats
+            .swap_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        result
+    }
+
+    fn swap_inner(&self, req: &SwapRequest) -> Result<SwapReport, ServeError> {
         // one candidate compile at a time; predicts keep flowing
         let _one_at_a_time = relock(&self.swap_lock);
         Criterion::parse(&req.criterion)
@@ -398,6 +485,7 @@ impl Shared {
         // that is *actually serving*, recompile only the dirty schedule
         // regions, and gate through the full static analysis at Strict.
         let base = old.plan.graph().clone();
+        let verify_span = trace::span_with("swap.verify", || key.to_string());
         let built = (|| -> anyhow::Result<Plan> {
             let sess = Session::on(&base)
                 .criterion(Criterion::parse(&req.criterion)?)
@@ -424,6 +512,7 @@ impl Shared {
             check::check_plan(&candidate)?;
             Ok(candidate)
         })();
+        drop(verify_span);
         let candidate = match built {
             Ok(c) => c,
             Err(e) => {
@@ -439,6 +528,8 @@ impl Shared {
         // Stage 2 — shadow parity: run retained live requests through
         // both plans and bound their divergence (0.0 demands bit-equal)
         if req.shadow > 0 {
+            let _shadow_span =
+                trace::span_with("swap.shadow", || format!("{} request(s)", req.shadow));
             let shadow = (|| -> anyhow::Result<(u64, f64)> {
                 let xs = self.shadow_inputs(&req.model, req.shadow as usize, &base);
                 let mut worst = 0.0f64;
@@ -507,9 +598,11 @@ impl Shared {
         report.to_generation = to;
         report.outcome = SwapOutcome::Committed;
         report.message = "committed".to_string();
+        trace::instant_with("swap.flip", || format!("{key}: generation {from} -> {to}"));
         // Stage 4 — post-flip watch: keep the displaced generation in
         // hand for a few ticks; a panic spike while the new generation
         // serves rolls it straight back.
+        let _watch_span = trace::span_with("swap.watch", || key.to_string());
         let window = (self.tick * 16).max(Duration::from_millis(40));
         let poll = (self.tick / 2).max(Duration::from_millis(1));
         let panics_before = self.stats.panics();
@@ -715,6 +808,7 @@ fn process_batch(
     // panicking batch ahead of it), never on the fast path.
     let now = Instant::now();
     let mut live: Vec<Pending> = Vec::with_capacity(batch.len());
+    let mut queue_wait_ns = 0u64;
     for p in batch {
         match p.deadline {
             Some(d) if d + tick < now => {
@@ -727,9 +821,13 @@ fn process_batch(
                     ),
                 )));
             }
-            _ => live.push(p),
+            _ => {
+                queue_wait_ns += now.saturating_duration_since(p.admitted).as_nanos() as u64;
+                live.push(p);
+            }
         }
     }
+    stats.queue_wait_ns.fetch_add(queue_wait_ns, Ordering::Relaxed);
     // group by model, preserving admission order within each group
     let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
     for p in live {
@@ -751,6 +849,7 @@ fn process_batch(
         // workspace, an injected fault) answers its own requests with
         // `ErrorCode::Panic` and leaves every other group — and the
         // batch loop itself — serving.
+        let t_exec = Instant::now();
         let unwound = catch_unwind(AssertUnwindSafe(|| {
             if monitored {
                 if let Some(f) = &resolver.faults {
@@ -766,6 +865,7 @@ fn process_batch(
                 }
             }
         }));
+        stats.exec_ns.fetch_add(t_exec.elapsed().as_nanos() as u64, Ordering::Relaxed);
         if let Err(payload) = unwound {
             stats.panics.fetch_add(1, Ordering::Relaxed);
             let err = ServeError::new(
@@ -814,7 +914,11 @@ fn batch_loop(shared: Arc<Shared>, mut resolver: Resolver, tick: Duration, max_b
             }
         }
         shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        let _tick_span = trace::span_with("batch.tick", || format!("{} request(s)", batch.len()));
+        let t_tick = Instant::now();
         process_batch(&mut resolver, batch, max_batch, tick, &shared);
+        let tick_ns = t_tick.elapsed().as_nanos() as u64;
+        shared.stats.batch_ns.fetch_add(tick_ns, Ordering::Relaxed);
     }
 }
 
@@ -869,6 +973,10 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
                     Ok(RequestMsg::Health) => Response::Health {
                         latency_us: t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32,
                         report: shared.health_report(),
+                    },
+                    Ok(RequestMsg::Metrics) => Response::Metrics {
+                        latency_us: t0.elapsed().as_micros().min(u128::from(u32::MAX)) as u32,
+                        report: shared.metrics_report(),
                     },
                     Ok(RequestMsg::Swap(req)) => {
                         // runs inline on this handler thread — the whole
@@ -982,6 +1090,11 @@ impl Server {
             Some(f) => Some(f),
             None => FaultPlan::from_env()?.map(Arc::new),
         };
+        // enable-only: spawning with tracing off must not switch off
+        // tracing another component (a test, the CLI) already enabled
+        if cfg.obs.trace || ObsCfg::from_env().trace {
+            ObsCfg::tracing().apply();
+        }
         let model = ModelCfg {
             image: cfg.image,
             seed: cfg.seed,
@@ -1053,6 +1166,14 @@ impl Server {
     /// protocol verb reports the same data to remote clients).
     pub fn health(&self) -> HealthReport {
         self.shared.health_report()
+    }
+
+    /// A full metrics snapshot without going through the wire (the
+    /// protocol-v4 `metrics` verb reports the same data): counters,
+    /// exact-count latency percentiles, cumulative per-stage timings.
+    /// Render with [`crate::obs::MetricsReport::render_prometheus`].
+    pub fn metrics(&self) -> MetricsReport {
+        self.shared.metrics_report()
     }
 
     /// Live re-prune `model`'s serving plan toward a tighter FLOPs
@@ -1182,14 +1303,15 @@ mod tests {
         stats.record(42, true);
         let s2 = Arc::clone(&stats);
         let _ = std::thread::spawn(move || {
-            let _g = s2.lat_us.lock().unwrap();
-            panic!("poison the latency ring");
+            let _g = s2.lat.lock().unwrap();
+            panic!("poison the latency histogram");
         })
         .join();
-        assert!(stats.lat_us.is_poisoned());
+        assert!(stats.lat.is_poisoned());
         assert_eq!(stats.latency_percentile_us(50.0), Some(42));
         stats.record(43, true);
         assert_eq!(stats.latency_percentile_us(100.0), Some(43));
+        assert_eq!(stats.latency_histogram().count(), 2);
     }
 
     #[test]
@@ -1238,6 +1360,21 @@ mod tests {
         assert_eq!(health.served, 3);
         assert_eq!(health.errors, 1);
         assert!(!health.draining);
+        // the latency percentiles ride on health and reconcile with the
+        // full metrics snapshot (in-process and over the wire alike)
+        assert!(health.p50_us > 0 && health.p50_us <= health.p99_us);
+        let metrics = server.metrics();
+        assert_eq!(metrics.served, 3);
+        assert_eq!(metrics.errors, 1);
+        assert_eq!(metrics.lat_count, 3);
+        assert_eq!(metrics.p50_us, health.p50_us);
+        assert_eq!(metrics.queue_wait_ns, health.queue_wait_ns);
+        let wire = client.metrics().unwrap();
+        assert_eq!(wire.served, 3);
+        assert_eq!(wire.lat_count, 3);
+        assert!(wire
+            .render_prometheus()
+            .contains("spa_requests_total{outcome=\"ok\"} 3"));
         server.shutdown();
     }
 
@@ -1287,6 +1424,11 @@ mod tests {
             .expect("swapped key in health");
         assert_eq!(entry.generation, 2);
         assert_eq!(entry.outcome, SwapOutcome::Committed);
+        // the metrics snapshot counts the commit and the pipeline time
+        let metrics = server.metrics();
+        assert_eq!(metrics.swaps_committed, 1);
+        assert_eq!(metrics.generation, 2);
+        assert!(metrics.swap_ns > 0);
         // an unknown model is a request-level error, not a rollback
         let err = server
             .swap(&SwapRequest {

@@ -4,8 +4,8 @@
 //! followed by the body. Request bodies are
 //!
 //! ```text
-//! u8  version (= 3)
-//! u8  verb (0 = predict, 1 = health, 2 = swap)
+//! u8  version (= 4)
+//! u8  verb (0 = predict, 1 = health, 2 = swap, 3 = metrics)
 //! predict: u16 model-name length, then that many UTF-8 bytes
 //!          u32 deadline in milliseconds (0 = no deadline)
 //!          u8 ndim, then ndim × u32 dims
@@ -14,25 +14,33 @@
 //! swap:    u16 model-name length + bytes, f64 target FLOPs RF,
 //!          u16 criterion length + bytes, u32 shadow-request count,
 //!          f64 max divergence
+//! metrics: (no further payload)
 //! ```
 //!
 //! and response bodies are
 //!
 //! ```text
-//! u8  status (0 = ok, 1 = error, 2 = health, 3 = swap)
+//! u8  status (0 = ok, 1 = error, 2 = health, 3 = swap, 4 = metrics)
 //! u32 server-measured latency in microseconds (admission → response)
-//! ok:     u8 ndim, ndim × u32 dims, numel × f32 data
-//! error:  u8 error code (see [`ErrorCode`]), u16 message length, then
-//!         that many UTF-8 bytes
-//! health: 10 × u64 counters (queue depth, served, errors, batches,
-//!         shed, expired, panics, cache plans/hits/misses) + u8 draining
-//!         + u16 swap-entry count, then per entry u16 key length +
-//!         bytes, u64 generation, u8 outcome (0 = none, 1 = committed,
-//!         2/3/4 = rolled back at verify/shadow/post-flip)
-//! swap:   u16 key length + bytes, u64 from/to generations, u8 outcome,
-//!         u64 recompiled regions / reused steps / steps / shadow
-//!         checked, f64 divergence, u16 message length + bytes
+//! ok:      u8 ndim, ndim × u32 dims, numel × f32 data
+//! error:   u8 error code (see [`ErrorCode`]), u16 message length, then
+//!          that many UTF-8 bytes
+//! health:  15 × u64 counters (queue depth, served, errors, batches,
+//!          shed, expired, panics, cache plans/hits/misses,
+//!          p50/p99/p999 latency µs, queue-wait ns, exec ns)
+//!          + u8 draining + u16 swap-entry count, then per entry u16
+//!          key length + bytes, u64 generation, u8 outcome (0 = none,
+//!          1 = committed, 2/3/4 = rolled back at
+//!          verify/shadow/post-flip)
+//! swap:    u16 key length + bytes, u64 from/to generations, u8 outcome,
+//!          u64 recompiled regions / reused steps / steps / shadow
+//!          checked, f64 divergence, u16 message length + bytes
+//! metrics: 22 × u64 in [`crate::obs::MetricsReport`] field order
+//!          (served … swap_ns) + u8 draining
 //! ```
+//!
+//! Version history: v4 added the `metrics` verb and the latency/stage
+//! fields on the health payload; v1–v3 frames are rejected by version.
 //!
 //! Frames are capped at 1 GiB; oversized lengths are rejected before
 //! any allocation. Deadlines travel with the request so the server's
@@ -47,6 +55,7 @@
 //! stalls mid-frame past the budget is disconnected instead of pinning
 //! the handler forever.
 
+use crate::obs::MetricsReport;
 use crate::serve::cache::{SwapOutcome, SwapStage};
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -55,7 +64,7 @@ use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 /// Protocol version carried in every request.
-pub const VERSION: u8 = 3;
+pub const VERSION: u8 = 4;
 
 /// Hard cap on one frame's body (1 GiB).
 pub const MAX_FRAME: u32 = 1 << 30;
@@ -207,6 +216,7 @@ pub enum RequestMsg {
     Predict(Request),
     Health,
     Swap(SwapRequest),
+    Metrics,
 }
 
 /// A server-state snapshot answered to the `health` verb.
@@ -230,6 +240,16 @@ pub struct HealthReport {
     pub cache_plans: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Nearest-rank request-latency percentiles over every answered
+    /// request, microseconds (0 before the first response).
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    /// Cumulative time dispatched requests spent queued between
+    /// admission and batch dispatch, nanoseconds.
+    pub queue_wait_ns: u64,
+    /// Cumulative time inside batch-group plan execution, nanoseconds.
+    pub exec_ns: u64,
     /// Whether the server has stopped admitting new work.
     pub draining: bool,
     /// Per-key plan generation and last-swap outcome, sorted by model
@@ -267,6 +287,10 @@ pub enum Response {
     Swap {
         latency_us: u32,
         report: SwapReport,
+    },
+    Metrics {
+        latency_us: u32,
+        report: MetricsReport,
     },
 }
 
@@ -539,6 +563,7 @@ fn get_str(c: &mut Cur<'_>, what: &str) -> anyhow::Result<String> {
 const VERB_PREDICT: u8 = 0;
 const VERB_HEALTH: u8 = 1;
 const VERB_SWAP: u8 = 2;
+const VERB_METRICS: u8 = 3;
 
 /// Encode a predict-request body (frame it with [`write_frame`]).
 pub fn encode_request(model: &str, deadline_ms: u32, t: &Tensor) -> anyhow::Result<Vec<u8>> {
@@ -560,6 +585,11 @@ pub fn encode_request(model: &str, deadline_ms: u32, t: &Tensor) -> anyhow::Resu
 /// Encode a health-request body.
 pub fn encode_health_request() -> Vec<u8> {
     vec![VERSION, VERB_HEALTH]
+}
+
+/// Encode a metrics-request body (protocol v4).
+pub fn encode_metrics_request() -> Vec<u8> {
+    vec![VERSION, VERB_METRICS]
 }
 
 /// Encode a swap-request body (frame it with [`write_frame`]).
@@ -599,6 +629,10 @@ pub fn decode_request(body: &[u8]) -> anyhow::Result<RequestMsg> {
         VERB_HEALTH => {
             c.done()?;
             Ok(RequestMsg::Health)
+        }
+        VERB_METRICS => {
+            c.done()?;
+            Ok(RequestMsg::Metrics)
         }
         VERB_SWAP => {
             let model = get_str(&mut c, "model name")?;
@@ -655,6 +689,11 @@ pub fn encode_response(resp: &Response) -> anyhow::Result<Vec<u8>> {
                 report.cache_plans,
                 report.cache_hits,
                 report.cache_misses,
+                report.p50_us,
+                report.p99_us,
+                report.p999_us,
+                report.queue_wait_ns,
+                report.exec_ns,
             ] {
                 out.extend_from_slice(&v.to_le_bytes());
             }
@@ -692,6 +731,37 @@ pub fn encode_response(resp: &Response) -> anyhow::Result<Vec<u8>> {
             out.extend_from_slice(&(take as u16).to_le_bytes());
             out.extend_from_slice(&msg[..take]);
         }
+        Response::Metrics { latency_us, report } => {
+            out.push(4u8);
+            out.extend_from_slice(&latency_us.to_le_bytes());
+            for v in [
+                report.served,
+                report.errors,
+                report.batches,
+                report.shed,
+                report.expired,
+                report.panics,
+                report.cache_hits,
+                report.cache_misses,
+                report.cache_evictions,
+                report.swaps_committed,
+                report.swaps_rolled_back,
+                report.generation,
+                report.lat_count,
+                report.lat_sum_us,
+                report.lat_max_us,
+                report.p50_us,
+                report.p99_us,
+                report.p999_us,
+                report.queue_wait_ns,
+                report.exec_ns,
+                report.batch_ns,
+                report.swap_ns,
+            ] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.push(u8::from(report.draining));
+        }
     }
     Ok(out)
 }
@@ -728,6 +798,11 @@ pub fn decode_response(body: &[u8]) -> anyhow::Result<Response> {
                 cache_plans: c.u64()?,
                 cache_hits: c.u64()?,
                 cache_misses: c.u64()?,
+                p50_us: c.u64()?,
+                p99_us: c.u64()?,
+                p999_us: c.u64()?,
+                queue_wait_ns: c.u64()?,
+                exec_ns: c.u64()?,
                 draining: c.u8()? != 0,
                 swaps: Vec::new(),
             };
@@ -766,6 +841,34 @@ pub fn decode_response(body: &[u8]) -> anyhow::Result<Response> {
                 message,
             };
             Response::Swap { latency_us, report }
+        }
+        4 => {
+            let report = MetricsReport {
+                served: c.u64()?,
+                errors: c.u64()?,
+                batches: c.u64()?,
+                shed: c.u64()?,
+                expired: c.u64()?,
+                panics: c.u64()?,
+                cache_hits: c.u64()?,
+                cache_misses: c.u64()?,
+                cache_evictions: c.u64()?,
+                swaps_committed: c.u64()?,
+                swaps_rolled_back: c.u64()?,
+                generation: c.u64()?,
+                lat_count: c.u64()?,
+                lat_sum_us: c.u64()?,
+                lat_max_us: c.u64()?,
+                p50_us: c.u64()?,
+                p99_us: c.u64()?,
+                p999_us: c.u64()?,
+                queue_wait_ns: c.u64()?,
+                exec_ns: c.u64()?,
+                batch_ns: c.u64()?,
+                swap_ns: c.u64()?,
+                draining: c.u8()? != 0,
+            };
+            Response::Metrics { latency_us, report }
         }
         other => anyhow::bail!("unknown response status {other}"),
     };
@@ -903,10 +1006,12 @@ impl Client {
         match self.round_trip(&body)? {
             Response::Ok { latency_us, tensor } => Ok(Ok((tensor, latency_us))),
             Response::Err { code, message, .. } => Ok(Err(ServeError::new(code, message))),
-            Response::Health { .. } | Response::Swap { .. } => Err(std::io::Error::new(
-                ErrorKind::InvalidData,
-                "control response to a predict request",
-            )),
+            Response::Health { .. } | Response::Swap { .. } | Response::Metrics { .. } => {
+                Err(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    "control response to a predict request",
+                ))
+            }
         }
     }
 
@@ -961,12 +1066,26 @@ impl Client {
     }
 
     /// Fetch the server's health snapshot (queue depth, served/error
-    /// counters, cache state, drain flag). Works during a drain.
+    /// counters, cache state, latency percentiles, drain flag). Works
+    /// during a drain.
     pub fn health(&mut self) -> anyhow::Result<HealthReport> {
         match self.round_trip(&encode_health_request())? {
             Response::Health { report, .. } => Ok(report),
             Response::Err { code, message, .. } => Err(ServeError::new(code, message).into()),
             _ => anyhow::bail!("mismatched response to a health request"),
+        }
+    }
+
+    /// Fetch the server's full metrics snapshot (protocol v4): request
+    /// and fault counters, plan-cache and swap activity, exact-count
+    /// latency percentiles, and cumulative per-stage timings. Render
+    /// with [`crate::obs::MetricsReport::render_prometheus`]. Works
+    /// during a drain.
+    pub fn metrics(&mut self) -> anyhow::Result<MetricsReport> {
+        match self.round_trip(&encode_metrics_request())? {
+            Response::Metrics { report, .. } => Ok(report),
+            Response::Err { code, message, .. } => Err(ServeError::new(code, message).into()),
+            _ => anyhow::bail!("mismatched response to a metrics request"),
         }
     }
 
@@ -1014,7 +1133,7 @@ mod tests {
     fn decode_predict(body: &[u8]) -> Request {
         match decode_request(body).unwrap() {
             RequestMsg::Predict(r) => r,
-            RequestMsg::Health => panic!("expected a predict request"),
+            other => panic!("expected a predict request, got {other:?}"),
         }
     }
 
@@ -1178,6 +1297,11 @@ mod tests {
             cache_plans: 2,
             cache_hits: 90,
             cache_misses: 2,
+            p50_us: 180,
+            p99_us: 950,
+            p999_us: 1200,
+            queue_wait_ns: 123_456,
+            exec_ns: 654_321,
             draining: true,
             swaps: vec![
                 SwapHealth {
@@ -1206,6 +1330,65 @@ mod tests {
             }
             _ => panic!("expected health"),
         }
+    }
+
+    #[test]
+    fn metrics_request_and_response_round_trip() {
+        let body = encode_metrics_request();
+        assert!(matches!(
+            decode_request(&body).unwrap(),
+            RequestMsg::Metrics
+        ));
+        // a metrics verb with trailing bytes is malformed
+        let mut bad = encode_metrics_request();
+        bad.push(0);
+        assert!(decode_request(&bad).is_err());
+
+        let report = MetricsReport {
+            served: 100,
+            errors: 7,
+            batches: 42,
+            shed: 5,
+            expired: 2,
+            panics: 1,
+            cache_hits: 90,
+            cache_misses: 2,
+            cache_evictions: 1,
+            swaps_committed: 3,
+            swaps_rolled_back: 1,
+            generation: 4,
+            draining: true,
+            lat_count: 100,
+            lat_sum_us: 25_000,
+            lat_max_us: 4_096,
+            p50_us: 180,
+            p99_us: 950,
+            p999_us: 1200,
+            queue_wait_ns: 123_456,
+            exec_ns: 654_321,
+            batch_ns: 700_000,
+            swap_ns: 9_001,
+        };
+        let resp = Response::Metrics {
+            latency_us: 21,
+            report: report.clone(),
+        };
+        let wire = encode_response(&resp).unwrap();
+        match decode_response(&wire).unwrap() {
+            Response::Metrics {
+                latency_us,
+                report: got,
+            } => {
+                assert_eq!(latency_us, 21);
+                assert_eq!(got, report);
+            }
+            _ => panic!("expected metrics"),
+        }
+        // trailing garbage and truncation are malformed, not a crash
+        let mut bad = wire.clone();
+        bad.push(0);
+        assert!(decode_response(&bad).is_err());
+        assert!(decode_response(&wire[..wire.len() - 1]).is_err());
     }
 
     fn pair() -> (TcpStream, TcpStream) {
@@ -1334,9 +1517,9 @@ mod tests {
     #[test]
     fn malformed_frames_are_rejected() {
         assert!(decode_request(&[]).is_err());
-        // bad version (including the retired v1 and v2)
+        // bad version (including the retired v1, v2 and v3)
         let t = Tensor::new(vec![1], vec![1.0]);
-        for v in [1u8, 2, 99] {
+        for v in [1u8, 2, 3, 99] {
             let mut body = encode_request("mlp", 0, &t).unwrap();
             body[0] = v;
             let err = decode_request(&body).unwrap_err().to_string();

@@ -102,6 +102,7 @@ impl Queue {
             ));
         }
         if self.cap > 0 && q.len() >= self.cap {
+            crate::obs::trace::instant_with("queue.shed", || format!("{} pending", q.len()));
             return Err(ServeError::new(
                 ErrorCode::Overloaded,
                 format!("admission queue is full ({} pending, cap {})", q.len(), self.cap),
@@ -110,6 +111,7 @@ impl Queue {
         q.push_back(p);
         drop(q);
         self.ready.notify_one();
+        crate::obs::trace::instant("queue.admit");
         Ok(())
     }
 

@@ -209,6 +209,9 @@ impl<'g> Session<'g> {
             }
         };
         // Materialize the pruned clone once; `apply` hands out copies.
+        let _span = crate::obs::trace::span_with("session.prune", || {
+            format!("{} ({} CCs)", criterion.name(), selected.len())
+        });
         let t0 = std::time::Instant::now();
         let mut pruned = self.graph.clone();
         let outcome = prune::apply_pruning(&mut pruned, &groups, &selected)?;

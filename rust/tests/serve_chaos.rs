@@ -707,3 +707,104 @@ fn predict_retry_rides_through_swaps_and_still_sees_real_drains() {
     );
     server.drain();
 }
+
+/// Observability must not observe itself into the results: with trace
+/// recording on, plan outputs are bit-identical to untraced runs at
+/// every thread width the determinism contract covers.
+#[test]
+fn traced_runs_are_bit_identical_to_untraced() {
+    // toggles the process-global trace flag: hold the same lock the
+    // par-override and obs unit tests use
+    let _guard = spa::util::par::test_lock();
+    let g = zoo::by_name(MODEL, image(), SEED).unwrap();
+    let x = Tensor::new(vec![2, 3, 8, 8], vec![0.375; 2 * 3 * 64]);
+    for threads in [1usize, 8] {
+        spa::util::par::with_threads(threads, || {
+            let want = plan_predict(&g, &x);
+            spa::obs::trace::drain();
+            spa::obs::ObsCfg::tracing().apply();
+            let traced = plan_predict(&g, &x);
+            spa::obs::ObsCfg::default().apply();
+            let buf = spa::obs::trace::drain();
+            assert_bit_identical(&traced, &want, &format!("threads={threads}"));
+            assert!(
+                buf.events.iter().any(|e| e.name == "exec.step"),
+                "threads={threads}: a traced run must record step events"
+            );
+            assert!(
+                buf.events.iter().any(|e| e.name == "exec.compile"),
+                "threads={threads}: a traced compile must record itself"
+            );
+        });
+    }
+}
+
+/// The protocol-v4 `metrics` verb must reconcile with the `health`
+/// counters even after injected faults: panic totals, latency samples,
+/// and swap outcomes all line up between the two snapshots.
+#[test]
+fn metrics_verb_reconciles_with_health_after_injected_faults() {
+    let cfg = ServeCfg {
+        tick: Duration::from_millis(1),
+        image: image(),
+        seed: SEED,
+        ..Default::default()
+    };
+    let spec = format!("seed={};group.panic=0.4;swap.verify_fail=1", chaos_seed());
+    let server = spawn(&spec, cfg);
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    let x = Tensor::new(vec![1, 3, 8, 8], vec![0.5; 3 * 64]);
+    for _ in 0..12 {
+        // ok or a typed injected panic — both must land in the counters
+        let _ = ask(&mut c, MODEL, &x);
+    }
+    // a forced verify failure lands in the rolled-back swap counter
+    let rep = c.swap(&swap_req(1.3, 0)).expect("swap transport");
+    assert_eq!(
+        rep.outcome,
+        SwapOutcome::RolledBack(SwapStage::Verify),
+        "{}",
+        rep.message
+    );
+
+    let h = c.health().expect("health");
+    let m = c.metrics().expect("metrics");
+    assert_eq!(m.served, h.served);
+    assert_eq!(m.errors, h.errors);
+    assert_eq!(m.batches, h.batches);
+    assert_eq!(m.shed, h.shed);
+    assert_eq!(m.expired, h.expired);
+    assert_eq!(m.panics, h.panics);
+    assert_eq!(m.cache_hits, h.cache_hits);
+    assert_eq!(m.cache_misses, h.cache_misses);
+    assert_eq!(m.draining, h.draining);
+    assert_eq!(m.served, 12, "12 predicts, no control verbs counted");
+    assert_eq!(m.lat_count, m.served, "one histogram sample per answered request");
+    assert_eq!(m.p50_us, h.p50_us);
+    assert_eq!(m.p99_us, h.p99_us);
+    assert_eq!(m.p999_us, h.p999_us);
+    assert_eq!(m.queue_wait_ns, h.queue_wait_ns);
+    assert_eq!(m.exec_ns, h.exec_ns);
+    assert!(m.p50_us > 0 && m.p50_us <= m.p99_us && m.p99_us <= m.p999_us);
+    assert!(m.p999_us <= m.lat_max_us, "percentiles never exceed the exact max");
+    assert!(m.lat_sum_us >= m.lat_max_us);
+
+    // swap totals recomputed from health's per-key outcomes must match
+    let committed = h
+        .swaps
+        .iter()
+        .filter(|e| e.outcome == SwapOutcome::Committed)
+        .count() as u64;
+    let rolled = h
+        .swaps
+        .iter()
+        .filter(|e| matches!(e.outcome, SwapOutcome::RolledBack(_)))
+        .count() as u64;
+    assert_eq!(m.swaps_committed, committed);
+    assert_eq!(m.swaps_rolled_back, rolled);
+    assert_eq!(rolled, 1, "the injected verify failure is the only swap");
+    let max_gen = h.swaps.iter().map(|e| e.generation).max().unwrap_or(0);
+    assert_eq!(m.generation, max_gen);
+    assert!(m.swap_ns > 0, "the failed swap still spent wall time");
+    server.shutdown();
+}
